@@ -1,0 +1,44 @@
+//! Every policy on every workload family — the §6 evaluation matrix in
+//! one command (a compact form of the fig22/fig23 benches).
+//!
+//!     cargo run --release --example policy_comparison [requests]
+
+use lmetric::cluster::{build_scaled_trace, cluster_config, run_des};
+use lmetric::config::ExperimentConfig;
+use lmetric::metrics::{render_table, ResultRow};
+use lmetric::policy;
+
+fn main() {
+    let requests = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3000);
+    let profile = lmetric::engine::ModelProfile::moe_30b();
+    for workload in ["chatbot", "coder", "agent", "toolagent"] {
+        let mut exp = ExperimentConfig::default();
+        exp.workload = workload.into();
+        exp.requests = requests;
+        exp.instances = 8;
+        let trace = build_scaled_trace(&exp);
+        let cfg = cluster_config(&exp);
+        let mut rows = Vec::new();
+        for name in ["vllm", "linear", "dynamo", "filter_kv", "sim_llmd", "preble", "lmetric"] {
+            let mut pol = policy::build_default(name, &profile, exp.chunk_budget).unwrap();
+            let mut m = run_des(&cfg, &trace, pol.as_mut());
+            m.discard_warmup(0.1);
+            rows.push(ResultRow::from_metrics(&pol.name(), &m));
+        }
+        println!(
+            "{}",
+            render_table(
+                &format!(
+                    "{workload} — {} reqs @ {:.1} req/s on {} instances",
+                    trace.requests.len(),
+                    trace.steady_rps(),
+                    exp.instances
+                ),
+                &rows
+            )
+        );
+    }
+}

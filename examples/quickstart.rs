@@ -1,0 +1,43 @@
+//! Quickstart: route a ChatBot workload through an 8-instance cluster
+//! with the paper's multiplicative policy, in a dozen lines.
+//!
+//!     cargo run --release --example quickstart
+
+use lmetric::cluster::{build_scaled_trace, cluster_config, run_des};
+use lmetric::config::ExperimentConfig;
+use lmetric::metrics::{render_table, ResultRow};
+use lmetric::policy::LMetric;
+
+fn main() {
+    // 1. Describe the experiment (defaults: 16×moe-30b, chatbot, half of
+    //    profiled capacity — the paper's §6 setup).
+    let mut exp = ExperimentConfig::default();
+    exp.instances = 8;
+    exp.requests = 2000;
+
+    // 2. Build the workload (synthetic trace fitted to the paper's Fig 5
+    //    ChatBot characteristics, rate-scaled to the cluster).
+    let trace = build_scaled_trace(&exp);
+    println!(
+        "trace: {} requests, steady rate {:.1} req/s, mean input {:.0} tokens",
+        trace.requests.len(),
+        trace.steady_rps(),
+        trace.token_stats().0,
+    );
+
+    // 3. Route it with LMETRIC: score = P-token × (BS + 1), no tuning.
+    let mut policy = LMetric::paper();
+    let mut metrics = run_des(&cluster_config(&exp), &trace, &mut policy);
+    metrics.discard_warmup(0.1);
+
+    // 4. Read the results.
+    let row = ResultRow::from_metrics("lmetric", &metrics)
+        .with("output_tok_per_s", metrics.output_throughput());
+    println!("{}", render_table("quickstart: chatbot / 8×moe-30b", &[row]));
+    println!(
+        "scheduling overhead: mean {:.1} µs/decision over {} decisions",
+        metrics.sched_overhead_us.iter().sum::<f64>()
+            / metrics.sched_overhead_us.len().max(1) as f64,
+        metrics.sched_overhead_us.len()
+    );
+}

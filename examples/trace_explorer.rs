@@ -1,0 +1,45 @@
+//! Fig 5-style characterization of the four synthetic workload families:
+//! arrival rates, token distributions, and infinite-KV$ hit rates.
+//!
+//!     cargo run --release --example trace_explorer
+
+use lmetric::trace::{generate, Workload, WorkloadSpec};
+use lmetric::util::stats::{percentile, Summary};
+
+fn main() {
+    println!(
+        "{:<10} {:>8} {:>9} {:>16} {:>16} {:>10} {:>8}",
+        "workload", "requests", "req/s", "input p50/p95", "output p50/p95", "inf-KV$hit", "classes"
+    );
+    for w in [
+        Workload::ChatBot,
+        Workload::Coder,
+        Workload::Agent,
+        Workload::ToolAgent,
+        Workload::Hotspot,
+    ] {
+        let t = generate(&WorkloadSpec::preset(w, 4000, 42));
+        let mut inputs: Vec<f64> = t.requests.iter().map(|r| r.req.input_len() as f64).collect();
+        let mut outputs: Vec<f64> = t.requests.iter().map(|r| r.req.output_len as f64).collect();
+        inputs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        outputs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let classes: std::collections::BTreeSet<u32> =
+            t.requests.iter().map(|r| r.req.class_id).collect();
+        println!(
+            "{:<10} {:>8} {:>9.2} {:>7.0} / {:>6.0} {:>7.0} / {:>6.0} {:>9.1}% {:>8}",
+            t.name,
+            t.requests.len(),
+            t.steady_rps(),
+            percentile(&inputs, 0.5),
+            percentile(&inputs, 0.95),
+            percentile(&outputs, 0.5),
+            percentile(&outputs, 0.95),
+            t.infinite_cache_hit_rate() * 100.0,
+            classes.len()
+        );
+        let _ = Summary::of(&inputs); // full summaries available if needed
+    }
+    println!("\n(compare against the paper's Fig 5: ChatBot moderate prompts &");
+    println!(" long outputs; Coder long prompts; Agent short bursty requests;");
+    println!(" ToolAgent growing agent context with short outputs.)");
+}

@@ -1,0 +1,170 @@
+"""AOT compile path: lower the L2 model to HLO **text** artifacts.
+
+Run once by ``make artifacts``; Python never appears on the request path.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids that the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (to --out, default ../artifacts):
+  prefill_c{B}.hlo.txt   one per chunk bucket B in cfg.chunk_buckets
+  decode.hlo.txt         batched decode step over all slots
+  params.bin             flat little-endian f32 params in param_names() order
+  manifest.json          model config + artifact & parameter signatures
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    ModelConfig,
+    decode_step,
+    extract_slot,
+    init_params,
+    inject_slot,
+    prefill_chunk,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_prefill(cfg: ModelConfig, chunk: int, n_params: int):
+    def fn(tokens, slot, pos, chunk_len, kv, *params):
+        return prefill_chunk(cfg, tokens, slot, pos, chunk_len, kv, *params)
+
+    i32 = lambda *shape: jax.ShapeDtypeStruct(shape, jnp.int32)  # noqa: E731
+    shapes = cfg.param_shapes()
+    param_specs = [
+        jax.ShapeDtypeStruct(shapes[n], jnp.float32) for n in cfg.param_names()
+    ]
+    return jax.jit(fn).lower(
+        i32(chunk),
+        i32(),
+        i32(),
+        i32(),
+        jax.ShapeDtypeStruct(cfg.kv_shape, jnp.float32),
+        *param_specs,
+    )
+
+
+def lower_decode(cfg: ModelConfig):
+    def fn(tokens, lens, kv, *params):
+        return decode_step(cfg, tokens, lens, kv, *params)
+
+    shapes = cfg.param_shapes()
+    param_specs = [
+        jax.ShapeDtypeStruct(shapes[n], jnp.float32) for n in cfg.param_names()
+    ]
+    return jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((cfg.slots,), jnp.int32),
+        jax.ShapeDtypeStruct((cfg.slots,), jnp.int32),
+        jax.ShapeDtypeStruct(cfg.kv_shape, jnp.float32),
+        *param_specs,
+    )
+
+
+def lower_extract(cfg: ModelConfig):
+    def fn(kv, slot):
+        return extract_slot(cfg, kv, slot)
+
+    return jax.jit(fn).lower(
+        jax.ShapeDtypeStruct(cfg.kv_shape, jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+def lower_inject(cfg: ModelConfig):
+    plane = (cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.d_head)
+
+    def fn(kv, slot, k, v):
+        return (inject_slot(cfg, kv, slot, k, v),)
+
+    return jax.jit(fn).lower(
+        jax.ShapeDtypeStruct(cfg.kv_shape, jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct(plane, jnp.float32),
+        jax.ShapeDtypeStruct(plane, jnp.float32),
+    )
+
+
+def build(cfg: ModelConfig, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    params = init_params(cfg)
+
+    # params.bin — flat f32 concat in param_names() order.
+    flat = np.concatenate([np.asarray(p, np.float32).ravel() for p in params])
+    flat.tofile(os.path.join(out_dir, "params.bin"))
+
+    artifacts = {}
+    for chunk in cfg.chunk_buckets:
+        name = f"prefill_c{chunk}"
+        text = to_hlo_text(lower_prefill(cfg, chunk, len(params)))
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts[name] = {"file": f"{name}.hlo.txt", "chunk": chunk}
+        print(f"  {name}: {len(text)} chars")
+
+    for name, lowered in [
+        ("decode", lower_decode(cfg)),
+        ("extract_slot", lower_extract(cfg)),
+        ("inject_slot", lower_inject(cfg)),
+    ]:
+        text = to_hlo_text(lowered)
+        with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+        artifacts[name] = {"file": f"{name}.hlo.txt"}
+        print(f"  {name}: {len(text)} chars")
+
+    shapes = cfg.param_shapes()
+    manifest = {
+        "model": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_head": cfg.d_head,
+            "d_ff": cfg.d_ff,
+            "max_seq": cfg.max_seq,
+            "slots": cfg.slots,
+            "seed": cfg.seed,
+        },
+        "chunk_buckets": list(cfg.chunk_buckets),
+        "kv_shape": list(cfg.kv_shape),
+        "params": [
+            {"name": n, "shape": list(shapes[n])} for n in cfg.param_names()
+        ],
+        "params_bin": "params.bin",
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    cfg = ModelConfig()
+    print(f"lowering model (vocab={cfg.vocab} d={cfg.d_model} L={cfg.n_layers}) ...")
+    build(cfg, args.out)
+    print(f"artifacts written to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

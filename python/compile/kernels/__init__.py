@@ -1,0 +1,4 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the AOT HLO)."""
+
+from .attention import decode_attention, prefill_attention  # noqa: F401
+from .ref import decode_attention_ref, prefill_attention_ref  # noqa: F401

@@ -1,0 +1,171 @@
+"""Layer-1 Pallas attention kernels for the serving instance's hot path.
+
+Two kernels, mirroring what a PD-colocated vLLM-style engine executes:
+
+* ``prefill_attention`` — chunked-prefill attention with KV-prefix reuse:
+  the queries are the *new* tokens of the current chunk (everything before
+  them was a KV$ hit or a previous chunk), the keys/values are the full
+  cache. This is the op whose cost the LMetric scheduler's P-token
+  indicator models: its work is proportional to the number of NEW prefill
+  tokens, not the full prompt.
+
+* ``decode_attention`` — batched single-token decode attention. Memory
+  bound; its latency grows with batch size (the paper's Fig. 19b rationale
+  for using BS as the decode-load indicator) but is nearly flat in context
+  length for small batches.
+
+Hardware adaptation (paper targets CUDA/H20; we target TPU-shaped Pallas):
+instead of threadblock/shared-memory staging, the HBM->VMEM schedule is
+expressed with a grid over (head, q-block) and an online-softmax
+(flash-style) loop over 128-wide key blocks, so VMEM holds O(BLK) state and
+the MXU sees [BLK_Q, D] x [D, BLK_K] matmuls. ``interpret=True`` everywhere:
+the CPU PJRT plugin cannot run Mosaic custom-calls; real-TPU performance is
+estimated analytically in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+BLK_K = 128  # key-block width: lane-dim aligned for the MXU/VPU
+MAX_BLK_Q = 128  # query-block height cap
+
+
+def _prefill_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, blk_q, blk_k, s):
+    """Grid: (heads, n_q_blocks). Online softmax over key blocks."""
+    qi = pl.program_id(1)
+    pos = pos_ref[0]
+    q = q_ref[0]  # [BLK_Q, D]
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    # Absolute positions of this q block's tokens.
+    q_glob = pos + qi * blk_q + jax.lax.iota(jnp.int32, blk_q)
+
+    n_k = s // blk_k
+
+    def body(kb, carry):
+        acc, m_i, l_i = carry
+        kblk = k_ref[0, pl.ds(kb * blk_k, blk_k), :]
+        vblk = v_ref[0, pl.ds(kb * blk_k, blk_k), :]
+        logits = jnp.dot(q, kblk.T, preferred_element_type=jnp.float32) * scale
+        k_glob = kb * blk_k + jax.lax.iota(jnp.int32, blk_k)
+        mask = k_glob[None, :] <= q_glob[:, None]
+        logits = jnp.where(mask, logits, NEG_INF)
+        m_new = jnp.maximum(m_i, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[:, None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = l_i * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + jnp.dot(
+            p, vblk, preferred_element_type=jnp.float32
+        )
+        return acc_new, m_new, l_new
+
+    acc0 = jnp.zeros((blk_q, d), jnp.float32)
+    m0 = jnp.full((blk_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((blk_q,), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, n_k, body, (acc0, m0, l0))
+    # Every query row attends at least to itself (its K/V is already in the
+    # cache), so l > 0 for real rows; padding rows are harmless garbage.
+    o_ref[0] = acc / jnp.maximum(l, 1e-30)[:, None]
+
+
+def prefill_attention(q, k, v, pos):
+    """Chunked-prefill attention with KV-prefix reuse (Pallas, interpret).
+
+    Args:
+      q: [H, C, D] queries of the new chunk (C = chunk bucket size).
+      k: [H, S, D] key cache, chunk K already written at [pos, pos+C).
+      v: [H, S, D] value cache.
+      pos: scalar int32 — tokens already cached before this chunk
+        (= KV$-hit prefix length + previously prefilled chunks).
+
+    Returns:
+      [H, C, D] chunk attention output.
+    """
+    h, c, d = q.shape
+    s = k.shape[1]
+    if s % BLK_K != 0:
+        raise ValueError(f"cache len {s} must be a multiple of {BLK_K}")
+    blk_q = min(c, MAX_BLK_Q)
+    if c % blk_q != 0:
+        raise ValueError(f"chunk {c} must be a multiple of {blk_q}")
+    pos = jnp.asarray(pos, jnp.int32).reshape((1,))
+    kernel = functools.partial(_prefill_kernel, blk_q=blk_q, blk_k=BLK_K, s=s)
+    return pl.pallas_call(
+        kernel,
+        grid=(h, c // blk_q),
+        in_specs=[
+            pl.BlockSpec((1,), lambda hi, qi: (0,)),
+            pl.BlockSpec((1, blk_q, d), lambda hi, qi: (hi, qi, 0)),
+            pl.BlockSpec((1, s, d), lambda hi, qi: (hi, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda hi, qi: (hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, d), lambda hi, qi: (hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, c, d), jnp.float32),
+        interpret=True,
+    )(pos, q, k, v)
+
+
+def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref, *, blk_k, s):
+    """Grid: (slots, heads). One query row; online softmax over key blocks."""
+    b = pl.program_id(0)
+    ln = lens_ref[b]
+    q = q_ref[0, 0]  # [D]
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    n_k = s // blk_k
+
+    def body(kb, carry):
+        acc, m_i, l_i = carry
+        kblk = k_ref[0, 0, pl.ds(kb * blk_k, blk_k), :]
+        vblk = v_ref[0, 0, pl.ds(kb * blk_k, blk_k), :]
+        logits = jnp.dot(kblk, q, preferred_element_type=jnp.float32) * scale
+        k_glob = kb * blk_k + jax.lax.iota(jnp.int32, blk_k)
+        logits = jnp.where(k_glob < ln, logits, NEG_INF)
+        m_new = jnp.maximum(m_i, logits.max())
+        p = jnp.exp(logits - m_new)
+        alpha = jnp.exp(m_i - m_new)
+        l_new = l_i * alpha + p.sum()
+        acc_new = acc * alpha + jnp.dot(p, vblk, preferred_element_type=jnp.float32)
+        return acc_new, m_new, l_new
+
+    acc0 = jnp.zeros((d,), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, n_k, body, (acc0, jnp.float32(NEG_INF), jnp.float32(0)))
+    # Inactive slots (len == 0) have l == 0 -> output zeros.
+    o_ref[0, 0] = jnp.where(ln > 0, acc / jnp.maximum(l, 1e-30), 0.0)
+
+
+def decode_attention(q, k, v, lens):
+    """Batched single-token decode attention (Pallas, interpret).
+
+    Args:
+      q: [B, H, D] one query per slot.
+      k: [B, H, S, D] per-slot key cache (new token already at lens-1).
+      v: [B, H, S, D] per-slot value cache.
+      lens: [B] int32 valid KV length per slot (incl. new token); 0=inactive.
+
+    Returns:
+      [B, H, D] attention output, zeros for inactive slots.
+    """
+    b, h, d = q.shape
+    s = k.shape[2]
+    if s % BLK_K != 0:
+        raise ValueError(f"cache len {s} must be a multiple of {BLK_K}")
+    lens = jnp.asarray(lens, jnp.int32)
+    kernel = functools.partial(_decode_kernel, blk_k=BLK_K, s=s)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((b,), lambda bi, hi: (0,)),
+            pl.BlockSpec((1, 1, d), lambda bi, hi: (bi, hi, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda bi, hi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda bi, hi: (bi, hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda bi, hi: (bi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), jnp.float32),
+        interpret=True,
+    )(lens, q, k, v)

@@ -1,0 +1,73 @@
+"""Pure-jnp reference oracle for the Pallas attention kernels.
+
+These are the ground-truth implementations the Pallas kernels in
+``attention.py`` are checked against (pytest + hypothesis). They use the
+same masking semantics:
+
+* ``prefill_attention_ref``: queries are the *new chunk* of ``chunk`` tokens
+  that starts at absolute position ``pos`` (the KV$ cache already contains
+  ``pos`` tokens AND the chunk's own K/V have been written at
+  ``[pos, pos+chunk)``). Query ``i`` (absolute position ``pos+i``) attends
+  to key positions ``j <= pos + i`` — i.e. the whole cached prefix plus the
+  causal part of the chunk.
+
+* ``decode_attention_ref``: a single query token per slot whose K/V has
+  already been written at index ``len-1`` (``len`` = sequence length
+  *including* the new token). The query attends to key positions
+  ``j < len``. Inactive slots (``len == 0``) produce zeros.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def prefill_attention_ref(q, k, v, pos):
+    """Chunked-prefill attention with KV-prefix reuse.
+
+    Args:
+      q: [H, C, D] queries for the new chunk.
+      k: [H, S, D] full key cache (prefix + chunk written at [pos, pos+C)).
+      v: [H, S, D] full value cache.
+      pos: scalar int — number of tokens already cached before this chunk.
+
+    Returns:
+      [H, C, D] attention output for the chunk.
+    """
+    h, c, d = q.shape
+    s = k.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    logits = jnp.einsum("hcd,hsd->hcs", q, k) * scale
+    q_pos = pos + jnp.arange(c)[:, None]  # [C,1] absolute position of query
+    k_pos = jnp.arange(s)[None, :]  # [1,S]
+    mask = k_pos <= q_pos  # causal over prefix+chunk
+    logits = jnp.where(mask[None, :, :], logits, NEG_INF)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hcs,hsd->hcd", p, v)
+
+
+def decode_attention_ref(q, k, v, lens):
+    """Batched single-token decode attention.
+
+    Args:
+      q: [B, H, D] one query per slot.
+      k: [B, H, S, D] per-slot key cache (new token already at lens-1).
+      v: [B, H, S, D] per-slot value cache.
+      lens: [B] int32 — valid KV length per slot, 0 = inactive slot.
+
+    Returns:
+      [B, H, D] attention output (zeros for inactive slots).
+    """
+    b, h, d = q.shape
+    s = k.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    logits = jnp.einsum("bhd,bhsd->bhs", q, k) * scale
+    mask = jnp.arange(s)[None, :] < lens[:, None]  # [B,S]
+    logits = jnp.where(mask[:, None, :], logits, NEG_INF)
+    m = logits.max(axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    denom = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhs,bhsd->bhd", p / jnp.maximum(denom, 1e-30), v)
+    active = (lens > 0)[:, None, None]
+    return jnp.where(active, out, 0.0)

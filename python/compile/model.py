@@ -1,0 +1,281 @@
+"""Layer-2 JAX model: a small decoder-only transformer served by the rust
+instance engine on the live path.
+
+The two entry points mirror exactly what a chunked-prefill, continuous-
+batching engine executes per step (calling the Layer-1 Pallas kernels):
+
+* ``prefill_chunk`` — process one chunk of NEW prompt tokens for one
+  sequence slot, reusing whatever KV$ prefix is already in the cache
+  (a KV$ hit means the engine starts at ``pos = hit_len`` and never
+  recomputes the hit tokens — the source of the P-token indicator's
+  cost model).
+* ``decode_step`` — one token for every active slot, batched.
+
+State layout: a single KV$ tensor ``kv[f32, (L, 2, SLOTS, H, S, D)]`` that
+the rust runtime keeps resident on the PJRT device and threads through
+successive calls (no host round-trip).
+
+Python is build-time only: ``aot.py`` lowers these functions to HLO text
+once per bucket; rust loads and executes them.
+"""
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import decode_attention, prefill_attention
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Tiny-transformer configuration (sized for CPU-PJRT live serving)."""
+
+    vocab: int = 1024
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    d_head: int = 32
+    d_ff: int = 384
+    max_seq: int = 512
+    slots: int = 8  # max concurrent sequences per instance (batch slots)
+    chunk_buckets: tuple = (16, 64, 256)  # chunked-prefill bucket sizes
+    seed: int = 20260710
+
+    @property
+    def kv_shape(self):
+        return (
+            self.n_layers,
+            2,
+            self.slots,
+            self.n_heads,
+            self.max_seq,
+            self.d_head,
+        )
+
+    def param_names(self):
+        """Deterministic flattening order — the AOT artifact signature and
+        the rust runtime's params.bin layout both follow this order."""
+        names = ["embed", "pos_emb"]
+        for i in range(self.n_layers):
+            names += [
+                f"l{i}.ln1",
+                f"l{i}.wq",
+                f"l{i}.wk",
+                f"l{i}.wv",
+                f"l{i}.wo",
+                f"l{i}.ln2",
+                f"l{i}.w1",
+                f"l{i}.w2",
+            ]
+        names.append("lnf")
+        return names
+
+    def param_shapes(self):
+        d, hd = self.d_model, self.n_heads * self.d_head
+        shapes = {
+            "embed": (self.vocab, d),
+            "pos_emb": (self.max_seq, d),
+            "lnf": (d,),
+        }
+        for i in range(self.n_layers):
+            shapes[f"l{i}.ln1"] = (d,)
+            shapes[f"l{i}.wq"] = (d, hd)
+            shapes[f"l{i}.wk"] = (d, hd)
+            shapes[f"l{i}.wv"] = (d, hd)
+            shapes[f"l{i}.wo"] = (hd, d)
+            shapes[f"l{i}.ln2"] = (d,)
+            shapes[f"l{i}.w1"] = (d, self.d_ff)
+            shapes[f"l{i}.w2"] = (self.d_ff, d)
+        return shapes
+
+
+def init_params(cfg: ModelConfig):
+    """Deterministic random init; returns params in param_names() order."""
+    rng = np.random.default_rng(cfg.seed)
+    shapes = cfg.param_shapes()
+    out = []
+    for name in cfg.param_names():
+        shape = shapes[name]
+        if name.endswith(("ln1", "ln2", "lnf")):
+            arr = np.ones(shape, np.float32)
+        else:
+            scale = 0.02 if name in ("embed", "pos_emb") else 1.0 / np.sqrt(shape[0])
+            arr = (rng.standard_normal(shape) * scale).astype(np.float32)
+        out.append(jnp.asarray(arr))
+    return tuple(out)
+
+
+def _rmsnorm(x, scale):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * scale
+
+
+def _unpack(cfg: ModelConfig, params):
+    names = cfg.param_names()
+    assert len(params) == len(names), (len(params), len(names))
+    return dict(zip(names, params))
+
+
+def prefill_chunk(cfg: ModelConfig, tokens, slot, pos, chunk_len, kv, *params):
+    """Prefill one chunk of new tokens into a sequence slot.
+
+    Args:
+      tokens: i32[C] chunk tokens (padded to the bucket size).
+      slot: i32 scalar — slot index in [0, cfg.slots).
+      pos: i32 scalar — tokens already cached for this slot (KV$-hit prefix
+        + previously prefilled chunks).
+      chunk_len: i32 scalar — number of REAL tokens in the chunk (≤ C).
+      kv: f32[kv_shape] cache state.
+      *params: model parameters in param_names() order.
+
+    Returns:
+      (logits f32[vocab] at the chunk's last real token, updated kv).
+    """
+    p = _unpack(cfg, params)
+    c = tokens.shape[0]
+    h, dh, s = cfg.n_heads, cfg.d_head, cfg.max_seq
+    positions = jnp.clip(pos + jnp.arange(c, dtype=jnp.int32), 0, s - 1)
+    x = p["embed"][tokens] + p["pos_emb"][positions]  # [C, d]
+
+    for i in range(cfg.n_layers):
+        hx = _rmsnorm(x, p[f"l{i}.ln1"])
+        q = (hx @ p[f"l{i}.wq"]).reshape(c, h, dh).transpose(1, 0, 2)  # [H,C,D]
+        k = (hx @ p[f"l{i}.wk"]).reshape(c, h, dh).transpose(1, 0, 2)
+        v = (hx @ p[f"l{i}.wv"]).reshape(c, h, dh).transpose(1, 0, 2)
+        # Write the chunk's K/V into the cache at [pos, pos+C). Padding
+        # beyond chunk_len lands at positions the next chunk overwrites and
+        # is causally invisible to real queries.
+        k6 = k[None, None, None]  # [1,1,1,H,C,D]
+        v6 = v[None, None, None]
+        zero = jnp.int32(0)
+        kv = jax.lax.dynamic_update_slice(
+            kv, k6, (jnp.int32(i), zero, slot, zero, pos, zero)
+        )
+        kv = jax.lax.dynamic_update_slice(
+            kv, v6, (jnp.int32(i), jnp.int32(1), slot, zero, pos, zero)
+        )
+        kcache = jax.lax.dynamic_slice(
+            kv, (jnp.int32(i), zero, slot, zero, zero, zero), (1, 1, 1, h, s, dh)
+        ).reshape(h, s, dh)
+        vcache = jax.lax.dynamic_slice(
+            kv, (jnp.int32(i), jnp.int32(1), slot, zero, zero, zero), (1, 1, 1, h, s, dh)
+        ).reshape(h, s, dh)
+        attn = prefill_attention(q, kcache, vcache, pos)  # [H,C,D]
+        x = x + attn.transpose(1, 0, 2).reshape(c, h * dh) @ p[f"l{i}.wo"]
+        hx2 = _rmsnorm(x, p[f"l{i}.ln2"])
+        x = x + jax.nn.gelu(hx2 @ p[f"l{i}.w1"]) @ p[f"l{i}.w2"]
+
+    xf = _rmsnorm(x, p["lnf"])
+    last = jax.lax.dynamic_slice(xf, (chunk_len - 1, jnp.int32(0)), (1, cfg.d_model))
+    logits = (last @ p["embed"].T).reshape(cfg.vocab)
+    return logits, kv
+
+
+def decode_step(cfg: ModelConfig, tokens, lens, kv, *params):
+    """One decode step for all slots (continuous-batching inner loop).
+
+    Args:
+      tokens: i32[SLOTS] last generated token per slot (0 for inactive).
+      lens: i32[SLOTS] current cached length per slot BEFORE this token
+        (0 for inactive slots — their writes land at position 0, which the
+        next prefill of that slot overwrites).
+      kv: f32[kv_shape] cache state.
+      *params: model parameters.
+
+    Returns:
+      (logits f32[SLOTS, vocab], updated kv).
+    """
+    p = _unpack(cfg, params)
+    sl, h, dh, s = cfg.slots, cfg.n_heads, cfg.d_head, cfg.max_seq
+    safe_pos = jnp.clip(lens, 0, s - 1)
+    x = p["embed"][tokens] + p["pos_emb"][safe_pos]  # [SL, d]
+
+    def write_slot(cache_b, kb, len_b):
+        # cache_b: [H,S,D], kb: [H,D] -> write at [:, len_b, :]
+        return jax.lax.dynamic_update_slice(
+            cache_b, kb[:, None, :], (jnp.int32(0), len_b, jnp.int32(0))
+        )
+
+    for i in range(cfg.n_layers):
+        hx = _rmsnorm(x, p[f"l{i}.ln1"])
+        q = (hx @ p[f"l{i}.wq"]).reshape(sl, h, dh)
+        k = (hx @ p[f"l{i}.wk"]).reshape(sl, h, dh)
+        v = (hx @ p[f"l{i}.wv"]).reshape(sl, h, dh)
+        kcache = jax.vmap(write_slot)(kv[i, 0], k, safe_pos)  # [SL,H,S,D]
+        vcache = jax.vmap(write_slot)(kv[i, 1], v, safe_pos)
+        kv = kv.at[i, 0].set(kcache).at[i, 1].set(vcache)
+        attn = decode_attention(q, kcache, vcache, lens + 1)  # [SL,H,D]
+        x = x + attn.reshape(sl, h * dh) @ p[f"l{i}.wo"]
+        hx2 = _rmsnorm(x, p[f"l{i}.ln2"])
+        x = x + jax.nn.gelu(hx2 @ p[f"l{i}.w1"]) @ p[f"l{i}.w2"]
+
+    xf = _rmsnorm(x, p["lnf"])
+    logits = xf @ p["embed"].T  # [SL, vocab]
+    return logits, kv
+
+
+def extract_slot(cfg: ModelConfig, kv, slot):
+    """Pull one slot's K and V planes out of the cache.
+
+    Used by the live engine at request completion to snapshot the slot's
+    KV$ into the host-side prefix store (the cross-request KV$ cache).
+
+    Returns (k f32[L,H,S,D], v f32[L,H,S,D]).
+    """
+    l, h, s, dh = cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.d_head
+    zero = jnp.int32(0)
+    k = jax.lax.dynamic_slice(
+        kv, (zero, zero, slot, zero, zero, zero), (l, 1, 1, h, s, dh)
+    ).reshape(l, h, s, dh)
+    v = jax.lax.dynamic_slice(
+        kv, (zero, jnp.int32(1), slot, zero, zero, zero), (l, 1, 1, h, s, dh)
+    ).reshape(l, h, s, dh)
+    return k, v
+
+
+def inject_slot(cfg: ModelConfig, kv, slot, k, v):
+    """Write host-provided K/V planes into a slot — the KV$-hit fast path.
+
+    The live engine injects a cached prefix here and then prefills only the
+    remaining (new) tokens starting at pos = hit length. Content beyond the
+    hit length is overwritten by subsequent prefill chunks and causally
+    masked, so callers may pass a full-S plane.
+    """
+    l = cfg.n_layers
+    zero = jnp.int32(0)
+    kv = jax.lax.dynamic_update_slice(
+        kv, k[:, None, None], (zero, zero, slot, zero, zero, zero)
+    )
+    kv = jax.lax.dynamic_update_slice(
+        kv, v[:, None, None], (zero, jnp.int32(1), slot, zero, zero, zero)
+    )
+    return kv
+
+
+def reference_forward(cfg: ModelConfig, tokens, params):
+    """Monolithic full-sequence forward (no cache) — oracle for tests.
+
+    Computes logits for every position of ``tokens`` (i32[T]) with plain
+    causal attention; must match composing prefill_chunk/decode_step.
+    """
+    p = _unpack(cfg, params)
+    t = tokens.shape[0]
+    h, dh = cfg.n_heads, cfg.d_head
+    x = p["embed"][tokens] + p["pos_emb"][jnp.arange(t)]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    for i in range(cfg.n_layers):
+        hx = _rmsnorm(x, p[f"l{i}.ln1"])
+        q = (hx @ p[f"l{i}.wq"]).reshape(t, h, dh)
+        k = (hx @ p[f"l{i}.wk"]).reshape(t, h, dh)
+        v = (hx @ p[f"l{i}.wv"]).reshape(t, h, dh)
+        logits = jnp.einsum("qhd,khd->hqk", q, k) / np.sqrt(dh)
+        logits = jnp.where(mask[None], logits, -1e30)
+        att = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("hqk,khd->qhd", att, v).reshape(t, h * dh)
+        x = x + o @ p[f"l{i}.wo"]
+        hx2 = _rmsnorm(x, p[f"l{i}.ln2"])
+        x = x + jax.nn.gelu(hx2 @ p[f"l{i}.w1"]) @ p[f"l{i}.w2"]
+    xf = _rmsnorm(x, p["lnf"])
+    return xf @ p["embed"].T  # [T, vocab]

@@ -1,0 +1,149 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes, cache positions and slot-length vectors; every
+case asserts allclose against the reference.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    decode_attention,
+    decode_attention_ref,
+    prefill_attention,
+    prefill_attention_ref,
+)
+from compile.kernels.attention import BLK_K
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+# ---------------------------------------------------------------- prefill
+
+
+@settings(**SETTINGS)
+@given(
+    h=st.sampled_from([1, 2, 4]),
+    c=st.sampled_from([16, 64, 128, 256]),
+    s_blocks=st.sampled_from([2, 4]),
+    d=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+    pos_frac=st.floats(0.0, 1.0),
+)
+def test_prefill_matches_ref(h, c, s_blocks, d, seed, pos_frac):
+    s = s_blocks * BLK_K
+    if c > s:
+        c = s
+    rng = np.random.default_rng(seed)
+    pos = int(pos_frac * (s - c))
+    q = _rand(rng, h, c, d)
+    k = _rand(rng, h, s, d)
+    v = _rand(rng, h, s, d)
+    got = prefill_attention(q, k, v, pos)
+    want = prefill_attention_ref(q, k, v, pos)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_prefill_pos_zero_and_max():
+    rng = np.random.default_rng(0)
+    h, c, s, d = 2, 64, 2 * BLK_K, 32
+    q, k, v = _rand(rng, h, c, d), _rand(rng, h, s, d), _rand(rng, h, s, d)
+    for pos in (0, s - c):
+        np.testing.assert_allclose(
+            prefill_attention(q, k, v, pos),
+            prefill_attention_ref(q, k, v, pos),
+            atol=2e-5,
+            rtol=2e-5,
+        )
+
+
+def test_prefill_first_token_attends_only_itself():
+    """With pos=0, query 0 must attend only to key 0 -> output == v[:,0]."""
+    rng = np.random.default_rng(3)
+    h, c, s, d = 2, 16, BLK_K, 16
+    q, k, v = _rand(rng, h, c, d), _rand(rng, h, s, d), _rand(rng, h, s, d)
+    out = prefill_attention(q, k, v, 0)
+    np.testing.assert_allclose(out[:, 0, :], v[:, 0, :], atol=2e-5, rtol=2e-5)
+
+
+def test_prefill_ignores_garbage_beyond_causal_frontier():
+    """Keys at positions > pos+i must not affect output."""
+    rng = np.random.default_rng(4)
+    h, c, s, d = 2, 16, BLK_K, 16
+    pos = 40
+    q, k, v = _rand(rng, h, c, d), _rand(rng, h, s, d), _rand(rng, h, s, d)
+    out1 = prefill_attention(q, k, v, pos)
+    k2 = k.at[:, pos + c :, :].set(1e3)
+    v2 = v.at[:, pos + c :, :].set(-1e3)
+    out2 = prefill_attention(q, k2, v2, pos)
+    np.testing.assert_allclose(out1, out2, atol=2e-5, rtol=2e-5)
+
+
+def test_prefill_rejects_bad_shapes():
+    rng = np.random.default_rng(5)
+    q = _rand(rng, 2, 16, 16)
+    k = _rand(rng, 2, 100, 16)  # not a BLK_K multiple
+    with pytest.raises(ValueError):
+        prefill_attention(q, k, k, 0)
+
+
+# ----------------------------------------------------------------- decode
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([1, 2, 4, 8]),
+    h=st.sampled_from([1, 4]),
+    s_blocks=st.sampled_from([2, 4]),
+    d=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_matches_ref(b, h, s_blocks, d, seed):
+    s = s_blocks * BLK_K
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, b, h, d)
+    k = _rand(rng, b, h, s, d)
+    v = _rand(rng, b, h, s, d)
+    lens = jnp.asarray(rng.integers(0, s + 1, b), jnp.int32)
+    got = decode_attention(q, k, v, lens)
+    want = decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_decode_inactive_slots_zero():
+    rng = np.random.default_rng(7)
+    b, h, s, d = 4, 2, BLK_K, 16
+    q, k, v = _rand(rng, b, h, d), _rand(rng, b, h, s, d), _rand(rng, b, h, s, d)
+    lens = jnp.asarray([0, 3, 0, s], jnp.int32)
+    out = decode_attention(q, k, v, lens)
+    assert float(jnp.abs(out[0]).max()) == 0.0
+    assert float(jnp.abs(out[2]).max()) == 0.0
+    assert float(jnp.abs(out[1]).max()) > 0.0
+
+
+def test_decode_len_one_returns_v0():
+    rng = np.random.default_rng(8)
+    b, h, s, d = 2, 2, BLK_K, 16
+    q, k, v = _rand(rng, b, h, d), _rand(rng, b, h, s, d), _rand(rng, b, h, s, d)
+    lens = jnp.asarray([1, 1], jnp.int32)
+    out = decode_attention(q, k, v, lens)
+    np.testing.assert_allclose(out, v[:, :, 0, :], atol=2e-5, rtol=2e-5)
+
+
+def test_decode_full_length():
+    rng = np.random.default_rng(9)
+    b, h, s, d = 2, 2, 2 * BLK_K, 16
+    q, k, v = _rand(rng, b, h, d), _rand(rng, b, h, s, d), _rand(rng, b, h, s, d)
+    lens = jnp.full((b,), s, jnp.int32)
+    np.testing.assert_allclose(
+        decode_attention(q, k, v, lens),
+        decode_attention_ref(q, k, v, lens),
+        atol=2e-5,
+        rtol=2e-5,
+    )

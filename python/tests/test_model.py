@@ -1,0 +1,189 @@
+"""L2 correctness: the chunked/batched serving path must reproduce the
+monolithic full-sequence forward (reference_forward) exactly.
+
+This is the property the whole serving engine rests on: processing a
+prompt as (KV$-hit prefix skip + chunked prefill + batched decode) yields
+the same logits as one full forward pass.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.model import (
+    ModelConfig,
+    decode_step,
+    extract_slot,
+    init_params,
+    inject_slot,
+    prefill_chunk,
+    reference_forward,
+)
+
+CFG = ModelConfig()
+PARAMS = init_params(CFG)
+ATOL = 2e-4
+
+
+def _tokens(rng, n):
+    return jnp.asarray(rng.integers(1, CFG.vocab, n), jnp.int32)
+
+
+def _pad(a, n):
+    return jnp.concatenate([a, jnp.zeros(n - a.shape[0], jnp.int32)])
+
+
+def _prefill_seq(tokens, slot, kv, chunk=16, start_pos=0):
+    """Prefill tokens[start_pos:] in fixed-size chunks (cache holds
+    tokens[:start_pos] already). Returns (last logits, kv)."""
+    pos = start_pos
+    n = tokens.shape[0]
+    logits = None
+    while pos < n:
+        c = min(chunk, n - pos)
+        buf = _pad(tokens[pos : pos + c], chunk)
+        logits, kv = prefill_chunk(
+            CFG, buf, jnp.int32(slot), jnp.int32(pos), jnp.int32(c), kv, *PARAMS
+        )
+        pos += c
+    return logits, kv
+
+
+def test_single_chunk_matches_reference():
+    rng = np.random.default_rng(0)
+    toks = _tokens(rng, 16)
+    ref = reference_forward(CFG, toks, PARAMS)
+    kv = jnp.zeros(CFG.kv_shape, jnp.float32)
+    logits, _ = prefill_chunk(
+        CFG, toks, jnp.int32(0), jnp.int32(0), jnp.int32(16), kv, *PARAMS
+    )
+    np.testing.assert_allclose(logits, ref[-1], atol=ATOL)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n=st.integers(3, 80),
+    chunk=st.sampled_from([16, 64]),
+    slot=st.integers(0, CFG.slots - 1),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_chunked_prefill_matches_reference(n, chunk, slot, seed):
+    rng = np.random.default_rng(seed)
+    toks = _tokens(rng, n)
+    ref = reference_forward(CFG, toks, PARAMS)
+    kv = jnp.zeros(CFG.kv_shape, jnp.float32)
+    logits, _ = _prefill_seq(toks, slot, kv, chunk=chunk)
+    np.testing.assert_allclose(logits, ref[-1], atol=ATOL)
+
+
+def test_padding_does_not_change_logits():
+    """Logits at chunk_len-1 are invariant to pad-token values."""
+    rng = np.random.default_rng(2)
+    toks = _tokens(rng, 10)
+    kv = jnp.zeros(CFG.kv_shape, jnp.float32)
+    buf1 = _pad(toks, 16)
+    buf2 = jnp.concatenate([toks, jnp.full((6,), 999, jnp.int32)])
+    l1, _ = prefill_chunk(CFG, buf1, jnp.int32(0), jnp.int32(0), jnp.int32(10), kv, *PARAMS)
+    l2, _ = prefill_chunk(CFG, buf2, jnp.int32(0), jnp.int32(0), jnp.int32(10), kv, *PARAMS)
+    np.testing.assert_allclose(l1, l2, atol=1e-5)
+
+
+def test_kv_hit_prefix_skip_matches_full_prefill():
+    """The KV$-reuse contract: if the cache already holds a prefix, starting
+    prefill at pos=hit_len gives the same logits as prefilling everything."""
+    rng = np.random.default_rng(3)
+    prefix = _tokens(rng, 32)
+    suffix = _tokens(rng, 20)
+    full = jnp.concatenate([prefix, suffix])
+    # Path A: prefill the whole prompt.
+    kv_a = jnp.zeros(CFG.kv_shape, jnp.float32)
+    la, _ = _prefill_seq(full, 1, kv_a)
+    # Path B: prefill prefix (a previous request), then treat it as a KV$
+    # hit and prefill only the suffix at pos=32.
+    kv_b = jnp.zeros(CFG.kv_shape, jnp.float32)
+    _, kv_b = _prefill_seq(prefix, 1, kv_b)
+    lb, _ = _prefill_seq(full, 1, kv_b, start_pos=32)
+    np.testing.assert_allclose(la, lb, atol=ATOL)
+
+
+def test_decode_chain_matches_reference():
+    rng = np.random.default_rng(4)
+    toks = _tokens(rng, 24)
+    kv = jnp.zeros(CFG.kv_shape, jnp.float32)
+    logits, kv = _prefill_seq(toks, 3, kv)
+    seq = toks
+    for _ in range(4):
+        nt = jnp.argmax(logits if logits.ndim == 1 else logits[3]).astype(jnp.int32)
+        seq = jnp.concatenate([seq, nt[None]])
+        ref = reference_forward(CFG, seq, PARAMS)
+        tok_in = jnp.zeros(CFG.slots, jnp.int32).at[3].set(nt)
+        lens = jnp.zeros(CFG.slots, jnp.int32).at[3].set(seq.shape[0] - 1)
+        out, kv = decode_step(CFG, tok_in, lens, kv, *PARAMS)
+        np.testing.assert_allclose(out[3], ref[-1], atol=ATOL)
+        logits = out
+
+
+def test_slots_are_isolated():
+    """Prefilling slot A must not perturb slot B's decode results."""
+    rng = np.random.default_rng(5)
+    ta, tb = _tokens(rng, 20), _tokens(rng, 30)
+    kv = jnp.zeros(CFG.kv_shape, jnp.float32)
+    la_alone, _ = _prefill_seq(ta, 0, kv)
+    _, kv = _prefill_seq(tb, 5, kv)  # other slot busy
+    la_shared, _ = _prefill_seq(ta, 0, kv)
+    np.testing.assert_allclose(la_alone, la_shared, atol=1e-5)
+
+
+def test_batched_decode_matches_individual():
+    """Decoding two slots in one batched step == decoding each alone."""
+    rng = np.random.default_rng(6)
+    ta, tb = _tokens(rng, 12), _tokens(rng, 18)
+    kv = jnp.zeros(CFG.kv_shape, jnp.float32)
+    la, kv = _prefill_seq(ta, 0, kv)
+    lb, kv = _prefill_seq(tb, 1, kv)
+    na = jnp.argmax(la).astype(jnp.int32)
+    nb = jnp.argmax(lb).astype(jnp.int32)
+    # Batched: both slots at once.
+    tok_in = jnp.zeros(CFG.slots, jnp.int32).at[0].set(na).at[1].set(nb)
+    lens = jnp.zeros(CFG.slots, jnp.int32).at[0].set(12).at[1].set(18)
+    out_b, _ = decode_step(CFG, tok_in, lens, kv, *PARAMS)
+    # Individual references.
+    ra = reference_forward(CFG, jnp.concatenate([ta, na[None]]), PARAMS)[-1]
+    rb = reference_forward(CFG, jnp.concatenate([tb, nb[None]]), PARAMS)[-1]
+    np.testing.assert_allclose(out_b[0], ra, atol=ATOL)
+    np.testing.assert_allclose(out_b[1], rb, atol=ATOL)
+
+
+def test_extract_inject_roundtrip_preserves_kv_hit_path():
+    """Snapshot a finished slot's KV, inject it into another slot, and
+    continue from the hit — must equal prefilling from scratch. This is the
+    live engine's cross-request KV$ mechanism."""
+    rng = np.random.default_rng(7)
+    prefix = _tokens(rng, 32)
+    suffix = _tokens(rng, 16)
+    full = jnp.concatenate([prefix, suffix])
+    # Request 1 on slot 0 prefills the prefix; snapshot slot 0.
+    kv = jnp.zeros(CFG.kv_shape, jnp.float32)
+    _, kv = _prefill_seq(prefix, 0, kv)
+    k_snap, v_snap = extract_slot(CFG, kv, jnp.int32(0))
+    # Request 2 arrives on slot 4 with a KV$ hit on the prefix.
+    kv2 = jnp.zeros(CFG.kv_shape, jnp.float32)
+    kv2 = inject_slot(CFG, kv2, jnp.int32(4), k_snap, v_snap)
+    l_hit, _ = _prefill_seq(full, 4, kv2, start_pos=32)
+    # Oracle: full prefill with no cache.
+    kv3 = jnp.zeros(CFG.kv_shape, jnp.float32)
+    l_cold, _ = _prefill_seq(full, 2, kv3)
+    np.testing.assert_allclose(l_hit, l_cold, atol=ATOL)
+
+
+def test_param_layout_stable():
+    """param_names()/param_shapes() define the params.bin ABI with rust —
+    guard against accidental reordering."""
+    names = CFG.param_names()
+    assert names[0] == "embed" and names[1] == "pos_emb" and names[-1] == "lnf"
+    assert len(names) == 2 + 8 * CFG.n_layers + 1
+    shapes = CFG.param_shapes()
+    total = sum(int(np.prod(shapes[n])) for n in names)
+    flat = np.concatenate([np.asarray(p).ravel() for p in PARAMS])
+    assert flat.size == total

@@ -1,0 +1,43 @@
+//! Fig 10: per-instance prefill-time imbalance under λ=0.7 vs λ=0.9.
+//! For each run, pick the two instances with the highest stddev of
+//! per-10s-window prefill seconds and compare their averages.
+//!
+//! Paper shape: λ=0.9 diverges (3.57s vs 2.17s per window); λ=0.7 stays
+//! balanced (3.43s vs 3.40s).
+
+use lmetric::benchlib::{experiment, figure_banner, run_policy, trace_for};
+use lmetric::metrics::{save_results, ResultRow};
+
+fn main() {
+    figure_banner("Fig 10", "prefill-time imbalance: λ=0.7 vs λ=0.9 (ChatBot)");
+    let exp = experiment("chatbot", 8, 5000);
+    let trace = trace_for(&exp);
+    let mut rows = Vec::new();
+    let mut scores = Vec::new();
+    for lambda in [0.7, 0.9] {
+        let (m, label) = run_policy(&exp, &trace, "linear", lambda);
+        let (ia, a, ib, b) = m.top2_imbalanced_instances().unwrap();
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+        println!(
+            "\nλ={lambda}: most divergent instances {ia} and {ib} (prefill s / 10 s window)"
+        );
+        println!("  inst {ia}: mean {:.2}s   inst {ib}: mean {:.2}s", mean(&a), mean(&b));
+        for w in 0..a.len().min(b.len()).min(20) {
+            println!("    w{w:>2}: {:>6.2}s vs {:>6.2}s", a[w], b[w]);
+        }
+        let score = m.imbalance_score();
+        println!("  imbalance score (mean |gap|): {score:.3}s");
+        scores.push(score);
+        rows.push(
+            ResultRow::from_metrics(&label, &m)
+                .with("lambda", lambda)
+                .with("imbalance_s", score),
+        );
+    }
+    println!(
+        "\nshape check: λ=0.9 more imbalanced than λ=0.7: {}",
+        if scores[1] > scores[0] { "YES (matches paper)" } else { "NO" }
+    );
+    let path = save_results("fig10_imbalance", &rows, &[]).unwrap();
+    println!("saved {}", path.display());
+}

@@ -1,0 +1,49 @@
+//! Fig 11: the linear combination's hyperparameter pain — TTFT/TPOT
+//! p50/p95 as λ sweeps, on all four traces.
+//!
+//! Paper shape: U-shaped curves with a workload-dependent knee (ChatBot
+//! optimum ≈ 0.7, API/Agent ≈ 0.55, etc.) — no single λ wins everywhere.
+
+use lmetric::benchlib::{experiment, figure_banner, run_policy, trace_for};
+use lmetric::metrics::{fmt_s, save_results, ResultRow};
+
+fn main() {
+    figure_banner("Fig 11", "linear-combination λ sweep across traces");
+    let lambdas = [0.4, 0.55, 0.7, 0.85, 0.95];
+    let mut all_rows = Vec::new();
+    let mut best: Vec<(String, f64)> = Vec::new();
+    for workload in ["chatbot", "coder", "agent", "toolagent"] {
+        let exp = experiment(workload, 8, 4000);
+        let trace = trace_for(&exp);
+        println!("\n{workload}:  {:>6} {:>10} {:>10} {:>10} {:>10}", "λ", "TTFT-p50", "TTFT-p95", "TPOT-p50", "TPOT-p95");
+        let mut best_l = (0.0, f64::INFINITY);
+        for &l in &lambdas {
+            let (m, _) = run_policy(&exp, &trace, "linear", l);
+            let (t, p) = (m.ttft_summary(), m.tpot_summary());
+            println!(
+                "        {l:>6.2} {:>10} {:>10} {:>10} {:>10}",
+                fmt_s(t.p50),
+                fmt_s(t.p95),
+                fmt_s(p.p50),
+                fmt_s(p.p95)
+            );
+            if t.mean < best_l.1 {
+                best_l = (l, t.mean);
+            }
+            all_rows.push(
+                ResultRow::from_metrics(&format!("{workload}/λ={l}"), &m).with("lambda", l),
+            );
+        }
+        println!("        best λ for {workload}: {}", best_l.0);
+        best.push((workload.to_string(), best_l.0));
+    }
+    let distinct: std::collections::BTreeSet<String> =
+        best.iter().map(|(_, l)| format!("{l}")).collect();
+    println!(
+        "\nshape check: optimal λ varies across workloads ({:?}): {}",
+        best,
+        if distinct.len() > 1 { "YES (matches paper)" } else { "NO — all identical" }
+    );
+    let path = save_results("fig11_linear_sweep", &all_rows, &[]).unwrap();
+    println!("saved {}", path.display());
+}

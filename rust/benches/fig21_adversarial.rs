@@ -1,0 +1,129 @@
+//! Fig 21: the adversarial KV$-hotspot case study — a burst of one class
+//! with a long shared prefix, cached on few instances. (a) the Eq. 2
+//! violation appears in the hot window; (b–c) bare LMETRIC loses to a
+//! load-balance-only policy during the window, and the two-phase
+//! detector (lmetric_guarded) recovers.
+
+use lmetric::benchlib::{experiment, figure_banner, run_boxed, run_default, trace_for};
+use lmetric::hotspot::GuardedLMetric;
+use lmetric::metrics::{fmt_s, save_results, ResultRow};
+use lmetric::util::stats::Summary;
+
+fn main() {
+    figure_banner("Fig 21", "adversarial hotspot: LMETRIC vs LB-only vs guarded");
+    let exp = experiment("hotspot", 8, 6000);
+    let trace = trace_for(&exp);
+    let hot_class = 12u32;
+    // The window by arrival time of hot-class requests.
+    let hot_times: Vec<u64> = trace
+        .requests
+        .iter()
+        .filter(|r| r.req.class_id == hot_class)
+        .map(|r| r.req.arrival_us)
+        .collect();
+    let (w_lo, w_hi) = (
+        *hot_times.iter().min().unwrap(),
+        *hot_times.iter().max().unwrap(),
+    );
+    println!(
+        "hot window: {:.0}s .. {:.0}s ({} hot requests of {})",
+        w_lo as f64 / 1e6,
+        w_hi as f64 / 1e6,
+        hot_times.len(),
+        trace.requests.len()
+    );
+
+    let mut rows = Vec::new();
+    let mut window_ttft = std::collections::BTreeMap::new();
+    let (m_v, _) = run_default(&exp, &trace, "vllm");
+    let (m_l, _) = run_default(&exp, &trace, "lmetric");
+    let mut guarded = GuardedLMetric::new();
+    let m_g = run_boxed(&exp, &trace, &mut guarded);
+    println!(
+        "detector: {} phase-1 alarms, {} mitigations",
+        guarded.detector.phase1_alarms, guarded.detector.mitigations
+    );
+    for (label, m) in [("vllm (LB-only)", &m_v), ("lmetric", &m_l), ("lmetric_guarded", &m_g)] {
+        let in_w: Vec<f64> = m
+            .records
+            .iter()
+            .filter(|r| r.arrival_us >= w_lo && r.arrival_us <= w_hi && r.output_len > 1)
+            .map(|r| r.tpot_s())
+            .collect();
+        let in_w_ttft: Vec<f64> = m
+            .records
+            .iter()
+            .filter(|r| r.arrival_us >= w_lo && r.arrival_us <= w_hi)
+            .map(|r| r.ttft_s())
+            .collect();
+        let s = Summary::of(&in_w);
+        let st = Summary::of(&in_w_ttft);
+        println!(
+            "{label:<18} in-window TPOT mean {} p95 {} | TTFT mean {} | overall TPOT {}",
+            fmt_s(s.mean),
+            fmt_s(s.p95),
+            fmt_s(st.mean),
+            fmt_s(m.tpot_summary().mean)
+        );
+        window_ttft.insert(label.to_string(), (s.mean, st.mean));
+        rows.push(
+            ResultRow::from_metrics(label, m)
+                .with("window_tpot_mean", s.mean)
+                .with("window_ttft_mean", st.mean)
+                .with("imbalance_s", m.imbalance_score()),
+        );
+    }
+    // The pile-on mechanism itself: how concentrated is the running batch
+    // across instances during the hot window?
+    let concentration = |m: &lmetric::metrics::RunMetrics| -> f64 {
+        let lo_w = (w_lo / 1_000_000) as usize;
+        let hi_w = (w_hi / 1_000_000) as usize;
+        let means: Vec<f64> = m
+            .batch_size
+            .iter()
+            .map(|w| {
+                let ms = w.means();
+                let in_w: Vec<f64> = ms
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, v)| *i >= lo_w && *i <= hi_w && !v.is_nan())
+                    .map(|(_, v)| *v)
+                    .collect();
+                in_w.iter().sum::<f64>() / in_w.len().max(1) as f64
+            })
+            .collect();
+        let max = means.iter().cloned().fold(0.0, f64::max);
+        let mean = means.iter().sum::<f64>() / means.len() as f64;
+        max / mean.max(1e-9) // 1.0 = perfectly even; >>1 = pile-on
+    };
+    let c_l = concentration(&m_l);
+    let c_v = concentration(&m_v);
+    let c_g = concentration(&m_g);
+    println!("\nin-window batch concentration (max/mean instance BS):");
+    println!("  vllm {c_v:.2}   lmetric {c_l:.2}   guarded {c_g:.2}");
+    println!(
+        "\nshape checks: lmetric concentrates the thinking burst (pile-on ≫ LB-only): {}",
+        if c_l > c_v + 0.1 { "YES (the §5.2 mechanism)" } else { "NO" }
+    );
+    println!(
+        "              detector fires on the burst: {}",
+        if guarded.detector.mitigations > 0 { "YES" } else { "NO" }
+    );
+    println!(
+        "              guarded reduces the concentration: {}",
+        if c_g < c_l { "YES" } else { "NO" }
+    );
+    let lm = window_ttft["lmetric"];
+    let vl = window_ttft["vllm (LB-only)"];
+    println!(
+        "\nnote: unlike the paper's production case, bare LMETRIC does not fall\n\
+         behind LB-only here (in-window TPOT {} vs {}), because on this cost\n\
+         substrate the 4k-prefix KV$ saving outweighs the decode imbalance it\n\
+         causes; the pile-on and the detector behaviour — the §5.2 mechanism —\n\
+         do reproduce (see EXPERIMENTS.md).",
+        fmt_s(lm.0),
+        fmt_s(vl.0)
+    );
+    let path = save_results("fig21_adversarial", &rows, &[]).unwrap();
+    println!("saved {}", path.display());
+}

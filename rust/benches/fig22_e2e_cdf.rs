@@ -1,0 +1,58 @@
+//! Fig 22 — the headline end-to-end comparison: TTFT and TPOT CDFs of
+//! LMETRIC vs BAILIAN (linear), vLLM, Dynamo and llm-d on four
+//! workloads at half-capacity load.
+//!
+//! Paper shape: LMETRIC best-or-tied on every trace; on ChatBot it cuts
+//! mean TTFT 92% and mean TPOT 24% vs vLLM and beats llm-d's P99 TPOT
+//! by 13%.
+
+use lmetric::benchlib::{experiment, figure_banner, run_default, trace_for};
+use lmetric::metrics::{render_table, save_results, ResultRow};
+
+const POLICIES: [&str; 5] = ["vllm", "linear", "dynamo", "sim_llmd", "lmetric"];
+
+fn main() {
+    figure_banner("Fig 22", "end-to-end TTFT/TPOT CDFs, 5 policies × 4 workloads");
+    for workload in ["chatbot", "coder", "agent", "toolagent"] {
+        let exp = experiment(workload, 8, 6000);
+        let trace = trace_for(&exp);
+        let mut rows = Vec::new();
+        let mut cdfs = Vec::new();
+        let mut stats = std::collections::BTreeMap::new();
+        for name in POLICIES {
+            let (m, label) = run_default(&exp, &trace, name);
+            cdfs.push((format!("ttft_{name}"), m.ttfts()));
+            cdfs.push((format!("tpot_{name}"), m.tpots()));
+            stats.insert(name, (m.ttft_summary(), m.tpot_summary()));
+            rows.push(ResultRow::from_metrics(&label, &m));
+        }
+        println!(
+            "{}",
+            render_table(
+                &format!(
+                    "Fig 22 — {workload} ({} reqs @ {:.1} req/s, {} inst)",
+                    trace.requests.len(),
+                    trace.steady_rps(),
+                    exp.instances
+                ),
+                &rows
+            )
+        );
+        if workload == "chatbot" {
+            let lm = &stats["lmetric"];
+            let vl = &stats["vllm"];
+            let sd = &stats["sim_llmd"];
+            println!(
+                "headline: LMETRIC vs vLLM  TTFT −{:.0}% (paper 92%), TPOT −{:.0}% (paper 24%)",
+                (1.0 - lm.0.mean / vl.0.mean) * 100.0,
+                (1.0 - lm.1.mean / vl.1.mean) * 100.0
+            );
+            println!(
+                "          LMETRIC vs llm-d P99 TPOT −{:.0}% (paper 13%)",
+                (1.0 - lm.1.p99 / sd.1.p99) * 100.0
+            );
+        }
+        let path = save_results(&format!("fig22_e2e_{workload}"), &rows, &cdfs).unwrap();
+        println!("saved {}", path.display());
+    }
+}

@@ -1,0 +1,56 @@
+//! Fig 23: end-to-end performance under different request rates
+//! (0.3×–0.85× of profiled capacity), on the moe-30b model for three
+//! workloads plus the dense-7b model for Agent (the paper's second row).
+//!
+//! Paper shape: LMETRIC lowest latency at every rate; gaps widen with
+//! rate.
+
+use lmetric::benchlib::{experiment, figure_banner, run_default, trace_for};
+use lmetric::metrics::{fmt_s, save_results, ResultRow};
+
+const POLICIES: [&str; 5] = ["vllm", "linear", "dynamo", "sim_llmd", "lmetric"];
+
+fn main() {
+    figure_banner("Fig 23", "rate sweep × policies × workloads");
+    let mut all_rows = Vec::new();
+    for (workload, profile) in [
+        ("chatbot", "moe-30b"),
+        ("agent", "dense-7b"),
+        ("coder", "moe-30b"),
+        ("toolagent", "moe-30b"),
+    ] {
+        println!("\n=== {workload} on {profile} ===");
+        println!(
+            "{:>6} {:>12} {:>10} {:>10} {:>10} {:>10}",
+            "rate", "policy", "TTFT-mean", "TTFT-p99", "TPOT-mean", "TPOT-p99"
+        );
+        for rate in [0.3, 0.5, 0.7, 0.85] {
+            let mut best = (String::new(), f64::INFINITY);
+            let mut exp = experiment(workload, 8, 4000);
+            exp.profile = profile.into();
+            exp.rate_scale = rate;
+            let trace = trace_for(&exp); // shared across policies
+            for name in POLICIES {
+                let (m, _) = run_default(&exp, &trace, name);
+                let (t, p) = (m.ttft_summary(), m.tpot_summary());
+                println!(
+                    "{rate:>6.2} {name:>12} {:>10} {:>10} {:>10} {:>10}",
+                    fmt_s(t.mean),
+                    fmt_s(t.p99),
+                    fmt_s(p.mean),
+                    fmt_s(p.p99)
+                );
+                if t.mean < best.1 {
+                    best = (name.to_string(), t.mean);
+                }
+                all_rows.push(
+                    ResultRow::from_metrics(&format!("{workload}/{profile}/{rate}/{name}"), &m)
+                        .with("rate", rate),
+                );
+            }
+            println!("       -> best at {rate}: {}", best.0);
+        }
+    }
+    let path = save_results("fig23_rate_sweep", &all_rows, &[]).unwrap();
+    println!("saved {}", path.display());
+}

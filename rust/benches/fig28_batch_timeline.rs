@@ -1,0 +1,49 @@
+//! Fig 28: running batch size across all instances under PolyServe vs
+//! LMETRIC (ChatBot, moe-30b).
+//!
+//! Paper shape: PolyServe concentrates load (a gradient: some instances
+//! loaded, a tail idle — headroom for auto-scaling); LMETRIC spreads the
+//! same aggregate load evenly.
+
+use lmetric::benchlib::{experiment, figure_banner, run_default, trace_for};
+use lmetric::metrics::{save_results, ResultRow};
+use lmetric::util::stats::stddev;
+
+fn main() {
+    figure_banner("Fig 28", "per-instance running batch size: PolyServe vs LMETRIC");
+    let exp = experiment("chatbot", 8, 5000);
+    let trace = trace_for(&exp);
+    let mut rows = Vec::new();
+    let mut spreads = std::collections::BTreeMap::new();
+    for name in ["polyserve", "lmetric"] {
+        let (m, label) = run_default(&exp, &trace, name);
+        // Mean running BS per instance over the run.
+        let mut means: Vec<(usize, f64)> = m
+            .batch_size
+            .iter()
+            .enumerate()
+            .map(|(i, w)| {
+                let ms = w.means();
+                let valid: Vec<f64> = ms.iter().cloned().filter(|x| !x.is_nan()).collect();
+                (i, valid.iter().sum::<f64>() / valid.len().max(1) as f64)
+            })
+            .collect();
+        means.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        println!("\n{label}: mean running BS per instance (sorted):");
+        for (i, bs) in &means {
+            println!("  inst {i:>2}: {bs:>6.2} {}", "#".repeat((bs * 2.0) as usize));
+        }
+        let values: Vec<f64> = means.iter().map(|(_, b)| *b).collect();
+        let sd = stddev(&values);
+        println!("  cross-instance stddev: {sd:.2}");
+        spreads.insert(name, sd);
+        rows.push(ResultRow::from_metrics(&label, &m).with("bs_stddev", sd));
+    }
+    println!(
+        "\nshape check: PolyServe gradient vs LMETRIC even spread (stddev ratio {:.1}x): {}",
+        spreads["polyserve"] / spreads["lmetric"].max(1e-9),
+        if spreads["polyserve"] > spreads["lmetric"] * 1.5 { "YES (matches paper)" } else { "NO" }
+    );
+    let path = save_results("fig28_batch_timeline", &rows, &[]).unwrap();
+    println!("saved {}", path.display());
+}

@@ -1,0 +1,39 @@
+//! Fig 31 (appendix A.1): Preble end-to-end performance as the filter
+//! threshold T varies (ChatBot, moe-30b).
+//!
+//! Paper shape: T has little impact; the published default T=0.5 is
+//! already (near-)optimal.
+
+use lmetric::benchlib::{experiment, figure_banner, run_policy, trace_for};
+use lmetric::metrics::{fmt_s, save_results, ResultRow};
+
+fn main() {
+    figure_banner("Fig 31", "Preble filter-threshold T sweep");
+    let exp = experiment("chatbot", 8, 4000);
+    let trace = trace_for(&exp);
+    let mut rows = Vec::new();
+    let mut ttfts = Vec::new();
+    println!("{:>6} {:>10} {:>10} {:>10} {:>10}", "T", "TTFT-mean", "TTFT-p99", "TPOT-mean", "TPOT-p99");
+    for t in [0.1, 0.25, 0.5, 0.75, 1.0] {
+        let (m, label) = run_policy(&exp, &trace, "preble", t);
+        let (tt, tp) = (m.ttft_summary(), m.tpot_summary());
+        println!(
+            "{t:>6.2} {:>10} {:>10} {:>10} {:>10}",
+            fmt_s(tt.mean),
+            fmt_s(tt.p99),
+            fmt_s(tp.mean),
+            fmt_s(tp.p99)
+        );
+        ttfts.push((t, tt.mean));
+        rows.push(ResultRow::from_metrics(&label, &m).with("T", t));
+    }
+    let best = ttfts.iter().cloned().fold((0.0, f64::MAX), |a, b| if b.1 < a.1 { b } else { a });
+    let at_default = ttfts.iter().find(|(t, _)| *t == 0.5).unwrap().1;
+    println!(
+        "\nshape check: default T=0.5 within 15% of the best (T={}): {}",
+        best.0,
+        if at_default <= best.1 * 1.15 { "YES (matches paper)" } else { "NO" }
+    );
+    let path = save_results("fig31_preble_t", &rows, &[]).unwrap();
+    println!("saved {}", path.display());
+}

@@ -1,0 +1,35 @@
+//! Fig 32 (appendix A.1): Preble with (T=0.5) and without (T=1) its
+//! KV$-aware filter branch.
+//!
+//! Paper shape: the filter gives a measurable but modest improvement —
+//! Preble's behaviour is dominated by its linear-combination fallback.
+
+use lmetric::benchlib::{experiment, figure_banner, run_policy, trace_for};
+use lmetric::metrics::{render_table, save_results, ResultRow};
+
+fn main() {
+    figure_banner("Fig 32", "Preble with vs without the KV$-aware filter");
+    let exp = experiment("chatbot", 8, 5000);
+    let trace = trace_for(&exp);
+    let (with, _) = run_policy(&exp, &trace, "preble", 0.5);
+    let (without, _) = run_policy(&exp, &trace, "preble", 1.0);
+    let rows = vec![
+        ResultRow::from_metrics("preble T=0.5 (filter on)", &with),
+        ResultRow::from_metrics("preble T=1.0 (filter off)", &without),
+    ];
+    println!("{}", render_table("Fig 32", &rows));
+    let gain = 1.0 - with.ttft_summary().mean / without.ttft_summary().mean;
+    println!(
+        "shape check: the KV$ filter contributes a measurable improvement: {}",
+        if gain > 0.0 { "YES" } else { "NO" }
+    );
+    println!(
+        "note: TTFT −{:.0}% here vs a modest gain in the paper — with our traces'\n\
+         higher prefix share the filter branch carries most of Preble's KV$\n\
+         awareness (Fig 27), so disabling it costs more than on the production\n\
+         traces where the windowed-linear fallback dominated.",
+        gain * 100.0
+    );
+    let path = save_results("fig32_preble_filter", &rows, &[]).unwrap();
+    println!("saved {}", path.display());
+}

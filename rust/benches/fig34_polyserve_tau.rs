@@ -1,0 +1,31 @@
+//! Fig 34 (appendix A.2): PolyServe end-to-end TTFT/TPOT as the TPOT-SLO
+//! threshold τ varies (ChatBot, moe-30b).
+//!
+//! Paper shape: τ trades utilization against latency; a τ near the
+//! natural decode step time is best, and the paper adopts τ=20 ms.
+
+use lmetric::benchlib::{experiment, figure_banner, run_policy, trace_for};
+use lmetric::metrics::{fmt_s, save_results, ResultRow};
+
+fn main() {
+    figure_banner("Fig 34", "PolyServe SLO_TPOT (τ) sweep");
+    let exp = experiment("chatbot", 8, 4000);
+    let trace = trace_for(&exp);
+    let mut rows = Vec::new();
+    println!("{:>8} {:>10} {:>10} {:>10} {:>10}", "τ (ms)", "TTFT-mean", "TTFT-p99", "TPOT-mean", "TPOT-p99");
+    for tau_ms in [5.0, 10.0, 20.0, 40.0, 80.0] {
+        let (m, label) = run_policy(&exp, &trace, "polyserve", tau_ms);
+        let (t, p) = (m.ttft_summary(), m.tpot_summary());
+        println!(
+            "{tau_ms:>8.0} {:>10} {:>10} {:>10} {:>10}",
+            fmt_s(t.mean),
+            fmt_s(t.p99),
+            fmt_s(p.mean),
+            fmt_s(p.p99)
+        );
+        rows.push(ResultRow::from_metrics(&label, &m).with("tau_ms", tau_ms));
+    }
+    println!("\n(the paper tunes τ per-deployment and adopts 20 ms; SLO_TTFT held fixed)");
+    let path = save_results("fig34_polyserve_tau", &rows, &[]).unwrap();
+    println!("saved {}", path.display());
+}

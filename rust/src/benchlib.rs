@@ -1,0 +1,184 @@
+//! Micro-bench harness for the `harness = false` bench binaries (criterion
+//! is unavailable offline — see DESIGN.md §1). Provides warmup + timed
+//! iterations with mean/p50/p99 reporting, and a figure-bench runner that
+//! standardizes stdout headers across the fig*_ benches.
+
+use std::time::Instant;
+
+/// Timing result of a micro-benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>10} iters  mean {:>12}  p50 {:>12}  p99 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns)
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+/// Run `f` repeatedly: warm up briefly, then time `iters` iterations
+/// (capped at ~2 s of wall time).
+pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> BenchResult {
+    // Warmup.
+    let warm = (iters / 10).clamp(1, 100);
+    for _ in 0..warm {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    let budget = std::time::Duration::from_secs(2);
+    let start = Instant::now();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+        if start.elapsed() > budget {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean_ns: samples.iter().sum::<f64>() / n as f64,
+        p50_ns: samples[n / 2],
+        p99_ns: samples[((n as f64 * 0.99) as usize).min(n - 1)],
+    }
+}
+
+/// Standard banner for figure benches.
+pub fn figure_banner(fig: &str, what: &str) {
+    println!("\n================================================================");
+    println!("{fig}: {what}");
+    println!("================================================================");
+}
+
+/// `--quick` support: figure benches downscale request counts under
+/// `LMETRIC_BENCH_QUICK=1` (used by CI-style smoke runs).
+pub fn quick_mode() -> bool {
+    std::env::var("LMETRIC_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Scale a request count down in quick mode.
+pub fn scaled(n: usize) -> usize {
+    if quick_mode() {
+        (n / 10).max(200)
+    } else {
+        n
+    }
+}
+
+// ---------------------------------------------------------------------
+// Figure-bench experiment helpers (shared by every rust/benches/fig*.rs).
+
+use crate::cluster::{build_scaled_trace, cluster_config, run_des};
+use crate::config::ExperimentConfig;
+use crate::metrics::{ResultRow, RunMetrics};
+use crate::policy;
+use crate::router::Policy;
+use crate::trace::Trace;
+
+/// Fraction of the run discarded as cold-start warm-up.
+pub const WARMUP: f64 = 0.1;
+
+/// The standard §6 experiment: `workload` on `instances`×moe-30b at
+/// `rate_scale`× profiled capacity.
+pub fn experiment(workload: &str, instances: usize, requests: usize) -> ExperimentConfig {
+    let mut exp = ExperimentConfig::default();
+    exp.workload = workload.into();
+    exp.instances = instances;
+    exp.requests = scaled(requests);
+    exp
+}
+
+/// Run one policy (by name, with an explicit hyperparameter) on a shared
+/// trace; warm-up discarded.
+pub fn run_policy(
+    exp: &ExperimentConfig,
+    trace: &Trace,
+    name: &str,
+    param: f64,
+) -> (RunMetrics, String) {
+    let cfg = cluster_config(exp);
+    let mut pol = policy::build(name, param, &cfg.engine.profile, exp.chunk_budget)
+        .unwrap_or_else(|| panic!("unknown policy {name}"));
+    let mut m = run_des(&cfg, trace, pol.as_mut());
+    m.discard_warmup(WARMUP);
+    (m, pol.name())
+}
+
+/// Run with a caller-constructed policy (for stateful inspection).
+pub fn run_boxed(
+    exp: &ExperimentConfig,
+    trace: &Trace,
+    pol: &mut dyn Policy,
+) -> RunMetrics {
+    let cfg = cluster_config(exp);
+    let mut m = run_des(&cfg, trace, pol);
+    m.discard_warmup(WARMUP);
+    m
+}
+
+/// Run one policy at its paper-default hyperparameter.
+pub fn run_default(exp: &ExperimentConfig, trace: &Trace, name: &str) -> (RunMetrics, String) {
+    run_policy(exp, trace, name, policy::default_param(name))
+}
+
+/// Build the experiment's scaled trace (shared across policies so every
+/// row sees identical arrivals).
+pub fn trace_for(exp: &ExperimentConfig) -> Trace {
+    build_scaled_trace(exp)
+}
+
+/// Standard result row from a run.
+pub fn row(label: &str, m: &RunMetrics) -> ResultRow {
+    ResultRow::from_metrics(label, m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut x = 0u64;
+        let r = bench("noop", 100, || {
+            x = x.wrapping_add(1);
+        });
+        assert!(r.iters > 0);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.report().contains("noop"));
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert!(fmt_ns(1500.0).contains("µs"));
+        assert!(fmt_ns(2.5e6).contains("ms"));
+        assert!(fmt_ns(3.0e9).contains("s"));
+    }
+}

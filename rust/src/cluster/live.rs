@@ -1,0 +1,484 @@
+//! Live threaded cluster: the end-to-end validation path. N instance
+//! threads each run the REAL transformer (AOT artifacts via PJRT) with
+//! chunked prefill, batched decode and a host-side cross-request KV$
+//! (extract/inject of slot K/V planes); the main thread is the router,
+//! running the *same* policy + indicator-factory code as the DES.
+//!
+//! Wall-clock time. Indicators still travel piggybacked on instance
+//! events, so router staleness is physical, not simulated.
+
+use std::collections::{HashMap, VecDeque};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::core::{Request, RequestRecord, BLOCK_TOKENS};
+use crate::engine::InstanceSnapshot;
+use crate::metrics::RunMetrics;
+use crate::router::{IndicatorFactory, Policy};
+use crate::runtime::ModelRuntime;
+use crate::trace::Trace;
+
+#[derive(Debug, Clone)]
+pub struct LiveClusterConfig {
+    pub n_instances: usize,
+    pub artifacts_dir: PathBuf,
+    /// Host prefix-store entries per instance (the live KV$ capacity).
+    pub prefix_store_entries: usize,
+    /// Wall-clock speedup of trace arrival times (2.0 = replay 2× faster).
+    pub time_scale: f64,
+}
+
+impl Default for LiveClusterConfig {
+    fn default() -> Self {
+        LiveClusterConfig {
+            n_instances: 2,
+            artifacts_dir: crate::runtime::artifacts_dir(),
+            prefix_store_entries: 64,
+            time_scale: 1.0,
+        }
+    }
+}
+
+enum Cmd {
+    Serve(Box<Request>),
+    Shutdown,
+}
+
+enum Ev {
+    FirstToken {
+        #[allow(dead_code)]
+        req_id: u64,
+        #[allow(dead_code)]
+        at_us: u64,
+    },
+    Completed { record: RequestRecord },
+    Snapshot(InstanceSnapshot),
+    Fatal(String),
+}
+
+/// Host-side cross-request KV$. A finished request's slot K/V planes are
+/// stored once (shared via `Rc`) and indexed under EVERY block depth of
+/// its prompt chain, so a future request sharing only the first d blocks
+/// (e.g. a different conversation of the same class, sharing the system
+/// prompt) still hits at depth d. Chained hashes make each depth's hash
+/// unique to the whole prefix. LRU-bounded by stored plane count.
+struct PrefixStore {
+    cap: usize,
+    /// block-hash -> (hit_tokens at this depth, plane id)
+    index: HashMap<u64, (usize, u64)>,
+    /// plane id -> (shared k/v, last_use, index keys)
+    planes: HashMap<u64, (std::rc::Rc<(xla::Literal, xla::Literal)>, u64, Vec<u64>)>,
+    next_id: u64,
+    clock: u64,
+}
+
+impl PrefixStore {
+    fn new(cap: usize) -> Self {
+        PrefixStore {
+            cap,
+            index: HashMap::new(),
+            planes: HashMap::new(),
+            next_id: 0,
+            clock: 0,
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.planes.len()
+    }
+
+    /// Longest stored prefix of `hashes`: (hit_tokens, shared k/v).
+    fn lookup(
+        &mut self,
+        hashes: &[u64],
+    ) -> Option<(usize, std::rc::Rc<(xla::Literal, xla::Literal)>)> {
+        self.clock += 1;
+        for i in (0..hashes.len()).rev() {
+            if let Some(&(len, plane_id)) = self.index.get(&hashes[i]) {
+                if let Some(p) = self.planes.get_mut(&plane_id) {
+                    p.1 = self.clock;
+                    return Some((len, p.0.clone()));
+                }
+            }
+        }
+        None
+    }
+
+    /// Store planes for a prompt whose block-hash chain is `hashes`.
+    fn insert(&mut self, hashes: &[u64], k: xla::Literal, v: xla::Literal) {
+        if hashes.is_empty() {
+            return;
+        }
+        self.clock += 1;
+        // Evict the LRU plane (and its index keys) if at capacity.
+        if self.planes.len() >= self.cap {
+            if let Some((&old, _)) = self.planes.iter().min_by_key(|(_, p)| p.1) {
+                if let Some((_, _, keys)) = self.planes.remove(&old) {
+                    for key in keys {
+                        if self.index.get(&key).map(|(_, id)| *id) == Some(old) {
+                            self.index.remove(&key);
+                        }
+                    }
+                }
+            }
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let rc = std::rc::Rc::new((k, v));
+        let mut keys = Vec::with_capacity(hashes.len());
+        for (i, h) in hashes.iter().enumerate() {
+            self.index.insert(*h, ((i + 1) * BLOCK_TOKENS, id));
+            keys.push(*h);
+        }
+        self.planes.insert(id, (rc, self.clock, keys));
+    }
+}
+
+struct LiveSeq {
+    req: Request,
+    /// Tokens whose KV is in the slot (injected prefix + prefilled).
+    pos: usize,
+    cached_tokens: usize,
+    generated: u32,
+    last_token: i32,
+    first_token_us: Option<u64>,
+}
+
+/// One instance thread's engine.
+struct LiveEngine {
+    rt: ModelRuntime,
+    kv: xla::Literal,
+    slots: Vec<Option<LiveSeq>>,
+    waiting: VecDeque<Request>,
+    store: PrefixStore,
+}
+
+impl LiveEngine {
+    fn new(rt: ModelRuntime, store_cap: usize) -> Self {
+        let kv = rt.zero_kv();
+        let slots = (0..rt.cfg.slots).map(|_| None).collect();
+        LiveEngine {
+            rt,
+            kv,
+            slots,
+            waiting: VecDeque::new(),
+            store: PrefixStore::new(store_cap),
+        }
+    }
+
+    fn has_work(&self) -> bool {
+        !self.waiting.is_empty() || self.slots.iter().any(|s| s.is_some())
+    }
+
+    fn snapshot(&self) -> InstanceSnapshot {
+        let running: Vec<&LiveSeq> = self.slots.iter().flatten().collect();
+        InstanceSnapshot {
+            r_bs: running.len(),
+            q_bs: self.waiting.len(),
+            queued_prefill_tokens: self.waiting.iter().map(|r| r.input_len()).sum::<usize>()
+                + running
+                    .iter()
+                    .map(|s| s.req.input_len().saturating_sub(s.pos))
+                    .sum::<usize>(),
+            total_context_tokens: running
+                .iter()
+                .map(|s| s.req.input_len() + s.generated as usize)
+                .sum(),
+            kv_used_blocks: self.store.len(),
+            kv_capacity_blocks: self.store.cap,
+        }
+    }
+
+    fn admit(&mut self) -> Result<()> {
+        while let Some(free) = self.slots.iter().position(|s| s.is_none()) {
+            let Some(req) = self.waiting.pop_front() else {
+                break;
+            };
+            let mut pos = 0usize;
+            let mut cached = 0usize;
+            if let Some((len, planes)) = self.store.lookup(&req.block_hashes) {
+                let hit = len.min(req.input_len().saturating_sub(1));
+                if hit > 0 {
+                    self.kv = self.rt.inject_slot(&self.kv, free, &planes.0, &planes.1)?;
+                    pos = hit;
+                    cached = hit;
+                }
+            }
+            self.slots[free] = Some(LiveSeq {
+                req,
+                pos,
+                cached_tokens: cached,
+                generated: 0,
+                last_token: 0,
+                first_token_us: None,
+            });
+        }
+        Ok(())
+    }
+
+    /// One engine iteration: admit + one prefill chunk + one batched
+    /// decode pass. Returns events (timestamped by the caller's clock fn).
+    fn step(&mut self, now_us: impl Fn() -> u64) -> Result<Vec<Ev>> {
+        self.admit()?;
+        let mut events = Vec::new();
+
+        // --- chunked prefill: one chunk for the first slot needing it ---
+        if let Some(si) = self
+            .slots
+            .iter()
+            .position(|s| s.as_ref().map(|q| q.pos < q.req.input_len()).unwrap_or(false))
+        {
+            let (tokens_buf, pos, chunk_len, bucket) = {
+                let seq = self.slots[si].as_ref().unwrap();
+                let remaining = seq.req.input_len() - seq.pos;
+                let bucket = self
+                    .rt
+                    .bucket_for(remaining.min(self.rt.largest_bucket()))
+                    .ok_or_else(|| anyhow!("no bucket"))?;
+                let chunk_len = remaining.min(bucket);
+                let mut buf: Vec<i32> = seq.req.tokens[seq.pos..seq.pos + chunk_len]
+                    .iter()
+                    .map(|t| *t as i32)
+                    .collect();
+                buf.resize(bucket, 0);
+                (buf, seq.pos, chunk_len, bucket)
+            };
+            debug_assert_eq!(tokens_buf.len(), bucket);
+            let (logits, kv_new) =
+                self.rt
+                    .prefill_chunk(&self.kv, &tokens_buf, si, pos, chunk_len)?;
+            self.kv = kv_new;
+            let seq = self.slots[si].as_mut().unwrap();
+            seq.pos += chunk_len;
+            if seq.pos >= seq.req.input_len() {
+                // Prefill complete: first token now.
+                seq.last_token = ModelRuntime::argmax(&logits);
+                seq.generated = 1;
+                let t = now_us();
+                seq.first_token_us = Some(t);
+                events.push(Ev::FirstToken {
+                    req_id: seq.req.id,
+                    at_us: t,
+                });
+            }
+        }
+
+        // --- batched decode over all decoding slots ---------------------
+        let decoding: Vec<usize> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| {
+                s.as_ref()
+                    .map(|q| q.generated >= 1 && q.generated < q.req.output_len.max(1))
+                    .unwrap_or(false)
+            })
+            .map(|(i, _)| i)
+            .collect();
+        if !decoding.is_empty() {
+            let n_slots = self.rt.cfg.slots;
+            let mut tokens = vec![0i32; n_slots];
+            let mut lens = vec![0i32; n_slots];
+            for &i in &decoding {
+                let s = self.slots[i].as_ref().unwrap();
+                tokens[i] = s.last_token;
+                // KV length before this token: prompt + already-written
+                // decode tokens (generated-1; the latest sampled token's
+                // KV is written by THIS call).
+                lens[i] = (s.req.input_len() + s.generated as usize - 1) as i32;
+            }
+            let (logits, kv_new) = self.rt.decode_step(&self.kv, &tokens, &lens)?;
+            self.kv = kv_new;
+            let vocab = self.rt.cfg.vocab;
+            for &i in &decoding {
+                let s = self.slots[i].as_mut().unwrap();
+                s.last_token = ModelRuntime::argmax(&logits[i * vocab..(i + 1) * vocab]);
+                s.generated += 1;
+            }
+        }
+
+        // --- completions ------------------------------------------------
+        for i in 0..self.slots.len() {
+            let done = self.slots[i]
+                .as_ref()
+                .map(|s| s.pos >= s.req.input_len() && s.generated >= s.req.output_len.max(1))
+                .unwrap_or(false);
+            if done {
+                let seq = self.slots[i].take().unwrap();
+                // Snapshot the slot's KV for future prefix hits.
+                let prompt_blocks = seq.req.block_hashes.len();
+                if prompt_blocks > 0 {
+                    let (k, v) = self.rt.extract_slot(&self.kv, i)?;
+                    self.store.insert(&seq.req.block_hashes, k, v);
+                }
+                let t = now_us();
+                events.push(Ev::Completed {
+                    record: RequestRecord {
+                        id: seq.req.id,
+                        class_id: seq.req.class_id,
+                        instance: 0, // filled by the router thread
+                        arrival_us: seq.req.arrival_us,
+                        first_token_us: seq.first_token_us.unwrap_or(t),
+                        completion_us: t,
+                        input_len: seq.req.input_len() as u32,
+                        output_len: seq.req.output_len.max(1),
+                        cached_tokens: seq.cached_tokens as u32,
+                    },
+                });
+            }
+        }
+        Ok(events)
+    }
+}
+
+fn instance_thread(
+    idx: usize,
+    cfg: LiveClusterConfig,
+    epoch: Instant,
+    rx: mpsc::Receiver<Cmd>,
+    tx: mpsc::Sender<(usize, Ev)>,
+) {
+    let rt = match ModelRuntime::load(&cfg.artifacts_dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            let _ = tx.send((idx, Ev::Fatal(format!("instance {idx}: {e:#}"))));
+            return;
+        }
+    };
+    let mut eng = LiveEngine::new(rt, cfg.prefix_store_entries);
+    let now_us = move || epoch.elapsed().as_micros() as u64;
+    let mut shutdown = false;
+    loop {
+        // Drain the command queue (non-blocking when busy).
+        loop {
+            match if eng.has_work() || shutdown {
+                rx.try_recv().map_err(|_| ())
+            } else {
+                rx.recv_timeout(Duration::from_millis(2)).map_err(|_| ())
+            } {
+                Ok(Cmd::Serve(req)) => eng.waiting.push_back(*req),
+                Ok(Cmd::Shutdown) => shutdown = true,
+                Err(()) => break,
+            }
+        }
+        if !eng.has_work() {
+            if shutdown {
+                break;
+            }
+            continue;
+        }
+        match eng.step(&now_us) {
+            Ok(events) => {
+                for e in events {
+                    let _ = tx.send((idx, e));
+                }
+                let _ = tx.send((idx, Ev::Snapshot(eng.snapshot())));
+            }
+            Err(e) => {
+                let _ = tx.send((idx, Ev::Fatal(format!("instance {idx}: {e:#}"))));
+                return;
+            }
+        }
+    }
+}
+
+/// Replay `trace` through a live cluster under `policy`. Returns wall-
+/// clock metrics. Prompts must fit the artifact model (vocab/max_seq).
+pub fn run_live(
+    cfg: &LiveClusterConfig,
+    trace: &Trace,
+    policy: &mut dyn Policy,
+) -> Result<RunMetrics> {
+    let n = cfg.n_instances;
+    let epoch = Instant::now();
+    let (ev_tx, ev_rx) = mpsc::channel::<(usize, Ev)>();
+    let mut cmd_txs = Vec::new();
+    let mut handles = Vec::new();
+    for i in 0..n {
+        let (tx, rx) = mpsc::channel::<Cmd>();
+        cmd_txs.push(tx);
+        let c = cfg.clone();
+        let etx = ev_tx.clone();
+        handles.push(std::thread::spawn(move || instance_thread(i, c, epoch, rx, etx)));
+    }
+    drop(ev_tx);
+
+    let mut factory = IndicatorFactory::new(n, 0);
+    let mut metrics = RunMetrics::new(n);
+    let mut full_hashes: HashMap<u64, Vec<u64>> = HashMap::new();
+    let mut completed = 0usize;
+    let total = trace.requests.len();
+
+    let absorb = |ev: (usize, Ev),
+                      factory: &mut IndicatorFactory,
+                      metrics: &mut RunMetrics,
+                      full_hashes: &mut HashMap<u64, Vec<u64>>,
+                      completed: &mut usize|
+     -> Result<()> {
+        let (i, ev) = ev;
+        match ev {
+            Ev::Snapshot(s) => factory.on_snapshot(i, s),
+            Ev::FirstToken { .. } => {}
+            Ev::Completed { mut record } => {
+                record.instance = i;
+                if let Some(fh) = full_hashes.remove(&record.id) {
+                    factory.on_completion(i, &fh, record.completion_us);
+                }
+                metrics.records.push(record);
+                *completed += 1;
+            }
+            Ev::Fatal(msg) => return Err(anyhow!(msg)),
+        }
+        Ok(())
+    };
+
+    // Paced arrival loop.
+    for tr in &trace.requests {
+        let due_us = (tr.req.arrival_us as f64 / cfg.time_scale) as u64;
+        loop {
+            let now = epoch.elapsed().as_micros() as u64;
+            if now >= due_us {
+                break;
+            }
+            match ev_rx.recv_timeout(Duration::from_micros((due_us - now).min(2000))) {
+                Ok(ev) => absorb(ev, &mut factory, &mut metrics, &mut full_hashes, &mut completed)?,
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(e) => return Err(anyhow!("event channel: {e}")),
+            }
+        }
+        let now = epoch.elapsed().as_micros() as u64;
+        let mut req = tr.req.clone();
+        req.arrival_us = now; // wall-clock arrival
+        let ctx = factory.route_ctx(&req, now);
+        let t0 = Instant::now();
+        let d = policy.route(&ctx).instance;
+        metrics
+            .sched_overhead_us
+            .push(t0.elapsed().as_nanos() as f64 / 1000.0);
+        factory.on_route(d, &ctx, &req, now);
+        full_hashes.insert(req.id, tr.full_hashes.clone());
+        cmd_txs[d]
+            .send(Cmd::Serve(Box::new(req)))
+            .map_err(|e| anyhow!("send: {e}"))?;
+    }
+
+    // Drain completions.
+    while completed < total {
+        match ev_rx.recv_timeout(Duration::from_secs(120)) {
+            Ok(ev) => absorb(ev, &mut factory, &mut metrics, &mut full_hashes, &mut completed)?,
+            Err(e) => return Err(anyhow!("timed out waiting for completions: {e}")),
+        }
+    }
+    for tx in &cmd_txs {
+        let _ = tx.send(Cmd::Shutdown);
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    metrics.duration_us = epoch.elapsed().as_micros() as u64;
+    metrics.records.sort_by_key(|r| r.id);
+    Ok(metrics)
+}

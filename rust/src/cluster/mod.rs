@@ -1,0 +1,12 @@
+//! Cluster harnesses: the discrete-event simulation driver (virtual time —
+//! every figure bench runs on this) and the live threaded cluster
+//! (wall-clock time + real PJRT transformer compute — the end-to-end
+//! validation path).
+
+mod des;
+pub mod live;
+
+pub use des::{
+    build_scaled_trace, cluster_config, profile_capacity_rps, run_des, run_experiment,
+    ClusterConfig,
+};

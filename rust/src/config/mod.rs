@@ -1,0 +1,203 @@
+//! Experiment configuration: a typed config with a TOML-subset file format
+//! (sections, `key = value`, comments) so runs are launchable as
+//! `lmetric replay --config exp.toml` — the "real config system" a
+//! deployable framework needs.
+
+use std::collections::BTreeMap;
+
+/// Parsed `[section] key = value` document. Values keep their raw string;
+/// typed accessors parse on demand.
+#[derive(Debug, Default, Clone)]
+pub struct ConfigDoc {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl ConfigDoc {
+    pub fn parse(text: &str) -> Result<ConfigDoc, String> {
+        let mut doc = ConfigDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let v = v.trim().trim_matches('"').to_string();
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), v);
+        }
+        Ok(doc)
+    }
+
+    pub fn from_file(path: &str) -> Result<ConfigDoc, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        ConfigDoc::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Option<f64> {
+        self.get(section, key)?.parse().ok()
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str) -> Option<usize> {
+        self.get(section, key)?.parse().ok()
+    }
+
+    pub fn get_u64(&self, section: &str, key: &str) -> Option<u64> {
+        self.get(section, key)?.parse().ok()
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        match self.get(section, key)? {
+            "true" | "1" | "yes" => Some(true),
+            "false" | "0" | "no" => Some(false),
+            _ => None,
+        }
+    }
+}
+
+/// Top-level experiment description: which trace, which cluster, which
+/// policy. Every bench and CLI subcommand builds one of these.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub instances: usize,
+    pub profile: String,
+    pub kv_capacity_blocks: usize,
+    pub chunk_budget: usize,
+    pub max_batch: usize,
+    pub workload: String,
+    pub requests: usize,
+    pub seed: u64,
+    /// Average arrival rate as a fraction of profiled cluster capacity
+    /// (§4.1 trace scaling; the paper uses 0.5).
+    pub rate_scale: f64,
+    pub policy: String,
+    /// Policy hyperparameter (λ for linear, Range for filter, T for
+    /// Preble, τ-SLO for PolyServe...).
+    pub param: f64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            instances: 16,
+            profile: "moe-30b".into(),
+            kv_capacity_blocks: 8192,
+            chunk_budget: 256,
+            max_batch: 64,
+            workload: "chatbot".into(),
+            requests: 4000,
+            seed: 42,
+            rate_scale: 0.5,
+            policy: "lmetric".into(),
+            param: 0.7,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_doc(doc: &ConfigDoc) -> ExperimentConfig {
+        let mut c = ExperimentConfig::default();
+        if let Some(v) = doc.get_usize("cluster", "instances") {
+            c.instances = v;
+        }
+        if let Some(v) = doc.get("cluster", "profile") {
+            c.profile = v.to_string();
+        }
+        if let Some(v) = doc.get_usize("cluster", "kv_capacity_blocks") {
+            c.kv_capacity_blocks = v;
+        }
+        if let Some(v) = doc.get_usize("cluster", "chunk_budget") {
+            c.chunk_budget = v;
+        }
+        if let Some(v) = doc.get_usize("cluster", "max_batch") {
+            c.max_batch = v;
+        }
+        if let Some(v) = doc.get("trace", "workload") {
+            c.workload = v.to_string();
+        }
+        if let Some(v) = doc.get_usize("trace", "requests") {
+            c.requests = v;
+        }
+        if let Some(v) = doc.get_u64("trace", "seed") {
+            c.seed = v;
+        }
+        if let Some(v) = doc.get_f64("trace", "rate_scale") {
+            c.rate_scale = v;
+        }
+        if let Some(v) = doc.get("policy", "name") {
+            c.policy = v.to_string();
+        }
+        if let Some(v) = doc.get_f64("policy", "param") {
+            c.param = v;
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment
+[cluster]
+instances = 8
+profile = "dense-7b"   # dense model
+kv_capacity_blocks = 4096
+
+[trace]
+workload = "coder"
+requests = 100
+rate_scale = 0.75
+
+[policy]
+name = "linear"
+param = 0.55
+"#;
+
+    #[test]
+    fn parse_sections_and_comments() {
+        let doc = ConfigDoc::parse(SAMPLE).unwrap();
+        assert_eq!(doc.get("cluster", "profile"), Some("dense-7b"));
+        assert_eq!(doc.get_usize("cluster", "instances"), Some(8));
+        assert_eq!(doc.get_f64("policy", "param"), Some(0.55));
+        assert_eq!(doc.get("nope", "x"), None);
+    }
+
+    #[test]
+    fn experiment_from_doc_overrides_defaults() {
+        let doc = ConfigDoc::parse(SAMPLE).unwrap();
+        let c = ExperimentConfig::from_doc(&doc);
+        assert_eq!(c.instances, 8);
+        assert_eq!(c.workload, "coder");
+        assert_eq!(c.policy, "linear");
+        assert_eq!(c.param, 0.55);
+        // untouched default:
+        assert_eq!(c.chunk_budget, 256);
+    }
+
+    #[test]
+    fn bad_line_is_error() {
+        assert!(ConfigDoc::parse("[a]\nnot a kv line").is_err());
+    }
+
+    #[test]
+    fn bools() {
+        let doc = ConfigDoc::parse("[s]\na = true\nb = no").unwrap();
+        assert_eq!(doc.get_bool("s", "a"), Some(true));
+        assert_eq!(doc.get_bool("s", "b"), Some(false));
+    }
+}

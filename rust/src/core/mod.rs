@@ -1,0 +1,109 @@
+//! Core types shared across the router, engines, traces and harnesses.
+
+/// Token-block granularity of the KV$ (vLLM-style prefix caching hashes
+/// chains of fixed-size blocks; a prefix hit is a whole number of blocks).
+pub const BLOCK_TOKENS: usize = 16;
+
+/// Instance index within a cluster.
+pub type InstanceId = usize;
+
+/// A serving request as seen by the global scheduler.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time in µs since trace start.
+    pub arrival_us: u64,
+    /// Prefix-sharing class (≈ application/user: shared system prompt +
+    /// conversation history). Drives KV$ hit structure and the §5.2
+    /// hotspot analysis.
+    pub class_id: u32,
+    /// Prompt token ids.
+    pub tokens: Vec<u32>,
+    /// Number of output tokens the request will generate (from the trace;
+    /// unknown to the scheduler a-priori, used by the engine only).
+    pub output_len: u32,
+    /// Chained block hashes of the prompt (see [`crate::tokenizer`]),
+    /// computed once at ingest; used by every KV$ lookup.
+    pub block_hashes: Vec<u64>,
+}
+
+impl Request {
+    pub fn input_len(&self) -> usize {
+        self.tokens.len()
+    }
+}
+
+/// Per-request latency record produced by a cluster run.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub class_id: u32,
+    pub instance: InstanceId,
+    pub arrival_us: u64,
+    pub first_token_us: u64,
+    pub completion_us: u64,
+    pub input_len: u32,
+    pub output_len: u32,
+    /// Prompt tokens served from KV$ (block-aligned).
+    pub cached_tokens: u32,
+}
+
+impl RequestRecord {
+    /// Time-to-first-token in seconds.
+    pub fn ttft_s(&self) -> f64 {
+        (self.first_token_us - self.arrival_us) as f64 / 1e6
+    }
+
+    /// Time-per-output-token in seconds (decode phase only).
+    pub fn tpot_s(&self) -> f64 {
+        if self.output_len <= 1 {
+            return 0.0;
+        }
+        (self.completion_us - self.first_token_us) as f64
+            / 1e6
+            / (self.output_len - 1) as f64
+    }
+
+    /// KV$ hit ratio of the prompt.
+    pub fn hit_ratio(&self) -> f64 {
+        if self.input_len == 0 {
+            0.0
+        } else {
+            self.cached_tokens as f64 / self.input_len as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec() -> RequestRecord {
+        RequestRecord {
+            id: 1,
+            class_id: 0,
+            instance: 0,
+            arrival_us: 1_000_000,
+            first_token_us: 1_500_000,
+            completion_us: 2_500_000,
+            input_len: 100,
+            output_len: 11,
+            cached_tokens: 32,
+        }
+    }
+
+    #[test]
+    fn ttft_tpot() {
+        let r = rec();
+        assert!((r.ttft_s() - 0.5).abs() < 1e-12);
+        assert!((r.tpot_s() - 0.1).abs() < 1e-12);
+        assert!((r.hit_ratio() - 0.32).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tpot_single_token_zero() {
+        let mut r = rec();
+        r.output_len = 1;
+        assert_eq!(r.tpot_s(), 0.0);
+    }
+}

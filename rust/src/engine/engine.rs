@@ -1,0 +1,510 @@
+//! The instance engine: continuous batching + chunked prefill over the
+//! radix-tree KV$, stepped in virtual time by the analytic cost model.
+//!
+//! One [`Instance::step`] = one fused engine iteration (vLLM-v1 style):
+//! up to `chunk_budget` new prefill tokens are co-scheduled with one
+//! decode token for every running sequence. The returned
+//! [`StepOutcome`] carries the step's duration, emitted events
+//! (timestamped at step end) and the post-step indicator snapshot that
+//! the router receives piggybacked on responses.
+
+use std::collections::VecDeque;
+
+use crate::core::{Request, RequestRecord, BLOCK_TOKENS};
+use crate::kvcache::RadixTree;
+
+use super::cost::ModelProfile;
+use super::InstanceSnapshot;
+
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub profile: ModelProfile,
+    /// Max new prefill tokens co-scheduled per step (chunked prefill).
+    pub chunk_budget: usize,
+    /// Max admitted (running) sequences.
+    pub max_batch: usize,
+    /// KV$ capacity in blocks (0 = unbounded).
+    pub kv_capacity_blocks: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            profile: ModelProfile::moe_30b(),
+            chunk_budget: 256,
+            max_batch: 64,
+            kv_capacity_blocks: 8192,
+        }
+    }
+}
+
+/// Emitted by a step; timestamps are the step's end time.
+#[derive(Debug, Clone)]
+pub enum EngineEvent {
+    /// Prefill finished — first output token produced (TTFT point).
+    FirstToken { req_id: u64, at_us: u64 },
+    /// All output tokens produced; the full request record.
+    Completed { record: RequestRecord },
+}
+
+/// Result of one engine step.
+#[derive(Debug, Clone)]
+pub struct StepOutcome {
+    pub duration_us: u64,
+    /// Portion of the step spent on prefill work, µs (Fig 10/25 profiles).
+    pub prefill_us: f64,
+    pub prefill_tokens: usize,
+    pub decode_seqs: usize,
+    pub events: Vec<EngineEvent>,
+    /// Post-step indicators (piggybacked to the router).
+    pub snapshot: InstanceSnapshot,
+}
+
+#[derive(Debug)]
+struct Seq {
+    req: Request,
+    /// Prompt tokens served from KV$ at admission.
+    cached_tokens: usize,
+    /// Blocks pinned in the KV$ for this sequence.
+    pinned_blocks: usize,
+    /// New prefill tokens required ( = input_len - cached ).
+    new_total: usize,
+    /// New tokens prefilled so far.
+    prefilled: usize,
+    generated: u32,
+    first_token_us: Option<u64>,
+    /// Block hashes of prompt+output, inserted into KV$ at completion
+    /// (multi-turn reuse: the next turn's prompt extends this chain).
+    full_hashes: Vec<u64>,
+}
+
+impl Seq {
+    fn prefill_remaining(&self) -> usize {
+        self.new_total - self.prefilled
+    }
+    fn context_len(&self) -> usize {
+        self.req.input_len() + self.generated as usize
+    }
+}
+
+/// A PD-colocated serving instance.
+pub struct Instance {
+    pub id: usize,
+    pub cfg: EngineConfig,
+    kv: RadixTree,
+    waiting: VecDeque<Seq>,
+    running: Vec<Seq>,
+    /// Lifetime counters.
+    pub steps: u64,
+    pub busy_us: u64,
+    pub total_prefill_tokens: u64,
+    pub total_decode_tokens: u64,
+}
+
+impl Instance {
+    pub fn new(id: usize, cfg: EngineConfig) -> Self {
+        let kv = RadixTree::new(cfg.kv_capacity_blocks);
+        Instance {
+            id,
+            cfg,
+            kv,
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            steps: 0,
+            busy_us: 0,
+            total_prefill_tokens: 0,
+            total_decode_tokens: 0,
+        }
+    }
+
+    /// Route a request to this instance (enters the waiting queue).
+    /// `full_hashes` covers prompt+output blocks for completion-time
+    /// cache insertion (what the next conversation turn will hit).
+    pub fn enqueue(&mut self, req: Request, full_hashes: Vec<u64>, now_us: u64) {
+        // Estimate the KV$ hit now so the queued-prefill-token indicator
+        // is hit-aware ("new prefill tokens considering KV$ hits", §5.1);
+        // the authoritative match happens at admission.
+        let est_hit = self.kv.match_prefix(&req.block_hashes, now_us, false);
+        let est_cached = (est_hit * BLOCK_TOKENS).min(req.input_len());
+        self.waiting.push_back(Seq {
+            cached_tokens: 0,
+            pinned_blocks: 0,
+            new_total: (req.input_len() - est_cached).max(1),
+            prefilled: 0,
+            generated: 0,
+            first_token_us: None,
+            full_hashes,
+            req,
+        });
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.waiting.is_empty() || !self.running.is_empty()
+    }
+
+    /// Direct read of the instance's KV$ (tests/analysis).
+    pub fn kv(&self) -> &RadixTree {
+        &self.kv
+    }
+
+    /// Mutable KV$ access (tests/analysis: match_prefix needs &mut for
+    /// LRU bookkeeping).
+    pub fn kv_mut(&mut self) -> &mut RadixTree {
+        &mut self.kv
+    }
+
+    pub fn snapshot(&self) -> InstanceSnapshot {
+        let queued_prefill_tokens = self
+            .waiting
+            .iter()
+            .map(|s| s.prefill_remaining())
+            .chain(self.running.iter().map(|s| s.prefill_remaining()))
+            .sum();
+        InstanceSnapshot {
+            r_bs: self.running.len(),
+            q_bs: self.waiting.len(),
+            queued_prefill_tokens,
+            total_context_tokens: self.running.iter().map(|s| s.context_len()).sum(),
+            kv_used_blocks: self.kv.used_blocks(),
+            kv_capacity_blocks: self.kv.capacity_blocks(),
+        }
+    }
+
+    fn admit(&mut self, now_us: u64) {
+        while self.running.len() < self.cfg.max_batch {
+            let Some(mut seq) = self.waiting.pop_front() else {
+                break;
+            };
+            // KV$ prefix match (touch refreshes LRU), then make the full
+            // prompt chain resident and pin it for the sequence lifetime.
+            let hit_blocks = self.kv.match_prefix(&seq.req.block_hashes, now_us, true);
+            self.kv.insert(&seq.req.block_hashes, now_us);
+            // Insertion may be truncated under pinned-full pressure; pin
+            // only what is actually resident.
+            let resident = self.kv.match_prefix(&seq.req.block_hashes, now_us, false);
+            self.kv.pin(&seq.req.block_hashes, resident);
+            seq.pinned_blocks = resident;
+            seq.cached_tokens = (hit_blocks * BLOCK_TOKENS).min(seq.req.input_len());
+            // A fully-cached prompt still prefills its last token to
+            // produce the first output logit (vLLM recomputes ≥1 token).
+            seq.new_total = (seq.req.input_len() - seq.cached_tokens).max(1);
+            self.running.push(seq);
+        }
+    }
+
+    /// Execute one engine step starting at `now_us`. Returns None if idle.
+    pub fn step(&mut self, now_us: u64) -> Option<StepOutcome> {
+        self.admit(now_us);
+        if self.running.is_empty() {
+            return None;
+        }
+
+        // ---- plan the fused batch ----------------------------------
+        let mut budget = self.cfg.chunk_budget;
+        let mut prefill_tokens = 0usize;
+        let mut prefill_attn_tok_kctx = 0.0f64;
+        let mut prefill_plan: Vec<(usize, usize)> = Vec::new(); // (idx, chunk)
+        let mut decode_seqs = 0usize;
+        let mut decode_ctx = 0usize;
+
+        for (i, seq) in self.running.iter().enumerate() {
+            if seq.prefill_remaining() > 0 {
+                if budget == 0 {
+                    continue;
+                }
+                let chunk = seq.prefill_remaining().min(budget);
+                budget -= chunk;
+                let ctx0 = seq.cached_tokens + seq.prefilled;
+                prefill_attn_tok_kctx +=
+                    chunk as f64 * (ctx0 as f64 + chunk as f64 / 2.0) / 1000.0;
+                prefill_tokens += chunk;
+                prefill_plan.push((i, chunk));
+            } else if seq.generated > 0 && (seq.generated as u32) < seq.req.output_len.max(1) {
+                decode_seqs += 1;
+                decode_ctx += seq.context_len();
+            }
+        }
+
+        if prefill_tokens == 0 && decode_seqs == 0 {
+            // Nothing runnable (shouldn't happen: running seqs always have
+            // prefill or decode work). Defensive: drop a completed seq.
+            return None;
+        }
+
+        // ---- cost ---------------------------------------------------
+        let p = &self.cfg.profile;
+        let total_us = p.step_us(prefill_tokens, prefill_attn_tok_kctx, decode_seqs, decode_ctx);
+        let prefill_only_us = if prefill_tokens > 0 {
+            p.step_us(prefill_tokens, prefill_attn_tok_kctx, 0, 0) - p.step_fixed_us
+        } else {
+            0.0
+        };
+        let duration_us = total_us.ceil() as u64;
+        let end_us = now_us + duration_us;
+
+        // ---- apply --------------------------------------------------
+        let mut events = Vec::new();
+        for (i, chunk) in prefill_plan {
+            let seq = &mut self.running[i];
+            seq.prefilled += chunk;
+            self.total_prefill_tokens += chunk as u64;
+            if seq.prefill_remaining() == 0 {
+                // Prefill complete -> first output token at step end.
+                seq.generated = 1;
+                seq.first_token_us = Some(end_us);
+                events.push(EngineEvent::FirstToken {
+                    req_id: seq.req.id,
+                    at_us: end_us,
+                });
+            }
+        }
+        for seq in self.running.iter_mut() {
+            if seq.prefill_remaining() == 0
+                && seq.generated > 0
+                && seq.first_token_us.map(|t| t < end_us).unwrap_or(false)
+                && seq.generated < seq.req.output_len.max(1)
+            {
+                seq.generated += 1;
+                self.total_decode_tokens += 1;
+            }
+        }
+
+        // ---- completions -------------------------------------------
+        let mut i = 0;
+        while i < self.running.len() {
+            let done = {
+                let s = &self.running[i];
+                s.prefill_remaining() == 0 && s.generated >= s.req.output_len.max(1)
+            };
+            if done {
+                let seq = self.running.swap_remove(i);
+                self.kv.unpin(&seq.req.block_hashes, seq.pinned_blocks, end_us);
+                // Cache prompt+output for future turns.
+                self.kv.insert(&seq.full_hashes, end_us);
+                events.push(EngineEvent::Completed {
+                    record: RequestRecord {
+                        id: seq.req.id,
+                        class_id: seq.req.class_id,
+                        instance: self.id,
+                        arrival_us: seq.req.arrival_us,
+                        first_token_us: seq.first_token_us.unwrap_or(end_us),
+                        completion_us: end_us,
+                        input_len: seq.req.input_len() as u32,
+                        output_len: seq.req.output_len.max(1),
+                        cached_tokens: seq.cached_tokens as u32,
+                    },
+                });
+            } else {
+                i += 1;
+            }
+        }
+
+        self.steps += 1;
+        self.busy_us += duration_us;
+
+        Some(StepOutcome {
+            duration_us,
+            prefill_us: prefill_only_us,
+            prefill_tokens,
+            decode_seqs,
+            events,
+            snapshot: self.snapshot(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer::block_hashes;
+
+    fn mk_req(id: u64, input: usize, output: u32, class: u32) -> (Request, Vec<u64>) {
+        let tokens = crate::tokenizer::span(class, id, input, 1024);
+        let hashes = block_hashes(&tokens);
+        // full = prompt + output tokens (distinct per request id)
+        let mut full_tokens = tokens.clone();
+        full_tokens.extend(crate::tokenizer::span(class, id ^ 0xdead, output as usize, 1024));
+        let full_hashes = block_hashes(&full_tokens);
+        (
+            Request {
+                id,
+                arrival_us: 0,
+                class_id: class,
+                tokens,
+                output_len: output,
+                block_hashes: hashes,
+            },
+            full_hashes,
+        )
+    }
+
+    /// Drive an instance to completion, returning records and total time.
+    fn drain(inst: &mut Instance, start_us: u64) -> (Vec<RequestRecord>, u64) {
+        let mut now = start_us;
+        let mut records = Vec::new();
+        while inst.has_work() {
+            let out = inst.step(now).expect("has_work implies steppable");
+            now += out.duration_us;
+            for e in out.events {
+                if let EngineEvent::Completed { record } = e {
+                    records.push(record);
+                }
+            }
+        }
+        (records, now)
+    }
+
+    #[test]
+    fn single_request_lifecycle() {
+        let mut inst = Instance::new(0, EngineConfig::default());
+        let (req, full) = mk_req(1, 512, 10, 0);
+        inst.enqueue(req, full, 0);
+        let (recs, end) = drain(&mut inst, 0);
+        assert_eq!(recs.len(), 1);
+        let r = &recs[0];
+        assert_eq!(r.output_len, 10);
+        assert!(r.first_token_us > 0);
+        assert!(r.completion_us >= r.first_token_us);
+        assert!(end >= r.completion_us);
+        assert!(!inst.has_work());
+    }
+
+    #[test]
+    fn ttft_spans_prefill_chunks() {
+        // 1024 input tokens at 256-chunk budget = 4 prefill steps.
+        let mut inst = Instance::new(0, EngineConfig::default());
+        let (req, full) = mk_req(1, 1024, 2, 0);
+        inst.enqueue(req, full, 0);
+        let mut now = 0;
+        let mut prefill_steps = 0;
+        let mut first_token = None;
+        while inst.has_work() {
+            let out = inst.step(now).unwrap();
+            if out.prefill_tokens > 0 {
+                prefill_steps += 1;
+                assert!(out.prefill_tokens <= 256, "chunk budget respected");
+            }
+            now += out.duration_us;
+            for e in &out.events {
+                if let EngineEvent::FirstToken { at_us, .. } = e {
+                    first_token = Some(*at_us);
+                }
+            }
+        }
+        assert_eq!(prefill_steps, 4);
+        assert!(first_token.is_some());
+    }
+
+    #[test]
+    fn kv_hit_shortens_ttft() {
+        let cfg = EngineConfig::default();
+        // Cold: fresh instance.
+        let mut cold = Instance::new(0, cfg.clone());
+        let (req, full) = mk_req(1, 1024, 4, 7);
+        cold.enqueue(req, full, 0);
+        let (cold_recs, _) = drain(&mut cold, 0);
+        // Warm: same class prompt served before.
+        let mut warm = Instance::new(0, cfg);
+        let (req1, full1) = mk_req(2, 1024, 4, 7);
+        warm.enqueue(req1, full1, 0);
+        let (_, t1) = drain(&mut warm, 0);
+        let (mut req2, full2) = mk_req(2, 1024, 4, 7); // same id -> same tokens
+        req2.arrival_us = t1; // TTFT is measured from arrival
+        warm.enqueue(req2, full2, t1);
+        let (warm_recs, _) = drain(&mut warm, t1);
+        let cold_ttft = cold_recs[0].ttft_s();
+        let warm_ttft = warm_recs[0].ttft_s();
+        assert!(
+            warm_ttft < cold_ttft * 0.3,
+            "hit should slash TTFT: cold={cold_ttft} warm={warm_ttft}"
+        );
+        assert!(warm_recs[0].cached_tokens >= 1000);
+    }
+
+    #[test]
+    fn continuous_batching_interleaves_prefill_and_decode() {
+        let mut inst = Instance::new(0, EngineConfig::default());
+        let (r1, f1) = mk_req(1, 256, 50, 0);
+        inst.enqueue(r1, f1, 0);
+        // Step once: r1 prefills fully.
+        let out1 = inst.step(0).unwrap();
+        assert_eq!(out1.prefill_tokens, 256);
+        let mut now = out1.duration_us;
+        // New arrival while r1 decodes.
+        let (r2, f2) = mk_req(2, 512, 5, 1);
+        inst.enqueue(r2, f2, now);
+        let out2 = inst.step(now).unwrap();
+        // Step co-schedules r2's prefill with r1's decode.
+        assert!(out2.prefill_tokens > 0);
+        assert_eq!(out2.decode_seqs, 1);
+        now += out2.duration_us;
+        let (recs, _) = drain(&mut inst, now);
+        assert_eq!(recs.len(), 2);
+    }
+
+    #[test]
+    fn max_batch_gates_admission() {
+        let mut cfg = EngineConfig::default();
+        cfg.max_batch = 2;
+        let mut inst = Instance::new(0, cfg);
+        for i in 0..5 {
+            let (r, f) = mk_req(i, 64, 100, i as u32);
+            inst.enqueue(r, f, 0);
+        }
+        let out = inst.step(0).unwrap();
+        assert_eq!(out.snapshot.r_bs, 2);
+        assert_eq!(out.snapshot.q_bs, 3);
+        assert_eq!(out.snapshot.bs(), 5);
+    }
+
+    #[test]
+    fn snapshot_counts_queued_prefill_tokens() {
+        let mut cfg = EngineConfig::default();
+        cfg.max_batch = 1;
+        let mut inst = Instance::new(0, cfg);
+        let (r1, f1) = mk_req(1, 600, 5, 0);
+        let (r2, f2) = mk_req(2, 400, 5, 1);
+        inst.enqueue(r1, f1, 0);
+        inst.enqueue(r2, f2, 0);
+        let out = inst.step(0).unwrap();
+        // r1: 600-256 = 344 left; r2 still waiting with 400.
+        assert_eq!(out.snapshot.queued_prefill_tokens, 344 + 400);
+    }
+
+    #[test]
+    fn completion_inserts_full_chain_for_next_turn() {
+        let mut inst = Instance::new(0, EngineConfig::default());
+        let (req, full) = mk_req(1, 256, 32, 3);
+        let full_clone = full.clone();
+        inst.enqueue(req, full, 0);
+        let _ = drain(&mut inst, 0);
+        // The full (prompt+output) chain must now be cached.
+        let kv_matched = inst.kv_mut().match_prefix(&full_clone, 999, false);
+        assert_eq!(kv_matched, full_clone.len());
+    }
+
+    #[test]
+    fn single_output_token_completes_at_prefill() {
+        let mut inst = Instance::new(0, EngineConfig::default());
+        let (req, full) = mk_req(1, 128, 1, 0);
+        inst.enqueue(req, full, 0);
+        let (recs, _) = drain(&mut inst, 0);
+        assert_eq!(recs[0].first_token_us, recs[0].completion_us);
+    }
+
+    #[test]
+    fn decode_time_grows_with_batch_size() {
+        // Cost-model sanity at the engine level: 16 decoding seqs step
+        // slower than 2.
+        let run = |n: usize| -> f64 {
+            let mut inst = Instance::new(0, EngineConfig::default());
+            for i in 0..n {
+                let (r, f) = mk_req(i as u64, 64, 200, i as u32);
+                inst.enqueue(r, f, 0);
+            }
+            let (recs, _) = drain(&mut inst, 0);
+            recs.iter().map(|r| r.tpot_s()).sum::<f64>() / recs.len() as f64
+        };
+        assert!(run(16) > run(2));
+    }
+}

@@ -1,0 +1,40 @@
+//! The serving-instance substrate: a vLLM-v1-like engine with continuous
+//! batching, chunked prefill and radix-tree KV$ prefix caching, stepped by
+//! an analytic cost model (DESIGN.md §1 explains why this substitution
+//! preserves the scheduling-relevant behaviour of the paper's H20+vLLM
+//! testbed).
+
+mod cost;
+mod engine;
+
+pub use cost::ModelProfile;
+pub use engine::{EngineConfig, EngineEvent, Instance, StepOutcome};
+
+/// Per-instance indicators, as exported to the router piggybacked on
+/// responses (the paper's Fig. 2 "direct system indicators"). All fields
+/// are *instance truth at snapshot time*; the router's view of them is as
+/// stale as the last response from that instance — exactly the staleness
+/// structure of the real system (§3).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct InstanceSnapshot {
+    /// R-BS: requests admitted into the running batch.
+    pub r_bs: usize,
+    /// Q-BS: requests waiting in the instance queue (not yet admitted).
+    pub q_bs: usize,
+    /// New prefill tokens not yet computed, across waiting + running
+    /// requests (the queued-prefill component of the P-token indicator).
+    pub queued_prefill_tokens: usize,
+    /// Total context tokens across admitted requests (#Tokens indicator,
+    /// used by Dynamo-style load balancing).
+    pub total_context_tokens: usize,
+    /// KV$ occupancy.
+    pub kv_used_blocks: usize,
+    pub kv_capacity_blocks: usize,
+}
+
+impl InstanceSnapshot {
+    /// The paper's BS indicator: running + waiting requests.
+    pub fn bs(&self) -> usize {
+        self.r_bs + self.q_bs
+    }
+}

@@ -1,0 +1,319 @@
+//! §5.2 — the KV$-hotspot failure-case detector and mitigation.
+//!
+//! The multiplicative score fails only when a *hotspot class* violates
+//! Eq. 2: its relative popularity x/x̄ exceeds its relative cache coverage
+//! |M|/|M̄| (M = instances caching the class prefix). Then every class
+//! request lands on M, BS growth cannot offset the P-token discount, and
+//! M overloads.
+//!
+//! The detector runs alongside every scheduling decision:
+//! * **Phase 1** (necessary condition): per class, over a sliding 1-minute
+//!   window, monitor x/x̄ vs |M|/|M̄|; violation raises an alarm.
+//! * **Phase 2** (confirmation): after an alarm, count consecutive class
+//!   requests whose best multiplicative score on M undercuts the best on
+//!   M̄ — i.e. requests that would *actually* keep piling onto M. At
+//!   2·|M| consecutive confirmations, activate mitigation: filter M out
+//!   of the routing targets for this class and fall back to
+//!   load-balancing-only routing for a cool-down window.
+
+use std::collections::HashMap;
+
+use crate::policy::LMetric;
+use crate::router::{select_min, Policy, RouteCtx, RouteDecision};
+
+const WINDOW_US: u64 = 60_000_000; // 1-minute popularity window
+const COOLDOWN_US: u64 = 60_000_000; // mitigation duration
+/// Minimum arrivals in the popularity window before phase 1 may alarm —
+/// class shares over a handful of samples are pure noise.
+const MIN_SAMPLES: u64 = 30;
+
+/// Rolling per-class arrival counts over the current 1-minute window.
+#[derive(Debug, Default)]
+struct PopularityWindow {
+    window_start: u64,
+    total: u64,
+    per_class: HashMap<u32, u64>,
+    // Previous window's totals (smooths the boundary).
+    prev_total: u64,
+    prev_per_class: HashMap<u32, u64>,
+}
+
+impl PopularityWindow {
+    fn observe(&mut self, class: u32, now: u64) {
+        if now.saturating_sub(self.window_start) >= WINDOW_US {
+            self.prev_total = self.total;
+            self.prev_per_class = std::mem::take(&mut self.per_class);
+            self.total = 0;
+            self.window_start = now;
+        }
+        self.total += 1;
+        *self.per_class.entry(class).or_insert(0) += 1;
+    }
+
+    fn samples(&self) -> u64 {
+        self.total + self.prev_total
+    }
+
+    /// Class share x over current+previous windows.
+    fn share(&self, class: u32) -> f64 {
+        let total = self.total + self.prev_total;
+        if total == 0 {
+            return 0.0;
+        }
+        let c = self.per_class.get(&class).copied().unwrap_or(0)
+            + self.prev_per_class.get(&class).copied().unwrap_or(0);
+        c as f64 / total as f64
+    }
+}
+
+#[derive(Debug, Default)]
+struct AlarmState {
+    consecutive: usize,
+    mitigated_until: u64,
+}
+
+/// The two-phase detector. Generic over the wrapped score via [`LMetric`]
+/// (the phase-2 comparison must reuse the production score arithmetic).
+pub struct HotspotDetector {
+    popularity: PopularityWindow,
+    alarms: HashMap<u32, AlarmState>,
+    /// Counters for analysis (Figs 20/21).
+    pub phase1_alarms: u64,
+    pub mitigations: u64,
+}
+
+impl HotspotDetector {
+    pub fn new() -> Self {
+        HotspotDetector {
+            popularity: PopularityWindow::default(),
+            alarms: HashMap::new(),
+            phase1_alarms: 0,
+            mitigations: 0,
+        }
+    }
+
+    /// The M set: instances whose KV$ holds the request's class prefix
+    /// (any cached block of this prompt counts as holding the prefix).
+    pub fn m_set(ctx: &RouteCtx) -> Vec<usize> {
+        (0..ctx.n()).filter(|&i| ctx.hit_tokens[i] > 0).collect()
+    }
+
+    /// Eq. 2 monitor: x/x̄ vs |M|/|M̄|. Returns the two ratios.
+    pub fn ratios(&self, ctx: &RouteCtx) -> (f64, f64) {
+        let x = self.popularity.share(ctx.class_id);
+        let m = Self::m_set(ctx).len();
+        let n = ctx.n();
+        let pop_ratio = if x >= 1.0 { f64::INFINITY } else { x / (1.0 - x) };
+        let cov_ratio = if m >= n {
+            f64::INFINITY
+        } else {
+            m as f64 / (n - m) as f64
+        };
+        (pop_ratio, cov_ratio)
+    }
+
+    /// Run the detector for one request. Returns `true` if mitigation is
+    /// active for this class (caller must filter M and load-balance).
+    pub fn check(&mut self, ctx: &RouteCtx, score: &LMetric) -> bool {
+        self.popularity.observe(ctx.class_id, ctx.now_us);
+        let m = Self::m_set(ctx);
+        let (pop, cov) = self.ratios(ctx);
+        let state = self.alarms.entry(ctx.class_id).or_default();
+
+        // Active mitigation?
+        if ctx.now_us < state.mitigated_until {
+            return true;
+        }
+
+        if m.is_empty() || m.len() >= ctx.n() {
+            state.consecutive = 0;
+            return false; // no hotspot possible: nothing cached, or cached everywhere
+        }
+
+        if self.popularity.samples() < MIN_SAMPLES {
+            return false; // class shares are noise at tiny sample counts
+        }
+
+        if pop <= cov {
+            // Eq. 2 holds: benign regime; reset phase 2.
+            state.consecutive = 0;
+            return false;
+        }
+        self.phase1_alarms += 1;
+
+        // Phase 2: would this request actually pile onto M?
+        let best_m = m
+            .iter()
+            .map(|&i| score.score(ctx, i))
+            .fold(f64::INFINITY, f64::min);
+        let best_not_m = (0..ctx.n())
+            .filter(|i| !m.contains(i))
+            .map(|i| score.score(ctx, i))
+            .fold(f64::INFINITY, f64::min);
+        if best_m <= best_not_m {
+            state.consecutive += 1;
+            if state.consecutive >= 2 * m.len() {
+                state.mitigated_until = ctx.now_us + COOLDOWN_US;
+                state.consecutive = 0;
+                self.mitigations += 1;
+                return true;
+            }
+        } else {
+            state.consecutive = 0;
+        }
+        false
+    }
+}
+
+impl Default for HotspotDetector {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// LMetric wrapped with the detector: the production configuration
+/// (`lmetric_guarded`). On mitigation, routes by pure load balancing
+/// restricted to M̄ (the paper's "filter out the suspected instances").
+pub struct GuardedLMetric {
+    inner: LMetric,
+    pub detector: HotspotDetector,
+}
+
+impl GuardedLMetric {
+    pub fn new() -> Self {
+        GuardedLMetric {
+            inner: LMetric::paper(),
+            detector: HotspotDetector::new(),
+        }
+    }
+}
+
+impl Default for GuardedLMetric {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Policy for GuardedLMetric {
+    fn name(&self) -> String {
+        "lmetric_guarded".into()
+    }
+
+    fn route(&mut self, ctx: &RouteCtx) -> RouteDecision {
+        if self.detector.check(ctx, &self.inner) {
+            let m = HotspotDetector::m_set(ctx);
+            // Load-balance over M̄ only.
+            let inst = select_min(ctx, |i| {
+                if m.contains(&i) {
+                    f64::INFINITY
+                } else {
+                    ctx.inds[i].bs() as f64
+                }
+            });
+            return RouteDecision::to(inst);
+        }
+        self.inner.route(ctx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::router::Indicators;
+
+    /// A hotspot-shaped context: class cached on 1 of 4 instances,
+    /// everyone idle, full hit on the hot one.
+    fn hotspot_ctx(now: u64, class: u32) -> RouteCtx {
+        RouteCtx {
+            now_us: now,
+            req_id: 0,
+            class_id: class,
+            input_len: 1000,
+            hit_tokens: vec![1000, 0, 0, 0],
+            inds: vec![Indicators::default(); 4],
+        }
+    }
+
+    #[test]
+    fn benign_class_never_mitigated() {
+        let mut det = HotspotDetector::new();
+        let score = LMetric::paper();
+        // Mixed traffic: class 1 is only 20% of arrivals, coverage 1/3.
+        for k in 0..200u64 {
+            let class = if k % 5 == 0 { 1 } else { 2 + (k % 7) as u32 };
+            let mut ctx = hotspot_ctx(k * 100_000, class);
+            if class != 1 {
+                ctx.hit_tokens = vec![0, 1000, 0, 0];
+            }
+            det.check(&ctx, &score);
+        }
+        assert_eq!(det.mitigations, 0);
+    }
+
+    #[test]
+    fn hotspot_class_detected_and_mitigated() {
+        let mut det = HotspotDetector::new();
+        let score = LMetric::paper();
+        // 100% of traffic is class 1, cached on 1/4 instances:
+        // x/x̄ = inf > 1/3 -> phase 1 fires (once past the warmup sample
+        // gate), phase 2 confirms after 2|M|=2 consecutive pile-ons.
+        let mut mitigated = false;
+        for k in 0..60u64 {
+            mitigated = det.check(&hotspot_ctx(k * 1000, 1), &score);
+            if mitigated {
+                break;
+            }
+        }
+        assert!(mitigated, "hotspot must be caught");
+        assert!(det.phase1_alarms >= 2);
+        assert_eq!(det.mitigations, 1);
+    }
+
+    #[test]
+    fn mitigation_filters_m_and_load_balances() {
+        let mut p = GuardedLMetric::new();
+        // Drive into mitigation.
+        let mut routed = Vec::new();
+        for k in 0..60u64 {
+            let mut ctx = hotspot_ctx(k * 1000, 1);
+            // make instance 0 visibly loaded so unguarded lmetric still
+            // picks it (score 0 from full hit... p_token=0 -> 0 * bs).
+            ctx.inds[0].r_bs = 30;
+            routed.push(p.route(&ctx).instance);
+        }
+        // Early routes hit instance 0 (the hotspot), later ones must not.
+        assert_eq!(routed[0], 0);
+        assert!(
+            routed[40..].iter().all(|&i| i != 0),
+            "mitigated routes avoid M: {routed:?}"
+        );
+        assert!(p.detector.mitigations >= 1);
+    }
+
+    #[test]
+    fn phase2_resets_when_balance_restores() {
+        let mut det = HotspotDetector::new();
+        let score = LMetric::paper();
+        // Alternate: one confirming ctx, then one where M is overloaded
+        // enough that the product already favors M̄ (no pile-on).
+        for k in 0..120u64 {
+            let mut ctx = hotspot_ctx(k * 1000, 1);
+            if k % 2 == 1 {
+                ctx.hit_tokens = vec![900, 0, 0, 0]; // partial hit
+                ctx.inds[0].r_bs = 100; // (1000-900)*101 > 1000*1
+            }
+            det.check(&ctx, &score);
+        }
+        assert_eq!(det.mitigations, 0, "alternating pattern never confirms");
+    }
+
+    #[test]
+    fn ratios_computed() {
+        let mut det = HotspotDetector::new();
+        let ctx = hotspot_ctx(0, 1);
+        det.check(&ctx, &LMetric::paper());
+        let (pop, cov) = det.ratios(&ctx);
+        assert!(pop > cov, "single-class traffic on 1/4 coverage violates Eq.2");
+        assert!((cov - 1.0 / 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,78 @@
+//! KV$ cache modelling: a block-granular radix (prefix) tree with
+//! reference counting and LRU eviction — the structure vLLM-style engines
+//! use for prefix caching, and the structure the router mirrors per
+//! instance to compute KV$-awareness indicators (`KV$.match(req)` in the
+//! paper's pseudocode).
+
+mod radix;
+
+pub use radix::RadixTree;
+
+/// Router-side per-instance KV$ views (the `KV` symbolic indicator of the
+/// paper's indicator factory). The router cannot see instance memory; it
+/// maintains one radix mirror per instance, updated when it routes a
+/// request (optimistic insert of the prompt) and when a response arrives
+/// (authoritative insert of prompt+output, piggybacked — §3).
+#[derive(Debug)]
+pub struct RouterKvView {
+    views: Vec<RadixTree>,
+}
+
+impl RouterKvView {
+    pub fn new(n_instances: usize, capacity_blocks: usize) -> Self {
+        RouterKvView {
+            views: (0..n_instances)
+                .map(|_| RadixTree::new(capacity_blocks))
+                .collect(),
+        }
+    }
+
+    pub fn n_instances(&self) -> usize {
+        self.views.len()
+    }
+
+    /// Matched *blocks* of `hashes` on each instance. The per-instance
+    /// KV$-hit length in tokens is `matched * BLOCK_TOKENS`.
+    pub fn match_all(&mut self, hashes: &[u64], now_us: u64) -> Vec<usize> {
+        self.views
+            .iter_mut()
+            .map(|v| v.match_prefix(hashes, now_us, false))
+            .collect()
+    }
+
+    /// Matched blocks on one instance.
+    pub fn match_one(&mut self, inst: usize, hashes: &[u64], now_us: u64) -> usize {
+        self.views[inst].match_prefix(hashes, now_us, false)
+    }
+
+    /// Optimistic insert at routing time (the routed instance will have
+    /// this prefix cached by the time the request prefills).
+    pub fn on_route(&mut self, inst: usize, hashes: &[u64], now_us: u64) {
+        self.views[inst].insert(hashes, now_us);
+    }
+
+    /// Authoritative insert at response time (prompt + generated tokens).
+    pub fn on_response(&mut self, inst: usize, full_hashes: &[u64], now_us: u64) {
+        self.views[inst].insert(full_hashes, now_us);
+    }
+
+    pub fn view(&self, inst: usize) -> &RadixTree {
+        &self.views[inst]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn router_view_tracks_routing() {
+        let mut rv = RouterKvView::new(3, 1000);
+        let h = vec![1, 2, 3, 4];
+        assert_eq!(rv.match_all(&h, 0), vec![0, 0, 0]);
+        rv.on_route(1, &h[..2], 10);
+        assert_eq!(rv.match_all(&h, 20), vec![0, 2, 0]);
+        rv.on_response(1, &h, 30);
+        assert_eq!(rv.match_all(&h, 40), vec![0, 4, 0]);
+    }
+}

@@ -1,0 +1,436 @@
+//! Block-granular radix tree with refcount pinning and lazy-heap LRU
+//! eviction.
+//!
+//! Each node is one KV$ block (BLOCK_TOKENS tokens) identified by its
+//! chained hash; a path from the root is a cached prefix. Running
+//! sequences *pin* their path (refcount) so eviction can never drop blocks
+//! a batch is using — the same invariant vLLM's BlockManager maintains.
+
+use std::collections::{BinaryHeap, HashMap};
+
+use crate::util::FastHash;
+
+const ROOT: usize = 0;
+
+#[derive(Debug)]
+struct Node {
+    hash: u64,
+    parent: usize,
+    children: HashMap<u64, usize, FastHash>,
+    refcount: u32,
+    last_access: u64,
+    alive: bool,
+}
+
+/// Max-heap entry ordered by *oldest* access first (reverse ordering).
+#[derive(Debug, PartialEq, Eq)]
+struct EvictCandidate {
+    last_access: u64,
+    node: usize,
+}
+
+impl Ord for EvictCandidate {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // BinaryHeap is a max-heap; we want the OLDEST access on top.
+        other
+            .last_access
+            .cmp(&self.last_access)
+            .then(other.node.cmp(&self.node))
+    }
+}
+impl PartialOrd for EvictCandidate {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Prefix tree over block-hash chains with capacity + LRU eviction.
+#[derive(Debug)]
+pub struct RadixTree {
+    nodes: Vec<Node>,
+    free: Vec<usize>,
+    /// Capacity in blocks (0 = unbounded, used for "infinite KV$" studies
+    /// like the paper's Fig. 5 hit-rate characterization).
+    capacity: usize,
+    used: usize,
+    evict_heap: BinaryHeap<EvictCandidate>,
+    /// Cumulative counters for hit-rate accounting.
+    pub total_lookup_blocks: u64,
+    pub total_hit_blocks: u64,
+    pub total_evicted_blocks: u64,
+}
+
+impl RadixTree {
+    /// `capacity_blocks` = 0 means unbounded.
+    pub fn new(capacity_blocks: usize) -> Self {
+        RadixTree {
+            nodes: vec![Node {
+                hash: 0,
+                parent: ROOT,
+                children: HashMap::default(),
+                refcount: 1, // root is never evictable
+                last_access: 0,
+                alive: true,
+            }],
+            free: Vec::new(),
+            capacity: capacity_blocks,
+            used: 0,
+            evict_heap: BinaryHeap::new(),
+            total_lookup_blocks: 0,
+            total_hit_blocks: 0,
+            total_evicted_blocks: 0,
+        }
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.used
+    }
+
+    pub fn capacity_blocks(&self) -> usize {
+        self.capacity
+    }
+
+    /// Number of leading blocks of `hashes` present in the tree.
+    /// With `touch`, refreshes LRU timestamps along the matched path.
+    pub fn match_prefix(&mut self, hashes: &[u64], now: u64, touch: bool) -> usize {
+        let mut cur = ROOT;
+        let mut matched = 0;
+        for h in hashes {
+            match self.nodes[cur].children.get(h) {
+                Some(&next) => {
+                    cur = next;
+                    matched += 1;
+                    if touch {
+                        self.touch(next, now);
+                    }
+                }
+                None => break,
+            }
+        }
+        self.total_lookup_blocks += hashes.len() as u64;
+        self.total_hit_blocks += matched as u64;
+        matched
+    }
+
+    fn touch(&mut self, node: usize, now: u64) {
+        self.nodes[node].last_access = now;
+        if self.nodes[node].refcount == 0 && self.nodes[node].children.is_empty() {
+            self.evict_heap.push(EvictCandidate {
+                last_access: now,
+                node,
+            });
+        }
+    }
+
+    /// Insert the full chain, evicting LRU leaves as needed. Returns the
+    /// number of NEW blocks allocated (0 = fully cached already). If the
+    /// cache cannot free enough space (everything pinned), inserts as many
+    /// leading blocks as fit.
+    pub fn insert(&mut self, hashes: &[u64], now: u64) -> usize {
+        let mut cur = ROOT;
+        let mut created = 0;
+        for h in hashes {
+            if let Some(&next) = self.nodes[cur].children.get(h) {
+                self.nodes[next].last_access = now;
+                cur = next;
+                continue;
+            }
+            if self.capacity != 0 && self.used >= self.capacity && !self.evict_one(cur) {
+                break; // full and nothing evictable
+            }
+            let idx = self.alloc(Node {
+                hash: *h,
+                parent: cur,
+                children: HashMap::default(),
+                refcount: 0,
+                last_access: now,
+                alive: true,
+            });
+            self.nodes[cur].children.insert(*h, idx);
+            self.evict_heap.push(EvictCandidate {
+                last_access: now,
+                node: idx,
+            });
+            self.used += 1;
+            created += 1;
+            cur = idx;
+        }
+        created
+    }
+
+    /// Pin the first `blocks` blocks of the chain (they must be present —
+    /// call right after `insert`). Pinned blocks cannot be evicted.
+    pub fn pin(&mut self, hashes: &[u64], blocks: usize) {
+        let mut cur = ROOT;
+        for h in hashes.iter().take(blocks) {
+            match self.nodes[cur].children.get(h) {
+                Some(&next) => {
+                    self.nodes[next].refcount += 1;
+                    cur = next;
+                }
+                None => break, // insert was truncated by capacity
+            }
+        }
+    }
+
+    /// Release a previous pin.
+    pub fn unpin(&mut self, hashes: &[u64], blocks: usize, now: u64) {
+        let mut cur = ROOT;
+        for h in hashes.iter().take(blocks) {
+            match self.nodes[cur].children.get(h) {
+                Some(&next) => {
+                    let n = &mut self.nodes[next];
+                    debug_assert!(n.refcount > 0, "unpin without pin");
+                    n.refcount = n.refcount.saturating_sub(1);
+                    n.last_access = now;
+                    cur = next;
+                }
+                None => break,
+            }
+        }
+        // Re-register the tail as an eviction candidate if it became free.
+        if cur != ROOT
+            && self.nodes[cur].refcount == 0
+            && self.nodes[cur].children.is_empty()
+        {
+            self.evict_heap.push(EvictCandidate {
+                last_access: now,
+                node: cur,
+            });
+        }
+    }
+
+    /// Evict one LRU unpinned leaf. `protect` (and its ancestors) are the
+    /// path currently being inserted — never evict it. Returns false if
+    /// nothing is evictable.
+    fn evict_one(&mut self, protect: usize) -> bool {
+        while let Some(cand) = self.evict_heap.pop() {
+            let n = &self.nodes[cand.node];
+            // Lazy validation: the entry must still describe reality.
+            if !n.alive
+                || n.refcount != 0
+                || !n.children.is_empty()
+                || n.last_access != cand.last_access
+                || cand.node == protect
+            {
+                // A protected candidate is still evictable later.
+                if n.alive
+                    && cand.node == protect
+                    && n.refcount == 0
+                    && n.children.is_empty()
+                {
+                    continue; // drop; re-pushed on next unpin/touch
+                }
+                continue;
+            }
+            let parent = n.parent;
+            let hash = n.hash;
+            self.nodes[cand.node].alive = false;
+            self.nodes[parent].children.remove(&hash);
+            self.free.push(cand.node);
+            self.used -= 1;
+            self.total_evicted_blocks += 1;
+            // Parent may now be an evictable leaf.
+            let p = &self.nodes[parent];
+            if parent != ROOT && p.alive && p.refcount == 0 && p.children.is_empty() {
+                self.evict_heap.push(EvictCandidate {
+                    last_access: p.last_access,
+                    node: parent,
+                });
+            }
+            return true;
+        }
+        false
+    }
+
+    fn alloc(&mut self, node: Node) -> usize {
+        if let Some(idx) = self.free.pop() {
+            self.nodes[idx] = node;
+            idx
+        } else {
+            self.nodes.push(node);
+            self.nodes.len() - 1
+        }
+    }
+
+    /// Lifetime block hit rate (blocks matched / blocks looked up).
+    pub fn hit_rate(&self) -> f64 {
+        if self.total_lookup_blocks == 0 {
+            0.0
+        } else {
+            self.total_hit_blocks as f64 / self.total_lookup_blocks as f64
+        }
+    }
+
+    /// Invariant checker used by the property tests.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut live = 0usize;
+        for (i, n) in self.nodes.iter().enumerate() {
+            if !n.alive {
+                continue;
+            }
+            if i != ROOT {
+                live += 1;
+                let p = &self.nodes[n.parent];
+                if !p.alive {
+                    return Err(format!("node {i} has dead parent {}", n.parent));
+                }
+                if p.children.get(&n.hash) != Some(&i) {
+                    return Err(format!("node {i} not linked from parent"));
+                }
+            }
+            for (&h, &c) in &n.children {
+                let ch = &self.nodes[c];
+                if !ch.alive || ch.parent != i || ch.hash != h {
+                    return Err(format!("bad child link {i}->{c}"));
+                }
+            }
+        }
+        if live != self.used {
+            return Err(format!("used={} but live={}", self.used, live));
+        }
+        if self.capacity != 0 && self.used > self.capacity {
+            return Err(format!("over capacity: {}>{}", self.used, self.capacity));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn match_empty() {
+        let mut t = RadixTree::new(0);
+        assert_eq!(t.match_prefix(&[1, 2, 3], 0, false), 0);
+    }
+
+    #[test]
+    fn insert_then_match() {
+        let mut t = RadixTree::new(0);
+        assert_eq!(t.insert(&[1, 2, 3], 0), 3);
+        assert_eq!(t.match_prefix(&[1, 2, 3, 4], 1, false), 3);
+        assert_eq!(t.match_prefix(&[1, 2], 1, false), 2);
+        assert_eq!(t.match_prefix(&[9], 1, false), 0);
+        assert_eq!(t.used_blocks(), 3);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn insert_idempotent() {
+        let mut t = RadixTree::new(0);
+        t.insert(&[1, 2, 3], 0);
+        assert_eq!(t.insert(&[1, 2, 3], 1), 0);
+        assert_eq!(t.insert(&[1, 2, 3, 4], 2), 1);
+        assert_eq!(t.used_blocks(), 4);
+    }
+
+    #[test]
+    fn branching_prefixes() {
+        let mut t = RadixTree::new(0);
+        t.insert(&[1, 2, 3], 0);
+        t.insert(&[1, 2, 9, 9], 1);
+        assert_eq!(t.used_blocks(), 5); // 1,2 shared; 3 + 9,9 distinct
+        assert_eq!(t.match_prefix(&[1, 2, 9, 9], 2, false), 4);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lru_eviction_prefers_oldest() {
+        let mut t = RadixTree::new(4);
+        t.insert(&[1, 2], 0); // old chain
+        t.insert(&[10, 20], 100); // newer chain
+        // Inserting 1 more block must evict the oldest leaf (2).
+        t.insert(&[30], 200);
+        assert_eq!(t.used_blocks(), 4);
+        assert_eq!(t.match_prefix(&[1, 2], 300, false), 1, "leaf 2 evicted");
+        assert_eq!(t.match_prefix(&[10, 20], 300, false), 2);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pinned_blocks_survive_pressure() {
+        let mut t = RadixTree::new(3);
+        t.insert(&[1, 2, 3], 0);
+        t.pin(&[1, 2, 3], 3);
+        // Cache full of pinned blocks: new insert can't allocate.
+        assert_eq!(t.insert(&[7, 8], 10), 0);
+        assert_eq!(t.match_prefix(&[1, 2, 3], 20, false), 3);
+        // After unpin, pressure can evict.
+        t.unpin(&[1, 2, 3], 3, 30);
+        assert_eq!(t.insert(&[7, 8], 40), 2);
+        assert!(t.used_blocks() <= 3);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn eviction_is_leaf_only() {
+        let mut t = RadixTree::new(3);
+        t.insert(&[1, 2, 3], 0);
+        t.insert(&[5], 10); // forces evicting leaf 3, not inner 1/2
+        assert_eq!(t.match_prefix(&[1, 2], 20, false), 2);
+        assert_eq!(t.match_prefix(&[1, 2, 3], 20, false), 2);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn touch_protects_from_eviction() {
+        let mut t = RadixTree::new(4);
+        t.insert(&[1, 2], 0);
+        t.insert(&[10, 20], 10);
+        t.match_prefix(&[1, 2], 100, true); // refresh chain 1-2
+        t.insert(&[30], 200); // should evict from chain 10-20 now
+        assert_eq!(t.match_prefix(&[1, 2], 300, false), 2);
+        assert_eq!(t.match_prefix(&[10, 20], 300, false), 1);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn hit_rate_accounting() {
+        let mut t = RadixTree::new(0);
+        t.insert(&[1, 2], 0);
+        t.match_prefix(&[1, 2], 1, false); // 2/2
+        t.match_prefix(&[9, 9], 1, false); // 0/2
+        assert!((t.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn capacity_zero_unbounded() {
+        let mut t = RadixTree::new(0);
+        let chain: Vec<u64> = (0..10_000).collect();
+        t.insert(&chain, 0);
+        assert_eq!(t.used_blocks(), 10_000);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn heavy_churn_keeps_invariants() {
+        let mut t = RadixTree::new(64);
+        let mut rng = crate::util::Rng::new(42);
+        for step in 0..2000u64 {
+            let base = rng.gen_range(0, 8);
+            let len = rng.gen_range(1, 12) as usize;
+            let chain: Vec<u64> = (0..len as u64).map(|i| base * 1000 + i).collect();
+            match rng.gen_range(0, 3) {
+                0 => {
+                    t.insert(&chain, step);
+                }
+                1 => {
+                    t.match_prefix(&chain, step, true);
+                }
+                _ => {
+                    t.insert(&chain, step);
+                    t.pin(&chain, len);
+                    t.unpin(&chain, len, step + 1);
+                }
+            }
+            if step % 101 == 0 {
+                t.check_invariants().unwrap();
+            }
+        }
+        t.check_invariants().unwrap();
+        assert!(t.used_blocks() <= 64);
+        assert!(t.total_evicted_blocks > 0);
+    }
+}

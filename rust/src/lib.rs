@@ -1,0 +1,45 @@
+//! # LMetric — multiplicative LLM request scheduling
+//!
+//! A from-scratch reproduction of *"Simple is Better: Multiplication May Be
+//! All You Need for LLM Request Scheduling"*: a Rust global scheduler
+//! (router) for a cluster of PD-colocated LLM serving instances, plus every
+//! substrate the paper's evaluation depends on.
+//!
+//! The headline policy is [`policy::LMetric`]: route each request to the
+//! instance minimizing `P-token × BS`, where `P-token` is the number of new
+//! prefill tokens if routed there (queued prefill tokens + prompt tokens
+//! missing from that instance's KV$) and `BS` the instance batch size. No
+//! hyperparameters — the linear combination's weights cancel under
+//! comparison (§5 of the paper).
+//!
+//! Layout (three layers; Python never on the request path):
+//! * [`router`] + [`policy`] — the paper's contribution: indicator factory
+//!   and the ten scheduling policies studied in the paper.
+//! * [`engine`] — a vLLM-v1-like instance: continuous batching, chunked
+//!   prefill, radix-tree KV$, analytic step cost model.
+//! * [`cluster`] — a discrete-event simulation harness (virtual time, used
+//!   by all figure benches) and a live threaded cluster (wall-clock time,
+//!   real transformer compute through [`runtime`]).
+//! * [`runtime`] — loads the AOT HLO artifacts produced by
+//!   `python/compile/aot.py` and executes them on the PJRT CPU client.
+//! * [`trace`] — synthetic workload generators matching the paper's four
+//!   trace families, plus replayer and rate scaling.
+//! * [`hotspot`] — the §5.2 two-phase KV$-hotspot detector.
+//! * [`simulator`] — the VIDUR-like latency predictor used by the
+//!   simulation-based baselines (llm-d, PolyServe).
+
+pub mod benchlib;
+pub mod cluster;
+pub mod config;
+pub mod core;
+pub mod engine;
+pub mod hotspot;
+pub mod kvcache;
+pub mod metrics;
+pub mod policy;
+pub mod router;
+pub mod runtime;
+pub mod simulator;
+pub mod tokenizer;
+pub mod trace;
+pub mod util;

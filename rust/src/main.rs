@@ -1,0 +1,301 @@
+//! `lmetric` — the launcher.
+//!
+//! Subcommands:
+//!   replay       run one policy on one workload through the DES cluster
+//!   compare      run every policy on one workload, print the table
+//!   serve        live cluster: real PJRT transformer, wall-clock latencies
+//!   gen-trace    write a synthetic workload as jsonl
+//!   trace-stats  Fig-5-style characterization of a workload
+//!   calibrate    analytic cost model vs. real PJRT step timings
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use lmetric::cluster::live::{run_live, LiveClusterConfig};
+use lmetric::cluster::{self, run_des};
+use lmetric::config::{ConfigDoc, ExperimentConfig};
+use lmetric::engine::ModelProfile;
+use lmetric::metrics::{render_table, ResultRow};
+use lmetric::policy;
+use lmetric::trace::{generate, load_jsonl, save_jsonl, Workload, WorkloadSpec};
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            out.insert(key.to_string(), val);
+        }
+        i += 1;
+    }
+    out
+}
+
+fn exp_from_flags(flags: &HashMap<String, String>) -> ExperimentConfig {
+    let mut exp = if let Some(path) = flags.get("config") {
+        let doc = ConfigDoc::from_file(path).unwrap_or_else(|e| {
+            eprintln!("config: {e}");
+            std::process::exit(2);
+        });
+        ExperimentConfig::from_doc(&doc)
+    } else {
+        ExperimentConfig::default()
+    };
+    if let Some(v) = flags.get("workload") {
+        exp.workload = v.clone();
+    }
+    if let Some(v) = flags.get("policy") {
+        exp.policy = v.clone();
+    }
+    if let Some(v) = flags.get("instances") {
+        exp.instances = v.parse().expect("--instances");
+    }
+    if let Some(v) = flags.get("requests") {
+        exp.requests = v.parse().expect("--requests");
+    }
+    if let Some(v) = flags.get("rate-scale") {
+        exp.rate_scale = v.parse().expect("--rate-scale");
+    }
+    if let Some(v) = flags.get("param") {
+        exp.param = v.parse().expect("--param");
+    }
+    if let Some(v) = flags.get("profile") {
+        exp.profile = v.clone();
+    }
+    if let Some(v) = flags.get("seed") {
+        exp.seed = v.parse().expect("--seed");
+    }
+    exp
+}
+
+fn cmd_replay(flags: &HashMap<String, String>) {
+    let exp = exp_from_flags(flags);
+    let profile = ModelProfile::by_name(&exp.profile).expect("profile");
+    let mut pol =
+        policy::build(&exp.policy, exp.param, &profile, exp.chunk_budget).unwrap_or_else(|| {
+            eprintln!("unknown policy {} (try: {:?})", exp.policy, policy::all_names());
+            std::process::exit(2);
+        });
+    println!(
+        "replaying {} ({} reqs) on {}×{} under {} ...",
+        exp.workload, exp.requests, exp.instances, exp.profile, pol.name()
+    );
+    let m = cluster::run_experiment(&exp, pol.as_mut());
+    let row = ResultRow::from_metrics(&pol.name(), &m)
+        .with("throughput_tok_s", m.output_throughput())
+        .with("imbalance_s", m.imbalance_score());
+    println!("{}", render_table(&format!("{} / {}", exp.workload, exp.profile), &[row]));
+}
+
+fn cmd_compare(flags: &HashMap<String, String>) {
+    let exp = exp_from_flags(flags);
+    let profile = ModelProfile::by_name(&exp.profile).expect("profile");
+    let trace = cluster::build_scaled_trace(&exp);
+    let cfg = cluster::cluster_config(&exp);
+    println!(
+        "comparing all policies on {} ({} reqs, {:.1} req/s, {} instances)",
+        exp.workload,
+        trace.requests.len(),
+        trace.mean_rps(),
+        exp.instances
+    );
+    let mut rows = Vec::new();
+    for name in policy::all_names() {
+        let mut pol = policy::build_default(name, &profile, exp.chunk_budget).unwrap();
+        let m = run_des(&cfg, &trace, pol.as_mut());
+        rows.push(
+            ResultRow::from_metrics(&pol.name(), &m).with("throughput_tok_s", m.output_throughput()),
+        );
+    }
+    println!("{}", render_table(&format!("{} / {}", exp.workload, exp.profile), &rows));
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) {
+    let n: usize = flags.get("instances").map(|v| v.parse().unwrap()).unwrap_or(2);
+    let reqs: usize = flags.get("requests").map(|v| v.parse().unwrap()).unwrap_or(24);
+    let policy_name = flags.get("policy").map(String::as_str).unwrap_or("lmetric");
+    let time_scale: f64 = flags.get("time-scale").map(|v| v.parse().unwrap()).unwrap_or(20.0);
+
+    // Live trace must fit the artifact model: vocab 1024, short prompts.
+    let mut spec = WorkloadSpec::preset(Workload::ChatBot, reqs, 7);
+    spec.vocab = 1023;
+    spec.sys_prompt_median = 96.0;
+    spec.user_span_median = 24.0;
+    spec.output_median = 8.0;
+    spec.output_sigma = 0.3;
+    spec.max_input = 384;
+    spec.mean_turns = 3.0;
+    spec.turn_gap_s = 30.0;
+    let trace = generate(&spec);
+
+    let profile = ModelProfile::moe_30b();
+    let mut pol = policy::build(policy_name, 0.7, &profile, 256).expect("policy");
+    let cfg = LiveClusterConfig {
+        n_instances: n,
+        time_scale,
+        ..Default::default()
+    };
+    println!(
+        "live serving {} requests on {} PJRT instances under {} (time ×{time_scale}) ...",
+        trace.requests.len(),
+        n,
+        pol.name()
+    );
+    match run_live(&cfg, &trace, pol.as_mut()) {
+        Ok(m) => {
+            let row = ResultRow::from_metrics(&pol.name(), &m)
+                .with("throughput_tok_s", m.output_throughput());
+            println!("{}", render_table("live cluster (wall clock)", &[row]));
+        }
+        Err(e) => {
+            eprintln!("live run failed: {e:#}\n(did you run `make artifacts`?)");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn cmd_gen_trace(flags: &HashMap<String, String>) {
+    let workload = flags
+        .get("workload")
+        .and_then(|w| Workload::by_name(w))
+        .unwrap_or(Workload::ChatBot);
+    let reqs: usize = flags.get("requests").map(|v| v.parse().unwrap()).unwrap_or(4000);
+    let seed: u64 = flags.get("seed").map(|v| v.parse().unwrap()).unwrap_or(42);
+    let out = flags
+        .get("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(format!("{}.jsonl", workload.name())));
+    let trace = generate(&WorkloadSpec::preset(workload, reqs, seed));
+    save_jsonl(&trace, &out).expect("write trace");
+    println!("wrote {} requests to {}", trace.requests.len(), out.display());
+}
+
+fn cmd_trace_stats(flags: &HashMap<String, String>) {
+    let trace = if let Some(file) = flags.get("file") {
+        load_jsonl("file", Path::new(file)).expect("load trace")
+    } else {
+        let workload = flags
+            .get("workload")
+            .and_then(|w| Workload::by_name(w))
+            .unwrap_or(Workload::ChatBot);
+        let reqs: usize = flags.get("requests").map(|v| v.parse().unwrap()).unwrap_or(4000);
+        generate(&WorkloadSpec::preset(workload, reqs, 42))
+    };
+    let (mean_in, mean_out) = trace.token_stats();
+    println!("trace: {}", trace.name);
+    println!("  requests:            {}", trace.requests.len());
+    println!("  mean arrival rate:   {:.2} req/s", trace.mean_rps());
+    println!("  mean input tokens:   {mean_in:.0}");
+    println!("  mean output tokens:  {mean_out:.0}");
+    println!(
+        "  inf-KV$ hit rate:    {:.1}% (Fig 5 bottom row)",
+        trace.infinite_cache_hit_rate() * 100.0
+    );
+    let classes: std::collections::BTreeSet<u32> =
+        trace.requests.iter().map(|r| r.req.class_id).collect();
+    println!("  request classes:     {}", classes.len());
+}
+
+fn cmd_calibrate(_flags: &HashMap<String, String>) {
+    // Cross-check the analytic cost model's SHAPE against the real PJRT
+    // transformer: prefill cost ≈ linear in new tokens; decode cost grows
+    // mildly with batch. Absolute scales differ (tiny CPU model vs H20).
+    use lmetric::runtime::ModelRuntime;
+    use std::time::Instant;
+    let rt = match ModelRuntime::load(&lmetric::runtime::artifacts_dir()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("calibrate needs artifacts: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    println!("PJRT live-model step timings (CPU; shape-check for the cost model)");
+    let kv = rt.zero_kv();
+    for &chunk in rt.cfg.chunk_buckets.clone().iter() {
+        let tokens: Vec<i32> = (0..chunk as i32).map(|t| 1 + t % 1000).collect();
+        let t0 = Instant::now();
+        let mut kv2 = kv.clone();
+        let iters = 3;
+        for _ in 0..iters {
+            let (_, k) = rt.prefill_chunk(&kv2, &tokens, 0, 0, chunk).expect("prefill");
+            kv2 = k;
+        }
+        let us = t0.elapsed().as_micros() as f64 / iters as f64;
+        println!(
+            "  prefill chunk={chunk:>4}: {:>10.0} µs  ({:.1} µs/token)",
+            us,
+            us / chunk as f64
+        );
+    }
+    for bs in [1usize, 2, 4, 8] {
+        let mut tokens = vec![0i32; rt.cfg.slots];
+        let mut lens = vec![0i32; rt.cfg.slots];
+        for i in 0..bs {
+            tokens[i] = 5;
+            lens[i] = 64;
+        }
+        let t0 = Instant::now();
+        let iters = 5;
+        let mut kv2 = kv.clone();
+        for _ in 0..iters {
+            let (_, k) = rt.decode_step(&kv2, &tokens, &lens).expect("decode");
+            kv2 = k;
+        }
+        let us = t0.elapsed().as_micros() as f64 / iters as f64;
+        println!("  decode  bs={bs}:        {us:>10.0} µs");
+    }
+    let p = ModelProfile::moe_30b();
+    println!("\nanalytic profile {} (H20-class target):", p.name);
+    for &chunk in &[16usize, 64, 256] {
+        println!(
+            "  prefill chunk={chunk:>4}: {:>10.0} µs (model)",
+            p.step_us(chunk, chunk as f64 * 0.1, 0, 0)
+        );
+    }
+    for bs in [1usize, 2, 4, 8] {
+        println!(
+            "  decode  bs={bs}:        {:>10.0} µs (model)",
+            p.step_us(0, 0.0, bs, bs * 64)
+        );
+    }
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: lmetric <command> [flags]
+
+commands:
+  replay       --workload W --policy P [--instances N --requests N --rate-scale F --param F --profile M --seed S --config FILE]
+  compare      --workload W [--instances N --requests N ...]
+  serve        [--instances N --requests N --policy P --time-scale F]
+  gen-trace    --workload W --requests N --out FILE
+  trace-stats  [--workload W | --file F]
+  calibrate
+
+workloads: chatbot coder agent toolagent hotspot
+policies:  {:?}",
+        policy::all_names()
+    );
+    std::process::exit(2);
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    let flags = parse_flags(&args[1..]);
+    match cmd.as_str() {
+        "replay" => cmd_replay(&flags),
+        "compare" => cmd_compare(&flags),
+        "serve" => cmd_serve(&flags),
+        "gen-trace" => cmd_gen_trace(&flags),
+        "trace-stats" => cmd_trace_stats(&flags),
+        "calibrate" => cmd_calibrate(&flags),
+        _ => usage(),
+    }
+}

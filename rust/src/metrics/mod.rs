@@ -1,0 +1,338 @@
+//! Run-level measurement: collects [`RequestRecord`]s plus the per-instance
+//! timelines the paper's figures profile, and renders tables / CSV / JSON.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use crate::core::RequestRecord;
+use crate::util::json::Json;
+use crate::util::stats::{cdf_points, stddev, Summary, Windowed};
+
+/// Everything a cluster run produces.
+#[derive(Debug)]
+pub struct RunMetrics {
+    pub records: Vec<RequestRecord>,
+    /// Seconds spent on prefill per 10-s window, per instance (Figs 10/25).
+    pub prefill_time: Vec<Windowed>,
+    /// Running batch size sampled per second, per instance (Fig 28).
+    pub batch_size: Vec<Windowed>,
+    /// Router scheduling overhead per decision, µs.
+    pub sched_overhead_us: Vec<f64>,
+    /// Simulator |pred-actual|/actual TTFT error ratios (Fig 16), when a
+    /// simulation-based policy ran.
+    pub sim_error_ratio: Vec<f64>,
+    /// Virtual (or wall) duration of the run, µs.
+    pub duration_us: u64,
+}
+
+impl RunMetrics {
+    pub fn new(n_instances: usize) -> Self {
+        RunMetrics {
+            records: Vec::new(),
+            prefill_time: (0..n_instances).map(|_| Windowed::new(10_000_000)).collect(),
+            batch_size: (0..n_instances).map(|_| Windowed::new(1_000_000)).collect(),
+            sched_overhead_us: Vec::new(),
+            sim_error_ratio: Vec::new(),
+            duration_us: 0,
+        }
+    }
+
+    pub fn ttfts(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.ttft_s()).collect()
+    }
+
+    /// TPOTs of requests that actually decoded (>1 output token).
+    pub fn tpots(&self) -> Vec<f64> {
+        self.records
+            .iter()
+            .filter(|r| r.output_len > 1)
+            .map(|r| r.tpot_s())
+            .collect()
+    }
+
+    pub fn ttft_summary(&self) -> Summary {
+        Summary::of(&self.ttfts())
+    }
+
+    pub fn tpot_summary(&self) -> Summary {
+        Summary::of(&self.tpots())
+    }
+
+    /// Mean prompt KV$ hit ratio over all requests.
+    pub fn mean_hit_ratio(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.hit_ratio()).sum::<f64>() / self.records.len() as f64
+    }
+
+    /// Hit ratio per 1-minute window (Figs 8/9/24 timelines).
+    pub fn hit_ratio_timeline(&self) -> Windowed {
+        let mut w = Windowed::new(60_000_000);
+        for r in &self.records {
+            w.add(r.arrival_us, r.hit_ratio());
+        }
+        w
+    }
+
+    /// Output token throughput in tokens/s.
+    pub fn output_throughput(&self) -> f64 {
+        if self.duration_us == 0 {
+            return 0.0;
+        }
+        let toks: u64 = self.records.iter().map(|r| r.output_len as u64).sum();
+        toks as f64 / (self.duration_us as f64 / 1e6)
+    }
+
+    /// Drop records from the cold-start transient: requests arriving in
+    /// the first `frac` of the run (standard steady-state methodology —
+    /// the paper replays hour-long traces where warm-up is negligible;
+    /// our shorter replays must discard it explicitly).
+    pub fn discard_warmup(&mut self, frac: f64) {
+        let cutoff = (self.duration_us as f64 * frac) as u64;
+        self.records.retain(|r| r.arrival_us >= cutoff);
+    }
+
+    /// Imbalance profile (§4.3 / Fig 10 methodology): pick the two
+    /// instances with the highest stddev of per-window prefill time and
+    /// return (idx_a, series_a, idx_b, series_b).
+    pub fn top2_imbalanced_instances(&self) -> Option<(usize, Vec<f64>, usize, Vec<f64>)> {
+        if self.prefill_time.len() < 2 {
+            return None;
+        }
+        let mut ranked: Vec<(usize, f64)> = self
+            .prefill_time
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (i, stddev(w.sums())))
+            .collect();
+        ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let (a, b) = (ranked[0].0, ranked[1].0);
+        Some((
+            a,
+            self.prefill_time[a].sums().to_vec(),
+            b,
+            self.prefill_time[b].sums().to_vec(),
+        ))
+    }
+
+    /// Mean absolute per-window prefill-time gap between the two most
+    /// divergent instances — the scalar imbalance measure behind Fig 10's
+    /// "3.57s vs 2.17s" comparison.
+    pub fn imbalance_score(&self) -> f64 {
+        match self.top2_imbalanced_instances() {
+            None => 0.0,
+            Some((_, a, _, b)) => {
+                let n = a.len().min(b.len());
+                if n == 0 {
+                    return 0.0;
+                }
+                (0..n).map(|i| (a[i] - b[i]).abs()).sum::<f64>() / n as f64
+            }
+        }
+    }
+}
+
+/// One labelled result row (e.g. one policy on one trace).
+#[derive(Debug, Clone)]
+pub struct ResultRow {
+    pub label: String,
+    pub ttft: Summary,
+    pub tpot: Summary,
+    pub hit_ratio: f64,
+    pub extra: BTreeMap<String, f64>,
+}
+
+impl ResultRow {
+    pub fn from_metrics(label: &str, m: &RunMetrics) -> Self {
+        ResultRow {
+            label: label.to_string(),
+            ttft: m.ttft_summary(),
+            tpot: m.tpot_summary(),
+            hit_ratio: m.mean_hit_ratio(),
+            extra: BTreeMap::new(),
+        }
+    }
+
+    pub fn with(mut self, key: &str, v: f64) -> Self {
+        self.extra.insert(key.to_string(), v);
+        self
+    }
+}
+
+/// Render rows as an aligned text table (the benches' stdout format).
+pub fn render_table(title: &str, rows: &[ResultRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("\n## {title}\n"));
+    out.push_str(&format!(
+        "{:<28} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>7}\n",
+        "policy/config",
+        "TTFT-mean",
+        "TTFT-p50",
+        "TTFT-p99",
+        "TPOT-mean",
+        "TPOT-p50",
+        "TPOT-p99",
+        "KV$hit"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<28} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>6.1}%\n",
+            r.label,
+            fmt_s(r.ttft.mean),
+            fmt_s(r.ttft.p50),
+            fmt_s(r.ttft.p99),
+            fmt_s(r.tpot.mean),
+            fmt_s(r.tpot.p50),
+            fmt_s(r.tpot.p99),
+            r.hit_ratio * 100.0
+        ));
+        if !r.extra.is_empty() {
+            let kv: Vec<String> = r.extra.iter().map(|(k, v)| format!("{k}={v:.4}")).collect();
+            out.push_str(&format!("{:<28} {}\n", "", kv.join("  ")));
+        }
+    }
+    out
+}
+
+/// Seconds with adaptive precision (ms below 1 s).
+pub fn fmt_s(v: f64) -> String {
+    if v.is_nan() {
+        "-".into()
+    } else if v < 1.0 {
+        format!("{:.1}ms", v * 1e3)
+    } else {
+        format!("{v:.2}s")
+    }
+}
+
+/// Persist rows (plus optional CDFs) under results/<name>.json.
+pub fn save_results(
+    name: &str,
+    rows: &[ResultRow],
+    cdfs: &[(String, Vec<f64>)],
+) -> std::io::Result<std::path::PathBuf> {
+    let dir = Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    let mut obj = vec![(
+        "rows".to_string(),
+        Json::Arr(
+            rows.iter()
+                .map(|r| {
+                    let mut o: Vec<(String, Json)> = vec![
+                        ("label".into(), Json::Str(r.label.clone())),
+                        ("ttft_mean".into(), Json::Num(r.ttft.mean)),
+                        ("ttft_p50".into(), Json::Num(r.ttft.p50)),
+                        ("ttft_p95".into(), Json::Num(r.ttft.p95)),
+                        ("ttft_p99".into(), Json::Num(r.ttft.p99)),
+                        ("tpot_mean".into(), Json::Num(r.tpot.mean)),
+                        ("tpot_p50".into(), Json::Num(r.tpot.p50)),
+                        ("tpot_p99".into(), Json::Num(r.tpot.p99)),
+                        ("hit_ratio".into(), Json::Num(r.hit_ratio)),
+                    ];
+                    for (k, v) in &r.extra {
+                        o.push((k.clone(), Json::Num(*v)));
+                    }
+                    Json::Obj(o.into_iter().collect())
+                })
+                .collect(),
+        ),
+    )];
+    for (label, values) in cdfs {
+        let pts = cdf_points(values, 200);
+        obj.push((
+            format!("cdf_{label}"),
+            Json::Arr(
+                pts.iter()
+                    .map(|(x, p)| Json::Arr(vec![Json::Num(*x), Json::Num(*p)]))
+                    .collect(),
+            ),
+        ));
+    }
+    let path = dir.join(format!("{name}.json"));
+    let mut f = std::fs::File::create(&path)?;
+    f.write_all(Json::Obj(obj.into_iter().collect()).to_string().as_bytes())?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::RequestRecord;
+
+    fn mk_record(id: u64, arrival: u64, first: u64, done: u64, out: u32) -> RequestRecord {
+        RequestRecord {
+            id,
+            class_id: 0,
+            instance: (id % 2) as usize,
+            arrival_us: arrival,
+            first_token_us: first,
+            completion_us: done,
+            input_len: 100,
+            output_len: out,
+            cached_tokens: 50,
+        }
+    }
+
+    #[test]
+    fn summaries() {
+        let mut m = RunMetrics::new(2);
+        m.records.push(mk_record(1, 0, 100_000, 1_100_000, 11));
+        m.records.push(mk_record(2, 0, 300_000, 2_300_000, 21));
+        m.duration_us = 2_300_000;
+        let t = m.ttft_summary();
+        assert_eq!(t.n, 2);
+        assert!((t.mean - 0.2).abs() < 1e-9);
+        assert!((m.tpot_summary().mean - 0.1).abs() < 1e-9);
+        assert!((m.mean_hit_ratio() - 0.5).abs() < 1e-9);
+        assert!(m.output_throughput() > 0.0);
+    }
+
+    #[test]
+    fn single_token_requests_excluded_from_tpot() {
+        let mut m = RunMetrics::new(1);
+        m.records.push(mk_record(1, 0, 10, 10, 1));
+        assert_eq!(m.tpot_summary().n, 0);
+    }
+
+    #[test]
+    fn imbalance_score_detects_divergence() {
+        let mut m = RunMetrics::new(3);
+        for w in 0..10 {
+            m.prefill_time[0].add(w * 10_000_000, 5.0);
+            m.prefill_time[1].add(w * 10_000_000, 1.0);
+            m.prefill_time[2].add(w * 10_000_000, 3.0);
+        }
+        // Balanced run: all equal.
+        let mut b = RunMetrics::new(3);
+        for w in 0..10 {
+            for i in 0..3 {
+                b.prefill_time[i].add(w * 10_000_000, 3.0);
+            }
+        }
+        assert!(m.imbalance_score() > b.imbalance_score());
+    }
+
+    #[test]
+    fn table_renders() {
+        let m = RunMetrics::new(1);
+        let row = ResultRow::from_metrics("x", &m).with("score", 1.0);
+        let t = render_table("t", &[row]);
+        assert!(t.contains("x"));
+        assert!(t.contains("score=1.0000"));
+    }
+
+    #[test]
+    fn save_results_writes_json() {
+        let m = RunMetrics::new(1);
+        let rows = vec![ResultRow::from_metrics("p", &m)];
+        let path = save_results("_test_metrics", &rows, &[("ttft".into(), vec![1.0, 2.0])])
+            .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = Json::parse(&text).unwrap();
+        assert!(v.get("rows").is_some());
+        assert!(v.get("cdf_ttft").is_some());
+        std::fs::remove_file(path).ok();
+    }
+}

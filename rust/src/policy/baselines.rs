@@ -1,0 +1,93 @@
+//! Trivial baselines: round-robin and uniform random routing. Not in the
+//! paper's evaluation but indispensable sanity anchors for the harness.
+
+use crate::router::{Policy, RouteCtx, RouteDecision};
+use crate::util::Rng;
+
+/// Route requests cyclically.
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl RoundRobin {
+    pub fn new() -> Self {
+        RoundRobin { next: 0 }
+    }
+}
+
+impl Default for RoundRobin {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Policy for RoundRobin {
+    fn name(&self) -> String {
+        "round_robin".into()
+    }
+
+    fn route(&mut self, ctx: &RouteCtx) -> RouteDecision {
+        let i = self.next % ctx.n();
+        self.next = self.next.wrapping_add(1);
+        RouteDecision::to(i)
+    }
+}
+
+/// Route requests uniformly at random (deterministic seed).
+pub struct Random {
+    rng: Rng,
+}
+
+impl Random {
+    pub fn new(seed: u64) -> Self {
+        Random {
+            rng: Rng::new(seed),
+        }
+    }
+}
+
+impl Policy for Random {
+    fn name(&self) -> String {
+        "random".into()
+    }
+
+    fn route(&mut self, ctx: &RouteCtx) -> RouteDecision {
+        RouteDecision::to(self.rng.gen_range(0, ctx.n() as u64) as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::router::Indicators;
+
+    fn ctx(n: usize) -> RouteCtx {
+        RouteCtx {
+            now_us: 0,
+            req_id: 0,
+            class_id: 0,
+            input_len: 10,
+            hit_tokens: vec![0; n],
+            inds: vec![Indicators::default(); n],
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut p = RoundRobin::new();
+        let c = ctx(3);
+        let picks: Vec<usize> = (0..6).map(|_| p.route(&c).instance).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn random_covers_all_instances() {
+        let mut p = Random::new(3);
+        let c = ctx(4);
+        let mut seen = [false; 4];
+        for _ in 0..100 {
+            seen[p.route(&c).instance] = true;
+        }
+        assert!(seen.iter().all(|s| *s));
+    }
+}

@@ -1,0 +1,61 @@
+//! NVIDIA Dynamo's linear combination (§6.1): same weighted-sum shape as
+//! BAILIAN's but with a different indicator choice — P-token for
+//! KV$-awareness and total context tokens (#Tokens) for load balancing,
+//! both normalized ("regulated") against the cross-instance max.
+
+use crate::router::{select_min, Policy, RouteCtx, RouteDecision};
+
+pub struct Dynamo {
+    pub alpha: f64,
+}
+
+impl Dynamo {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Dynamo { alpha }
+    }
+}
+
+impl Policy for Dynamo {
+    fn name(&self) -> String {
+        format!("dynamo(α={})", self.alpha)
+    }
+
+    fn route(&mut self, ctx: &RouteCtx) -> RouteDecision {
+        let max_p = (0..ctx.n()).map(|i| ctx.p_token(i)).max().unwrap_or(0).max(1) as f64;
+        let max_t = (0..ctx.n())
+            .map(|i| ctx.inds[i].total_context_tokens)
+            .max()
+            .unwrap_or(0)
+            .max(1) as f64;
+        RouteDecision::to(select_min(ctx, |i| {
+            self.alpha * (ctx.p_token(i) as f64 / max_p)
+                + (1.0 - self.alpha) * (ctx.inds[i].total_context_tokens as f64 / max_t)
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::router::Indicators;
+
+    #[test]
+    fn balances_ptoken_and_tokens() {
+        let mut i0 = Indicators::default();
+        i0.total_context_tokens = 10_000; // heavy decode load
+        let i1 = Indicators::default();
+        let ctx = RouteCtx {
+            now_us: 0,
+            req_id: 0,
+            class_id: 0,
+            input_len: 1000,
+            hit_tokens: vec![1000, 0], // full hit on the loaded one
+            inds: vec![i0, i1],
+        };
+        // KV-dominant α: hit instance wins despite decode load.
+        assert_eq!(Dynamo::new(0.9).route(&ctx).instance, 0);
+        // Load-dominant α: idle instance wins.
+        assert_eq!(Dynamo::new(0.1).route(&ctx).instance, 1);
+    }
+}

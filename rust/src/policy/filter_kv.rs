@@ -1,0 +1,88 @@
+//! The filter-based combination (§4.5, Fig 13) — AIBrix's prefix-cache
+//! policy shape: if the cluster looks imbalanced (BS range exceeds a
+//! threshold), abandon KV$-awareness and JSQ; otherwise route to the
+//! instance with the most KV$ hits (ties: least loaded).
+
+use crate::router::{select_min, Policy, RouteCtx, RouteDecision};
+
+pub struct FilterKv {
+    /// The imbalance threshold "Range" (workload-specific: Fig 12 sweeps
+    /// {2,4,8,16}).
+    pub range: usize,
+}
+
+impl FilterKv {
+    pub fn new(range: usize) -> Self {
+        FilterKv { range }
+    }
+}
+
+impl Policy for FilterKv {
+    fn name(&self) -> String {
+        format!("filter_kv(range={})", self.range)
+    }
+
+    fn route(&mut self, ctx: &RouteCtx) -> RouteDecision {
+        let bs_max = (0..ctx.n()).map(|i| ctx.inds[i].bs()).max().unwrap_or(0);
+        let bs_min = (0..ctx.n()).map(|i| ctx.inds[i].bs()).min().unwrap_or(0);
+        let inst = if bs_max - bs_min > self.range {
+            // Imbalanced: pure load balancing, KV$ ignored entirely
+            // (the paper's Cons #2: forgoes KV$ benefits).
+            select_min(ctx, |i| ctx.inds[i].bs() as f64)
+        } else {
+            // Balanced: chase hits; select_min's BS tie-break implements
+            // the `.select_min(BS)` second key of Fig 13 line 6.
+            select_min(ctx, |i| -(ctx.hit_tokens[i] as f64))
+        };
+        RouteDecision::to(inst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::router::Indicators;
+
+    fn ctx(hits: Vec<usize>, bss: Vec<usize>) -> RouteCtx {
+        let inds = bss
+            .iter()
+            .map(|b| Indicators {
+                r_bs: *b,
+                ..Default::default()
+            })
+            .collect();
+        RouteCtx {
+            now_us: 0,
+            req_id: 0,
+            class_id: 0,
+            input_len: 100,
+            hit_tokens: hits,
+            inds,
+        }
+    }
+
+    #[test]
+    fn balanced_chases_hits() {
+        let c = ctx(vec![0, 80], vec![3, 4]); // range 1 <= 4
+        assert_eq!(FilterKv::new(4).route(&c).instance, 1);
+    }
+
+    #[test]
+    fn imbalanced_ignores_hits() {
+        let c = ctx(vec![0, 80], vec![1, 9]); // range 8 > 4
+        assert_eq!(FilterKv::new(4).route(&c).instance, 0);
+    }
+
+    #[test]
+    fn threshold_gates_the_switch() {
+        let c = ctx(vec![0, 80], vec![1, 9]);
+        // Generous range: still in KV$ branch.
+        assert_eq!(FilterKv::new(16).route(&c).instance, 1);
+    }
+
+    #[test]
+    fn hit_ties_break_on_load() {
+        let c = ctx(vec![80, 80], vec![5, 2]);
+        assert_eq!(FilterKv::new(8).route(&c).instance, 1);
+    }
+}

@@ -1,0 +1,82 @@
+//! The linear-combination (weighted-sum) policy (§4.4, Fig 6b) — the
+//! production BAILIAN scheduler's shape:
+//!
+//! `score_i = λ·(1 − hit_ratio_i) + (1−λ)·norm(BS_i)`
+//!
+//! BS is normalized to [0,1] against the current max across instances so
+//! the two indicators share a scale (§4.2 note (1)). λ is the
+//! workload-specific hyperparameter whose tuning pain (Fig 11) motivates
+//! the multiplicative score.
+
+use crate::router::{select_min, Policy, RouteCtx, RouteDecision};
+
+pub struct Linear {
+    pub lambda: f64,
+}
+
+impl Linear {
+    pub fn new(lambda: f64) -> Self {
+        assert!((0.0..=1.0).contains(&lambda), "λ must be in [0,1]");
+        Linear { lambda }
+    }
+}
+
+impl Policy for Linear {
+    fn name(&self) -> String {
+        format!("linear(λ={})", self.lambda)
+    }
+
+    fn route(&mut self, ctx: &RouteCtx) -> RouteDecision {
+        let max_bs = (0..ctx.n()).map(|i| ctx.inds[i].bs()).max().unwrap_or(0).max(1) as f64;
+        RouteDecision::to(select_min(ctx, |i| {
+            self.lambda * (1.0 - ctx.hit_ratio(i))
+                + (1.0 - self.lambda) * (ctx.inds[i].bs() as f64 / max_bs)
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::router::Indicators;
+
+    fn ctx(hits: Vec<usize>, bss: Vec<usize>) -> RouteCtx {
+        let inds = bss
+            .iter()
+            .map(|b| Indicators {
+                r_bs: *b,
+                ..Default::default()
+            })
+            .collect();
+        RouteCtx {
+            now_us: 0,
+            req_id: 0,
+            class_id: 0,
+            input_len: 100,
+            hit_tokens: hits,
+            inds,
+        }
+    }
+
+    #[test]
+    fn high_lambda_chases_hits() {
+        let c = ctx(vec![100, 0], vec![10, 0]);
+        assert_eq!(Linear::new(0.9).route(&c).instance, 0, "hit wins at λ=0.9");
+        assert_eq!(Linear::new(0.1).route(&c).instance, 1, "load wins at λ=0.1");
+    }
+
+    #[test]
+    fn knee_behaviour_between() {
+        // hit=60% on loaded instance vs 0% on idle: mid λ prefers idle,
+        // high λ prefers the hit.
+        let c = ctx(vec![60, 0], vec![10, 1]);
+        assert_eq!(Linear::new(0.95).route(&c).instance, 0);
+        assert_eq!(Linear::new(0.4).route(&c).instance, 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_lambda() {
+        Linear::new(1.5);
+    }
+}

@@ -1,0 +1,190 @@
+//! **LMETRIC** — the paper's contribution (§5, Fig 17): route to the
+//! instance minimizing the *product* of one KV$-aware indicator and one
+//! load-balancing indicator:
+//!
+//! `score_i = P-token_i × (BS_i + 1)`
+//!
+//! Multiplication preserves the trend of a linear combination but the
+//! weights cancel under cross-instance comparison — no tuning. The `+1`
+//! is the paper's `BS.update(1)` (Fig 17b line 3): the request itself
+//! joins the batch, and it keeps an idle instance's load indicator from
+//! annihilating the product.
+//!
+//! Indicator choices are explicit enum parameters so the Fig 18/19
+//! ablations (`1−KV$-hit-ratio` vs `P-token`; `#Tokens` vs `BS`) are the
+//! same code path.
+
+use crate::router::{select_min, Policy, RouteCtx, RouteDecision};
+
+/// The KV$-awareness factor (Fig 18 ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvAwareIndicator {
+    /// New prefill tokens if routed there, *including* the instance's
+    /// queued prefill tokens (the paper's choice, §5.1).
+    PToken,
+    /// 1 − KV$ hit ratio (Preble/AIGW's choice; misses queue state).
+    OneMinusHitRatio,
+}
+
+/// The load-balancing factor (Fig 19 ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoadIndicator {
+    /// Batch size (running + queued) — the paper's choice: decode time is
+    /// governed by batch size, not context tokens (Fig 19b).
+    BatchSize,
+    /// Total context tokens (Dynamo/AIGW's choice).
+    TotalTokens,
+}
+
+pub struct LMetric {
+    pub kv: KvAwareIndicator,
+    pub load: LoadIndicator,
+}
+
+impl LMetric {
+    pub fn new(kv: KvAwareIndicator, load: LoadIndicator) -> Self {
+        LMetric { kv, load }
+    }
+
+    /// The published configuration: P-token × BS.
+    pub fn paper() -> Self {
+        LMetric::new(KvAwareIndicator::PToken, LoadIndicator::BatchSize)
+    }
+
+    /// The multiplicative score for instance `i` (public so the hotspot
+    /// detector's phase-2 comparison reuses the exact same arithmetic).
+    pub fn score(&self, ctx: &RouteCtx, i: usize) -> f64 {
+        let kv = match self.kv {
+            KvAwareIndicator::PToken => ctx.p_token(i) as f64,
+            KvAwareIndicator::OneMinusHitRatio => 1.0 - ctx.hit_ratio(i),
+        };
+        let load = match self.load {
+            LoadIndicator::BatchSize => (ctx.inds[i].bs() + 1) as f64,
+            LoadIndicator::TotalTokens => (ctx.inds[i].total_context_tokens + 1) as f64,
+        };
+        kv * load
+    }
+}
+
+impl Policy for LMetric {
+    fn name(&self) -> String {
+        match (self.kv, self.load) {
+            (KvAwareIndicator::PToken, LoadIndicator::BatchSize) => "lmetric".into(),
+            (KvAwareIndicator::OneMinusHitRatio, LoadIndicator::BatchSize) => {
+                "lmetric[1-hit×BS]".into()
+            }
+            (KvAwareIndicator::PToken, LoadIndicator::TotalTokens) => {
+                "lmetric[P-tok×#Tok]".into()
+            }
+            _ => "lmetric[1-hit×#Tok]".into(),
+        }
+    }
+
+    fn route(&mut self, ctx: &RouteCtx) -> RouteDecision {
+        RouteDecision::to(select_min(ctx, |i| self.score(ctx, i)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::router::Indicators;
+
+    fn ctx(input: usize, hits: Vec<usize>, bss: Vec<usize>, queued: Vec<usize>) -> RouteCtx {
+        let inds = bss
+            .iter()
+            .zip(&queued)
+            .map(|(b, q)| Indicators {
+                r_bs: *b,
+                queued_prefill_tokens: *q,
+                ..Default::default()
+            })
+            .collect();
+        RouteCtx {
+            now_us: 0,
+            req_id: 0,
+            class_id: 0,
+            input_len: input,
+            hit_tokens: hits,
+            inds,
+        }
+    }
+
+    #[test]
+    fn hit_wins_when_balanced() {
+        let c = ctx(1000, vec![800, 0], vec![4, 4], vec![0, 0]);
+        // scores: 200*5=1000 vs 1000*5=5000
+        assert_eq!(LMetric::paper().route(&c).instance, 0);
+    }
+
+    #[test]
+    fn overload_overrides_hit() {
+        // Hit instance is drowning in batch: (1000-800)*(41) = 8200 vs
+        // 1000*(1+1) = 2000 -> idle instance wins despite zero hit.
+        let c = ctx(1000, vec![800, 0], vec![40, 1], vec![0, 0]);
+        assert_eq!(LMetric::paper().route(&c).instance, 1);
+    }
+
+    #[test]
+    fn queued_prefill_breaks_hit_preference() {
+        // §5.1's key property: P-token sees queued prefill tokens that the
+        // hit-ratio variant is blind to.
+        let c = ctx(1000, vec![800, 0], vec![4, 4], vec![20_000, 0]);
+        assert_eq!(
+            LMetric::paper().route(&c).instance,
+            1,
+            "P-token bypasses the congested hit instance"
+        );
+        let mut ablation = LMetric::new(
+            KvAwareIndicator::OneMinusHitRatio,
+            LoadIndicator::BatchSize,
+        );
+        assert_eq!(
+            ablation.route(&c).instance,
+            0,
+            "hit-ratio variant chases the hit blindly"
+        );
+    }
+
+    #[test]
+    fn full_hit_idle_scores_zero_and_wins() {
+        let c = ctx(320, vec![320, 0], vec![0, 0], vec![0, 0]);
+        let p = LMetric::paper();
+        assert_eq!(p.score(&c, 0), 0.0);
+        let mut p = p;
+        assert_eq!(p.route(&c).instance, 0);
+    }
+
+    #[test]
+    fn no_hyperparameters_scale_invariance() {
+        // Multiplying both factors by constants (the cancelled λ's) can't
+        // change the argmin: verify score ordering is scale-free.
+        let c = ctx(1000, vec![500, 200], vec![3, 7], vec![100, 50]);
+        let p = LMetric::paper();
+        let (a, b) = (p.score(&c, 0), p.score(&c, 1));
+        assert_eq!(a < b, (2.5 * a) < (2.5 * b));
+    }
+
+    #[test]
+    fn tokens_variant_uses_context() {
+        let mut i0 = Indicators::default();
+        i0.total_context_tokens = 50_000;
+        let i1 = Indicators {
+            r_bs: 30, // huge BS but tiny contexts
+            total_context_tokens: 100,
+            ..Default::default()
+        };
+        let c = RouteCtx {
+            now_us: 0,
+            req_id: 0,
+            class_id: 0,
+            input_len: 100,
+            hit_tokens: vec![0, 0],
+            inds: vec![i0, i1],
+        };
+        let mut tok = LMetric::new(KvAwareIndicator::PToken, LoadIndicator::TotalTokens);
+        let mut bs = LMetric::paper();
+        assert_eq!(tok.route(&c).instance, 1, "#Tokens variant avoids big ctx");
+        assert_eq!(bs.route(&c).instance, 0, "BS variant avoids big batch");
+    }
+}

@@ -1,0 +1,146 @@
+//! Every scheduling policy studied in the paper, implemented against the
+//! same indicator factory for an apples-to-apples comparison (§3's
+//! methodology, §6's baselines):
+//!
+//! | name           | paper | combination | hyperparameter |
+//! |----------------|-------|-------------|----------------|
+//! | `round_robin`  | —     | none        | — |
+//! | `random`       | —     | none        | — |
+//! | `vllm`         | §4.2  | load-balance only (JSQ: 4·Q-BS + R-BS) | — |
+//! | `linear`       | §4.4 (BAILIAN) | λ·(1−hit) + (1−λ)·norm(BS) | λ |
+//! | `dynamo`       | §6.1  | α·norm(P-token) + (1−α)·norm(#Tokens) | α |
+//! | `filter_kv`    | §4.5 (AIBrix) | BS-range filter → max hit | Range |
+//! | `sim_llmd`     | §4.6 (llm-d) | min simulated TTFT | simulator |
+//! | `preble`       | §6.2/A.1 | hit filter → windowed linear fallback | T |
+//! | `polyserve`    | §6.2/A.2 | SLO filter → load gradient | τ (SLO_TPOT) |
+//! | `lmetric`      | §5    | **P-token × BS** | none |
+//! | `lmetric_guarded` | §5.2 | lmetric + two-phase hotspot detector | none |
+//!
+//! Ablation variants for Figs 18/19: `lmetric_hit_ratio` uses
+//! (1−hit-ratio)×BS; `lmetric_tokens` uses P-token×#Tokens.
+
+mod baselines;
+mod dynamo;
+mod filter_kv;
+mod linear;
+mod lmetric;
+mod polyserve;
+mod preble;
+mod sim_based;
+mod vllm;
+
+pub use baselines::{Random, RoundRobin};
+pub use dynamo::Dynamo;
+pub use filter_kv::FilterKv;
+pub use linear::Linear;
+pub use lmetric::{KvAwareIndicator, LMetric, LoadIndicator};
+pub use polyserve::PolyServe;
+pub use preble::Preble;
+pub use sim_based::SimBased;
+pub use vllm::Vllm;
+
+use crate::engine::ModelProfile;
+use crate::hotspot::GuardedLMetric;
+use crate::router::Policy;
+use crate::simulator::LatencySimulator;
+
+/// Build a policy by name. `param` is the policy's single hyperparameter
+/// knob (λ / α / Range / T / τ-ms; ignored where hyperparameter-free).
+/// Simulation-based policies get a *tuned* simulator for `profile`;
+/// use [`build_with_simulator`] to study mis-tuned ones (Fig 15).
+pub fn build(
+    name: &str,
+    param: f64,
+    profile: &ModelProfile,
+    chunk_budget: usize,
+) -> Option<Box<dyn Policy>> {
+    let sim = LatencySimulator::tuned(profile.clone(), chunk_budget);
+    build_with_simulator(name, param, sim)
+}
+
+/// Build with an explicit simulator (tuned or untuned).
+pub fn build_with_simulator(
+    name: &str,
+    param: f64,
+    sim: LatencySimulator,
+) -> Option<Box<dyn Policy>> {
+    Some(match name {
+        "round_robin" => Box::new(RoundRobin::new()),
+        "random" => Box::new(Random::new(7)),
+        "vllm" => Box::new(Vllm::new()),
+        "linear" => Box::new(Linear::new(param)),
+        "dynamo" => Box::new(Dynamo::new(param)),
+        "filter_kv" => Box::new(FilterKv::new(param as usize)),
+        "sim_llmd" => Box::new(SimBased::new(sim)),
+        "preble" => Box::new(Preble::new(param)),
+        "polyserve" => Box::new(PolyServe::new(sim, param * 1000.0)),
+        "lmetric" => Box::new(LMetric::paper()),
+        "lmetric_hit_ratio" => Box::new(LMetric::new(
+            KvAwareIndicator::OneMinusHitRatio,
+            LoadIndicator::BatchSize,
+        )),
+        "lmetric_tokens" => Box::new(LMetric::new(
+            KvAwareIndicator::PToken,
+            LoadIndicator::TotalTokens,
+        )),
+        "lmetric_guarded" => Box::new(GuardedLMetric::new()),
+        _ => return None,
+    })
+}
+
+/// The per-policy default hyperparameter (the paper's tuned/default
+/// values: λ=0.7 linear, α=0.7 dynamo, Range=8 AIBrix, T=0.5 Preble,
+/// τ=20 ms PolyServe). Hyperparameter-free policies return 0.
+pub fn default_param(name: &str) -> f64 {
+    match name {
+        "linear" => 0.7,
+        "dynamo" => 0.7,
+        "filter_kv" => 8.0,
+        "preble" => 0.5,
+        "polyserve" => 20.0, // ms
+        _ => 0.0,
+    }
+}
+
+/// Build a policy with its default hyperparameter.
+pub fn build_default(
+    name: &str,
+    profile: &ModelProfile,
+    chunk_budget: usize,
+) -> Option<Box<dyn Policy>> {
+    build(name, default_param(name), profile, chunk_budget)
+}
+
+/// All policy names (for `lmetric replay --policy all` sweeps).
+pub fn all_names() -> &'static [&'static str] {
+    &[
+        "round_robin",
+        "random",
+        "vllm",
+        "linear",
+        "dynamo",
+        "filter_kv",
+        "sim_llmd",
+        "preble",
+        "polyserve",
+        "lmetric",
+        "lmetric_guarded",
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_builds_everything() {
+        let p = ModelProfile::moe_30b();
+        for name in all_names() {
+            let pol = build(name, 0.7, &p, 256);
+            assert!(pol.is_some(), "missing policy {name}");
+        }
+        assert!(build("lmetric_hit_ratio", 0.0, &p, 256).is_some());
+        assert!(build("lmetric_tokens", 0.0, &p, 256).is_some());
+        assert!(build("nope", 0.0, &p, 256).is_none());
+    }
+}

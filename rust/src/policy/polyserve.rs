@@ -1,0 +1,108 @@
+//! PolyServe (§6.2, Fig 33): a simulation-based *load-gradient* scheduler.
+//! It optimizes for auto-scaling headroom, not latency: among instances
+//! whose predicted TTFT/TPOT meet the SLO it picks the MOST loaded
+//! (highest predicted TPOT), concentrating work so idle instances can be
+//! released; only when nothing is feasible does it fall back to the
+//! lowest-TPOT instance.
+
+use crate::router::{select_max, select_min, Policy, RouteCtx, RouteDecision};
+use crate::simulator::LatencySimulator;
+
+pub struct PolyServe {
+    sim: LatencySimulator,
+    /// SLO_TPOT in µs (the paper's τ; Fig 34 sweeps it).
+    pub slo_tpot_us: f64,
+    /// SLO_TTFT in µs (held fixed in the paper's tuning, §A.2).
+    pub slo_ttft_us: f64,
+}
+
+impl PolyServe {
+    pub fn new(sim: LatencySimulator, slo_tpot_us: f64) -> Self {
+        PolyServe {
+            sim,
+            slo_tpot_us,
+            slo_ttft_us: 10_000_000.0, // 10 s — generous, as in the paper
+        }
+    }
+}
+
+impl Policy for PolyServe {
+    fn name(&self) -> String {
+        format!("polyserve(τ={}ms)", self.slo_tpot_us / 1000.0)
+    }
+
+    fn route(&mut self, ctx: &RouteCtx) -> RouteDecision {
+        let n = ctx.n();
+        let ttft: Vec<f64> = (0..n).map(|i| self.sim.predict_ttft(ctx, i)).collect();
+        let tpot: Vec<f64> = (0..n)
+            .map(|i| self.sim.predict_tpot(&ctx.inds[i], ctx.input_len))
+            .collect();
+        let feasible: Vec<usize> = (0..n)
+            .filter(|&i| ttft[i] <= self.slo_ttft_us && tpot[i] <= self.slo_tpot_us)
+            .collect();
+        let inst = if feasible.is_empty() {
+            // Load-balancing branch: least predicted TPOT.
+            select_min(ctx, |i| tpot[i])
+        } else {
+            // Utilization branch: most loaded feasible instance.
+            select_max(ctx, |i| {
+                if feasible.contains(&i) {
+                    tpot[i]
+                } else {
+                    f64::NEG_INFINITY
+                }
+            })
+        };
+        RouteDecision {
+            instance: inst,
+            predicted_ttft_us: Some(ttft[inst]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::ModelProfile;
+    use crate::router::Indicators;
+
+    fn mk(slo_ms: f64) -> PolyServe {
+        PolyServe::new(
+            LatencySimulator::tuned(ModelProfile::moe_30b(), 256),
+            slo_ms * 1000.0,
+        )
+    }
+
+    fn gradient_ctx() -> RouteCtx {
+        // instance 0 moderately loaded, 1 idle, 2 overloaded.
+        let mut i0 = Indicators::default();
+        i0.r_bs = 8;
+        i0.total_context_tokens = 8 * 500;
+        let i1 = Indicators::default();
+        let mut i2 = Indicators::default();
+        i2.r_bs = 200;
+        i2.total_context_tokens = 200 * 2000;
+        RouteCtx {
+            now_us: 0,
+            req_id: 0,
+            class_id: 0,
+            input_len: 500,
+            hit_tokens: vec![0, 0, 0],
+            inds: vec![i0, i1, i2],
+        }
+    }
+
+    #[test]
+    fn packs_load_onto_feasible_busy_instance() {
+        // Generous SLO: instance 0 (loaded but feasible) wins over idle 1.
+        let mut p = mk(100.0);
+        assert!(p.route(&gradient_ctx()).instance != 1);
+    }
+
+    #[test]
+    fn falls_back_to_least_tpot_when_infeasible() {
+        // Impossible SLO: pure load balancing -> idle instance 1.
+        let mut p = mk(0.001);
+        assert_eq!(p.route(&gradient_ctx()).instance, 1);
+    }
+}

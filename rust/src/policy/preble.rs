@@ -1,0 +1,192 @@
+//! Preble (§6.2, §A.1, Fig 30): a hybrid of the filter-based and
+//! linear-combination schemes. If some instance's cached prefix covers
+//! more than a threshold `T` of the prompt, route to the best-hit
+//! instance (ties: least prefill load). Otherwise fall back to a linear
+//! score over 3-minute sliding-window per-instance cost sums:
+//!
+//! `argmin_i  α·Σ_window P-token_i + β·Σ_window BS_i`
+//!
+//! where the window sums accumulate the per-request prefill tokens and a
+//! per-request decode cost for requests the router sent to instance `i`.
+
+use std::collections::VecDeque;
+
+use crate::router::{select_min, Policy, RouteCtx, RouteDecision};
+
+/// Per-instance sliding window of (time, prefill_tokens, decode_cost).
+#[derive(Debug, Default)]
+struct Window {
+    entries: VecDeque<(u64, f64, f64)>,
+    sum_ptok: f64,
+    sum_decode: f64,
+}
+
+impl Window {
+    fn push(&mut self, now: u64, ptok: f64, decode: f64) {
+        self.entries.push_back((now, ptok, decode));
+        self.sum_ptok += ptok;
+        self.sum_decode += decode;
+    }
+
+    fn expire(&mut self, now: u64, horizon_us: u64) {
+        while let Some(&(t, p, d)) = self.entries.front() {
+            if now.saturating_sub(t) > horizon_us {
+                self.entries.pop_front();
+                self.sum_ptok -= p;
+                self.sum_decode -= d;
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+pub struct Preble {
+    /// Hit-ratio filter threshold T (default 0.5, Fig 31 sweeps it;
+    /// T = 1.0 disables the KV$ branch entirely — Fig 32).
+    pub threshold: f64,
+    /// Fallback weights (one effective degree of freedom α/β; Preble
+    /// exposes both, §A.1 footnote).
+    pub alpha: f64,
+    pub beta: f64,
+    window_us: u64,
+    windows: Vec<Window>,
+    /// Branch-selection accounting (Fig 27).
+    pub kv_branch_routes: u64,
+    pub fallback_routes: u64,
+}
+
+impl Preble {
+    pub fn new(threshold: f64) -> Self {
+        Preble {
+            threshold,
+            // Profiled per Preble's method: α ≈ per-token prefill cost,
+            // β ≈ per-request decode cost, so both sums are in time units.
+            alpha: 1.0,
+            beta: 250.0,
+            window_us: 180_000_000, // 3 minutes
+            windows: Vec::new(),
+            kv_branch_routes: 0,
+            fallback_routes: 0,
+        }
+    }
+
+    /// Fraction of routes taken through the KV$-aware branch (Fig 27).
+    pub fn kv_branch_rate(&self) -> f64 {
+        let total = self.kv_branch_routes + self.fallback_routes;
+        if total == 0 {
+            0.0
+        } else {
+            self.kv_branch_routes as f64 / total as f64
+        }
+    }
+}
+
+impl Policy for Preble {
+    fn name(&self) -> String {
+        format!("preble(T={})", self.threshold)
+    }
+
+    fn route(&mut self, ctx: &RouteCtx) -> RouteDecision {
+        if self.windows.len() < ctx.n() {
+            self.windows.resize_with(ctx.n(), Window::default);
+        }
+        for w in self.windows.iter_mut() {
+            w.expire(ctx.now_us, self.window_us);
+        }
+
+        let best_hit = (0..ctx.n()).map(|i| ctx.hit_ratio(i)).fold(0.0, f64::max);
+        let inst = if best_hit > self.threshold {
+            self.kv_branch_routes += 1;
+            // Among instances tied for the max hit ratio, least prefill
+            // load (P-token) wins.
+            select_min(ctx, |i| {
+                if (ctx.hit_ratio(i) - best_hit).abs() < 1e-9 {
+                    ctx.p_token(i) as f64
+                } else {
+                    f64::INFINITY
+                }
+            })
+        } else {
+            self.fallback_routes += 1;
+            select_min(ctx, |i| {
+                self.alpha * self.windows[i].sum_ptok + self.beta * self.windows[i].sum_decode
+            })
+        };
+        // Accumulate this request's cost into the routed instance window.
+        self.windows[inst].push(ctx.now_us, ctx.new_tokens(inst) as f64, 1.0);
+        RouteDecision::to(inst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::router::Indicators;
+
+    fn ctx(now: u64, hits: Vec<usize>, input: usize) -> RouteCtx {
+        let n = hits.len();
+        RouteCtx {
+            now_us: now,
+            req_id: 0,
+            class_id: 0,
+            input_len: input,
+            hit_tokens: hits,
+            inds: vec![Indicators::default(); n],
+        }
+    }
+
+    #[test]
+    fn high_hit_takes_kv_branch() {
+        let mut p = Preble::new(0.5);
+        let c = ctx(0, vec![80, 0], 100);
+        assert_eq!(p.route(&c).instance, 0);
+        assert_eq!(p.kv_branch_routes, 1);
+    }
+
+    #[test]
+    fn low_hit_falls_back_to_window_score() {
+        let mut p = Preble::new(0.5);
+        // Send a stream of misses: window sums should spread them.
+        let mut counts = vec![0usize; 3];
+        for k in 0..30 {
+            let c = ctx(k * 1000, vec![0, 0, 0], 300);
+            counts[p.route(&c).instance] += 1;
+        }
+        assert_eq!(p.fallback_routes, 30);
+        // Balanced-ish: every instance used.
+        assert!(counts.iter().all(|&c| c >= 5), "{counts:?}");
+    }
+
+    #[test]
+    fn window_expiry_forgets_old_load() {
+        let mut p = Preble::new(0.9);
+        // Load instance 0 heavily at t=0.
+        for _ in 0..10 {
+            let mut c = ctx(0, vec![0, 0], 500);
+            c.inds[1].q_bs = 1000; // force all early routes to 0
+            p.route(&c);
+        }
+        // 4 minutes later the window is empty: route spread resumes at 0.
+        let c = ctx(240_000_000, vec![0, 0], 500);
+        let d = p.route(&c);
+        assert_eq!(d.instance, 0, "expired window no longer penalizes 0");
+    }
+
+    #[test]
+    fn threshold_one_disables_kv_branch() {
+        let mut p = Preble::new(1.0);
+        let c = ctx(0, vec![100, 0], 100); // 100% hit still ≤ T
+        p.route(&c);
+        assert_eq!(p.kv_branch_routes, 0);
+        assert_eq!(p.fallback_routes, 1);
+    }
+
+    #[test]
+    fn branch_rate_accounting() {
+        let mut p = Preble::new(0.5);
+        p.route(&ctx(0, vec![90, 0], 100)); // kv branch
+        p.route(&ctx(1, vec![10, 0], 100)); // fallback
+        assert!((p.kv_branch_rate() - 0.5).abs() < 1e-12);
+    }
+}

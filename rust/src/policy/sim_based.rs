@@ -1,0 +1,79 @@
+//! The simulation-based policy (§4.6, Fig 14) — llm-d's shape: predict
+//! the TTFT of routing the request to every instance with a VIDUR-like
+//! simulator, route to the minimum. The decision quality is exactly the
+//! simulator's accuracy (Figs 15–16).
+
+use crate::router::{select_min, Policy, RouteCtx, RouteDecision};
+use crate::simulator::LatencySimulator;
+
+pub struct SimBased {
+    sim: LatencySimulator,
+}
+
+impl SimBased {
+    pub fn new(sim: LatencySimulator) -> Self {
+        SimBased { sim }
+    }
+}
+
+impl Policy for SimBased {
+    fn name(&self) -> String {
+        if self.sim.noise_sigma == 0.0 {
+            format!("sim_llmd[{}]", self.sim.profile.name)
+        } else {
+            format!("sim_llmd[untuned:{}]", self.sim.profile.name)
+        }
+    }
+
+    fn route(&mut self, ctx: &RouteCtx) -> RouteDecision {
+        let preds: Vec<f64> = (0..ctx.n()).map(|i| self.sim.predict_ttft(ctx, i)).collect();
+        let inst = select_min(ctx, |i| preds[i]);
+        RouteDecision {
+            instance: inst,
+            predicted_ttft_us: Some(preds[inst]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::ModelProfile;
+    use crate::router::Indicators;
+
+    #[test]
+    fn routes_to_lowest_predicted_ttft() {
+        let sim = LatencySimulator::tuned(ModelProfile::moe_30b(), 256);
+        let mut p = SimBased::new(sim);
+        let mut busy = Indicators::default();
+        busy.queued_prefill_tokens = 50_000;
+        let ctx = RouteCtx {
+            now_us: 0,
+            req_id: 0,
+            class_id: 0,
+            input_len: 1000,
+            hit_tokens: vec![0, 0],
+            inds: vec![busy, Indicators::default()],
+        };
+        let d = p.route(&ctx);
+        assert_eq!(d.instance, 1);
+        assert!(d.predicted_ttft_us.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn kv_aware_through_the_simulator() {
+        // The simulator models prefill-with-hits, so sim-based routing is
+        // implicitly KV$-aware (a "higher-order combination", §4.6).
+        let sim = LatencySimulator::tuned(ModelProfile::moe_30b(), 256);
+        let mut p = SimBased::new(sim);
+        let ctx = RouteCtx {
+            now_us: 0,
+            req_id: 0,
+            class_id: 0,
+            input_len: 2000,
+            hit_tokens: vec![1600, 0],
+            inds: vec![Indicators::default(), Indicators::default()],
+        };
+        assert_eq!(p.route(&ctx).instance, 0);
+    }
+}

@@ -1,0 +1,57 @@
+//! vLLM-v1's default global scheduling policy (§4.2, Fig 6a): a
+//! load-balancing-only JSQ variant scoring `4·Q-BS + R-BS`. Queued
+//! requests weigh more than running ones because a queued request has all
+//! of its work still ahead of it.
+
+use crate::router::{select_min, Policy, RouteCtx, RouteDecision};
+
+pub struct Vllm;
+
+impl Vllm {
+    pub fn new() -> Self {
+        Vllm
+    }
+}
+
+impl Default for Vllm {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Policy for Vllm {
+    fn name(&self) -> String {
+        "vllm".into()
+    }
+
+    fn route(&mut self, ctx: &RouteCtx) -> RouteDecision {
+        RouteDecision::to(select_min(ctx, |i| {
+            (4 * ctx.inds[i].q_bs + ctx.inds[i].r_bs) as f64
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::router::Indicators;
+
+    #[test]
+    fn prefers_short_queue_over_small_batch() {
+        let mut inds = vec![Indicators::default(); 2];
+        inds[0].q_bs = 2; // score 8
+        inds[0].r_bs = 0;
+        inds[1].q_bs = 0;
+        inds[1].r_bs = 7; // score 7
+        let ctx = RouteCtx {
+            now_us: 0,
+            req_id: 0,
+            class_id: 0,
+            input_len: 100,
+            hit_tokens: vec![100, 0], // hits are IGNORED by design
+            inds,
+        };
+        let mut p = Vllm::new();
+        assert_eq!(p.route(&ctx).instance, 1);
+    }
+}

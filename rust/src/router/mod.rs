@@ -1,0 +1,291 @@
+//! The global scheduler's indicator factory and scheduling framework —
+//! the paper's §3 analysis framework, reimplemented as a library.
+//!
+//! The factory owns (a) the last piggybacked [`InstanceSnapshot`] per
+//! instance — refreshed whenever a response arrives, exactly as stale as
+//! the real system's — plus (b) router-side *optimistic deltas* applied at
+//! routing time (the router knows what it just sent where), and (c) the
+//! per-instance KV$ radix mirrors ([`RouterKvView`]).
+//!
+//! A scheduling policy is a function from a [`RouteCtx`] — the request's
+//! per-instance indicator values — to an instance choice, mirroring the
+//! paper's Fig. 4 programming model (`score` + `select_min`).
+
+use crate::core::Request;
+use crate::engine::InstanceSnapshot;
+use crate::kvcache::RouterKvView;
+
+/// Effective per-instance indicator values at decision time:
+/// last snapshot + optimistic deltas since.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Indicators {
+    pub r_bs: usize,
+    pub q_bs: usize,
+    pub queued_prefill_tokens: usize,
+    pub total_context_tokens: usize,
+    pub kv_used_blocks: usize,
+    pub kv_capacity_blocks: usize,
+}
+
+impl Indicators {
+    /// The BS indicator (running + queued batch size).
+    pub fn bs(&self) -> usize {
+        self.r_bs + self.q_bs
+    }
+}
+
+/// Everything a policy may consult for one routing decision.
+#[derive(Debug, Clone)]
+pub struct RouteCtx {
+    pub now_us: u64,
+    pub req_id: u64,
+    pub class_id: u32,
+    pub input_len: usize,
+    /// Prompt tokens already cached per instance (block-aligned).
+    pub hit_tokens: Vec<usize>,
+    pub inds: Vec<Indicators>,
+}
+
+impl RouteCtx {
+    pub fn n(&self) -> usize {
+        self.inds.len()
+    }
+
+    /// KV$ hit ratio on instance `i` if routed there.
+    pub fn hit_ratio(&self, i: usize) -> f64 {
+        if self.input_len == 0 {
+            0.0
+        } else {
+            self.hit_tokens[i] as f64 / self.input_len as f64
+        }
+    }
+
+    /// New prefill tokens this request would add on instance `i`.
+    pub fn new_tokens(&self, i: usize) -> usize {
+        self.input_len.saturating_sub(self.hit_tokens[i])
+    }
+
+    /// The paper's P-token indicator: queued new prefill tokens on `i`
+    /// plus this request's new tokens if routed there (§5.1).
+    pub fn p_token(&self, i: usize) -> usize {
+        self.inds[i].queued_prefill_tokens + self.new_tokens(i)
+    }
+}
+
+/// A routing decision; `predicted_ttft_us` is filled by simulation-based
+/// policies so harnesses can measure simulator error (Fig 16).
+#[derive(Debug, Clone, Copy)]
+pub struct RouteDecision {
+    pub instance: usize,
+    pub predicted_ttft_us: Option<f64>,
+}
+
+impl RouteDecision {
+    pub fn to(instance: usize) -> Self {
+        RouteDecision {
+            instance,
+            predicted_ttft_us: None,
+        }
+    }
+}
+
+/// A scheduling policy (one per baseline; see [`crate::policy`]).
+pub trait Policy: Send {
+    fn name(&self) -> String;
+    fn route(&mut self, ctx: &RouteCtx) -> RouteDecision;
+}
+
+/// `instances.select_min(score)` from the paper's programming model:
+/// minimal score wins; ties break on smaller BS, then lower index
+/// (deterministic, so every figure is reproducible).
+pub fn select_min(ctx: &RouteCtx, score: impl Fn(usize) -> f64) -> usize {
+    let mut best = 0usize;
+    let mut best_key = (f64::INFINITY, usize::MAX);
+    for i in 0..ctx.n() {
+        let key = (score(i), ctx.inds[i].bs());
+        if key.0 < best_key.0 || (key.0 == best_key.0 && key.1 < best_key.1) {
+            best_key = key;
+            best = i;
+        }
+    }
+    best
+}
+
+/// `select_max` with the same deterministic tie-breaks.
+pub fn select_max(ctx: &RouteCtx, score: impl Fn(usize) -> f64) -> usize {
+    select_min(ctx, |i| -score(i))
+}
+
+/// The indicator factory (§3): holds stale snapshots + optimistic deltas
+/// + KV$ mirrors; builds [`RouteCtx`]s; absorbs response piggybacks.
+pub struct IndicatorFactory {
+    snapshots: Vec<InstanceSnapshot>,
+    // Optimistic deltas since the instance's last response.
+    opt_q_bs: Vec<usize>,
+    opt_prefill_tokens: Vec<usize>,
+    opt_ctx_tokens: Vec<usize>,
+    pub kv: RouterKvView,
+}
+
+impl IndicatorFactory {
+    pub fn new(n_instances: usize, kv_capacity_blocks: usize) -> Self {
+        IndicatorFactory {
+            snapshots: vec![InstanceSnapshot::default(); n_instances],
+            opt_q_bs: vec![0; n_instances],
+            opt_prefill_tokens: vec![0; n_instances],
+            opt_ctx_tokens: vec![0; n_instances],
+            kv: RouterKvView::new(n_instances, kv_capacity_blocks),
+        }
+    }
+
+    pub fn n_instances(&self) -> usize {
+        self.snapshots.len()
+    }
+
+    /// Build the per-instance indicator view for a request.
+    pub fn route_ctx(&mut self, req: &Request, now_us: u64) -> RouteCtx {
+        let hit_blocks = self.kv.match_all(&req.block_hashes, now_us);
+        let input_len = req.input_len();
+        let hit_tokens: Vec<usize> = hit_blocks
+            .iter()
+            .map(|b| (b * crate::core::BLOCK_TOKENS).min(input_len))
+            .collect();
+        let inds = (0..self.snapshots.len())
+            .map(|i| {
+                let s = &self.snapshots[i];
+                Indicators {
+                    r_bs: s.r_bs,
+                    q_bs: s.q_bs + self.opt_q_bs[i],
+                    queued_prefill_tokens: s.queued_prefill_tokens
+                        + self.opt_prefill_tokens[i],
+                    total_context_tokens: s.total_context_tokens + self.opt_ctx_tokens[i],
+                    kv_used_blocks: s.kv_used_blocks,
+                    kv_capacity_blocks: s.kv_capacity_blocks,
+                }
+            })
+            .collect();
+        RouteCtx {
+            now_us,
+            req_id: req.id,
+            class_id: req.class_id,
+            input_len,
+            hit_tokens,
+            inds,
+        }
+    }
+
+    /// Commit a routing decision: optimistic indicator bumps + KV mirror.
+    pub fn on_route(&mut self, inst: usize, ctx: &RouteCtx, req: &Request, now_us: u64) {
+        self.opt_q_bs[inst] += 1;
+        self.opt_prefill_tokens[inst] += ctx.new_tokens(inst);
+        self.opt_ctx_tokens[inst] += ctx.input_len;
+        self.kv.on_route(inst, &req.block_hashes, now_us);
+    }
+
+    /// Absorb a response piggyback: authoritative snapshot replaces the
+    /// stale one and clears that instance's optimistic deltas.
+    pub fn on_snapshot(&mut self, inst: usize, snap: InstanceSnapshot) {
+        self.snapshots[inst] = snap;
+        self.opt_q_bs[inst] = 0;
+        self.opt_prefill_tokens[inst] = 0;
+        self.opt_ctx_tokens[inst] = 0;
+    }
+
+    /// Completion piggyback: cache the full (prompt+output) chain in the
+    /// KV mirror (the next conversation turn will hit it).
+    pub fn on_completion(&mut self, inst: usize, full_hashes: &[u64], now_us: u64) {
+        self.kv.on_response(inst, full_hashes, now_us);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer::block_hashes;
+
+    fn mk_req(id: u64, n_tokens: usize) -> Request {
+        let tokens = crate::tokenizer::span(9, id, n_tokens, 1024);
+        let block_hashes = block_hashes(&tokens);
+        Request {
+            id,
+            arrival_us: 0,
+            class_id: 9,
+            tokens,
+            output_len: 10,
+            block_hashes,
+        }
+    }
+
+    #[test]
+    fn optimistic_deltas_accumulate_and_reset() {
+        let mut f = IndicatorFactory::new(2, 0);
+        let req = mk_req(1, 160);
+        let ctx = f.route_ctx(&req, 0);
+        assert_eq!(ctx.inds[0].bs(), 0);
+        f.on_route(0, &ctx, &req, 0);
+        let ctx2 = f.route_ctx(&req, 1);
+        assert_eq!(ctx2.inds[0].q_bs, 1);
+        // 2nd route sees the mirror insert from the 1st -> full hit.
+        assert_eq!(ctx2.hit_tokens[0], 160);
+        assert_eq!(ctx2.inds[0].queued_prefill_tokens, 160);
+        // Snapshot resets deltas.
+        f.on_snapshot(0, crate::engine::InstanceSnapshot::default());
+        let ctx3 = f.route_ctx(&req, 2);
+        assert_eq!(ctx3.inds[0].q_bs, 0);
+        assert_eq!(ctx3.inds[0].queued_prefill_tokens, 0);
+    }
+
+    #[test]
+    fn p_token_combines_queue_and_miss() {
+        let mut f = IndicatorFactory::new(2, 0);
+        let mut snap = crate::engine::InstanceSnapshot::default();
+        snap.queued_prefill_tokens = 500;
+        f.on_snapshot(0, snap);
+        let req = mk_req(2, 320);
+        let ctx = f.route_ctx(&req, 0);
+        assert_eq!(ctx.p_token(0), 500 + 320);
+        assert_eq!(ctx.p_token(1), 320);
+        assert_eq!(ctx.new_tokens(0), 320);
+    }
+
+    #[test]
+    fn select_min_tiebreaks_deterministic() {
+        let ctx = RouteCtx {
+            now_us: 0,
+            req_id: 0,
+            class_id: 0,
+            input_len: 0,
+            hit_tokens: vec![0, 0, 0],
+            inds: vec![
+                Indicators {
+                    q_bs: 5,
+                    ..Default::default()
+                },
+                Indicators {
+                    q_bs: 1,
+                    ..Default::default()
+                },
+                Indicators {
+                    q_bs: 3,
+                    ..Default::default()
+                },
+            ],
+        };
+        // equal scores -> smallest bs wins (instance 1)
+        assert_eq!(select_min(&ctx, |_| 1.0), 1);
+        // distinct scores -> min wins regardless of bs
+        assert_eq!(select_min(&ctx, |i| [3.0, 2.0, 1.0][i]), 2);
+        assert_eq!(select_max(&ctx, |i| [3.0, 2.0, 1.0][i]), 0);
+    }
+
+    #[test]
+    fn hit_ratio_and_new_tokens() {
+        let mut f = IndicatorFactory::new(2, 0);
+        let req = mk_req(3, 320);
+        f.kv.on_response(1, &req.block_hashes[..10], 0); // 160 tokens cached
+        let ctx = f.route_ctx(&req, 1);
+        assert_eq!(ctx.hit_tokens, vec![0, 160]);
+        assert!((ctx.hit_ratio(1) - 0.5).abs() < 1e-12);
+        assert_eq!(ctx.new_tokens(1), 160);
+    }
+}

@@ -1,0 +1,337 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them once on the PJRT CPU client,
+//! and exposes the serving entry points (chunked prefill / batched decode
+//! / KV$ extract & inject) to the live engine. Python never runs here.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! State strategy: the KV$ tensor and parameters travel as host
+//! [`xla::Literal`]s between calls. On the CPU PJRT plugin "device"
+//! memory is host memory, so these are memcpys — the simple, correct
+//! choice for the validation path (a TPU deployment would keep buffers
+//! device-resident and donate them instead; DESIGN.md §Perf).
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Model geometry read from `manifest.json` (must match the Python
+/// [`ModelConfig`]).
+#[derive(Debug, Clone)]
+pub struct LiveModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub max_seq: usize,
+    pub slots: usize,
+    pub chunk_buckets: Vec<usize>,
+    pub kv_shape: Vec<usize>,
+}
+
+/// One parameter tensor's metadata.
+#[derive(Debug, Clone)]
+struct ParamSpec {
+    name: String,
+    shape: Vec<usize>,
+}
+
+/// The compiled model: one executable per entry point.
+pub struct ModelRuntime {
+    pub cfg: LiveModelConfig,
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    prefill: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    decode: xla::PjRtLoadedExecutable,
+    extract: xla::PjRtLoadedExecutable,
+    inject: xla::PjRtLoadedExecutable,
+    params: Vec<xla::Literal>,
+}
+
+fn load_manifest(dir: &Path) -> Result<(LiveModelConfig, Vec<ParamSpec>, BTreeMap<String, PathBuf>)> {
+    let text = std::fs::read_to_string(dir.join("manifest.json"))
+        .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+    let v = Json::parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+    let model = v.get("model").ok_or_else(|| anyhow!("manifest: no model"))?;
+    let geti = |k: &str| -> Result<usize> {
+        model
+            .get(k)
+            .and_then(|x| x.as_usize())
+            .ok_or_else(|| anyhow!("manifest: missing model.{k}"))
+    };
+    let cfg = LiveModelConfig {
+        vocab: geti("vocab")?,
+        d_model: geti("d_model")?,
+        n_layers: geti("n_layers")?,
+        n_heads: geti("n_heads")?,
+        d_head: geti("d_head")?,
+        max_seq: geti("max_seq")?,
+        slots: geti("slots")?,
+        chunk_buckets: v
+            .get("chunk_buckets")
+            .and_then(|x| x.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+            .unwrap_or_default(),
+        kv_shape: v
+            .get("kv_shape")
+            .and_then(|x| x.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+            .unwrap_or_default(),
+    };
+    let params: Vec<ParamSpec> = v
+        .get("params")
+        .and_then(|x| x.as_arr())
+        .ok_or_else(|| anyhow!("manifest: no params"))?
+        .iter()
+        .map(|p| ParamSpec {
+            name: p.get("name").and_then(|x| x.as_str()).unwrap_or("").to_string(),
+            shape: p
+                .get("shape")
+                .and_then(|x| x.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_default(),
+        })
+        .collect();
+    let mut artifacts = BTreeMap::new();
+    if let Some(obj) = v.get("artifacts").and_then(|x| x.as_obj()) {
+        for (name, a) in obj {
+            if let Some(file) = a.get("file").and_then(|x| x.as_str()) {
+                artifacts.insert(name.clone(), dir.join(file));
+            }
+        }
+    }
+    Ok((cfg, params, artifacts))
+}
+
+fn load_params_bin(dir: &Path, specs: &[ParamSpec]) -> Result<Vec<xla::Literal>> {
+    let mut f = std::fs::File::open(dir.join("params.bin"))
+        .with_context(|| format!("{}/params.bin", dir.display()))?;
+    let mut bytes = Vec::new();
+    f.read_to_end(&mut bytes)?;
+    let total: usize = specs.iter().map(|s| s.shape.iter().product::<usize>()).sum();
+    if bytes.len() != total * 4 {
+        bail!(
+            "params.bin has {} bytes, manifest declares {} floats",
+            bytes.len(),
+            total
+        );
+    }
+    let floats: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    let mut out = Vec::with_capacity(specs.len());
+    let mut off = 0usize;
+    for s in specs {
+        let n: usize = s.shape.iter().product();
+        let dims: Vec<i64> = s.shape.iter().map(|d| *d as i64).collect();
+        let lit = xla::Literal::vec1(&floats[off..off + n])
+            .reshape(&dims)
+            .with_context(|| format!("param {} reshape", s.name))?;
+        out.push(lit);
+        off += n;
+    }
+    Ok(out)
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+    )
+    .map_err(|e| anyhow!("{}: {e:?}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))
+}
+
+impl ModelRuntime {
+    /// Load + compile everything under `dir` (default `artifacts/`).
+    pub fn load(dir: &Path) -> Result<ModelRuntime> {
+        let (cfg, param_specs, artifacts) = load_manifest(dir)?;
+        let params = load_params_bin(dir, &param_specs)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+        let mut prefill = BTreeMap::new();
+        for &c in &cfg.chunk_buckets {
+            let path = artifacts
+                .get(&format!("prefill_c{c}"))
+                .ok_or_else(|| anyhow!("manifest missing prefill_c{c}"))?;
+            prefill.insert(c, compile(&client, path)?);
+        }
+        let decode = compile(
+            &client,
+            artifacts.get("decode").ok_or_else(|| anyhow!("missing decode"))?,
+        )?;
+        let extract = compile(
+            &client,
+            artifacts
+                .get("extract_slot")
+                .ok_or_else(|| anyhow!("missing extract_slot"))?,
+        )?;
+        let inject = compile(
+            &client,
+            artifacts
+                .get("inject_slot")
+                .ok_or_else(|| anyhow!("missing inject_slot"))?,
+        )?;
+        Ok(ModelRuntime {
+            cfg,
+            client,
+            prefill,
+            decode,
+            extract,
+            inject,
+            params,
+        })
+    }
+
+    /// Zero-initialized KV$ state.
+    pub fn zero_kv(&self) -> xla::Literal {
+        let dims: Vec<usize> = self.cfg.kv_shape.clone();
+        xla::Literal::create_from_shape(xla::PrimitiveType::F32, &dims)
+    }
+
+    /// Smallest chunk bucket that fits `n` new tokens (None if n exceeds
+    /// the largest bucket — caller loops chunks).
+    pub fn bucket_for(&self, n: usize) -> Option<usize> {
+        self.cfg.chunk_buckets.iter().copied().find(|&b| b >= n)
+    }
+
+    pub fn largest_bucket(&self) -> usize {
+        self.cfg.chunk_buckets.iter().copied().max().unwrap_or(0)
+    }
+
+    fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let out = exe
+            .execute::<&xla::Literal>(args)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))
+    }
+
+    /// Prefill one chunk of new tokens into `slot` at position `pos`.
+    /// `tokens.len()` must equal a chunk bucket; `chunk_len` ≤ bucket is
+    /// the real token count. Returns (last-token logits, new KV$).
+    pub fn prefill_chunk(
+        &self,
+        kv: &xla::Literal,
+        tokens: &[i32],
+        slot: usize,
+        pos: usize,
+        chunk_len: usize,
+    ) -> Result<(Vec<f32>, xla::Literal)> {
+        let exe = self
+            .prefill
+            .get(&tokens.len())
+            .ok_or_else(|| anyhow!("no prefill bucket of size {}", tokens.len()))?;
+        let tok = xla::Literal::vec1(tokens);
+        let slot_l = xla::Literal::scalar(slot as i32);
+        let pos_l = xla::Literal::scalar(pos as i32);
+        let len_l = xla::Literal::scalar(chunk_len as i32);
+        let mut args: Vec<&xla::Literal> = vec![&tok, &slot_l, &pos_l, &len_l, kv];
+        args.extend(self.params.iter());
+        let mut parts = self.run(exe, &args)?;
+        let kv_new = parts.pop().ok_or_else(|| anyhow!("prefill: missing kv"))?;
+        let logits = parts
+            .pop()
+            .ok_or_else(|| anyhow!("prefill: missing logits"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("logits: {e:?}"))?;
+        Ok((logits, kv_new))
+    }
+
+    /// One decode step over all slots. `lens[i]` is slot i's context
+    /// length BEFORE this token (0 = inactive). Returns
+    /// (logits[slots×vocab] row-major, new KV$).
+    pub fn decode_step(
+        &self,
+        kv: &xla::Literal,
+        tokens: &[i32],
+        lens: &[i32],
+    ) -> Result<(Vec<f32>, xla::Literal)> {
+        if tokens.len() != self.cfg.slots || lens.len() != self.cfg.slots {
+            bail!("decode_step wants {} slots", self.cfg.slots);
+        }
+        let tok = xla::Literal::vec1(tokens);
+        let len_l = xla::Literal::vec1(lens);
+        let mut args: Vec<&xla::Literal> = vec![&tok, &len_l, kv];
+        args.extend(self.params.iter());
+        let mut parts = self.run(&self.decode, &args)?;
+        let kv_new = parts.pop().ok_or_else(|| anyhow!("decode: missing kv"))?;
+        let logits = parts
+            .pop()
+            .ok_or_else(|| anyhow!("decode: missing logits"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("logits: {e:?}"))?;
+        Ok((logits, kv_new))
+    }
+
+    /// Snapshot a slot's K/V planes (host literals) for the prefix store.
+    pub fn extract_slot(&self, kv: &xla::Literal, slot: usize) -> Result<(xla::Literal, xla::Literal)> {
+        let slot_l = xla::Literal::scalar(slot as i32);
+        let mut parts = self.run(&self.extract, &[kv, &slot_l])?;
+        let v = parts.pop().ok_or_else(|| anyhow!("extract: missing v"))?;
+        let k = parts.pop().ok_or_else(|| anyhow!("extract: missing k"))?;
+        Ok((k, v))
+    }
+
+    /// Write cached K/V planes into a slot (the KV$-hit fast path).
+    pub fn inject_slot(
+        &self,
+        kv: &xla::Literal,
+        slot: usize,
+        k: &xla::Literal,
+        v: &xla::Literal,
+    ) -> Result<xla::Literal> {
+        let slot_l = xla::Literal::scalar(slot as i32);
+        let mut parts = self.run(&self.inject, &[kv, &slot_l, k, v])?;
+        parts.pop().ok_or_else(|| anyhow!("inject: missing kv"))
+    }
+
+    /// Greedy sampling helper: argmax of one slot's logits row.
+    pub fn argmax(logits_row: &[f32]) -> i32 {
+        let mut best = 0usize;
+        let mut best_v = f32::MIN;
+        for (i, &v) in logits_row.iter().enumerate() {
+            if v > best_v {
+                best_v = v;
+                best = i;
+            }
+        }
+        best as i32
+    }
+}
+
+/// Default artifacts directory: `$LMETRIC_ARTIFACTS` or `artifacts/`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("LMETRIC_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_max() {
+        assert_eq!(ModelRuntime::argmax(&[0.1, 3.0, -1.0]), 1);
+        assert_eq!(ModelRuntime::argmax(&[5.0]), 0);
+    }
+
+    // Full PJRT round-trip tests live in rust/tests/runtime_pjrt.rs (they
+    // need artifacts/ built).
+}

@@ -1,0 +1,123 @@
+//! Synthetic tokenization + block hashing.
+//!
+//! Real traces carry (hashed) content; our generators produce token-id
+//! sequences directly. Two requests share KV$ exactly when their token
+//! blocks match, so prefix structure is encoded by *reusing deterministic
+//! token spans*: the class's system prompt span, the conversation history
+//! spans, fresh user spans.
+//!
+//! Block hashing mirrors vLLM's prefix caching: the hash of block *i*
+//! chains the hash of block *i-1* with the tokens of block *i*, so a
+//! match of `n` leading hashes == a match of `n·BLOCK_TOKENS` leading
+//! tokens.
+
+use crate::core::BLOCK_TOKENS;
+use crate::util::Rng;
+
+/// FNV-1a-style mix used for block hashing (stable, fast, no deps).
+#[inline]
+fn mix(mut h: u64, x: u64) -> u64 {
+    h ^= x;
+    h = h.wrapping_mul(0x100_0000_01b3);
+    h ^ (h >> 29)
+}
+
+/// Chained hashes of each full block of `tokens` (partial tail ignored —
+/// a partial block can never be a KV$ hit).
+pub fn block_hashes(tokens: &[u32]) -> Vec<u64> {
+    let n_blocks = tokens.len() / BLOCK_TOKENS;
+    let mut out = Vec::with_capacity(n_blocks);
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in 0..n_blocks {
+        for t in &tokens[b * BLOCK_TOKENS..(b + 1) * BLOCK_TOKENS] {
+            h = mix(h, *t as u64);
+        }
+        out.push(h);
+    }
+    out
+}
+
+/// Deterministic token span for a (class, stream, index) triple — the
+/// building block of prefix-shared prompts. Same arguments → same tokens,
+/// so e.g. every request of class 7 starts with the same system prompt.
+pub fn span(class_id: u32, stream: u64, len: usize, vocab: u32) -> Vec<u32> {
+    let seed = ((class_id as u64) << 32) ^ stream.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    let mut rng = Rng::new(seed);
+    // Avoid token 0 (the live engine uses it as padding).
+    (0..len)
+        .map(|_| 1 + (rng.next_u64() % (vocab as u64 - 1)) as u32)
+        .collect()
+}
+
+/// Fresh (never-shared) tokens from a caller-owned rng.
+pub fn fresh(rng: &mut Rng, len: usize, vocab: u32) -> Vec<u32> {
+    (0..len).map(|_| 1 + (rng.next_u64() % (vocab as u64 - 1)) as u32).collect()
+}
+
+/// Longest shared block prefix of two hash chains.
+pub fn shared_blocks(a: &[u64], b: &[u64]) -> usize {
+    a.iter().zip(b.iter()).take_while(|(x, y)| x == y).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hashes_deterministic() {
+        let t: Vec<u32> = (0..64).collect();
+        assert_eq!(block_hashes(&t), block_hashes(&t));
+        assert_eq!(block_hashes(&t).len(), 64 / BLOCK_TOKENS);
+    }
+
+    #[test]
+    fn partial_tail_ignored() {
+        let t: Vec<u32> = (0..BLOCK_TOKENS as u32 + 5).collect();
+        assert_eq!(block_hashes(&t).len(), 1);
+    }
+
+    #[test]
+    fn chaining_distinguishes_prefixes() {
+        // Same second block content, different first block -> different
+        // second-block hashes (chained).
+        let mut a: Vec<u32> = vec![1; BLOCK_TOKENS];
+        let mut b: Vec<u32> = vec![2; BLOCK_TOKENS];
+        let common: Vec<u32> = vec![3; BLOCK_TOKENS];
+        a.extend(&common);
+        b.extend(&common);
+        let ha = block_hashes(&a);
+        let hb = block_hashes(&b);
+        assert_ne!(ha[0], hb[0]);
+        assert_ne!(ha[1], hb[1]);
+    }
+
+    #[test]
+    fn shared_prefix_shares_hashes() {
+        let sys = span(7, 0, 64, 1024);
+        let mut p1 = sys.clone();
+        let mut p2 = sys.clone();
+        p1.extend(span(7, 1, 32, 1024));
+        p2.extend(span(7, 2, 32, 1024));
+        let h1 = block_hashes(&p1);
+        let h2 = block_hashes(&p2);
+        assert_eq!(shared_blocks(&h1, &h2), 64 / BLOCK_TOKENS);
+    }
+
+    #[test]
+    fn span_deterministic_and_classed() {
+        assert_eq!(span(1, 0, 32, 1024), span(1, 0, 32, 1024));
+        assert_ne!(span(1, 0, 32, 1024), span(2, 0, 32, 1024));
+        assert_ne!(span(1, 0, 32, 1024), span(1, 1, 32, 1024));
+    }
+
+    #[test]
+    fn tokens_in_vocab_nonzero() {
+        let mut rng = Rng::new(1);
+        for t in fresh(&mut rng, 1000, 100) {
+            assert!(t >= 1 && t < 100);
+        }
+        for t in span(3, 9, 1000, 100) {
+            assert!(t >= 1 && t < 100);
+        }
+    }
+}

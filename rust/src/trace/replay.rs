@@ -1,0 +1,129 @@
+//! Trace persistence: one JSON object per line (jsonl), matching the
+//! shape of the paper's open-sourced trace-replayer format — hashed
+//! content is represented by the token ids themselves plus the output
+//! span needed to reconstruct the full (prompt+output) cache chain.
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use crate::core::Request;
+use crate::tokenizer::block_hashes;
+use crate::util::json::Json;
+
+use super::{Trace, TraceRequest};
+
+/// Write a trace as jsonl.
+pub fn save_jsonl(trace: &Trace, path: &Path) -> std::io::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    for tr in &trace.requests {
+        // Store the output span as the token suffix of the full chain.
+        // We regenerate full_hashes at load; tokens are the ground truth.
+        let obj = Json::obj(vec![
+            ("id", Json::Num(tr.req.id as f64)),
+            ("arrival_us", Json::Num(tr.req.arrival_us as f64)),
+            ("class", Json::Num(tr.req.class_id as f64)),
+            ("output_len", Json::Num(tr.req.output_len as f64)),
+            (
+                "tokens",
+                Json::Arr(tr.req.tokens.iter().map(|t| Json::Num(*t as f64)).collect()),
+            ),
+            (
+                "full_hashes",
+                Json::Arr(
+                    tr.full_hashes
+                        .iter()
+                        .map(|h| Json::Str(format!("{h:016x}")))
+                        .collect(),
+                ),
+            ),
+        ]);
+        writeln!(w, "{}", obj.to_string())?;
+    }
+    Ok(())
+}
+
+/// Load a jsonl trace.
+pub fn load_jsonl(name: &str, path: &Path) -> Result<Trace, String> {
+    let f = std::fs::File::open(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let reader = std::io::BufReader::new(f);
+    let mut requests = Vec::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(&line).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        let tokens: Vec<u32> = v
+            .get("tokens")
+            .and_then(|t| t.as_arr())
+            .ok_or(format!("line {}: missing tokens", lineno + 1))?
+            .iter()
+            .filter_map(|x| x.as_f64())
+            .map(|x| x as u32)
+            .collect();
+        let full_hashes: Vec<u64> = v
+            .get("full_hashes")
+            .and_then(|t| t.as_arr())
+            .map(|arr| {
+                arr.iter()
+                    .filter_map(|x| x.as_str())
+                    .filter_map(|s| u64::from_str_radix(s, 16).ok())
+                    .collect()
+            })
+            .unwrap_or_default();
+        let hashes = block_hashes(&tokens);
+        requests.push(TraceRequest {
+            req: Request {
+                id: v.get("id").and_then(|x| x.as_u64()).unwrap_or(lineno as u64),
+                arrival_us: v.get("arrival_us").and_then(|x| x.as_u64()).unwrap_or(0),
+                class_id: v.get("class").and_then(|x| x.as_u64()).unwrap_or(0) as u32,
+                output_len: v.get("output_len").and_then(|x| x.as_u64()).unwrap_or(1) as u32,
+                tokens,
+                block_hashes: hashes,
+            },
+            full_hashes,
+        });
+    }
+    requests.sort_by_key(|r| r.req.arrival_us);
+    Ok(Trace {
+        name: name.to_string(),
+        requests,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{generate, Workload, WorkloadSpec};
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let t = generate(&WorkloadSpec::preset(Workload::Agent, 50, 3));
+        let dir = std::env::temp_dir().join("lmetric_test_traces");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.jsonl");
+        save_jsonl(&t, &path).unwrap();
+        let t2 = load_jsonl("agent", &path).unwrap();
+        assert_eq!(t.requests.len(), t2.requests.len());
+        for (a, b) in t.requests.iter().zip(&t2.requests) {
+            assert_eq!(a.req.tokens, b.req.tokens);
+            assert_eq!(a.req.arrival_us, b.req.arrival_us);
+            assert_eq!(a.req.class_id, b.req.class_id);
+            assert_eq!(a.req.output_len, b.req.output_len);
+            assert_eq!(a.req.block_hashes, b.req.block_hashes);
+            assert_eq!(a.full_hashes, b.full_hashes);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn load_rejects_bad_json() {
+        let dir = std::env::temp_dir().join("lmetric_test_traces");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.jsonl");
+        std::fs::write(&path, "this is not json\n").unwrap();
+        assert!(load_jsonl("x", &path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

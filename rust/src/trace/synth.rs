@@ -1,0 +1,402 @@
+//! Synthetic workload generators fitted to the paper's Fig 5 trace
+//! characterization. Each family is a *session* process:
+//!
+//! * **ChatBot (Qwen)** — conversations: a class-shared system prompt,
+//!   multi-turn history growth, human think-time gaps, moderate outputs.
+//! * **Coder** — coding agents on a per-repo context: long prompts, high
+//!   within-session reuse, machine-speed turn gaps, short outputs.
+//! * **Agent (Qwen, API)** — API calling: short prompts, small shared
+//!   system prompts, mostly single turns, bursty arrival.
+//! * **ToolAgent (Kimi)** — agent loops: rapidly growing tool-result
+//!   context, many quick turns, short outputs.
+//! * **Hotspot** — the §5.2 adversarial case: background ChatBot traffic
+//!   plus a burst window where one class with a long shared prefix takes
+//!   a dominant share of arrivals while cached on few instances.
+//!
+//! Sessions make prefix reuse *structural*: turn k's prompt is exactly
+//! turn k-1's prompt + the assistant reply + the new user span, so the
+//! KV$ hit patterns (and the x/x̄ vs |M|/|M̄| hotspot ratios) emerge from
+//! the workload rather than being injected.
+
+use crate::core::Request;
+use crate::tokenizer::{block_hashes, span};
+use crate::util::rng::Zipf;
+use crate::util::Rng;
+
+use super::{Trace, TraceRequest};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Workload {
+    ChatBot,
+    Coder,
+    Agent,
+    ToolAgent,
+    Hotspot,
+}
+
+impl Workload {
+    pub fn by_name(name: &str) -> Option<Workload> {
+        Some(match name {
+            "chatbot" => Workload::ChatBot,
+            "coder" => Workload::Coder,
+            "agent" | "api" => Workload::Agent,
+            "toolagent" => Workload::ToolAgent,
+            "hotspot" => Workload::Hotspot,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Workload::ChatBot => "chatbot",
+            Workload::Coder => "coder",
+            Workload::Agent => "agent",
+            Workload::ToolAgent => "toolagent",
+            Workload::Hotspot => "hotspot",
+        }
+    }
+}
+
+/// Distribution parameters of one workload family.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub workload: Workload,
+    pub n_requests: usize,
+    pub seed: u64,
+    pub vocab: u32,
+    /// Number of request classes (apps/users with shared system prompts).
+    pub n_classes: usize,
+    /// Zipf exponent of class popularity.
+    pub class_skew: f64,
+    /// Median system-prompt length (tokens).
+    pub sys_prompt_median: f64,
+    /// Median per-turn user-message length.
+    pub user_span_median: f64,
+    /// Median output length + log-sigma.
+    pub output_median: f64,
+    pub output_sigma: f64,
+    /// Mean turns per session (geometric).
+    pub mean_turns: f64,
+    /// Mean think time between turns, seconds.
+    pub turn_gap_s: f64,
+    /// Session arrival rate, sessions/s (pre-scaling).
+    pub session_rate: f64,
+    /// Burstiness: every `burst_period_s`, arrivals speed up by
+    /// `burst_factor` for `burst_len_s`.
+    pub burst_period_s: f64,
+    pub burst_len_s: f64,
+    pub burst_factor: f64,
+    /// Max prompt length (long-context guard).
+    pub max_input: usize,
+}
+
+impl WorkloadSpec {
+    /// The per-family presets used throughout the benches.
+    pub fn preset(workload: Workload, n_requests: usize, seed: u64) -> WorkloadSpec {
+        let base = WorkloadSpec {
+            workload,
+            n_requests,
+            seed,
+            vocab: 50_000,
+            n_classes: 12,
+            class_skew: 1.1,
+            sys_prompt_median: 400.0,
+            user_span_median: 60.0,
+            output_median: 250.0,
+            output_sigma: 0.7,
+            mean_turns: 4.0,
+            turn_gap_s: 20.0,
+            session_rate: 2.0,
+            burst_period_s: 600.0,
+            burst_len_s: 60.0,
+            burst_factor: 1.4,
+            max_input: 16_384,
+        };
+        match workload {
+            Workload::ChatBot | Workload::Hotspot => base,
+            Workload::Coder => WorkloadSpec {
+                n_classes: 8,
+                class_skew: 0.9,
+                sys_prompt_median: 2500.0,
+                user_span_median: 150.0,
+                output_median: 120.0,
+                output_sigma: 0.6,
+                mean_turns: 6.0,
+                turn_gap_s: 5.0,
+                session_rate: 1.0,
+                ..base
+            },
+            Workload::Agent => WorkloadSpec {
+                n_classes: 30,
+                class_skew: 1.2,
+                sys_prompt_median: 150.0,
+                user_span_median: 80.0,
+                output_median: 60.0,
+                output_sigma: 0.6,
+                mean_turns: 1.5,
+                turn_gap_s: 3.0,
+                session_rate: 6.0,
+                burst_factor: 1.8,
+                burst_period_s: 300.0,
+                ..base
+            },
+            Workload::ToolAgent => WorkloadSpec {
+                n_classes: 10,
+                class_skew: 1.0,
+                sys_prompt_median: 600.0,
+                user_span_median: 300.0, // tool results are chunky
+                output_median: 40.0,
+                output_sigma: 0.5,
+                mean_turns: 8.0,
+                turn_gap_s: 2.0,
+                session_rate: 1.5,
+                ..base
+            },
+        }
+    }
+}
+
+fn clamp_len(x: f64, lo: usize, hi: usize) -> usize {
+    (x as usize).clamp(lo, hi)
+}
+
+/// Generate a trace. Deterministic in (spec.workload, n_requests, seed).
+pub fn generate(spec: &WorkloadSpec) -> Trace {
+    let mut rng = Rng::new(spec.seed ^ (spec.workload as u64) << 48);
+    let zipf = Zipf::new(spec.n_classes, spec.class_skew);
+    let mut requests: Vec<TraceRequest> = Vec::with_capacity(spec.n_requests + 64);
+    let mut next_id: u64 = 0;
+    let mut session_ctr: u64 = 0;
+    let mut clock_s: f64 = 0.0;
+
+    while requests.len() < spec.n_requests {
+        // --- session arrival (burst-modulated Poisson) ----------------
+        let in_burst = (clock_s % spec.burst_period_s) < spec.burst_len_s;
+        let rate = if in_burst {
+            spec.session_rate * spec.burst_factor
+        } else {
+            spec.session_rate
+        };
+        clock_s += rng.exp(1.0 / rate);
+        session_ctr += 1;
+        let session = session_ctr;
+
+        // --- class (hotspot workload overrides during its window) -----
+        // The adversarial window covers the middle ~15% of the trace *by
+        // request count*, so it survives arbitrary rate scaling.
+        let progress = requests.len() as f64 / spec.n_requests as f64;
+        let hot_window =
+            spec.workload == Workload::Hotspot && (0.45..0.60).contains(&progress);
+        // A pre-burst trickle keeps the class alive at low rate, so that
+        // when the burst arrives its prefix is cached on only the one or
+        // two instances that served the trickle (|M| small — the §5.2
+        // precondition; a cold-start burst would scatter and self-dissipate).
+        let trickle = spec.workload == Workload::Hotspot && rng.gen_bool(0.015);
+        let class = if (hot_window && rng.gen_bool(0.85)) || trickle {
+            // the adversarial "thinking workload" class
+            (spec.n_classes) as u32 // one past the normal classes
+        } else {
+            zipf.sample(&mut rng) as u32
+        };
+
+        // --- build the session's turns --------------------------------
+        let sys_len = clamp_len(
+            rng.lognormal(
+                if class as usize == spec.n_classes {
+                    4000.0 // long shared prefix: the hotspot pattern
+                } else {
+                    spec.sys_prompt_median
+                },
+                0.3,
+            ),
+            32,
+            spec.max_input / 2,
+        );
+        // geometric number of turns with mean `mean_turns`
+        let p_stop = 1.0 / spec.mean_turns.max(1.0);
+        let mut turns = 1;
+        while !rng.gen_bool(p_stop) && turns < 40 {
+            turns += 1;
+        }
+        if hot_window {
+            turns = turns.min(2);
+        }
+
+        let mut prompt: Vec<u32> = span(class, 0, sys_len, spec.vocab);
+        let mut t_s = clock_s;
+        for turn in 0..turns {
+            if requests.len() >= spec.n_requests {
+                break;
+            }
+            // user span (fresh content, unique to this session+turn)
+            let user_len = clamp_len(
+                rng.lognormal(spec.user_span_median, 0.6),
+                4,
+                spec.max_input / 4,
+            );
+            prompt.extend(span(
+                class,
+                session * 10_000 + turn as u64 * 2 + 1,
+                user_len,
+                spec.vocab,
+            ));
+            if prompt.len() > spec.max_input {
+                prompt.truncate(spec.max_input);
+            }
+            // The hotspot class is a "thinking" workload (§5.2's production
+            // failure case): long shared prefix AND long outputs, so the
+            // few instances caching the prefix saturate on decode.
+            let out_median = if class as usize == spec.n_classes {
+                1200.0
+            } else {
+                spec.output_median
+            };
+            let output_len =
+                clamp_len(rng.lognormal(out_median, spec.output_sigma), 1, 4096) as u32;
+
+            let tokens = prompt.clone();
+            let hashes = block_hashes(&tokens);
+            // assistant reply tokens (deterministic: next turn reuses them)
+            let assistant = span(
+                class,
+                session * 10_000 + turn as u64 * 2 + 2,
+                output_len as usize,
+                spec.vocab,
+            );
+            let mut full_tokens = tokens.clone();
+            full_tokens.extend(&assistant);
+            let full_hashes = block_hashes(&full_tokens);
+
+            requests.push(TraceRequest {
+                req: Request {
+                    id: next_id,
+                    arrival_us: (t_s * 1e6) as u64,
+                    class_id: class,
+                    tokens,
+                    output_len,
+                    block_hashes: hashes,
+                },
+                full_hashes,
+            });
+            next_id += 1;
+
+            // next turn's prompt = this prompt + assistant + (next user)
+            prompt = full_tokens;
+            t_s += rng.exp(spec.turn_gap_s);
+        }
+    }
+
+    requests.sort_by_key(|r| r.req.arrival_us);
+    // Re-id in arrival order (stable ids for record joins).
+    for (i, r) in requests.iter_mut().enumerate() {
+        r.req.id = i as u64;
+    }
+    Trace {
+        name: spec.workload.name().to_string(),
+        requests,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer::shared_blocks;
+
+    #[test]
+    fn deterministic() {
+        let a = generate(&WorkloadSpec::preset(Workload::ChatBot, 300, 7));
+        let b = generate(&WorkloadSpec::preset(Workload::ChatBot, 300, 7));
+        assert_eq!(a.requests.len(), b.requests.len());
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.req.tokens, y.req.tokens);
+            assert_eq!(x.req.arrival_us, y.req.arrival_us);
+        }
+    }
+
+    #[test]
+    fn sorted_by_arrival() {
+        let t = generate(&WorkloadSpec::preset(Workload::Agent, 400, 3));
+        for w in t.requests.windows(2) {
+            assert!(w[0].req.arrival_us <= w[1].req.arrival_us);
+        }
+        assert_eq!(t.requests.len(), 400);
+    }
+
+    #[test]
+    fn session_turns_extend_previous_context() {
+        let t = generate(&WorkloadSpec::preset(Workload::ToolAgent, 500, 5));
+        // Find two requests of the same class where one's prompt extends
+        // the other's full chain (a multi-turn continuation).
+        let mut found = false;
+        'outer: for (i, a) in t.requests.iter().enumerate() {
+            for b in &t.requests[i + 1..] {
+                if b.req.class_id == a.req.class_id
+                    && b.req.block_hashes.len() > a.full_hashes.len()
+                    && shared_blocks(&b.req.block_hashes, &a.full_hashes)
+                        == a.full_hashes.len()
+                {
+                    found = true;
+                    break 'outer;
+                }
+            }
+        }
+        assert!(found, "no continuation turns generated");
+    }
+
+    #[test]
+    fn classes_share_system_prompt_blocks() {
+        let t = generate(&WorkloadSpec::preset(Workload::ChatBot, 300, 11));
+        let by_class: Vec<&TraceRequest> = t
+            .requests
+            .iter()
+            .filter(|r| r.req.class_id == t.requests[0].req.class_id)
+            .collect();
+        assert!(by_class.len() >= 2);
+        let s = shared_blocks(&by_class[0].req.block_hashes, &by_class[1].req.block_hashes);
+        assert!(s >= 2, "same class must share the system prompt prefix");
+    }
+
+    #[test]
+    fn family_shapes_differ_as_figure5() {
+        let chat = generate(&WorkloadSpec::preset(Workload::ChatBot, 600, 1));
+        let coder = generate(&WorkloadSpec::preset(Workload::Coder, 600, 1));
+        let agent = generate(&WorkloadSpec::preset(Workload::Agent, 600, 1));
+        let (chat_in, chat_out) = chat.token_stats();
+        let (coder_in, coder_out) = coder.token_stats();
+        let (agent_in, agent_out) = agent.token_stats();
+        assert!(coder_in > chat_in, "coder prompts longest");
+        assert!(agent_in < chat_in, "agent prompts shortest");
+        assert!(chat_out > coder_out, "chat outputs longest");
+        assert!(chat_out > agent_out);
+    }
+
+    #[test]
+    fn hotspot_window_dominated_by_hot_class() {
+        let spec = WorkloadSpec::preset(Workload::Hotspot, 4000, 9);
+        let t = generate(&spec);
+        let hot_class = spec.n_classes as u32;
+        // The window is the middle of the trace by request index.
+        let n = t.requests.len();
+        let in_window = &t.requests[(n as f64 * 0.46) as usize..(n as f64 * 0.58) as usize];
+        let hot = in_window.iter().filter(|r| r.req.class_id == hot_class).count();
+        let share = hot as f64 / in_window.len() as f64;
+        // Dominant burst: the hot class takes roughly half of the window's
+        // arrivals (ongoing background sessions account for the rest).
+        assert!(share > 0.4, "hot share {share}");
+        // Outside the burst the class exists only as a low-rate trickle.
+        let head = &t.requests[..(n as f64 * 0.35) as usize];
+        let outside = head.iter().filter(|r| r.req.class_id == hot_class).count();
+        assert!(
+            (outside as f64) < head.len() as f64 * 0.12,
+            "hot share outside window too high: {outside}/{}",
+            head.len()
+        );
+        assert!(outside > 0, "trickle missing — burst would start cold");
+    }
+
+    #[test]
+    fn outputs_at_least_one_token() {
+        let t = generate(&WorkloadSpec::preset(Workload::Agent, 300, 2));
+        assert!(t.requests.iter().all(|r| r.req.output_len >= 1));
+    }
+}

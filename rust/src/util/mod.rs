@@ -1,0 +1,90 @@
+//! Offline-environment substrates: PRNG + distributions, a minimal JSON
+//! codec, and statistics helpers. These replace the `rand`, `serde_json`
+//! and `hdrhistogram`-style crates that are unavailable in this build
+//! environment (see DESIGN.md §1 substitution ledger).
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Multiply-xor hasher for u64 keys (block hashes are already
+/// well-mixed 64-bit values; SipHash's DoS resistance is wasted on them
+/// and costs ~2-3× per radix-tree lookup on the router's hot path —
+/// EXPERIMENTS.md §Perf).
+#[derive(Default)]
+pub struct U64Hasher {
+    state: u64,
+}
+
+impl Hasher for U64Hasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.state
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        // Generic fallback (rare on our hot paths).
+        for &b in bytes {
+            self.state = (self.state ^ b as u64).wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, i: u64) {
+        let mut z = self.state ^ i;
+        z = z.wrapping_mul(0xff51_afd7_ed55_8ccd);
+        z ^= z >> 33;
+        self.state = z;
+    }
+
+    #[inline]
+    fn write_u32(&mut self, i: u32) {
+        self.write_u64(i as u64);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, i: usize) {
+        self.write_u64(i as u64);
+    }
+}
+
+/// `HashMap` build-hasher for well-mixed integer keys.
+pub type FastHash = BuildHasherDefault<U64Hasher>;
+
+#[cfg(test)]
+mod hasher_tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn u64_hasher_works_in_hashmap() {
+        let mut m: HashMap<u64, u32, FastHash> = HashMap::default();
+        for i in 0..1000u64 {
+            m.insert(i.wrapping_mul(0x9e37_79b9_7f4a_7c15), i as u32);
+        }
+        assert_eq!(m.len(), 1000);
+        for i in 0..1000u64 {
+            assert_eq!(m[&i.wrapping_mul(0x9e37_79b9_7f4a_7c15)], i as u32);
+        }
+    }
+
+    #[test]
+    fn distinct_keys_distinct_hashes() {
+        use std::hash::{BuildHasher, Hash};
+        let bh = FastHash::default();
+        let hash_of = |k: u64| {
+            let mut h = bh.build_hasher();
+            k.hash(&mut h);
+            h.finish()
+        };
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..10_000u64 {
+            assert!(seen.insert(hash_of(i)), "collision at {i}");
+        }
+    }
+}

@@ -1,0 +1,210 @@
+//! Statistics helpers: latency summaries (mean/percentiles), CDFs and
+//! windowed time series — the measurement substrate behind every figure.
+
+/// Percentile of a sorted slice using linear interpolation (q in [0,1]).
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
+    }
+}
+
+/// Five-number-ish latency summary.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(values: &[f64]) -> Summary {
+        if values.is_empty() {
+            return Summary {
+                n: 0,
+                mean: f64::NAN,
+                p50: f64::NAN,
+                p90: f64::NAN,
+                p95: f64::NAN,
+                p99: f64::NAN,
+                max: f64::NAN,
+            };
+        }
+        let mut sorted: Vec<f64> = values.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n: sorted.len(),
+            mean: sorted.iter().sum::<f64>() / sorted.len() as f64,
+            p50: percentile(&sorted, 0.50),
+            p90: percentile(&sorted, 0.90),
+            p95: percentile(&sorted, 0.95),
+            p99: percentile(&sorted, 0.99),
+            max: *sorted.last().unwrap(),
+        }
+    }
+}
+
+/// Empirical CDF with a bounded number of points (for figure export).
+pub fn cdf_points(values: &[f64], max_points: usize) -> Vec<(f64, f64)> {
+    if values.is_empty() {
+        return vec![];
+    }
+    let mut sorted: Vec<f64> = values.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len();
+    let step = (n / max_points.max(1)).max(1);
+    let mut pts = Vec::new();
+    let mut i = 0;
+    while i < n {
+        pts.push((sorted[i], (i + 1) as f64 / n as f64));
+        i += step;
+    }
+    if pts.last().map(|p| p.1) != Some(1.0) {
+        pts.push((sorted[n - 1], 1.0));
+    }
+    pts
+}
+
+/// Fixed-width windowed accumulator over (virtual or real) time in µs.
+/// Used for per-instance prefill-seconds-per-10s (Figs 10/25), batch-size
+/// timelines (Fig 28), hit-ratio-over-time (Figs 8/24), etc.
+#[derive(Debug, Clone)]
+pub struct Windowed {
+    pub window_us: u64,
+    sums: Vec<f64>,
+    counts: Vec<u64>,
+}
+
+impl Windowed {
+    pub fn new(window_us: u64) -> Self {
+        assert!(window_us > 0);
+        Windowed {
+            window_us,
+            sums: Vec::new(),
+            counts: Vec::new(),
+        }
+    }
+
+    fn idx(&mut self, t_us: u64) -> usize {
+        let i = (t_us / self.window_us) as usize;
+        if i >= self.sums.len() {
+            self.sums.resize(i + 1, 0.0);
+            self.counts.resize(i + 1, 0);
+        }
+        i
+    }
+
+    /// Add `v` into the window containing `t_us`.
+    pub fn add(&mut self, t_us: u64, v: f64) {
+        let i = self.idx(t_us);
+        self.sums[i] += v;
+        self.counts[i] += 1;
+    }
+
+    /// Sum per window.
+    pub fn sums(&self) -> &[f64] {
+        &self.sums
+    }
+
+    /// Mean per window (NaN for empty windows).
+    pub fn means(&self) -> Vec<f64> {
+        self.sums
+            .iter()
+            .zip(&self.counts)
+            .map(|(s, c)| if *c == 0 { f64::NAN } else { s / *c as f64 })
+            .collect()
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn n_windows(&self) -> usize {
+        self.sums.len()
+    }
+}
+
+/// Sample standard deviation.
+pub fn stddev(values: &[f64]) -> f64 {
+    if values.len() < 2 {
+        return 0.0;
+    }
+    let mean = values.iter().sum::<f64>() / values.len() as f64;
+    let var =
+        values.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (values.len() - 1) as f64;
+    var.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_basics() {
+        let v = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 0.5), 3.0);
+        assert_eq!(percentile(&v, 1.0), 5.0);
+        assert!((percentile(&v, 0.25) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_of_uniform() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&v);
+        assert_eq!(s.n, 100);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+        assert!((s.p50 - 50.5).abs() < 1.0);
+        assert!((s.p99 - 99.0).abs() < 1.1);
+        assert_eq!(s.max, 100.0);
+    }
+
+    #[test]
+    fn summary_empty_is_nan() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        assert!(s.mean.is_nan());
+    }
+
+    #[test]
+    fn cdf_monotone_ends_at_one() {
+        let v: Vec<f64> = (0..1000).map(|i| (i as f64).sin().abs()).collect();
+        let pts = cdf_points(&v, 50);
+        for w in pts.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+            assert!(w[0].1 <= w[1].1);
+        }
+        assert_eq!(pts.last().unwrap().1, 1.0);
+    }
+
+    #[test]
+    fn windowed_buckets() {
+        let mut w = Windowed::new(10_000_000); // 10 s
+        w.add(0, 1.0);
+        w.add(9_999_999, 2.0);
+        w.add(10_000_000, 5.0);
+        w.add(35_000_000, 7.0);
+        assert_eq!(w.sums(), &[3.0, 5.0, 0.0, 7.0]);
+        assert_eq!(w.counts(), &[2, 1, 0, 1]);
+        let means = w.means();
+        assert_eq!(means[0], 1.5);
+        assert!(means[2].is_nan());
+    }
+
+    #[test]
+    fn stddev_known() {
+        let v = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((stddev(&v) - 2.138).abs() < 0.01);
+    }
+}

@@ -1,0 +1,206 @@
+//! Cross-module integration tests: trace → router → engines → metrics,
+//! through the public API only.
+
+use lmetric::cluster::{build_scaled_trace, cluster_config, run_des};
+use lmetric::config::{ConfigDoc, ExperimentConfig};
+use lmetric::engine::ModelProfile;
+use lmetric::metrics::save_results;
+use lmetric::metrics::ResultRow;
+use lmetric::policy;
+use lmetric::trace::{generate, load_jsonl, save_jsonl, Workload, WorkloadSpec};
+
+fn small_exp(workload: &str, requests: usize) -> ExperimentConfig {
+    let mut exp = ExperimentConfig::default();
+    exp.workload = workload.into();
+    exp.requests = requests;
+    exp.instances = 4;
+    exp
+}
+
+#[test]
+fn full_pipeline_all_workloads() {
+    for workload in ["chatbot", "coder", "agent", "toolagent", "hotspot"] {
+        let exp = small_exp(workload, 400);
+        let mut pol = policy::build_default("lmetric", &ModelProfile::moe_30b(), 256).unwrap();
+        let m = lmetric::cluster::run_experiment(&exp, pol.as_mut());
+        assert_eq!(m.records.len(), 400, "{workload}: lost requests");
+        assert!(m.ttft_summary().mean > 0.0);
+        assert!(m.mean_hit_ratio() >= 0.0 && m.mean_hit_ratio() <= 1.0);
+    }
+}
+
+#[test]
+fn headline_claim_shape_chatbot() {
+    // The paper's §6.1 headline: LMETRIC cuts ChatBot mean TTFT and TPOT
+    // deeply vs the load-balancing-only vLLM policy, with a much higher
+    // KV$ hit ratio — at half-capacity load on the DES testbed.
+    let exp = small_exp("chatbot", 1500);
+    let trace = build_scaled_trace(&exp);
+    let cfg = cluster_config(&exp);
+    let mut lm = policy::build_default("lmetric", &cfg.engine.profile, 256).unwrap();
+    let mut vl = policy::build_default("vllm", &cfg.engine.profile, 256).unwrap();
+    let mut m_lm = run_des(&cfg, &trace, lm.as_mut());
+    let mut m_vl = run_des(&cfg, &trace, vl.as_mut());
+    m_lm.discard_warmup(0.1);
+    m_vl.discard_warmup(0.1);
+    let ttft_cut = 1.0 - m_lm.ttft_summary().mean / m_vl.ttft_summary().mean;
+    let tpot_cut = 1.0 - m_lm.tpot_summary().mean / m_vl.tpot_summary().mean;
+    assert!(ttft_cut > 0.4, "TTFT reduction only {:.0}%", ttft_cut * 100.0);
+    assert!(tpot_cut > 0.05, "TPOT reduction only {:.0}%", tpot_cut * 100.0);
+    assert!(m_lm.mean_hit_ratio() > m_vl.mean_hit_ratio() + 0.15);
+}
+
+#[test]
+fn hyperparameter_free_vs_mistuned_linear() {
+    // The paper's motivation (§4.4): a mistuned λ hurts; LMETRIC needs no λ.
+    let exp = small_exp("chatbot", 1200);
+    let trace = build_scaled_trace(&exp);
+    let cfg = cluster_config(&exp);
+    let run = |name: &str, param: f64| {
+        let mut p = policy::build(name, param, &cfg.engine.profile, 256).unwrap();
+        let mut m = run_des(&cfg, &trace, p.as_mut());
+        m.discard_warmup(0.1);
+        m.ttft_summary().mean
+    };
+    let lmetric = run("lmetric", 0.0);
+    let linear_bad = run("linear", 0.05); // nearly KV$-blind
+    assert!(
+        lmetric < linear_bad,
+        "lmetric {lmetric} must beat mistuned linear {linear_bad}"
+    );
+}
+
+#[test]
+fn config_file_round_trip_drives_experiment() {
+    let doc = ConfigDoc::parse(
+        "[cluster]\ninstances = 3\nprofile = \"dense-7b\"\n[trace]\nworkload = \"agent\"\nrequests = 200\n[policy]\nname = \"vllm\"\n",
+    )
+    .unwrap();
+    let exp = ExperimentConfig::from_doc(&doc);
+    assert_eq!(exp.instances, 3);
+    let mut pol = policy::build_default(&exp.policy, &ModelProfile::dense_7b(), 256).unwrap();
+    let m = lmetric::cluster::run_experiment(&exp, pol.as_mut());
+    assert_eq!(m.records.len(), 200);
+    // Only 3 instances should appear in records.
+    assert!(m.records.iter().all(|r| r.instance < 3));
+}
+
+#[test]
+fn trace_jsonl_replay_equivalence() {
+    // Running a saved+reloaded trace must give identical results.
+    let exp = small_exp("agent", 300);
+    let trace = build_scaled_trace(&exp);
+    let dir = std::env::temp_dir().join("lmetric_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("replay_eq.jsonl");
+    save_jsonl(&trace, &path).unwrap();
+    let reloaded = load_jsonl("agent", &path).unwrap();
+    let cfg = cluster_config(&exp);
+    let mut p1 = policy::build_default("lmetric", &cfg.engine.profile, 256).unwrap();
+    let mut p2 = policy::build_default("lmetric", &cfg.engine.profile, 256).unwrap();
+    let m1 = run_des(&cfg, &trace, p1.as_mut());
+    let m2 = run_des(&cfg, &reloaded, p2.as_mut());
+    assert_eq!(m1.records.len(), m2.records.len());
+    for (a, b) in m1.records.iter().zip(&m2.records) {
+        assert_eq!(a.completion_us, b.completion_us);
+        assert_eq!(a.instance, b.instance);
+    }
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn results_file_written_and_parse() {
+    let exp = small_exp("chatbot", 200);
+    let mut pol = policy::build_default("lmetric", &ModelProfile::moe_30b(), 256).unwrap();
+    let m = lmetric::cluster::run_experiment(&exp, pol.as_mut());
+    let rows = vec![ResultRow::from_metrics("lmetric", &m)];
+    let path = save_results("_integration_test", &rows, &[("ttft".into(), m.ttfts())]).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let v = lmetric::util::json::Json::parse(&text).unwrap();
+    assert!(v.get("rows").is_some());
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn rate_scaling_tracks_capacity_across_instance_counts() {
+    // Doubling the cluster should roughly double the scaled arrival rate.
+    // (The trace must be long enough that its horizon exceeds session
+    // duration at the higher target, or the steady rate can't be reached.)
+    let mut e2 = small_exp("chatbot", 2500);
+    e2.instances = 2;
+    let mut e4 = small_exp("chatbot", 2500);
+    e4.instances = 4;
+    let t2 = build_scaled_trace(&e2);
+    let t4 = build_scaled_trace(&e4);
+    let ratio = t4.steady_rps() / t2.steady_rps();
+    assert!((1.4..=2.8).contains(&ratio), "ratio {ratio}");
+}
+
+#[test]
+fn higher_rate_means_worse_latency() {
+    // Monotonicity sanity for the Fig 23 rate sweeps.
+    let mk = |rate: f64| {
+        let mut exp = small_exp("chatbot", 2500);
+        exp.instances = 2;
+        exp.rate_scale = rate;
+        let mut p = policy::build_default("lmetric", &ModelProfile::moe_30b(), 256).unwrap();
+        let mut m = lmetric::cluster::run_experiment(&exp, p.as_mut());
+        m.discard_warmup(0.1);
+        m.ttft_summary().mean
+    };
+    let low = mk(0.3);
+    let high = mk(0.85);
+    assert!(high > low, "ttft@0.85={high} should exceed ttft@0.3={low}");
+}
+
+#[test]
+fn untuned_simulator_degrades_sim_policy() {
+    // Fig 15's effect through the whole stack.
+    use lmetric::policy::SimBased;
+    use lmetric::simulator::LatencySimulator;
+    let mut exp = small_exp("chatbot", 2000);
+    exp.rate_scale = 0.7; // mispredictions only bite under real load
+    let trace = build_scaled_trace(&exp);
+    let cfg = cluster_config(&exp);
+    let mut tuned = SimBased::new(LatencySimulator::tuned(cfg.engine.profile.clone(), 256));
+    let mut untuned = SimBased::new(LatencySimulator::untuned(ModelProfile::dense_7b(), 256));
+    let mut m_t = run_des(&cfg, &trace, &mut tuned);
+    let mut m_u = run_des(&cfg, &trace, &mut untuned);
+    m_t.discard_warmup(0.1);
+    m_u.discard_warmup(0.1);
+    assert!(
+        m_u.ttft_summary().p95 > m_t.ttft_summary().p95,
+        "untuned p95 {} should exceed tuned {}",
+        m_u.ttft_summary().p95,
+        m_t.ttft_summary().p95
+    );
+    // Error ratios were recorded for both (Fig 16's CDF source).
+    assert!(!m_t.sim_error_ratio.is_empty());
+    assert!(!m_u.sim_error_ratio.is_empty());
+    let mean_err = |v: &Vec<f64>| v.iter().sum::<f64>() / v.len() as f64;
+    assert!(mean_err(&m_u.sim_error_ratio) > mean_err(&m_t.sim_error_ratio));
+}
+
+#[test]
+fn guarded_lmetric_harmless_on_benign_traces() {
+    // The detector must not fire (or must not hurt) on normal workloads.
+    let exp = small_exp("chatbot", 1000);
+    let trace = build_scaled_trace(&exp);
+    let cfg = cluster_config(&exp);
+    let mut plain = policy::build_default("lmetric", &cfg.engine.profile, 256).unwrap();
+    let mut guarded = lmetric::hotspot::GuardedLMetric::new();
+    let m_p = run_des(&cfg, &trace, plain.as_mut());
+    let m_g = run_des(&cfg, &trace, &mut guarded);
+    let ratio = m_g.ttft_summary().mean / m_p.ttft_summary().mean;
+    assert!(ratio < 1.15, "guarded must not regress benign traffic: {ratio}");
+}
+
+#[test]
+fn workload_families_have_distinct_hit_structure() {
+    let coder = generate(&WorkloadSpec::preset(Workload::Coder, 1500, 1));
+    let agent = generate(&WorkloadSpec::preset(Workload::Agent, 1500, 1));
+    assert!(
+        coder.infinite_cache_hit_rate() > agent.infinite_cache_hit_rate(),
+        "coder (repo context reuse) must out-hit agent (short one-shots)"
+    );
+}

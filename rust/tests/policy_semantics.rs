@@ -1,0 +1,200 @@
+//! Cross-policy semantic contracts: each baseline must implement its
+//! paper pseudocode (Figs 6/13/14/17/30/33) on crafted indicator states.
+//! These are the behaviours the §4 characterization attributes to each
+//! combination strategy.
+
+use lmetric::policy::{self, KvAwareIndicator, LMetric, LoadIndicator};
+use lmetric::router::{Indicators, Policy, RouteCtx};
+
+fn ctx(input: usize, hits: Vec<usize>, inds: Vec<Indicators>) -> RouteCtx {
+    RouteCtx {
+        now_us: 1_000_000,
+        req_id: 1,
+        class_id: 0,
+        input_len: input,
+        hit_tokens: hits,
+        inds,
+    }
+}
+
+fn ind(r_bs: usize, q_bs: usize, queued_tok: usize, ctx_tok: usize) -> Indicators {
+    Indicators {
+        r_bs,
+        q_bs,
+        queued_prefill_tokens: queued_tok,
+        total_context_tokens: ctx_tok,
+        kv_used_blocks: 0,
+        kv_capacity_blocks: 0,
+    }
+}
+
+// ------------------------------------------------- vLLM (Fig 6a) -------
+
+#[test]
+fn vllm_weights_queued_4x_running() {
+    // 4·Q-BS + R-BS: 1 queued (score 4) loses to 3 running (score 3).
+    let c = ctx(
+        100,
+        vec![0, 0],
+        vec![ind(0, 1, 0, 0), ind(3, 0, 0, 0)],
+    );
+    let mut p = policy::build_default("vllm", &lmetric::engine::ModelProfile::moe_30b(), 256).unwrap();
+    assert_eq!(p.route(&c).instance, 1);
+}
+
+#[test]
+fn vllm_is_kv_blind() {
+    // A full KV$ hit must not attract vLLM at equal load.
+    let c = ctx(
+        1000,
+        vec![1000, 0],
+        vec![ind(5, 0, 0, 0), ind(4, 0, 0, 0)],
+    );
+    let mut p = policy::build_default("vllm", &lmetric::engine::ModelProfile::moe_30b(), 256).unwrap();
+    assert_eq!(p.route(&c).instance, 1, "vLLM ignores hits by design");
+}
+
+// ------------------------------------------- linear (Fig 6b) -----------
+
+#[test]
+fn linear_normalizes_bs_against_current_max() {
+    // With BS normalized, the *relative* load matters: (hit 0%, bs 10/10)
+    // vs (hit 0%, bs 9/10): λ=0.5 picks the smaller normalized bs.
+    let c = ctx(
+        100,
+        vec![0, 0],
+        vec![ind(10, 0, 0, 0), ind(9, 0, 0, 0)],
+    );
+    let mut p = policy::build("linear", 0.5, &lmetric::engine::ModelProfile::moe_30b(), 256).unwrap();
+    assert_eq!(p.route(&c).instance, 1);
+}
+
+// ------------------------------------------------- lmetric (Fig 17) ----
+
+#[test]
+fn lmetric_score_matches_formula_exactly() {
+    let c = ctx(
+        800,
+        vec![320, 0],
+        vec![ind(3, 1, 500, 0), ind(2, 0, 100, 0)],
+    );
+    let p = LMetric::paper();
+    // score_0 = (500 + (800-320)) × (3+1+1) = 980 × 5
+    assert_eq!(p.score(&c, 0), (500.0 + 480.0) * 5.0);
+    // score_1 = (100 + 800) × (2+1) = 900 × 3
+    assert_eq!(p.score(&c, 1), 900.0 * 3.0);
+}
+
+#[test]
+fn lmetric_all_variants_disagree_only_via_indicators() {
+    // On a state where hit ratio and P-token rank instances identically
+    // and BS == context proxy, all four variants agree.
+    let c = ctx(
+        320,
+        vec![320, 0],
+        vec![ind(2, 0, 0, 2 * 100), ind(2, 0, 0, 2 * 100)],
+    );
+    for (kv, load) in [
+        (KvAwareIndicator::PToken, LoadIndicator::BatchSize),
+        (KvAwareIndicator::OneMinusHitRatio, LoadIndicator::BatchSize),
+        (KvAwareIndicator::PToken, LoadIndicator::TotalTokens),
+        (KvAwareIndicator::OneMinusHitRatio, LoadIndicator::TotalTokens),
+    ] {
+        let mut p = LMetric::new(kv, load);
+        assert_eq!(p.route(&c).instance, 0, "{kv:?}/{load:?}");
+    }
+}
+
+// ------------------------------------------- filter_kv (Fig 13) --------
+
+#[test]
+fn filter_boundary_is_strict_greater() {
+    // Fig 13 line 3: BS.max()-BS.min() > Range — equality stays in the
+    // KV$ branch.
+    let profile = lmetric::engine::ModelProfile::moe_30b();
+    let c = ctx(
+        100,
+        vec![0, 96],
+        vec![ind(0, 0, 0, 0), ind(4, 0, 0, 0)],
+    );
+    // range == 4 exactly: KV$ branch -> instance 1 (the hit).
+    let mut p = policy::build("filter_kv", 4.0, &profile, 256).unwrap();
+    assert_eq!(p.route(&c).instance, 1);
+    // range 3 < 4: load-balance branch -> instance 0.
+    let mut p = policy::build("filter_kv", 3.0, &profile, 256).unwrap();
+    assert_eq!(p.route(&c).instance, 0);
+}
+
+// ------------------------------------------------ polyserve (Fig 33) ---
+
+#[test]
+fn polyserve_prefers_most_loaded_feasible() {
+    use lmetric::policy::PolyServe;
+    use lmetric::simulator::LatencySimulator;
+    let sim = LatencySimulator::tuned(lmetric::engine::ModelProfile::moe_30b(), 256);
+    let mut p = PolyServe::new(sim, 1_000_000.0); // 1 s SLO: everything feasible
+    let c = ctx(
+        100,
+        vec![0, 0, 0],
+        vec![ind(10, 0, 0, 10 * 300), ind(2, 0, 0, 2 * 300), ind(6, 0, 0, 6 * 300)],
+    );
+    // All feasible -> the most loaded (highest predicted TPOT) wins.
+    assert_eq!(p.route(&c).instance, 0);
+}
+
+// ------------------------------------------------ guarded lmetric ------
+
+#[test]
+fn guarded_equals_plain_without_hotspot() {
+    // On states with broad cache coverage the detector must be inert.
+    let mut plain = LMetric::paper();
+    let mut guarded = lmetric::hotspot::GuardedLMetric::new();
+    let mut rng = lmetric::util::Rng::new(9);
+    for k in 0..200u64 {
+        let n = 4;
+        let hits: Vec<usize> = (0..n).map(|_| (rng.gen_range(0, 5) * 16) as usize).collect();
+        let inds: Vec<Indicators> = (0..n)
+            .map(|_| ind(rng.gen_range(0, 20) as usize, 0, rng.gen_range(0, 2000) as usize, 0))
+            .collect();
+        let mut c = ctx(160, hits, inds);
+        c.class_id = (k % 6) as u32;
+        c.now_us = k * 50_000;
+        assert_eq!(plain.route(&c).instance, guarded.route(&c).instance, "k={k}");
+    }
+}
+
+// ----------------------------------------- decision determinism --------
+
+#[test]
+fn all_policies_deterministic_given_state() {
+    // Two fresh instances of the same policy must agree decision-by-
+    // decision on an identical request stream (reproducibility of every
+    // figure depends on this).
+    let profile = lmetric::engine::ModelProfile::moe_30b();
+    for name in policy::all_names() {
+        if *name == "random" {
+            continue; // seeded, but stateful across calls by design
+        }
+        let mut a = policy::build_default(name, &profile, 256).unwrap();
+        let mut b = policy::build_default(name, &profile, 256).unwrap();
+        let mut rng = lmetric::util::Rng::new(7);
+        for k in 0..100u64 {
+            let n = 6;
+            let hits: Vec<usize> = (0..n).map(|_| (rng.gen_range(0, 10) * 16) as usize).collect();
+            let inds: Vec<Indicators> = (0..n)
+                .map(|_| {
+                    ind(
+                        rng.gen_range(0, 30) as usize,
+                        rng.gen_range(0, 5) as usize,
+                        rng.gen_range(0, 10_000) as usize,
+                        rng.gen_range(0, 50_000) as usize,
+                    )
+                })
+                .collect();
+            let mut c = ctx(160, hits, inds);
+            c.now_us = k * 10_000;
+            c.req_id = k;
+            assert_eq!(a.route(&c).instance, b.route(&c).instance, "{name} diverged at {k}");
+        }
+    }
+}

@@ -1,0 +1,357 @@
+//! Property-based tests over coordinator invariants (routing, batching,
+//! KV$ state), using a small in-repo property harness (the proptest crate
+//! is unavailable offline — DESIGN.md §1): each property runs across many
+//! seeded random cases; failures report the seed for replay.
+
+use std::collections::HashSet;
+
+use lmetric::core::{Request, BLOCK_TOKENS};
+use lmetric::engine::{EngineConfig, EngineEvent, Instance, ModelProfile};
+use lmetric::kvcache::RadixTree;
+use lmetric::policy::LMetric;
+use lmetric::router::{select_min, Indicators, Policy, RouteCtx};
+use lmetric::tokenizer::block_hashes;
+use lmetric::util::Rng;
+
+/// Run `case` for `n` seeds; panic with the seed on failure.
+fn prop(name: &str, n: u64, case: impl Fn(&mut Rng)) {
+    for seed in 0..n {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9e37_79b9) ^ 0xabcd);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            case(&mut rng);
+        }));
+        if let Err(e) = result {
+            panic!("property '{name}' failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------- KV$ --
+
+/// Model-based check: the radix tree must agree with a naive
+/// set-of-prefixes model on every lookup, under unbounded capacity.
+#[test]
+fn prop_radix_matches_naive_model_unbounded() {
+    prop("radix=naive", 40, |rng| {
+        let mut tree = RadixTree::new(0);
+        let mut model: HashSet<Vec<u64>> = HashSet::new();
+        for step in 0..200u64 {
+            let base = rng.gen_range(0, 5);
+            let len = rng.gen_range(1, 10) as usize;
+            let chain: Vec<u64> = (0..len as u64).map(|i| base * 100 + i).collect();
+            if rng.gen_bool(0.5) {
+                tree.insert(&chain, step);
+                for k in 1..=chain.len() {
+                    model.insert(chain[..k].to_vec());
+                }
+            } else {
+                let got = tree.match_prefix(&chain, step, false);
+                let want = (0..=chain.len())
+                    .rev()
+                    .find(|&k| k == 0 || model.contains(&chain[..k]))
+                    .unwrap();
+                assert_eq!(got, want, "chain {chain:?}");
+            }
+        }
+        tree.check_invariants().unwrap();
+    });
+}
+
+/// Under any capacity and churn: never exceed capacity, never evict a
+/// pinned path, invariants always hold.
+#[test]
+fn prop_radix_capacity_and_pinning() {
+    prop("radix capacity+pin", 40, |rng| {
+        let cap = rng.gen_range(4, 64) as usize;
+        let mut tree = RadixTree::new(cap);
+        let mut pinned: Vec<(Vec<u64>, usize)> = Vec::new();
+        for step in 0..300u64 {
+            let base = rng.gen_range(0, 6);
+            let len = rng.gen_range(1, 8) as usize;
+            let chain: Vec<u64> = (0..len as u64).map(|i| base * 50 + i).collect();
+            match rng.gen_range(0, 4) {
+                0 | 1 => {
+                    tree.insert(&chain, step);
+                }
+                2 => {
+                    tree.insert(&chain, step);
+                    let resident = tree.match_prefix(&chain, step, false);
+                    tree.pin(&chain, resident);
+                    pinned.push((chain, resident));
+                }
+                _ => {
+                    if let Some((c, r)) = pinned.pop() {
+                        // Pinned paths must still be fully resident.
+                        assert!(
+                            tree.match_prefix(&c, step, false) >= r,
+                            "pinned path evicted"
+                        );
+                        tree.unpin(&c, r, step);
+                    }
+                }
+            }
+            assert!(tree.used_blocks() <= cap, "over capacity");
+        }
+        tree.check_invariants().unwrap();
+    });
+}
+
+// ------------------------------------------------------------- engine --
+
+fn random_request(rng: &mut Rng, id: u64) -> (Request, Vec<u64>) {
+    let class = rng.gen_range(0, 4) as u32;
+    let input = rng.gen_range(8, 1200) as usize;
+    let output = rng.gen_range(1, 120) as u32;
+    let tokens = lmetric::tokenizer::span(class, rng.gen_range(0, 20), input, 4096);
+    let hashes = block_hashes(&tokens);
+    let mut full = tokens.clone();
+    full.extend(lmetric::tokenizer::span(class, 1000 + id, output as usize, 4096));
+    let full_hashes = block_hashes(&full);
+    (
+        Request {
+            id,
+            arrival_us: 0,
+            class_id: class,
+            tokens,
+            output_len: output,
+            block_hashes: hashes,
+        },
+        full_hashes,
+    )
+}
+
+/// Conservation: every enqueued request completes exactly once, with
+/// causal timestamps and exactly `output_len` tokens; chunk budget and
+/// max_batch are never exceeded; the engine always terminates.
+#[test]
+fn prop_engine_conservation() {
+    prop("engine conservation", 30, |rng| {
+        let cfg = EngineConfig {
+            profile: ModelProfile::moe_30b(),
+            chunk_budget: [64, 256, 512][rng.gen_range(0, 3) as usize],
+            max_batch: rng.gen_range(1, 32) as usize,
+            kv_capacity_blocks: [0, 256, 4096][rng.gen_range(0, 3) as usize],
+        };
+        let chunk_budget = cfg.chunk_budget;
+        let max_batch = cfg.max_batch;
+        let mut inst = Instance::new(0, cfg);
+        let n = rng.gen_range(3, 25);
+        let mut pending: HashSet<u64> = HashSet::new();
+        let mut now = 0u64;
+        for id in 0..n {
+            let (req, full) = random_request(rng, id);
+            inst.enqueue(req, full, now);
+            pending.insert(id);
+            // Sometimes interleave stepping with arrivals.
+            if rng.gen_bool(0.5) {
+                if let Some(out) = inst.step(now) {
+                    assert!(out.prefill_tokens <= chunk_budget);
+                    assert!(out.snapshot.r_bs <= max_batch);
+                    now += out.duration_us;
+                    for e in out.events {
+                        if let EngineEvent::Completed { record } = e {
+                            assert!(pending.remove(&record.id), "dup completion");
+                            assert!(record.completion_us >= record.first_token_us);
+                            assert!(record.first_token_us > record.arrival_us);
+                        }
+                    }
+                }
+            }
+        }
+        let mut guard = 0u64;
+        while inst.has_work() {
+            let out = inst.step(now).expect("has_work => step");
+            assert!(out.duration_us > 0, "steps must advance time");
+            assert!(out.prefill_tokens <= chunk_budget);
+            assert!(out.snapshot.r_bs <= max_batch);
+            now += out.duration_us;
+            for e in out.events {
+                if let EngineEvent::Completed { record } = e {
+                    assert!(pending.remove(&record.id), "dup completion");
+                }
+            }
+            guard += 1;
+            assert!(guard < 2_000_000, "engine did not terminate");
+        }
+        assert!(pending.is_empty(), "lost requests: {pending:?}");
+    });
+}
+
+/// KV$ hits can only shorten a request's service, never lengthen it,
+/// and cached_tokens is always block-aligned and ≤ input_len.
+#[test]
+fn prop_engine_hits_never_hurt() {
+    prop("hits never hurt", 20, |rng| {
+        let (req, full) = random_request(rng, 1);
+        let cold_t = {
+            let mut inst = Instance::new(0, EngineConfig::default());
+            inst.enqueue(req.clone(), full.clone(), 0);
+            drain(&mut inst)
+        };
+        let warm_t = {
+            let mut inst = Instance::new(0, EngineConfig::default());
+            // Warm with the same prompt (different id).
+            let mut r0 = req.clone();
+            r0.id = 0;
+            inst.enqueue(r0, full.clone(), 0);
+            let t0 = drain(&mut inst);
+            let mut r1 = req.clone();
+            r1.arrival_us = t0;
+            inst.enqueue(r1, full.clone(), t0);
+            drain_from(&mut inst, t0) - t0
+        };
+        assert!(
+            warm_t <= cold_t,
+            "warm {warm_t} must not exceed cold {cold_t}"
+        );
+    });
+}
+
+fn drain(inst: &mut Instance) -> u64 {
+    drain_from(inst, 0)
+}
+
+fn drain_from(inst: &mut Instance, start: u64) -> u64 {
+    let mut now = start;
+    while inst.has_work() {
+        let out = inst.step(now).unwrap();
+        now += out.duration_us;
+    }
+    now
+}
+
+// ------------------------------------------------------------- router --
+
+fn random_ctx(rng: &mut Rng, n: usize) -> RouteCtx {
+    let input = rng.gen_range(BLOCK_TOKENS as u64, 4000) as usize;
+    let hit_tokens = (0..n)
+        .map(|_| {
+            let blocks = rng.gen_range(0, (input / BLOCK_TOKENS + 1) as u64) as usize;
+            (blocks * BLOCK_TOKENS).min(input)
+        })
+        .collect();
+    let inds = (0..n)
+        .map(|_| Indicators {
+            r_bs: rng.gen_range(0, 64) as usize,
+            q_bs: rng.gen_range(0, 8) as usize,
+            queued_prefill_tokens: rng.gen_range(0, 20_000) as usize,
+            total_context_tokens: rng.gen_range(0, 200_000) as usize,
+            kv_used_blocks: 0,
+            kv_capacity_blocks: 0,
+        })
+        .collect();
+    RouteCtx {
+        now_us: rng.next_u64() % 1_000_000_000,
+        req_id: rng.next_u64(),
+        class_id: rng.gen_range(0, 8) as u32,
+        input_len: input,
+        hit_tokens,
+        inds,
+    }
+}
+
+/// Every policy always routes in range, for arbitrary indicator states.
+#[test]
+fn prop_policies_route_in_range() {
+    prop("policies in range", 30, |rng| {
+        let profile = ModelProfile::moe_30b();
+        let n = rng.gen_range(1, 20) as usize;
+        for name in lmetric::policy::all_names() {
+            let mut pol = lmetric::policy::build_default(name, &profile, 256).unwrap();
+            for _ in 0..20 {
+                let ctx = random_ctx(rng, n);
+                let d = pol.route(&ctx);
+                assert!(d.instance < n, "{name} routed {} of {n}", d.instance);
+            }
+        }
+    });
+}
+
+/// The multiplicative score's hyperparameter-cancellation property: the
+/// argmin is invariant under positive rescaling of either factor (the λ's
+/// of the linear combination cancel — the paper's core claim, Fig 17a).
+#[test]
+fn prop_lmetric_scale_invariance() {
+    prop("lmetric scale invariance", 50, |rng| {
+        let n = rng.gen_range(2, 16) as usize;
+        let ctx = random_ctx(rng, n);
+        let p = LMetric::paper();
+        let a = rng.gen_f64(0.01, 100.0);
+        let b = rng.gen_f64(0.01, 100.0);
+        let plain = select_min(&ctx, |i| p.score(&ctx, i));
+        let scaled = select_min(&ctx, |i| {
+            (a * ctx.p_token(i) as f64) * (b * (ctx.inds[i].bs() + 1) as f64)
+        });
+        assert_eq!(plain, scaled);
+    });
+}
+
+/// select_min is total and stable: it picks an argmin, and among equal
+/// scores the smaller batch size.
+#[test]
+fn prop_select_min_is_argmin() {
+    prop("select_min argmin", 50, |rng| {
+        let n = rng.gen_range(1, 12) as usize;
+        let ctx = random_ctx(rng, n);
+        let scores: Vec<f64> = (0..n).map(|_| rng.gen_range(0, 5) as f64).collect();
+        let pick = select_min(&ctx, |i| scores[i]);
+        let min = scores.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert_eq!(scores[pick], min);
+        for i in 0..n {
+            if scores[i] == min {
+                assert!(
+                    ctx.inds[pick].bs() <= ctx.inds[i].bs(),
+                    "tie-break violated"
+                );
+            }
+        }
+    });
+}
+
+/// An instance whose queue strictly dominates (worse on every indicator,
+/// no better hit) is never chosen by lmetric.
+#[test]
+fn prop_lmetric_never_picks_dominated() {
+    prop("dominated never picked", 50, |rng| {
+        let mut ctx = random_ctx(rng, 4);
+        // Make instance 2 strictly dominated by instance 0.
+        ctx.hit_tokens[2] = ctx.hit_tokens[0].saturating_sub(BLOCK_TOKENS);
+        ctx.inds[2].r_bs = ctx.inds[0].r_bs + 5;
+        ctx.inds[2].q_bs = ctx.inds[0].q_bs + 2;
+        ctx.inds[2].queued_prefill_tokens = ctx.inds[0].queued_prefill_tokens + 1000;
+        let mut p = LMetric::paper();
+        assert_ne!(p.route(&ctx).instance, 2);
+    });
+}
+
+// ------------------------------------------------------------- traces --
+
+/// Trace generator invariants: sorted arrivals, ≥1 output token, block
+/// hashes consistent with tokens, full chain extends the prompt chain.
+#[test]
+fn prop_trace_wellformed() {
+    use lmetric::trace::{generate, Workload, WorkloadSpec};
+    prop("trace wellformed", 10, |rng| {
+        let workloads = [
+            Workload::ChatBot,
+            Workload::Coder,
+            Workload::Agent,
+            Workload::ToolAgent,
+            Workload::Hotspot,
+        ];
+        let w = workloads[rng.gen_range(0, 5) as usize];
+        let t = generate(&WorkloadSpec::preset(w, 200, rng.next_u64()));
+        let mut last = 0;
+        for tr in &t.requests {
+            assert!(tr.req.arrival_us >= last);
+            last = tr.req.arrival_us;
+            assert!(tr.req.output_len >= 1);
+            assert_eq!(tr.req.block_hashes, block_hashes(&tr.req.tokens));
+            assert!(tr.full_hashes.len() >= tr.req.block_hashes.len());
+            assert_eq!(
+                &tr.full_hashes[..tr.req.block_hashes.len()],
+                &tr.req.block_hashes[..]
+            );
+        }
+    });
+}

@@ -1,0 +1,182 @@
+//! PJRT round-trip tests: load the AOT artifacts, execute the real
+//! transformer, and verify the serving contracts the live engine relies
+//! on. Requires `make artifacts` (skips gracefully if absent).
+
+use lmetric::runtime::{artifacts_dir, ModelRuntime};
+
+fn runtime() -> Option<ModelRuntime> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts at {}", dir.display());
+        return None;
+    }
+    Some(ModelRuntime::load(&dir).expect("artifacts load"))
+}
+
+fn prefill_seq(
+    rt: &ModelRuntime,
+    kv: xla::Literal,
+    tokens: &[i32],
+    slot: usize,
+    start: usize,
+) -> (Vec<f32>, xla::Literal) {
+    let mut kv = kv;
+    let mut pos = start;
+    let mut logits = Vec::new();
+    while pos < tokens.len() {
+        let remaining = tokens.len() - pos;
+        let bucket = rt.bucket_for(remaining.min(rt.largest_bucket())).unwrap();
+        let chunk_len = remaining.min(bucket);
+        let mut buf = tokens[pos..pos + chunk_len].to_vec();
+        buf.resize(bucket, 0);
+        let (l, kv2) = rt.prefill_chunk(&kv, &buf, slot, pos, chunk_len).unwrap();
+        kv = kv2;
+        logits = l;
+        pos += chunk_len;
+    }
+    (logits, kv)
+}
+
+fn toks(seed: u64, n: usize, vocab: usize) -> Vec<i32> {
+    let mut rng = lmetric::util::Rng::new(seed);
+    (0..n).map(|_| 1 + (rng.next_u64() % (vocab as u64 - 1)) as i32).collect()
+}
+
+#[test]
+fn artifacts_load_and_shapes_match() {
+    let Some(rt) = runtime() else { return };
+    assert_eq!(rt.cfg.vocab, 1024);
+    assert_eq!(rt.cfg.slots, 8);
+    assert_eq!(rt.cfg.chunk_buckets, vec![16, 64, 256]);
+    assert_eq!(rt.bucket_for(10), Some(16));
+    assert_eq!(rt.bucket_for(64), Some(64));
+    assert_eq!(rt.bucket_for(65), Some(256));
+    assert_eq!(rt.bucket_for(9999), None);
+}
+
+#[test]
+fn chunked_prefill_is_chunk_invariant() {
+    // The same prompt split into different chunk sequences must produce
+    // the same final logits (the chunked-prefill correctness contract).
+    let Some(rt) = runtime() else { return };
+    let tokens = toks(1, 80, rt.cfg.vocab);
+    let (a, _) = prefill_seq(&rt, rt.zero_kv(), &tokens, 0, 0);
+    // Force 16-token chunks by prefilling in 5 bucket-16 steps.
+    let mut kv = rt.zero_kv();
+    let mut logits = Vec::new();
+    for c in 0..5 {
+        let buf = tokens[c * 16..(c + 1) * 16].to_vec();
+        let (l, kv2) = rt.prefill_chunk(&kv, &buf, 0, c * 16, 16).unwrap();
+        kv = kv2;
+        logits = l;
+    }
+    assert_eq!(a.len(), logits.len());
+    for (x, y) in a.iter().zip(&logits) {
+        assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn decode_continues_prefill() {
+    let Some(rt) = runtime() else { return };
+    let tokens = toks(2, 40, rt.cfg.vocab);
+    let (logits, kv) = prefill_seq(&rt, rt.zero_kv(), &tokens, 3, 0);
+    let next = ModelRuntime::argmax(&logits);
+    // Decode one token on slot 3.
+    let mut tok_in = vec![0i32; rt.cfg.slots];
+    let mut lens = vec![0i32; rt.cfg.slots];
+    tok_in[3] = next;
+    lens[3] = 40;
+    let (dlogits, _) = rt.decode_step(&kv, &tok_in, &lens).unwrap();
+    // Oracle: prefill the 41-token sequence from scratch.
+    let mut full = tokens.clone();
+    full.push(next);
+    let (ref_logits, _) = prefill_seq(&rt, rt.zero_kv(), &full, 0, 0);
+    let row = &dlogits[3 * rt.cfg.vocab..4 * rt.cfg.vocab];
+    for (x, y) in row.iter().zip(&ref_logits) {
+        assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn extract_inject_roundtrip_gives_kv_hit() {
+    // The live KV$ mechanism: finish a prompt on slot 0, snapshot it,
+    // inject into slot 5 of a FRESH kv, continue from the hit point —
+    // logits must match a cold full prefill.
+    let Some(rt) = runtime() else { return };
+    let prefix = toks(3, 48, rt.cfg.vocab);
+    let suffix = toks(4, 16, rt.cfg.vocab);
+    let mut full = prefix.clone();
+    full.extend(&suffix);
+
+    let (_, kv) = prefill_seq(&rt, rt.zero_kv(), &prefix, 0, 0);
+    let (k, v) = rt.extract_slot(&kv, 0).unwrap();
+
+    let kv2 = rt.inject_slot(&rt.zero_kv(), 5, &k, &v).unwrap();
+    let (hit_logits, _) = prefill_seq(&rt, kv2, &full, 5, 48);
+
+    let (cold_logits, _) = prefill_seq(&rt, rt.zero_kv(), &full, 2, 0);
+    for (x, y) in hit_logits.iter().zip(&cold_logits) {
+        assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn batched_decode_slots_are_independent() {
+    let Some(rt) = runtime() else { return };
+    let ta = toks(5, 32, rt.cfg.vocab);
+    let tb = toks(6, 48, rt.cfg.vocab);
+    let (la, kv) = prefill_seq(&rt, rt.zero_kv(), &ta, 0, 0);
+    let (lb, kv) = prefill_seq(&rt, kv, &tb, 1, 0);
+    let (na, nb) = (ModelRuntime::argmax(&la), ModelRuntime::argmax(&lb));
+    // Batched decode of both slots.
+    let mut tok_in = vec![0i32; rt.cfg.slots];
+    let mut lens = vec![0i32; rt.cfg.slots];
+    tok_in[0] = na;
+    lens[0] = 32;
+    tok_in[1] = nb;
+    lens[1] = 48;
+    let (batch, _) = rt.decode_step(&kv, &tok_in, &lens).unwrap();
+    // Individual decode of slot 0 only.
+    let mut t0 = vec![0i32; rt.cfg.slots];
+    let mut l0 = vec![0i32; rt.cfg.slots];
+    t0[0] = na;
+    l0[0] = 32;
+    let (solo_a, _) = rt.decode_step(&kv, &t0, &l0).unwrap();
+    let va = rt.cfg.vocab;
+    for (x, y) in batch[..va].iter().zip(&solo_a[..va]) {
+        assert!((x - y).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn live_cluster_end_to_end_smoke() {
+    // A miniature live run: 2 PJRT instances, a handful of chat turns.
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    use lmetric::cluster::live::{run_live, LiveClusterConfig};
+    use lmetric::trace::{generate, Workload, WorkloadSpec};
+    let mut spec = WorkloadSpec::preset(Workload::ChatBot, 8, 3);
+    spec.vocab = 1023;
+    spec.sys_prompt_median = 64.0;
+    spec.user_span_median = 16.0;
+    spec.output_median = 4.0;
+    spec.output_sigma = 0.2;
+    spec.max_input = 300;
+    spec.mean_turns = 2.0;
+    let trace = generate(&spec);
+    let cfg = LiveClusterConfig {
+        n_instances: 2,
+        time_scale: 1000.0, // replay as fast as possible
+        ..Default::default()
+    };
+    let mut pol = lmetric::policy::LMetric::paper();
+    let m = run_live(&cfg, &trace, &mut pol).expect("live run");
+    assert_eq!(m.records.len(), trace.requests.len());
+    for r in &m.records {
+        assert!(r.completion_us >= r.first_token_us);
+        assert!(r.first_token_us >= r.arrival_us);
+    }
+}
