@@ -1,0 +1,94 @@
+"""Deterministic fallback for the tiny `hypothesis` subset the tests use.
+
+The property tests in python/tests use `@given` with `st.sampled_from`,
+`st.integers` and `st.floats`, plus `@settings(max_examples=..,
+deadline=None)`. When the real hypothesis package is installed (CI path)
+this module is never imported. In bare environments (offline container
+with only jax+pytest), conftest installs this shim so the property tests
+still execute: each `@given` test runs `max_examples` seeded-random cases.
+
+This is NOT a hypothesis reimplementation — no shrinking, no database, no
+edge-case bias — just enough to keep the kernel/model contracts exercised
+where the real tool is unavailable.
+"""
+
+import random
+import sys
+import types
+
+_SEED = 0x1A2B3C4D  # fixed seed: runs are reproducible
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample  # sample(rng) -> value
+
+
+def sampled_from(elements):
+    seq = list(elements)
+    if not seq:
+        raise ValueError("sampled_from: empty")
+    return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value, max_value):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def settings(*args, **kwargs):
+    """Decorator-factory form only (how the tests use it); options other
+    than max_examples are accepted and ignored."""
+
+    def deco(fn):
+        fn._fallback_settings = kwargs
+        return fn
+
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        # NOTE: no functools.wraps — pytest must see a zero-argument
+        # signature, not the strategy parameters (it would try to resolve
+        # them as fixtures).
+        def wrapper():
+            opts = getattr(wrapper, "_fallback_settings", None) or getattr(
+                fn, "_fallback_settings", {}
+            )
+            n = int(opts.get("max_examples", 10))
+            rng = random.Random(_SEED)
+            for case in range(n):
+                drawn = {k: s.sample(rng) for k, s in strategies.items()}
+                try:
+                    fn(**drawn)
+                except Exception as e:  # annotate which case failed
+                    raise AssertionError(
+                        f"fallback-hypothesis case {case}/{n} failed with "
+                        f"arguments {drawn!r}: {e}"
+                    ) from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco
+
+
+def install():
+    """Register shim modules as `hypothesis` / `hypothesis.strategies`."""
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    st = types.ModuleType("hypothesis.strategies")
+    st.sampled_from = sampled_from
+    st.integers = integers
+    st.floats = floats
+    hyp.strategies = st
+    hyp.__fallback__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

@@ -1,7 +1,21 @@
-"""Make `compile.*` importable whether pytest runs from repo root
-(`pytest python/tests/`) or from python/ (`pytest tests/`)."""
+"""Shared pytest setup for python/tests.
+
+* Make `compile.*` importable whether pytest runs from the repo root
+  (`pytest python/tests`) or from python/ (`pytest tests`).
+* If the real `hypothesis` package is absent (bare/offline environments),
+  install the deterministic fallback shim so the property tests still run;
+  CI installs the real package (python/requirements.txt) and never hits
+  the shim. JAX-dependent modules self-skip via pytest.importorskip.
+"""
 
 import os
 import sys
 
 sys.path.insert(0, os.path.dirname(__file__))
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    from _hypothesis_fallback import install
+
+    install()

@@ -4,6 +4,9 @@ import json
 import os
 
 import numpy as np
+import pytest
+
+pytest.importorskip("jax", reason="JAX toolchain absent — AOT lowering tests skipped")
 
 from compile.aot import build, lower_decode, lower_prefill, to_hlo_text
 from compile.model import ModelConfig

@@ -4,9 +4,15 @@ Hypothesis sweeps shapes, cache positions and slot-length vectors; every
 case asserts allclose against the reference.
 """
 
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("jax", reason="JAX toolchain absent — Pallas kernel tests skipped")
+pytest.importorskip(
+    "jax.experimental.pallas", reason="Pallas unavailable — kernel tests skipped"
+)
+
+import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import (

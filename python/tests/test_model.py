@@ -6,9 +6,12 @@ prompt as (KV$-hit prefix skip + chunked prefill + batched decode) yields
 the same logits as one full forward pass.
 """
 
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("jax", reason="JAX toolchain absent — model tests skipped")
+
+import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
 from compile.model import (

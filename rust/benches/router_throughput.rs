@@ -4,16 +4,18 @@
 //! µs/decision per policy at 16 / 64 / 256 instances, plus the DES
 //! harness's end-to-end routed-requests/s.
 
-use lmetric::benchlib::{bench, figure_banner};
+use lmetric::benchlib::{bench, figure_banner, scaled};
 use lmetric::engine::ModelProfile;
 use lmetric::policy;
 use lmetric::router::IndicatorFactory;
 use lmetric::trace::{generate, Workload, WorkloadSpec};
+use lmetric::util::json::Json;
 
 fn main() {
     figure_banner("§3", "router scheduling-decision throughput (Rust framework)");
-    let trace = generate(&WorkloadSpec::preset(Workload::ChatBot, 2000, 42));
+    let trace = generate(&WorkloadSpec::preset(Workload::ChatBot, scaled(2000), 42));
     let profile = ModelProfile::moe_30b();
+    let mut json_rows: Vec<Json> = Vec::new();
 
     for n_instances in [16usize, 64, 256] {
         println!("\n--- {n_instances} instances ---");
@@ -21,12 +23,13 @@ fn main() {
             let mut pol = policy::build_default(name, &profile, 256).unwrap();
             let mut factory = IndicatorFactory::new(n_instances, 8192);
             // Pre-warm KV mirrors with some traffic.
-            for tr in trace.requests.iter().take(500) {
+            let warm = trace.requests.len() / 4;
+            for tr in trace.requests.iter().take(warm) {
                 let ctx = factory.route_ctx(&tr.req, tr.req.arrival_us);
                 let d = pol.route(&ctx);
                 factory.on_route(d.instance, &ctx, &tr.req, tr.req.arrival_us);
             }
-            let mut idx = 500usize;
+            let mut idx = warm;
             let reqs = &trace.requests;
             let r = bench(&format!("{name} @ {n_instances} inst"), 1000, || {
                 let tr = &reqs[idx % reqs.len()];
@@ -36,6 +39,14 @@ fn main() {
                 idx += 1;
             });
             println!("{}", r.report());
+            json_rows.push(Json::obj(vec![
+                ("policy", Json::Str(name.to_string())),
+                ("instances", Json::Num(n_instances as f64)),
+                ("iters", Json::Num(r.iters as f64)),
+                ("mean_ns", Json::Num(r.mean_ns)),
+                ("p50_ns", Json::Num(r.p50_ns)),
+                ("p99_ns", Json::Num(r.p99_ns)),
+            ]));
         }
     }
 
@@ -43,12 +54,12 @@ fn main() {
     println!("\n--- DES harness end-to-end ---");
     let mut exp = lmetric::config::ExperimentConfig::default();
     exp.instances = 16;
-    exp.requests = 2000;
-    let scaled = lmetric::cluster::build_scaled_trace(&exp);
+    exp.requests = scaled(2000);
+    let trace = lmetric::cluster::build_scaled_trace(&exp);
     let cfg = lmetric::cluster::cluster_config(&exp);
     let t0 = std::time::Instant::now();
     let mut pol = policy::build_default("lmetric", &profile, 256).unwrap();
-    let m = lmetric::cluster::run_des(&cfg, &scaled, pol.as_mut());
+    let m = lmetric::cluster::run_des(&cfg, &trace, pol.as_mut());
     let wall = t0.elapsed().as_secs_f64();
     println!(
         "replayed {} requests ({:.0}s virtual) in {:.2}s wall = {:.0} req/s, {:.0}x real-time",
@@ -58,4 +69,26 @@ fn main() {
         m.records.len() as f64 / wall,
         (m.duration_us as f64 / 1e6) / wall
     );
+
+    // Machine-readable output: CI uploads this as the perf-trajectory seed
+    // (BENCH_router_throughput.json artifact); override the path with
+    // LMETRIC_BENCH_JSON.
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("router_throughput".into())),
+        ("quick_mode", Json::Bool(lmetric::benchlib::quick_mode())),
+        ("decisions", Json::Arr(json_rows)),
+        (
+            "des_end_to_end",
+            Json::obj(vec![
+                ("requests", Json::Num(m.records.len() as f64)),
+                ("virtual_s", Json::Num(m.duration_us as f64 / 1e6)),
+                ("wall_s", Json::Num(wall)),
+                ("req_per_s", Json::Num(m.records.len() as f64 / wall.max(1e-9))),
+            ]),
+        ),
+    ]);
+    let path = std::env::var("LMETRIC_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_router_throughput.json".to_string());
+    std::fs::write(&path, doc.to_string()).expect("write bench json");
+    println!("wrote {path}");
 }

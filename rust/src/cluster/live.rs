@@ -18,7 +18,7 @@ use crate::core::{Request, RequestRecord, BLOCK_TOKENS};
 use crate::engine::InstanceSnapshot;
 use crate::metrics::RunMetrics;
 use crate::router::{IndicatorFactory, Policy};
-use crate::runtime::ModelRuntime;
+use crate::runtime::{ModelRuntime, Runtime, Tensor};
 use crate::trace::Trace;
 
 #[derive(Debug, Clone)]
@@ -70,7 +70,7 @@ struct PrefixStore {
     /// block-hash -> (hit_tokens at this depth, plane id)
     index: HashMap<u64, (usize, u64)>,
     /// plane id -> (shared k/v, last_use, index keys)
-    planes: HashMap<u64, (std::rc::Rc<(xla::Literal, xla::Literal)>, u64, Vec<u64>)>,
+    planes: HashMap<u64, (std::rc::Rc<(Tensor, Tensor)>, u64, Vec<u64>)>,
     next_id: u64,
     clock: u64,
 }
@@ -94,7 +94,7 @@ impl PrefixStore {
     fn lookup(
         &mut self,
         hashes: &[u64],
-    ) -> Option<(usize, std::rc::Rc<(xla::Literal, xla::Literal)>)> {
+    ) -> Option<(usize, std::rc::Rc<(Tensor, Tensor)>)> {
         self.clock += 1;
         for i in (0..hashes.len()).rev() {
             if let Some(&(len, plane_id)) = self.index.get(&hashes[i]) {
@@ -108,7 +108,7 @@ impl PrefixStore {
     }
 
     /// Store planes for a prompt whose block-hash chain is `hashes`.
-    fn insert(&mut self, hashes: &[u64], k: xla::Literal, v: xla::Literal) {
+    fn insert(&mut self, hashes: &[u64], k: Tensor, v: Tensor) {
         if hashes.is_empty() {
             return;
         }
@@ -150,7 +150,7 @@ struct LiveSeq {
 /// One instance thread's engine.
 struct LiveEngine {
     rt: ModelRuntime,
-    kv: xla::Literal,
+    kv: Tensor,
     slots: Vec<Option<LiveSeq>>,
     waiting: VecDeque<Request>,
     store: PrefixStore,

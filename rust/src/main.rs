@@ -204,9 +204,10 @@ fn cmd_trace_stats(flags: &HashMap<String, String>) {
 
 fn cmd_calibrate(_flags: &HashMap<String, String>) {
     // Cross-check the analytic cost model's SHAPE against the real PJRT
-    // transformer: prefill cost ≈ linear in new tokens; decode cost grows
-    // mildly with batch. Absolute scales differ (tiny CPU model vs H20).
-    use lmetric::runtime::ModelRuntime;
+    // transformer (or the sim backend in default builds): prefill cost is
+    // ~linear in new tokens; decode cost grows mildly with batch. Absolute
+    // scales differ (tiny CPU model vs H20).
+    use lmetric::runtime::{ModelRuntime, Runtime};
     use std::time::Instant;
     let rt = match ModelRuntime::load(&lmetric::runtime::artifacts_dir()) {
         Ok(rt) => rt,
@@ -234,18 +235,29 @@ fn cmd_calibrate(_flags: &HashMap<String, String>) {
         );
     }
     for bs in [1usize, 2, 4, 8] {
+        let bs = bs.min(rt.cfg.slots);
+        let mut kv2 = kv.clone();
         let mut tokens = vec![0i32; rt.cfg.slots];
         let mut lens = vec![0i32; rt.cfg.slots];
+        // Give every decoding slot a real context first (one chunk of the
+        // bucket closest to 64 tokens — manifests need not carry a 64).
+        let ctx = rt.bucket_for(64).unwrap_or_else(|| rt.largest_bucket());
         for i in 0..bs {
+            let span: Vec<i32> =
+                (0..ctx as i32).map(|t| 1 + (i as i32 * 67 + t) % 1000).collect();
+            let (_, k) = rt.prefill_chunk(&kv2, &span, i, 0, ctx).expect("prefill");
+            kv2 = k;
             tokens[i] = 5;
-            lens[i] = 64;
+            lens[i] = ctx as i32;
         }
         let t0 = Instant::now();
         let iters = 5;
-        let mut kv2 = kv.clone();
         for _ in 0..iters {
             let (_, k) = rt.decode_step(&kv2, &tokens, &lens).expect("decode");
             kv2 = k;
+            for l in lens.iter_mut().take(bs) {
+                *l += 1; // the decoded token is now part of the context
+            }
         }
         let us = t0.elapsed().as_micros() as f64 / iters as f64;
         println!("  decode  bs={bs}:        {us:>10.0} µs");

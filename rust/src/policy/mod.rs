@@ -102,13 +102,21 @@ pub fn default_param(name: &str) -> f64 {
     }
 }
 
-/// Build a policy with its default hyperparameter.
+/// Build a policy with its default hyperparameter. Unknown names are
+/// rejected with an error that lists every valid name (the CLI and the
+/// benches surface it verbatim).
 pub fn build_default(
     name: &str,
     profile: &ModelProfile,
     chunk_budget: usize,
-) -> Option<Box<dyn Policy>> {
-    build(name, default_param(name), profile, chunk_budget)
+) -> Result<Box<dyn Policy>, String> {
+    build(name, default_param(name), profile, chunk_budget).ok_or_else(|| {
+        format!(
+            "unknown policy '{name}'; valid policies: {} (plus ablations: \
+             lmetric_hit_ratio, lmetric_tokens)",
+            all_names().join(", ")
+        )
+    })
 }
 
 /// All policy names (for `lmetric replay --policy all` sweeps).
@@ -142,5 +150,35 @@ mod tests {
         assert!(build("lmetric_hit_ratio", 0.0, &p, 256).is_some());
         assert!(build("lmetric_tokens", 0.0, &p, 256).is_some());
         assert!(build("nope", 0.0, &p, 256).is_none());
+    }
+
+    #[test]
+    fn build_default_constructs_every_paper_policy_by_name() {
+        let p = ModelProfile::moe_30b();
+        for name in all_names() {
+            let pol = build_default(name, &p, 256)
+                .unwrap_or_else(|e| panic!("build_default({name}) failed: {e}"));
+            // The constructed policy must self-report under the requested
+            // registry name (parameterized names embed their default knob).
+            assert!(
+                pol.name().starts_with(name.split('_').next().unwrap())
+                    || pol.name().contains("lmetric"),
+                "{name} built {}",
+                pol.name()
+            );
+        }
+        for name in ["lmetric_hit_ratio", "lmetric_tokens"] {
+            assert!(build_default(name, &p, 256).is_ok(), "{name}");
+        }
+    }
+
+    #[test]
+    fn build_default_rejects_unknown_names_with_useful_error() {
+        let p = ModelProfile::moe_30b();
+        let err = build_default("no_such_policy", &p, 256).unwrap_err();
+        assert!(err.contains("no_such_policy"), "error names the input: {err}");
+        for name in all_names() {
+            assert!(err.contains(name), "error lists '{name}': {err}");
+        }
     }
 }

@@ -1,28 +1,55 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py`, compiles them once on the PJRT CPU client,
-//! and exposes the serving entry points (chunked prefill / batched decode
-//! / KV$ extract & inject) to the live engine. Python never runs here.
+//! The serving-runtime facade: loads the AOT artifacts produced by
+//! `python/compile/aot.py` and exposes the serving entry points (chunked
+//! prefill / batched decode / KV$ extract & inject) to the live engine.
+//! Python never runs here.
 //!
-//! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see /opt/xla-example/README.md).
+//! Two interchangeable backends implement the [`Runtime`] trait:
 //!
-//! State strategy: the KV$ tensor and parameters travel as host
-//! [`xla::Literal`]s between calls. On the CPU PJRT plugin "device"
-//! memory is host memory, so these are memcpys — the simple, correct
-//! choice for the validation path (a TPU deployment would keep buffers
-//! device-resident and donate them instead; DESIGN.md §Perf).
+//! * **sim** (default) — [`sim::SimRuntime`]: a dependency-free
+//!   deterministic stand-in. Per-slot state is the token history; logits
+//!   are a pure hash of that history, so all the contracts the live
+//!   engine relies on (chunk-invariant prefill, decode-continues-prefill,
+//!   extract/inject round-trips, slot independence) hold exactly. This is
+//!   what `cargo build`/`cargo test` and CI exercise — the whole live
+//!   threaded cluster runs on it with no artifacts present.
+//! * **pjrt** (`--features pjrt`) — [`pjrt::PjrtRuntime`]: the real path,
+//!   compiling the AOT HLO-text artifacts once on the PJRT CPU client.
+//!   Interchange is HLO *text* (not serialized protos): jax >= 0.5 emits
+//!   64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//!   parser reassigns ids. State (KV$ tensor + parameters) travels as
+//!   host literals between calls — on the CPU plugin "device" memory is
+//!   host memory, so these are memcpys (DESIGN.md §Perf).
+//!
+//! [`ModelRuntime`] / [`Tensor`] alias whichever backend is active, so
+//! `cluster/live.rs`, `main.rs` and the integration tests are written once
+//! against the trait.
 
 use std::collections::BTreeMap;
-use std::io::Read;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::util::json::Json;
 
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+mod sim;
+
+/// The active backend.
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtRuntime as ModelRuntime;
+#[cfg(not(feature = "pjrt"))]
+pub use sim::SimRuntime as ModelRuntime;
+
+/// The active backend's KV$/plane handle.
+#[cfg(feature = "pjrt")]
+pub type Tensor = xla::Literal;
+#[cfg(not(feature = "pjrt"))]
+pub type Tensor = sim::SimTensor;
+
 /// Model geometry read from `manifest.json` (must match the Python
-/// [`ModelConfig`]).
+/// `ModelConfig`).
 #[derive(Debug, Clone)]
 pub struct LiveModelConfig {
     pub vocab: usize,
@@ -36,26 +63,96 @@ pub struct LiveModelConfig {
     pub kv_shape: Vec<usize>,
 }
 
-/// One parameter tensor's metadata.
+/// One parameter tensor's metadata (pjrt backend: params.bin layout).
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
 #[derive(Debug, Clone)]
-struct ParamSpec {
-    name: String,
-    shape: Vec<usize>,
+pub(crate) struct ParamSpec {
+    pub(crate) name: String,
+    pub(crate) shape: Vec<usize>,
 }
 
-/// The compiled model: one executable per entry point.
-pub struct ModelRuntime {
-    pub cfg: LiveModelConfig,
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    prefill: BTreeMap<usize, xla::PjRtLoadedExecutable>,
-    decode: xla::PjRtLoadedExecutable,
-    extract: xla::PjRtLoadedExecutable,
-    inject: xla::PjRtLoadedExecutable,
-    params: Vec<xla::Literal>,
+/// The serving-runtime interface the live engine programs against.
+pub trait Runtime: Sized {
+    /// Opaque KV$-state / extracted-plane handle.
+    type Tensor: Clone;
+
+    /// Load (and, for pjrt, compile) everything under `dir`.
+    fn load(dir: &Path) -> Result<Self>;
+
+    /// Model geometry.
+    fn config(&self) -> &LiveModelConfig;
+
+    /// Zero-initialized KV$ state.
+    fn zero_kv(&self) -> Self::Tensor;
+
+    /// Prefill one chunk of new tokens into `slot` at position `pos`.
+    /// `tokens.len()` must equal a chunk bucket; `chunk_len` <= bucket is
+    /// the real token count. Returns (last-token logits, new KV$).
+    fn prefill_chunk(
+        &self,
+        kv: &Self::Tensor,
+        tokens: &[i32],
+        slot: usize,
+        pos: usize,
+        chunk_len: usize,
+    ) -> Result<(Vec<f32>, Self::Tensor)>;
+
+    /// One decode step over all slots. `lens[i]` is slot i's context
+    /// length BEFORE this token (0 = inactive). Returns
+    /// (logits[slots x vocab] row-major, new KV$).
+    fn decode_step(
+        &self,
+        kv: &Self::Tensor,
+        tokens: &[i32],
+        lens: &[i32],
+    ) -> Result<(Vec<f32>, Self::Tensor)>;
+
+    /// Snapshot a slot's K/V planes (host tensors) for the prefix store.
+    fn extract_slot(&self, kv: &Self::Tensor, slot: usize)
+        -> Result<(Self::Tensor, Self::Tensor)>;
+
+    /// Write cached K/V planes into a slot (the KV$-hit fast path).
+    fn inject_slot(
+        &self,
+        kv: &Self::Tensor,
+        slot: usize,
+        k: &Self::Tensor,
+        v: &Self::Tensor,
+    ) -> Result<Self::Tensor>;
+
+    /// Smallest chunk bucket that fits `n` new tokens (None if n exceeds
+    /// the largest bucket — caller loops chunks).
+    fn bucket_for(&self, n: usize) -> Option<usize> {
+        self.config().chunk_buckets.iter().copied().find(|&b| b >= n)
+    }
+
+    fn largest_bucket(&self) -> usize {
+        self.config().chunk_buckets.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Greedy sampling helper: argmax of one slot's logits row.
+    fn argmax(logits_row: &[f32]) -> i32 {
+        argmax(logits_row)
+    }
 }
 
-fn load_manifest(dir: &Path) -> Result<(LiveModelConfig, Vec<ParamSpec>, BTreeMap<String, PathBuf>)> {
+/// Argmax of a logits row (free function shared by both backends).
+pub fn argmax(logits_row: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut best_v = f32::MIN;
+    for (i, &v) in logits_row.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Parse `manifest.json`: model geometry, parameter specs, artifact paths.
+pub(crate) fn load_manifest(
+    dir: &Path,
+) -> Result<(LiveModelConfig, Vec<ParamSpec>, BTreeMap<String, PathBuf>)> {
     let text = std::fs::read_to_string(dir.join("manifest.json"))
         .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
     let v = Json::parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
@@ -110,211 +207,6 @@ fn load_manifest(dir: &Path) -> Result<(LiveModelConfig, Vec<ParamSpec>, BTreeMa
     Ok((cfg, params, artifacts))
 }
 
-fn load_params_bin(dir: &Path, specs: &[ParamSpec]) -> Result<Vec<xla::Literal>> {
-    let mut f = std::fs::File::open(dir.join("params.bin"))
-        .with_context(|| format!("{}/params.bin", dir.display()))?;
-    let mut bytes = Vec::new();
-    f.read_to_end(&mut bytes)?;
-    let total: usize = specs.iter().map(|s| s.shape.iter().product::<usize>()).sum();
-    if bytes.len() != total * 4 {
-        bail!(
-            "params.bin has {} bytes, manifest declares {} floats",
-            bytes.len(),
-            total
-        );
-    }
-    let floats: Vec<f32> = bytes
-        .chunks_exact(4)
-        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
-        .collect();
-    let mut out = Vec::with_capacity(specs.len());
-    let mut off = 0usize;
-    for s in specs {
-        let n: usize = s.shape.iter().product();
-        let dims: Vec<i64> = s.shape.iter().map(|d| *d as i64).collect();
-        let lit = xla::Literal::vec1(&floats[off..off + n])
-            .reshape(&dims)
-            .with_context(|| format!("param {} reshape", s.name))?;
-        out.push(lit);
-        off += n;
-    }
-    Ok(out)
-}
-
-fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
-    let proto = xla::HloModuleProto::from_text_file(
-        path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-    )
-    .map_err(|e| anyhow!("{}: {e:?}", path.display()))?;
-    let comp = xla::XlaComputation::from_proto(&proto);
-    client
-        .compile(&comp)
-        .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))
-}
-
-impl ModelRuntime {
-    /// Load + compile everything under `dir` (default `artifacts/`).
-    pub fn load(dir: &Path) -> Result<ModelRuntime> {
-        let (cfg, param_specs, artifacts) = load_manifest(dir)?;
-        let params = load_params_bin(dir, &param_specs)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
-        let mut prefill = BTreeMap::new();
-        for &c in &cfg.chunk_buckets {
-            let path = artifacts
-                .get(&format!("prefill_c{c}"))
-                .ok_or_else(|| anyhow!("manifest missing prefill_c{c}"))?;
-            prefill.insert(c, compile(&client, path)?);
-        }
-        let decode = compile(
-            &client,
-            artifacts.get("decode").ok_or_else(|| anyhow!("missing decode"))?,
-        )?;
-        let extract = compile(
-            &client,
-            artifacts
-                .get("extract_slot")
-                .ok_or_else(|| anyhow!("missing extract_slot"))?,
-        )?;
-        let inject = compile(
-            &client,
-            artifacts
-                .get("inject_slot")
-                .ok_or_else(|| anyhow!("missing inject_slot"))?,
-        )?;
-        Ok(ModelRuntime {
-            cfg,
-            client,
-            prefill,
-            decode,
-            extract,
-            inject,
-            params,
-        })
-    }
-
-    /// Zero-initialized KV$ state.
-    pub fn zero_kv(&self) -> xla::Literal {
-        let dims: Vec<usize> = self.cfg.kv_shape.clone();
-        xla::Literal::create_from_shape(xla::PrimitiveType::F32, &dims)
-    }
-
-    /// Smallest chunk bucket that fits `n` new tokens (None if n exceeds
-    /// the largest bucket — caller loops chunks).
-    pub fn bucket_for(&self, n: usize) -> Option<usize> {
-        self.cfg.chunk_buckets.iter().copied().find(|&b| b >= n)
-    }
-
-    pub fn largest_bucket(&self) -> usize {
-        self.cfg.chunk_buckets.iter().copied().max().unwrap_or(0)
-    }
-
-    fn run(
-        &self,
-        exe: &xla::PjRtLoadedExecutable,
-        args: &[&xla::Literal],
-    ) -> Result<Vec<xla::Literal>> {
-        let out = exe
-            .execute::<&xla::Literal>(args)
-            .map_err(|e| anyhow!("execute: {e:?}"))?;
-        let lit = out[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))
-    }
-
-    /// Prefill one chunk of new tokens into `slot` at position `pos`.
-    /// `tokens.len()` must equal a chunk bucket; `chunk_len` ≤ bucket is
-    /// the real token count. Returns (last-token logits, new KV$).
-    pub fn prefill_chunk(
-        &self,
-        kv: &xla::Literal,
-        tokens: &[i32],
-        slot: usize,
-        pos: usize,
-        chunk_len: usize,
-    ) -> Result<(Vec<f32>, xla::Literal)> {
-        let exe = self
-            .prefill
-            .get(&tokens.len())
-            .ok_or_else(|| anyhow!("no prefill bucket of size {}", tokens.len()))?;
-        let tok = xla::Literal::vec1(tokens);
-        let slot_l = xla::Literal::scalar(slot as i32);
-        let pos_l = xla::Literal::scalar(pos as i32);
-        let len_l = xla::Literal::scalar(chunk_len as i32);
-        let mut args: Vec<&xla::Literal> = vec![&tok, &slot_l, &pos_l, &len_l, kv];
-        args.extend(self.params.iter());
-        let mut parts = self.run(exe, &args)?;
-        let kv_new = parts.pop().ok_or_else(|| anyhow!("prefill: missing kv"))?;
-        let logits = parts
-            .pop()
-            .ok_or_else(|| anyhow!("prefill: missing logits"))?
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("logits: {e:?}"))?;
-        Ok((logits, kv_new))
-    }
-
-    /// One decode step over all slots. `lens[i]` is slot i's context
-    /// length BEFORE this token (0 = inactive). Returns
-    /// (logits[slots×vocab] row-major, new KV$).
-    pub fn decode_step(
-        &self,
-        kv: &xla::Literal,
-        tokens: &[i32],
-        lens: &[i32],
-    ) -> Result<(Vec<f32>, xla::Literal)> {
-        if tokens.len() != self.cfg.slots || lens.len() != self.cfg.slots {
-            bail!("decode_step wants {} slots", self.cfg.slots);
-        }
-        let tok = xla::Literal::vec1(tokens);
-        let len_l = xla::Literal::vec1(lens);
-        let mut args: Vec<&xla::Literal> = vec![&tok, &len_l, kv];
-        args.extend(self.params.iter());
-        let mut parts = self.run(&self.decode, &args)?;
-        let kv_new = parts.pop().ok_or_else(|| anyhow!("decode: missing kv"))?;
-        let logits = parts
-            .pop()
-            .ok_or_else(|| anyhow!("decode: missing logits"))?
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("logits: {e:?}"))?;
-        Ok((logits, kv_new))
-    }
-
-    /// Snapshot a slot's K/V planes (host literals) for the prefix store.
-    pub fn extract_slot(&self, kv: &xla::Literal, slot: usize) -> Result<(xla::Literal, xla::Literal)> {
-        let slot_l = xla::Literal::scalar(slot as i32);
-        let mut parts = self.run(&self.extract, &[kv, &slot_l])?;
-        let v = parts.pop().ok_or_else(|| anyhow!("extract: missing v"))?;
-        let k = parts.pop().ok_or_else(|| anyhow!("extract: missing k"))?;
-        Ok((k, v))
-    }
-
-    /// Write cached K/V planes into a slot (the KV$-hit fast path).
-    pub fn inject_slot(
-        &self,
-        kv: &xla::Literal,
-        slot: usize,
-        k: &xla::Literal,
-        v: &xla::Literal,
-    ) -> Result<xla::Literal> {
-        let slot_l = xla::Literal::scalar(slot as i32);
-        let mut parts = self.run(&self.inject, &[kv, &slot_l, k, v])?;
-        parts.pop().ok_or_else(|| anyhow!("inject: missing kv"))
-    }
-
-    /// Greedy sampling helper: argmax of one slot's logits row.
-    pub fn argmax(logits_row: &[f32]) -> i32 {
-        let mut best = 0usize;
-        let mut best_v = f32::MIN;
-        for (i, &v) in logits_row.iter().enumerate() {
-            if v > best_v {
-                best_v = v;
-                best = i;
-            }
-        }
-        best as i32
-    }
-}
-
 /// Default artifacts directory: `$LMETRIC_ARTIFACTS` or `artifacts/`.
 pub fn artifacts_dir() -> PathBuf {
     std::env::var("LMETRIC_ARTIFACTS")
@@ -328,10 +220,39 @@ mod tests {
 
     #[test]
     fn argmax_picks_max() {
+        assert_eq!(argmax(&[0.1, 3.0, -1.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
         assert_eq!(ModelRuntime::argmax(&[0.1, 3.0, -1.0]), 1);
-        assert_eq!(ModelRuntime::argmax(&[5.0]), 0);
     }
 
-    // Full PJRT round-trip tests live in rust/tests/runtime_pjrt.rs (they
-    // need artifacts/ built).
+    #[test]
+    fn manifest_parses() {
+        // Per-process dir: concurrent `cargo test` runs must not race.
+        let dir = std::env::temp_dir()
+            .join(format!("lmetric_manifest_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+ "model": {"vocab": 1024, "d_model": 128, "n_layers": 2, "n_heads": 4,
+           "d_head": 32, "max_seq": 512, "slots": 8},
+ "chunk_buckets": [16, 64, 256],
+ "kv_shape": [2, 2, 8, 4, 512, 32],
+ "params": [{"name": "embed", "shape": [1024, 128]}],
+ "artifacts": {"decode": {"file": "decode.hlo.txt"}}
+}"#,
+        )
+        .unwrap();
+        let (cfg, params, artifacts) = load_manifest(&dir).unwrap();
+        assert_eq!(cfg.vocab, 1024);
+        assert_eq!(cfg.slots, 8);
+        assert_eq!(cfg.chunk_buckets, vec![16, 64, 256]);
+        assert_eq!(params.len(), 1);
+        assert!(artifacts.contains_key("decode"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    // Full runtime round-trip tests live in rust/tests/runtime_pjrt.rs
+    // (they run against the sim backend by default and against real PJRT
+    // artifacts under --features pjrt).
 }

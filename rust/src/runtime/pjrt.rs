@@ -1,0 +1,213 @@
+//! Real PJRT runtime backend (`--features pjrt`): loads the AOT HLO-text
+//! artifacts, compiles them once on the PJRT CPU client, and executes the
+//! serving entry points. See the module docs in `runtime/mod.rs` for the
+//! interchange-format and state-strategy rationale.
+//!
+//! Built against the vendored API stub by default (keeps this path
+//! compiling in offline CI); point the `xla` dependency at the crates.io
+//! `xla` crate to actually execute.
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{load_manifest, LiveModelConfig, ParamSpec, Runtime};
+
+/// The compiled model: one executable per entry point.
+pub struct PjrtRuntime {
+    pub cfg: LiveModelConfig,
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    prefill: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    decode: xla::PjRtLoadedExecutable,
+    extract: xla::PjRtLoadedExecutable,
+    inject: xla::PjRtLoadedExecutable,
+    params: Vec<xla::Literal>,
+}
+
+fn load_params_bin(dir: &Path, specs: &[ParamSpec]) -> Result<Vec<xla::Literal>> {
+    let mut f = std::fs::File::open(dir.join("params.bin"))
+        .with_context(|| format!("{}/params.bin", dir.display()))?;
+    let mut bytes = Vec::new();
+    f.read_to_end(&mut bytes)?;
+    let total: usize = specs.iter().map(|s| s.shape.iter().product::<usize>()).sum();
+    if bytes.len() != total * 4 {
+        bail!(
+            "params.bin has {} bytes, manifest declares {} floats",
+            bytes.len(),
+            total
+        );
+    }
+    let floats: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    let mut out = Vec::with_capacity(specs.len());
+    let mut off = 0usize;
+    for s in specs {
+        let n: usize = s.shape.iter().product();
+        let dims: Vec<i64> = s.shape.iter().map(|d| *d as i64).collect();
+        let lit = xla::Literal::vec1(&floats[off..off + n])
+            .reshape(&dims)
+            .with_context(|| format!("param {} reshape", s.name))?;
+        out.push(lit);
+        off += n;
+    }
+    Ok(out)
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+    )
+    .map_err(|e| anyhow!("{}: {e:?}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))
+}
+
+impl PjrtRuntime {
+    fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let out = exe
+            .execute::<&xla::Literal>(args)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))
+    }
+}
+
+impl Runtime for PjrtRuntime {
+    type Tensor = xla::Literal;
+
+    /// Load + compile everything under `dir` (default `artifacts/`).
+    fn load(dir: &Path) -> Result<PjrtRuntime> {
+        let (cfg, param_specs, artifacts) = load_manifest(dir)?;
+        let params = load_params_bin(dir, &param_specs)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+        let mut prefill = BTreeMap::new();
+        for &c in &cfg.chunk_buckets {
+            let path = artifacts
+                .get(&format!("prefill_c{c}"))
+                .ok_or_else(|| anyhow!("manifest missing prefill_c{c}"))?;
+            prefill.insert(c, compile(&client, path)?);
+        }
+        let decode = compile(
+            &client,
+            artifacts.get("decode").ok_or_else(|| anyhow!("missing decode"))?,
+        )?;
+        let extract = compile(
+            &client,
+            artifacts
+                .get("extract_slot")
+                .ok_or_else(|| anyhow!("missing extract_slot"))?,
+        )?;
+        let inject = compile(
+            &client,
+            artifacts
+                .get("inject_slot")
+                .ok_or_else(|| anyhow!("missing inject_slot"))?,
+        )?;
+        Ok(PjrtRuntime {
+            cfg,
+            client,
+            prefill,
+            decode,
+            extract,
+            inject,
+            params,
+        })
+    }
+
+    fn config(&self) -> &LiveModelConfig {
+        &self.cfg
+    }
+
+    fn zero_kv(&self) -> xla::Literal {
+        let dims: Vec<usize> = self.cfg.kv_shape.clone();
+        xla::Literal::create_from_shape(xla::PrimitiveType::F32, &dims)
+    }
+
+    fn prefill_chunk(
+        &self,
+        kv: &xla::Literal,
+        tokens: &[i32],
+        slot: usize,
+        pos: usize,
+        chunk_len: usize,
+    ) -> Result<(Vec<f32>, xla::Literal)> {
+        let exe = self
+            .prefill
+            .get(&tokens.len())
+            .ok_or_else(|| anyhow!("no prefill bucket of size {}", tokens.len()))?;
+        let tok = xla::Literal::vec1(tokens);
+        let slot_l = xla::Literal::scalar(slot as i32);
+        let pos_l = xla::Literal::scalar(pos as i32);
+        let len_l = xla::Literal::scalar(chunk_len as i32);
+        let mut args: Vec<&xla::Literal> = vec![&tok, &slot_l, &pos_l, &len_l, kv];
+        args.extend(self.params.iter());
+        let mut parts = self.run(exe, &args)?;
+        let kv_new = parts.pop().ok_or_else(|| anyhow!("prefill: missing kv"))?;
+        let logits = parts
+            .pop()
+            .ok_or_else(|| anyhow!("prefill: missing logits"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("logits: {e:?}"))?;
+        Ok((logits, kv_new))
+    }
+
+    fn decode_step(
+        &self,
+        kv: &xla::Literal,
+        tokens: &[i32],
+        lens: &[i32],
+    ) -> Result<(Vec<f32>, xla::Literal)> {
+        if tokens.len() != self.cfg.slots || lens.len() != self.cfg.slots {
+            bail!("decode_step wants {} slots", self.cfg.slots);
+        }
+        let tok = xla::Literal::vec1(tokens);
+        let len_l = xla::Literal::vec1(lens);
+        let mut args: Vec<&xla::Literal> = vec![&tok, &len_l, kv];
+        args.extend(self.params.iter());
+        let mut parts = self.run(&self.decode, &args)?;
+        let kv_new = parts.pop().ok_or_else(|| anyhow!("decode: missing kv"))?;
+        let logits = parts
+            .pop()
+            .ok_or_else(|| anyhow!("decode: missing logits"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("logits: {e:?}"))?;
+        Ok((logits, kv_new))
+    }
+
+    fn extract_slot(
+        &self,
+        kv: &xla::Literal,
+        slot: usize,
+    ) -> Result<(xla::Literal, xla::Literal)> {
+        let slot_l = xla::Literal::scalar(slot as i32);
+        let mut parts = self.run(&self.extract, &[kv, &slot_l])?;
+        let v = parts.pop().ok_or_else(|| anyhow!("extract: missing v"))?;
+        let k = parts.pop().ok_or_else(|| anyhow!("extract: missing k"))?;
+        Ok((k, v))
+    }
+
+    fn inject_slot(
+        &self,
+        kv: &xla::Literal,
+        slot: usize,
+        k: &xla::Literal,
+        v: &xla::Literal,
+    ) -> Result<xla::Literal> {
+        let slot_l = xla::Literal::scalar(slot as i32);
+        let mut parts = self.run(&self.inject, &[kv, &slot_l, k, v])?;
+        parts.pop().ok_or_else(|| anyhow!("inject: missing kv"))
+    }
+}

@@ -1,0 +1,282 @@
+//! Dependency-free deterministic runtime backend (the default build).
+//!
+//! The "model" is a pure function of each slot's token history: the KV$
+//! tensor holds the token history per slot, and a logits row is derived by
+//! hashing that history. Because output depends only on the final history
+//! — never on how it was chunked, which slot computed it, or what other
+//! slots contain — every contract the live engine relies on holds exactly:
+//!
+//! * chunked prefill is chunk-partition invariant,
+//! * decode continues prefill (same logits as prefilling the longer
+//!   sequence from scratch),
+//! * extract/inject round-trips reproduce the KV$-hit path bit-for-bit,
+//! * batched decode slots are independent.
+//!
+//! This lets `cargo test` and CI drive the full live threaded cluster
+//! (threads, prefix store, chunking, piggybacked indicators) with no
+//! artifacts, no Python and no PJRT. Real transformer execution lives in
+//! the `pjrt` backend (`--features pjrt`).
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::{load_manifest, LiveModelConfig, Runtime};
+
+/// Splitmix-style mix for deterministic pseudo-logits.
+#[inline]
+fn mix(h: u64, x: u64) -> u64 {
+    let mut z = h ^ x.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// KV$ state / extracted plane of the sim backend.
+#[derive(Debug, Clone)]
+pub enum SimTensor {
+    /// Full per-instance cache: one token history per slot.
+    Kv(Vec<Vec<i32>>),
+    /// A snapshot of one slot's history (what extract/inject carry).
+    Plane(Vec<i32>),
+}
+
+/// The deterministic stand-in runtime.
+pub struct SimRuntime {
+    pub cfg: LiveModelConfig,
+}
+
+impl SimRuntime {
+    /// Geometry matching `python/compile/model.py::ModelConfig`, used when
+    /// no artifacts directory is present (the sim backend needs no
+    /// artifacts to run).
+    fn default_config() -> LiveModelConfig {
+        LiveModelConfig {
+            vocab: 1024,
+            d_model: 128,
+            n_layers: 2,
+            n_heads: 4,
+            d_head: 32,
+            max_seq: 512,
+            slots: 8,
+            chunk_buckets: vec![16, 64, 256],
+            kv_shape: vec![2, 2, 8, 4, 512, 32],
+        }
+    }
+
+    /// Deterministic pseudo-logits for a token history.
+    fn logits_for(&self, hist: &[i32]) -> Vec<f32> {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for t in hist {
+            h = mix(h, *t as u64 ^ 0x5bd1_e995);
+        }
+        (0..self.cfg.vocab)
+            .map(|v| (mix(h, v as u64) >> 11) as f32 / (1u64 << 53) as f32)
+            .collect()
+    }
+
+    fn slots<'a>(&self, kv: &'a SimTensor, what: &str) -> Result<&'a Vec<Vec<i32>>> {
+        match kv {
+            SimTensor::Kv(slots) => Ok(slots),
+            SimTensor::Plane(_) => bail!("{what}: expected a KV$ tensor, got a plane"),
+        }
+    }
+}
+
+impl Runtime for SimRuntime {
+    type Tensor = SimTensor;
+
+    fn load(dir: &Path) -> Result<SimRuntime> {
+        let cfg = if dir.join("manifest.json").exists() {
+            load_manifest(dir)?.0
+        } else {
+            SimRuntime::default_config()
+        };
+        if cfg.slots == 0 || cfg.vocab == 0 || cfg.chunk_buckets.is_empty() {
+            bail!("sim runtime: degenerate model config in {}", dir.display());
+        }
+        Ok(SimRuntime { cfg })
+    }
+
+    fn config(&self) -> &LiveModelConfig {
+        &self.cfg
+    }
+
+    fn zero_kv(&self) -> SimTensor {
+        SimTensor::Kv(vec![Vec::new(); self.cfg.slots])
+    }
+
+    fn prefill_chunk(
+        &self,
+        kv: &SimTensor,
+        tokens: &[i32],
+        slot: usize,
+        pos: usize,
+        chunk_len: usize,
+    ) -> Result<(Vec<f32>, SimTensor)> {
+        if !self.cfg.chunk_buckets.contains(&tokens.len()) {
+            bail!("no prefill bucket of size {}", tokens.len());
+        }
+        if chunk_len == 0 || chunk_len > tokens.len() {
+            bail!("prefill: chunk_len {chunk_len} out of range for bucket {}", tokens.len());
+        }
+        let mut slots = self.slots(kv, "prefill_chunk")?.clone();
+        if slot >= slots.len() {
+            bail!("prefill: slot {slot} out of range ({} slots)", slots.len());
+        }
+        if pos > slots[slot].len() {
+            bail!(
+                "prefill: pos {pos} beyond slot {slot}'s cached length {}",
+                slots[slot].len()
+            );
+        }
+        // Writing at `pos` masks everything the slot held beyond it —
+        // exactly the causal-masking semantics of the real KV cache.
+        slots[slot].truncate(pos);
+        slots[slot].extend_from_slice(&tokens[..chunk_len]);
+        let logits = self.logits_for(&slots[slot]);
+        Ok((logits, SimTensor::Kv(slots)))
+    }
+
+    fn decode_step(
+        &self,
+        kv: &SimTensor,
+        tokens: &[i32],
+        lens: &[i32],
+    ) -> Result<(Vec<f32>, SimTensor)> {
+        if tokens.len() != self.cfg.slots || lens.len() != self.cfg.slots {
+            bail!("decode_step wants {} slots", self.cfg.slots);
+        }
+        let mut slots = self.slots(kv, "decode_step")?.clone();
+        let vocab = self.cfg.vocab;
+        let mut logits = vec![0.0f32; self.cfg.slots * vocab];
+        for i in 0..self.cfg.slots {
+            if lens[i] <= 0 {
+                continue; // inactive slot: zero row, state untouched
+            }
+            if slots[i].len() != lens[i] as usize {
+                bail!(
+                    "decode: slot {i} holds {} cached tokens but lens says {}",
+                    slots[i].len(),
+                    lens[i]
+                );
+            }
+            slots[i].push(tokens[i]);
+            let row = self.logits_for(&slots[i]);
+            logits[i * vocab..(i + 1) * vocab].copy_from_slice(&row);
+        }
+        Ok((logits, SimTensor::Kv(slots)))
+    }
+
+    fn extract_slot(&self, kv: &SimTensor, slot: usize) -> Result<(SimTensor, SimTensor)> {
+        let slots = self.slots(kv, "extract_slot")?;
+        if slot >= slots.len() {
+            bail!("extract: slot {slot} out of range");
+        }
+        Ok((
+            SimTensor::Plane(slots[slot].clone()),
+            SimTensor::Plane(slots[slot].clone()),
+        ))
+    }
+
+    fn inject_slot(
+        &self,
+        kv: &SimTensor,
+        slot: usize,
+        k: &SimTensor,
+        _v: &SimTensor,
+    ) -> Result<SimTensor> {
+        let mut slots = self.slots(kv, "inject_slot")?.clone();
+        if slot >= slots.len() {
+            bail!("inject: slot {slot} out of range");
+        }
+        let SimTensor::Plane(hist) = k else {
+            bail!("inject: expected a plane tensor");
+        };
+        slots[slot] = hist.clone();
+        Ok(SimTensor::Kv(slots))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt() -> SimRuntime {
+        SimRuntime {
+            cfg: SimRuntime::default_config(),
+        }
+    }
+
+    #[test]
+    fn load_without_artifacts_uses_defaults() {
+        let rt = SimRuntime::load(Path::new("/definitely/not/a/dir")).unwrap();
+        assert_eq!(rt.cfg.vocab, 1024);
+        assert_eq!(rt.cfg.slots, 8);
+        assert_eq!(rt.cfg.chunk_buckets, vec![16, 64, 256]);
+    }
+
+    #[test]
+    fn logits_depend_only_on_history() {
+        let rt = rt();
+        let kv = rt.zero_kv();
+        let toks: Vec<i32> = (1..=32).collect();
+        // One 64-bucket chunk vs two 16-bucket chunks.
+        let mut buf = toks.clone();
+        buf.resize(64, 0);
+        let (a, _) = rt.prefill_chunk(&kv, &buf, 0, 0, 32).unwrap();
+        let (_, kv1) = rt.prefill_chunk(&kv, &toks[..16].to_vec(), 3, 0, 16).unwrap();
+        let (b, _) = rt.prefill_chunk(&kv1, &toks[16..].to_vec(), 3, 16, 16).unwrap();
+        assert_eq!(a, b, "chunk-partition and slot invariance");
+    }
+
+    #[test]
+    fn decode_continues_prefill() {
+        let rt = rt();
+        let toks: Vec<i32> = (1..=16).collect();
+        let (l, kv) = rt.prefill_chunk(&rt.zero_kv(), &toks, 2, 0, 16).unwrap();
+        let next = crate::runtime::argmax(&l);
+        let mut tok_in = vec![0i32; 8];
+        let mut lens = vec![0i32; 8];
+        tok_in[2] = next;
+        lens[2] = 16;
+        let (dl, _) = rt.decode_step(&kv, &tok_in, &lens).unwrap();
+        // Oracle: prefill the 17-token sequence (bucket 64).
+        let mut full = toks.clone();
+        full.push(next);
+        full.resize(64, 0);
+        let (ol, _) = rt.prefill_chunk(&rt.zero_kv(), &full, 0, 0, 17).unwrap();
+        assert_eq!(&dl[2 * 1024..3 * 1024], &ol[..]);
+        // Inactive slots stay zero.
+        assert!(dl[..1024].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn extract_inject_roundtrip() {
+        let rt = rt();
+        let toks: Vec<i32> = (1..=16).collect();
+        let (_, kv) = rt.prefill_chunk(&rt.zero_kv(), &toks, 0, 0, 16).unwrap();
+        let (k, v) = rt.extract_slot(&kv, 0).unwrap();
+        let kv2 = rt.inject_slot(&rt.zero_kv(), 5, &k, &v).unwrap();
+        // Continue from the hit on slot 5 with 4 fresh tokens.
+        let mut buf = vec![90, 91, 92, 93];
+        buf.resize(16, 0);
+        let (hit, _) = rt.prefill_chunk(&kv2, &buf, 5, 16, 4).unwrap();
+        let mut full = toks;
+        full.extend([90, 91, 92, 93]);
+        full.resize(64, 0);
+        let (cold, _) = rt.prefill_chunk(&rt.zero_kv(), &full, 1, 0, 20).unwrap();
+        assert_eq!(hit, cold);
+    }
+
+    #[test]
+    fn contract_violations_error() {
+        let rt = rt();
+        let kv = rt.zero_kv();
+        assert!(rt.prefill_chunk(&kv, &[1; 17], 0, 0, 17).is_err(), "bad bucket");
+        assert!(rt.prefill_chunk(&kv, &[1; 16], 9, 0, 16).is_err(), "bad slot");
+        assert!(rt.prefill_chunk(&kv, &[1; 16], 0, 4, 16).is_err(), "pos gap");
+        let lens = vec![3i32; 8];
+        assert!(rt.decode_step(&kv, &vec![1; 8], &lens).is_err(), "len mismatch");
+    }
+}

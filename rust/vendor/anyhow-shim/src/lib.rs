@@ -1,0 +1,155 @@
+//! A minimal, API-compatible subset of [`anyhow`](https://docs.rs/anyhow):
+//! string-backed [`Error`], [`Result`], the [`Context`] extension trait and
+//! the [`anyhow!`]/[`bail!`] macros.
+//!
+//! Vendored because this repository must build from a fresh clone with no
+//! network and no pre-populated cargo registry (tier-1 CI contract). The
+//! public surface mirrors the real crate closely enough that replacing the
+//! `anyhow = { package = "anyhow-shim", path = ... }` dependency with
+//! `anyhow = "1"` requires no source changes.
+//!
+//! Differences from the real crate (acceptable for this codebase):
+//! * No backtraces, no downcasting — the error is a context-joined string.
+//! * `{e}` and `{e:#}` both render the full context chain.
+
+use std::fmt;
+
+/// A string-backed error with a context chain.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Mirrors anyhow's blanket conversion: any std error can be `?`-propagated
+// into an `Error`. `Error` itself intentionally does NOT implement
+// `std::error::Error`, exactly like the real crate, so this blanket impl
+// does not overlap with the reflexive `From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attaching extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/file")
+            .with_context(|| "reading config".to_string())?;
+        Ok(s)
+    }
+
+    #[test]
+    fn context_chains() {
+        let e = io_fail().unwrap_err();
+        let s = format!("{e:#}");
+        assert!(s.starts_with("reading config: "), "{s}");
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad thing {} at {}", 7, "x");
+        assert_eq!(format!("{e}"), "bad thing 7 at x");
+        let msg = String::from("plain");
+        let e2 = anyhow!(msg);
+        assert_eq!(format!("{e2}"), "plain");
+    }
+
+    #[test]
+    fn bail_returns() {
+        fn f(x: u32) -> Result<u32> {
+            if x == 0 {
+                bail!("zero is not allowed (got {x})");
+            }
+            Ok(x)
+        }
+        assert!(f(1).is_ok());
+        assert_eq!(format!("{}", f(0).unwrap_err()), "zero is not allowed (got 0)");
+    }
+
+    #[test]
+    fn question_mark_on_io_error() {
+        fn f() -> Result<Vec<u8>> {
+            let v = std::fs::read("/definitely/not/a/file")?;
+            Ok(v)
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let x: Option<u32> = None;
+        let e = x.context("missing x").unwrap_err();
+        assert_eq!(format!("{e}"), "missing x");
+    }
+}

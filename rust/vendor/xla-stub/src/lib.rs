@@ -1,0 +1,223 @@
+//! Compile-time stand-in for the `xla` (xla-rs) PJRT bindings.
+//!
+//! Only the types and methods used by `lmetric`'s `runtime/pjrt.rs` are
+//! provided. Host-side [`Literal`] construction works for real (it is pure
+//! data); everything that would need the native XLA extension — parsing
+//! HLO, compiling, executing — returns [`Error`] with an explanatory
+//! message. This keeps the `--features pjrt` build green and the real-PJRT
+//! code path warm in CI without a network or the `xla_extension` shared
+//! library; swap in the real crate to actually execute (see crate
+//! description in Cargo.toml).
+
+use std::fmt;
+
+const UNAVAILABLE: &str = "xla-stub: real PJRT bindings are not vendored in this build; \
+     replace the `xla` dependency with the crates.io `xla` crate to execute";
+
+/// Error type mirroring `xla::Error` closely enough for `{e:?}` formatting.
+pub struct Error(pub String);
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(UNAVAILABLE.to_string()))
+}
+
+/// Element types appearing in the lmetric artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    F32,
+    S32,
+}
+
+/// Internal element storage — public only because [`NativeType`]'s
+/// methods mention it; not part of the mirrored xla API.
+#[doc(hidden)]
+#[derive(Debug, Clone)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Sealed-ish element trait for the generic `Literal` constructors.
+pub trait NativeType: Copy {
+    fn pack(v: &[Self]) -> Data;
+    fn unpack(d: &Data) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn pack(v: &[Self]) -> Data {
+        Data::F32(v.to_vec())
+    }
+    fn unpack(d: &Data) -> Option<Vec<Self>> {
+        match d {
+            Data::F32(v) => Some(v.clone()),
+            Data::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn pack(v: &[Self]) -> Data {
+        Data::I32(v.to_vec())
+    }
+    fn unpack(d: &Data) -> Option<Vec<Self>> {
+        match d {
+            Data::I32(v) => Some(v.clone()),
+            Data::F32(_) => None,
+        }
+    }
+}
+
+/// Host literal: real data container (construction/reshape/read work),
+/// mirroring `xla::Literal`.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal {
+            data: T::pack(v),
+            dims: vec![v.len() as i64],
+        }
+    }
+
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal {
+            data: T::pack(&[v]),
+            dims: vec![],
+        }
+    }
+
+    pub fn create_from_shape(ty: PrimitiveType, dims: &[usize]) -> Literal {
+        let n: usize = dims.iter().product();
+        let data = match ty {
+            PrimitiveType::F32 => Data::F32(vec![0.0; n]),
+            PrimitiveType::S32 => Data::I32(vec![0; n]),
+        };
+        Literal {
+            data,
+            dims: dims.iter().map(|d| *d as i64).collect(),
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let have: i64 = self.dims.iter().product::<i64>().max(1);
+        let want: i64 = dims.iter().product::<i64>().max(1);
+        if have != want {
+            return Err(Error(format!(
+                "reshape: cannot reshape {} elements to {dims:?}",
+                have
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unpack(&self.data).ok_or_else(|| Error("to_vec: element type mismatch".into()))
+    }
+
+    /// Destructure a tuple literal — only produced by execution, which the
+    /// stub cannot perform.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module — parsing needs the native extension.
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// PJRT client — construction needs the native plugin.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_construction_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap().len(), 4);
+        assert!(l.reshape(&[3, 3]).is_err());
+        let z = Literal::create_from_shape(PrimitiveType::F32, &[2, 3]);
+        assert_eq!(z.to_vec::<f32>().unwrap(), vec![0.0; 6]);
+        let s = Literal::scalar(7i32);
+        assert_eq!(s.to_vec::<i32>().unwrap(), vec![7]);
+        assert!(s.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn runtime_entry_points_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        assert!(Literal::scalar(0i32).to_tuple().is_err());
+    }
+}
