@@ -15,7 +15,10 @@ fn main() {
     for workload in ["chatbot", "coder", "agent", "toolagent"] {
         let exp = experiment(workload, 8, 4000);
         let trace = trace_for(&exp);
-        println!("\n{workload}:  {:>6} {:>10} {:>10} {:>10} {:>10}", "λ", "TTFT-p50", "TTFT-p95", "TPOT-p50", "TPOT-p95");
+        println!(
+            "\n{workload}:  {:>6} {:>10} {:>10} {:>10} {:>10}",
+            "λ", "TTFT-p50", "TTFT-p95", "TPOT-p50", "TPOT-p95"
+        );
         let mut best_l = (0.0, f64::INFINITY);
         for &l in &lambdas {
             let (m, _) = run_policy(&exp, &trace, "linear", l);

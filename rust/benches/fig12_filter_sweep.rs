@@ -59,7 +59,11 @@ fn main() {
     }
     println!(
         "\nshape checks: Range is workload-sensitive (≥1.5x spread somewhere): {}",
-        if range_matters_somewhere { "YES (matches paper: Coder 4→16 improves sharply)" } else { "NO" }
+        if range_matters_somewhere {
+            "YES (matches paper: Coder 4→16 improves sharply)"
+        } else {
+            "NO"
+        }
     );
     println!(
         "              filter-based never meaningfully beats tuned linear: {}",

@@ -46,9 +46,13 @@ fn main() {
             let mut ue = m_u.sim_error_ratio.clone();
             te.sort_by(|a, b| a.partial_cmp(b).unwrap());
             ue.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            println!("  error-ratio CDF (Fig 16): tuned p50 {:.2} p90 {:.2} | untuned p50 {:.2} p90 {:.2}",
-                percentile(&te, 0.5), percentile(&te, 0.9),
-                percentile(&ue, 0.5), percentile(&ue, 0.9));
+            println!(
+                "  error-ratio CDF (Fig 16): tuned p50 {:.2} p90 {:.2} | untuned p50 {:.2} p90 {:.2}",
+                percentile(&te, 0.5),
+                percentile(&te, 0.9),
+                percentile(&ue, 0.5),
+                percentile(&ue, 0.9)
+            );
             cdfs.push(("error_tuned".to_string(), te));
             cdfs.push(("error_untuned".to_string(), ue));
         }

@@ -13,7 +13,10 @@ fn main() {
     let trace = trace_for(&exp);
     let mut rows = Vec::new();
     let mut ttfts = Vec::new();
-    println!("{:>6} {:>10} {:>10} {:>10} {:>10}", "T", "TTFT-mean", "TTFT-p99", "TPOT-mean", "TPOT-p99");
+    println!(
+        "{:>6} {:>10} {:>10} {:>10} {:>10}",
+        "T", "TTFT-mean", "TTFT-p99", "TPOT-mean", "TPOT-p99"
+    );
     for t in [0.1, 0.25, 0.5, 0.75, 1.0] {
         let (m, label) = run_policy(&exp, &trace, "preble", t);
         let (tt, tp) = (m.ttft_summary(), m.tpot_summary());

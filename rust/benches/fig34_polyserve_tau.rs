@@ -12,7 +12,10 @@ fn main() {
     let exp = experiment("chatbot", 8, 4000);
     let trace = trace_for(&exp);
     let mut rows = Vec::new();
-    println!("{:>8} {:>10} {:>10} {:>10} {:>10}", "τ (ms)", "TTFT-mean", "TTFT-p99", "TPOT-mean", "TPOT-p99");
+    println!(
+        "{:>8} {:>10} {:>10} {:>10} {:>10}",
+        "τ (ms)", "TTFT-mean", "TTFT-p99", "TPOT-mean", "TPOT-p99"
+    );
     for tau_ms in [5.0, 10.0, 20.0, 40.0, 80.0] {
         let (m, label) = run_policy(&exp, &trace, "polyserve", tau_ms);
         let (t, p) = (m.ttft_summary(), m.tpot_summary());

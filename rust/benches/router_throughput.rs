@@ -1,8 +1,14 @@
 //! §3's framework claim: the Rust router's per-decision cost. The paper
 //! reports its Rust reimplementation is 6.2× faster than vLLM's Python
 //! router and 1.2× faster than AIBrix's Go one; here we measure absolute
-//! µs/decision per policy at 16 / 64 / 256 instances, plus the DES
-//! harness's end-to-end routed-requests/s.
+//! µs/decision per policy at 16 / 64 / 256 instances (one shared-index
+//! walk + borrowed scratch context per decision — the allocation-free hot
+//! path), the DES harness's end-to-end routed-requests/s, and a
+//! 32-instance × 50k-request DES scale smoke.
+//!
+//! The JSON this bench writes is the perf-trajectory record: CI compares
+//! `des_end_to_end.req_per_s` against the committed baseline
+//! (`BENCH_router_throughput.json`) and fails on a >20% regression.
 
 use lmetric::benchlib::{bench, figure_banner, scaled};
 use lmetric::engine::ModelProfile;
@@ -22,20 +28,20 @@ fn main() {
         for name in ["vllm", "linear", "filter_kv", "preble", "sim_llmd", "lmetric"] {
             let mut pol = policy::build_default(name, &profile, 256).unwrap();
             let mut factory = IndicatorFactory::new(n_instances, 8192);
-            // Pre-warm KV mirrors with some traffic.
+            // Pre-warm the shared KV index with some traffic.
             let warm = trace.requests.len() / 4;
             for tr in trace.requests.iter().take(warm) {
                 let ctx = factory.route_ctx(&tr.req, tr.req.arrival_us);
-                let d = pol.route(&ctx);
-                factory.on_route(d.instance, &ctx, &tr.req, tr.req.arrival_us);
+                let d = pol.route(ctx);
+                factory.on_route(d.instance, &tr.req, tr.req.arrival_us);
             }
             let mut idx = warm;
             let reqs = &trace.requests;
             let r = bench(&format!("{name} @ {n_instances} inst"), 1000, || {
                 let tr = &reqs[idx % reqs.len()];
                 let ctx = factory.route_ctx(&tr.req, tr.req.arrival_us);
-                let d = pol.route(&ctx);
-                factory.on_route(d.instance, &ctx, &tr.req, tr.req.arrival_us);
+                let d = pol.route(ctx);
+                factory.on_route(d.instance, &tr.req, tr.req.arrival_us);
                 idx += 1;
             });
             println!("{}", r.report());
@@ -70,9 +76,37 @@ fn main() {
         (m.duration_us as f64 / 1e6) / wall
     );
 
-    // Machine-readable output: CI uploads this as the perf-trajectory seed
-    // (BENCH_router_throughput.json artifact); override the path with
-    // LMETRIC_BENCH_JSON.
+    // Scale smoke: 32 instances × 50k requests through the DES under
+    // lmetric. Fixed size (NOT downscaled in quick mode) — this is the
+    // CI proof that the shared-index router data plane holds up at
+    // production-shaped scale inside the bench-smoke time budget.
+    println!("\n--- scale smoke: 32 instances x 50k requests ---");
+    let mut sexp = lmetric::config::ExperimentConfig::default();
+    sexp.instances = 32;
+    sexp.requests = 50_000;
+    let strace = lmetric::cluster::build_scaled_trace(&sexp);
+    let scfg = lmetric::cluster::cluster_config(&sexp);
+    let t0 = std::time::Instant::now();
+    let mut spol = policy::build_default("lmetric", &profile, 256).unwrap();
+    let sm = lmetric::cluster::run_des(&scfg, &strace, spol.as_mut());
+    let swall = t0.elapsed().as_secs_f64();
+    assert_eq!(
+        sm.records.len(),
+        strace.requests.len(),
+        "scale smoke lost requests"
+    );
+    println!(
+        "replayed {} requests on 32 instances in {:.2}s wall = {:.0} req/s (mean hit ratio {:.3})",
+        sm.records.len(),
+        swall,
+        sm.records.len() as f64 / swall.max(1e-9),
+        sm.mean_hit_ratio()
+    );
+
+    // Machine-readable output: CI uploads this as the perf-trajectory
+    // record and gates on it (BENCH_router_throughput.json is the
+    // committed baseline; override the output path with
+    // LMETRIC_BENCH_JSON).
     let doc = Json::obj(vec![
         ("bench", Json::Str("router_throughput".into())),
         ("quick_mode", Json::Bool(lmetric::benchlib::quick_mode())),
@@ -84,6 +118,18 @@ fn main() {
                 ("virtual_s", Json::Num(m.duration_us as f64 / 1e6)),
                 ("wall_s", Json::Num(wall)),
                 ("req_per_s", Json::Num(m.records.len() as f64 / wall.max(1e-9))),
+            ]),
+        ),
+        (
+            "scale_smoke",
+            Json::obj(vec![
+                ("instances", Json::Num(32.0)),
+                ("requests", Json::Num(sm.records.len() as f64)),
+                ("wall_s", Json::Num(swall)),
+                (
+                    "req_per_s",
+                    Json::Num(sm.records.len() as f64 / swall.max(1e-9)),
+                ),
             ]),
         ),
     ]);

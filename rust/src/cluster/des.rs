@@ -74,15 +74,17 @@ pub fn run_des(cfg: &ClusterConfig, trace: &Trace, policy: &mut dyn Policy) -> R
         match event {
             Event::Arrival(idx) => {
                 let tr = &trace.requests[idx];
+                // Borrowed scratch context: the whole route decision is
+                // allocation-free on the router side.
                 let ctx = factory.route_ctx(&tr.req, now);
                 let t0 = Instant::now();
-                let decision = policy.route(&ctx);
+                let decision = policy.route(ctx);
                 metrics
                     .sched_overhead_us
                     .push(t0.elapsed().as_nanos() as f64 / 1000.0);
                 let d = decision.instance;
                 debug_assert!(d < n, "policy routed out of range");
-                factory.on_route(d, &ctx, &tr.req, now);
+                factory.on_route(d, &tr.req, now);
                 if let Some(p) = decision.predicted_ttft_us {
                     predicted.insert(tr.req.id, p);
                 }

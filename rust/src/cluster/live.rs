@@ -86,8 +86,13 @@ impl PrefixStore {
         }
     }
 
-    fn len(&self) -> usize {
-        self.planes.len()
+    /// Distinct prompt *blocks* currently indexed — the same unit as the
+    /// DES engine's `RadixTree::used_blocks()`, so `kv_used_blocks` means
+    /// the same thing to a policy regardless of backend. (`planes.len()`
+    /// counts stored K/V planes — whole prompts — a different unit
+    /// entirely, which is what the snapshot used to report.)
+    fn indexed_blocks(&self) -> usize {
+        self.index.len()
     }
 
     /// Longest stored prefix of `hashes`: (hit_tokens, shared k/v).
@@ -187,8 +192,14 @@ impl LiveEngine {
                 .iter()
                 .map(|s| s.req.input_len() + s.generated as usize)
                 .sum(),
-            kv_used_blocks: self.store.len(),
-            kv_capacity_blocks: self.store.cap,
+            // BLOCK units, matching the DES engine's snapshot (the store
+            // used to report its plane/entry count here, which silently
+            // changed the indicator's unit across backends). The store is
+            // bounded in planes, not blocks, so a block-unit capacity does
+            // not exist: report 0 (= "unbounded" in radix-tree semantics)
+            // rather than a number in the wrong unit.
+            kv_used_blocks: self.store.indexed_blocks(),
+            kv_capacity_blocks: 0,
         }
     }
 
@@ -454,11 +465,11 @@ pub fn run_live(
         req.arrival_us = now; // wall-clock arrival
         let ctx = factory.route_ctx(&req, now);
         let t0 = Instant::now();
-        let d = policy.route(&ctx).instance;
+        let d = policy.route(ctx).instance;
         metrics
             .sched_overhead_us
             .push(t0.elapsed().as_nanos() as f64 / 1000.0);
-        factory.on_route(d, &ctx, &req, now);
+        factory.on_route(d, &req, now);
         full_hashes.insert(req.id, tr.full_hashes.clone());
         cmd_txs[d]
             .send(Cmd::Serve(Box::new(req)))

@@ -7,6 +7,128 @@ pub const BLOCK_TOKENS: usize = 16;
 /// Instance index within a cluster.
 pub type InstanceId = usize;
 
+/// A growable per-instance bit set (bit `i` = instance `i`). One `u64`
+/// word per 64 instances, so clusters beyond 64 instances cost one extra
+/// word per mask — never a bare-`u64` ceiling. Used by the shared prefix
+/// index (which cached instances hold a block) and by [`crate::router`]'s
+/// `RouteCtx` (which instances hold any prefix of the request — the
+/// hotspot detector's M-set).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct InstanceMask {
+    words: Vec<u64>,
+}
+
+impl InstanceMask {
+    /// An all-zero mask sized for `n` instances.
+    pub fn with_capacity(n: usize) -> Self {
+        InstanceMask {
+            words: vec![0; n.saturating_add(63) / 64],
+        }
+    }
+
+    /// Build from per-instance hit-token counts: bit `i` set iff
+    /// `hit_tokens[i] > 0` (the M-set convention).
+    pub fn from_hit_tokens(hit_tokens: &[usize]) -> Self {
+        let mut m = InstanceMask::default();
+        m.fill_from_hit_tokens(hit_tokens);
+        m
+    }
+
+    /// In-place form of [`Self::from_hit_tokens`] — the single home of
+    /// the M-set convention (bit `i` set iff `hit_tokens[i] > 0`).
+    pub fn fill_from_hit_tokens(&mut self, hit_tokens: &[usize]) {
+        self.reset(hit_tokens.len());
+        for (i, &h) in hit_tokens.iter().enumerate() {
+            if h > 0 {
+                self.set(i);
+            }
+        }
+    }
+
+    /// Clear all bits and re-size the word array for `n` instances.
+    pub fn reset(&mut self, n: usize) {
+        self.words.clear();
+        self.words.resize(n.saturating_add(63) / 64, 0);
+    }
+
+    pub fn set(&mut self, i: usize) {
+        let w = i / 64;
+        if w >= self.words.len() {
+            self.words.resize(w + 1, 0);
+        }
+        self.words[w] |= 1u64 << (i % 64);
+    }
+
+    pub fn clear(&mut self, i: usize) {
+        if let Some(w) = self.words.get_mut(i / 64) {
+            *w &= !(1u64 << (i % 64));
+        }
+    }
+
+    pub fn get(&self, i: usize) -> bool {
+        self.words
+            .get(i / 64)
+            .map(|w| w & (1u64 << (i % 64)) != 0)
+            .unwrap_or(false)
+    }
+
+    /// Number of set bits.
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    /// Iterate set bit indices in ascending order.
+    pub fn iter_ones(&self) -> MaskOnes<'_> {
+        MaskOnes {
+            words: &self.words,
+            next_word: 0,
+            base: 0,
+            cur: 0,
+        }
+    }
+
+    /// Raw word access (used by the shared prefix index walk).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Overwrite this mask's words from a raw slice (re-sizing as needed).
+    pub fn copy_from_words(&mut self, words: &[u64]) {
+        self.words.clear();
+        self.words.extend_from_slice(words);
+    }
+}
+
+/// Iterator over the set bits of an [`InstanceMask`].
+pub struct MaskOnes<'a> {
+    words: &'a [u64],
+    next_word: usize,
+    base: usize,
+    cur: u64,
+}
+
+impl Iterator for MaskOnes<'_> {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        while self.cur == 0 {
+            if self.next_word >= self.words.len() {
+                return None;
+            }
+            self.cur = self.words[self.next_word];
+            self.base = self.next_word * 64;
+            self.next_word += 1;
+        }
+        let b = self.cur.trailing_zeros() as usize;
+        self.cur &= self.cur - 1;
+        Some(self.base + b)
+    }
+}
+
 /// A serving request as seen by the global scheduler.
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -105,5 +227,44 @@ mod tests {
         let mut r = rec();
         r.output_len = 1;
         assert_eq!(r.tpot_s(), 0.0);
+    }
+
+    #[test]
+    fn mask_set_get_clear() {
+        let mut m = InstanceMask::with_capacity(4);
+        assert!(m.is_empty());
+        m.set(0);
+        m.set(3);
+        assert!(m.get(0) && m.get(3) && !m.get(1));
+        assert_eq!(m.count(), 2);
+        m.clear(0);
+        assert!(!m.get(0));
+        assert_eq!(m.iter_ones().collect::<Vec<_>>(), vec![3]);
+    }
+
+    #[test]
+    fn mask_grows_past_64_instances() {
+        let mut m = InstanceMask::with_capacity(1);
+        m.set(130); // well past one word: must grow, not wrap
+        assert!(m.get(130));
+        assert!(!m.get(2)); // 130 % 64 == 2 — no aliasing across words
+        assert!(!m.get(66));
+        assert_eq!(m.count(), 1);
+        assert_eq!(m.iter_ones().collect::<Vec<_>>(), vec![130]);
+    }
+
+    #[test]
+    fn mask_from_hit_tokens_and_reset() {
+        let mut m = InstanceMask::from_hit_tokens(&[0, 160, 0, 32]);
+        assert_eq!(m.iter_ones().collect::<Vec<_>>(), vec![1, 3]);
+        m.reset(2);
+        assert!(m.is_empty());
+        assert_eq!(m.words().len(), 1);
+    }
+
+    #[test]
+    fn mask_out_of_range_get_is_false() {
+        let m = InstanceMask::with_capacity(4);
+        assert!(!m.get(1000));
     }
 }

@@ -40,10 +40,22 @@ struct PopularityWindow {
 
 impl PopularityWindow {
     fn observe(&mut self, class: u32, now: u64) {
-        if now.saturating_sub(self.window_start) >= WINDOW_US {
-            self.prev_total = self.total;
-            self.prev_per_class = std::mem::take(&mut self.per_class);
-            self.total = 0;
+        let elapsed = now.saturating_sub(self.window_start);
+        if elapsed >= WINDOW_US {
+            if elapsed >= 2 * WINDOW_US {
+                // Idle gap longer than a full window: the "current"
+                // counts are themselves ancient. Rolling them into prev
+                // (the old behaviour) would blend traffic from arbitrarily
+                // far in the past into the Eq. 2 ratio — drop both.
+                self.prev_total = 0;
+                self.prev_per_class.clear();
+                self.total = 0;
+                self.per_class.clear();
+            } else {
+                self.prev_total = self.total;
+                self.prev_per_class = std::mem::take(&mut self.per_class);
+                self.total = 0;
+            }
             self.window_start = now;
         }
         self.total += 1;
@@ -94,14 +106,18 @@ impl HotspotDetector {
 
     /// The M set: instances whose KV$ holds the request's class prefix
     /// (any cached block of this prompt counts as holding the prefix).
+    /// Reads the matched mask the shared prefix index produced during the
+    /// routing walk — no re-scan of `hit_tokens`, no allocation on the
+    /// decision path (this `Vec` form is for offline analysis; `check`
+    /// itself consumes the mask directly).
     pub fn m_set(ctx: &RouteCtx) -> Vec<usize> {
-        (0..ctx.n()).filter(|&i| ctx.hit_tokens[i] > 0).collect()
+        ctx.matched_mask.iter_ones().collect()
     }
 
     /// Eq. 2 monitor: x/x̄ vs |M|/|M̄|. Returns the two ratios.
     pub fn ratios(&self, ctx: &RouteCtx) -> (f64, f64) {
         let x = self.popularity.share(ctx.class_id);
-        let m = Self::m_set(ctx).len();
+        let m = ctx.matched_mask.count();
         let n = ctx.n();
         let pop_ratio = if x >= 1.0 { f64::INFINITY } else { x / (1.0 - x) };
         let cov_ratio = if m >= n {
@@ -116,7 +132,9 @@ impl HotspotDetector {
     /// active for this class (caller must filter M and load-balance).
     pub fn check(&mut self, ctx: &RouteCtx, score: &LMetric) -> bool {
         self.popularity.observe(ctx.class_id, ctx.now_us);
-        let m = Self::m_set(ctx);
+        // The M-set arrives for free as the routing walk's matched mask —
+        // this whole check is allocation-free.
+        let m_len = ctx.matched_mask.count();
         let (pop, cov) = self.ratios(ctx);
         let state = self.alarms.entry(ctx.class_id).or_default();
 
@@ -125,7 +143,7 @@ impl HotspotDetector {
             return true;
         }
 
-        if m.is_empty() || m.len() >= ctx.n() {
+        if m_len == 0 || m_len >= ctx.n() {
             state.consecutive = 0;
             return false; // no hotspot possible: nothing cached, or cached everywhere
         }
@@ -142,17 +160,19 @@ impl HotspotDetector {
         self.phase1_alarms += 1;
 
         // Phase 2: would this request actually pile onto M?
-        let best_m = m
-            .iter()
-            .map(|&i| score.score(ctx, i))
-            .fold(f64::INFINITY, f64::min);
-        let best_not_m = (0..ctx.n())
-            .filter(|i| !m.contains(i))
-            .map(|i| score.score(ctx, i))
-            .fold(f64::INFINITY, f64::min);
+        let mut best_m = f64::INFINITY;
+        let mut best_not_m = f64::INFINITY;
+        for i in 0..ctx.n() {
+            let s = score.score(ctx, i);
+            if ctx.matched_mask.get(i) {
+                best_m = best_m.min(s);
+            } else {
+                best_not_m = best_not_m.min(s);
+            }
+        }
         if best_m <= best_not_m {
             state.consecutive += 1;
-            if state.consecutive >= 2 * m.len() {
+            if state.consecutive >= 2 * m_len {
                 state.mitigated_until = ctx.now_us + COOLDOWN_US;
                 state.consecutive = 0;
                 self.mitigations += 1;
@@ -201,10 +221,10 @@ impl Policy for GuardedLMetric {
 
     fn route(&mut self, ctx: &RouteCtx) -> RouteDecision {
         if self.detector.check(ctx, &self.inner) {
-            let m = HotspotDetector::m_set(ctx);
-            // Load-balance over M̄ only.
+            // Load-balance over M̄ only (membership straight off the
+            // matched mask — no M-set materialization).
             let inst = select_min(ctx, |i| {
-                if m.contains(&i) {
+                if ctx.matched_mask.get(i) {
                     f64::INFINITY
                 } else {
                     ctx.inds[i].bs() as f64
@@ -224,14 +244,14 @@ mod tests {
     /// A hotspot-shaped context: class cached on 1 of 4 instances,
     /// everyone idle, full hit on the hot one.
     fn hotspot_ctx(now: u64, class: u32) -> RouteCtx {
-        RouteCtx {
-            now_us: now,
-            req_id: 0,
-            class_id: class,
-            input_len: 1000,
-            hit_tokens: vec![1000, 0, 0, 0],
-            inds: vec![Indicators::default(); 4],
-        }
+        RouteCtx::new(
+            now,
+            0,
+            class,
+            1000,
+            vec![1000, 0, 0, 0],
+            vec![Indicators::default(); 4],
+        )
     }
 
     #[test]
@@ -244,6 +264,7 @@ mod tests {
             let mut ctx = hotspot_ctx(k * 100_000, class);
             if class != 1 {
                 ctx.hit_tokens = vec![0, 1000, 0, 0];
+                ctx.recompute_matched_mask();
             }
             det.check(&ctx, &score);
         }
@@ -300,6 +321,7 @@ mod tests {
             let mut ctx = hotspot_ctx(k * 1000, 1);
             if k % 2 == 1 {
                 ctx.hit_tokens = vec![900, 0, 0, 0]; // partial hit
+                ctx.recompute_matched_mask();
                 ctx.inds[0].r_bs = 100; // (1000-900)*101 > 1000*1
             }
             det.check(&ctx, &score);
@@ -315,5 +337,40 @@ mod tests {
         let (pop, cov) = det.ratios(&ctx);
         assert!(pop > cov, "single-class traffic on 1/4 coverage violates Eq.2");
         assert!((cov - 1.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn m_set_reads_matched_mask() {
+        let mut ctx = hotspot_ctx(0, 1);
+        assert_eq!(HotspotDetector::m_set(&ctx), vec![0]);
+        ctx.hit_tokens = vec![16, 0, 32, 0];
+        ctx.recompute_matched_mask();
+        assert_eq!(HotspotDetector::m_set(&ctx), vec![0, 2]);
+    }
+
+    /// Regression for the stale-window bug: after an idle gap longer than
+    /// one full window, `observe` used to roll the ancient counts into
+    /// `prev_*`, so `share()` kept blending traffic from arbitrarily far
+    /// in the past into the Eq. 2 ratio.
+    #[test]
+    fn idle_gap_expires_previous_window() {
+        let mut w = PopularityWindow::default();
+        // A burst of pure class-7 traffic in minute 0.
+        for k in 0..50u64 {
+            w.observe(7, k * 1000);
+        }
+        assert!((w.share(7) - 1.0).abs() < 1e-12);
+        // >2 windows of silence, then one class-9 arrival: the ancient
+        // class-7 counts must be gone, not smoothed into prev.
+        w.observe(9, 3 * WINDOW_US);
+        assert_eq!(w.share(7), 0.0, "ancient traffic leaked into the window");
+        assert!((w.share(9) - 1.0).abs() < 1e-12);
+        assert_eq!(w.samples(), 1);
+        // A normal (< 2 windows) rollover still smooths via prev.
+        for k in 0..10u64 {
+            w.observe(9, 3 * WINDOW_US + k);
+        }
+        w.observe(9, 3 * WINDOW_US + WINDOW_US + 1);
+        assert!(w.samples() > 1, "adjacent-window smoothing preserved");
     }
 }

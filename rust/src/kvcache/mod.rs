@@ -1,26 +1,108 @@
-//! KV$ cache modelling: a block-granular radix (prefix) tree with
-//! reference counting and LRU eviction — the structure vLLM-style engines
-//! use for prefix caching, and the structure the router mirrors per
-//! instance to compute KV$-awareness indicators (`KV$.match(req)` in the
-//! paper's pseudocode).
+//! KV$ cache modelling.
+//!
+//! Two structures live here:
+//!
+//! * [`RadixTree`] — the block-granular prefix tree with refcount pinning
+//!   and lazy-heap LRU eviction that each *engine instance* uses for its
+//!   own prefix cache (`KV$.match(req)` in the paper's pseudocode).
+//! * [`SharedRadixIndex`] — the *router-side* view: ONE shared radix tree
+//!   whose nodes carry a per-instance presence bitmask ([`InstanceMask`],
+//!   growable past 64 instances). A single prefix walk per request yields
+//!   the hit length for every instance at once (N× fewer hash-chain walks
+//!   than the previous one-mirror-per-instance design) and produces the
+//!   hotspot detector's M-set for free. Per-instance writes replicate the
+//!   dedicated-mirror LRU semantics exactly, so routing decisions are
+//!   identical to the N-mirror design — `MirrorKvView` keeps the old
+//!   implementation alive as the reference model the equivalence tests
+//!   (here and in `tests/policy_semantics.rs`) replay against.
+//!
+//! [`RouterKvView`] is the thin facade the indicator factory uses: it
+//! wraps the shared index, is updated optimistically when the router
+//! routes a request and authoritatively when a response arrives
+//! (piggybacked, §3), and exposes the allocation-free `match_into` walk.
 
 mod radix;
+mod shared;
 
 pub use radix::RadixTree;
+pub use shared::SharedRadixIndex;
 
-/// Router-side per-instance KV$ views (the `KV` symbolic indicator of the
-/// paper's indicator factory). The router cannot see instance memory; it
-/// maintains one radix mirror per instance, updated when it routes a
-/// request (optimistic insert of the prompt) and when a response arrives
-/// (authoritative insert of prompt+output, piggybacked — §3).
+use crate::core::InstanceMask;
+
+/// Router-side KV$ view over all instances (the `KV` symbolic indicator
+/// of the paper's indicator factory), backed by the shared presence-mask
+/// prefix index. The router cannot see instance memory; it updates the
+/// view when it routes a request (optimistic insert of the prompt) and
+/// when a response arrives (authoritative insert of prompt+output, §3).
 #[derive(Debug)]
 pub struct RouterKvView {
-    views: Vec<RadixTree>,
+    index: SharedRadixIndex,
 }
 
 impl RouterKvView {
+    /// `capacity_blocks` is per instance; 0 means unbounded.
     pub fn new(n_instances: usize, capacity_blocks: usize) -> Self {
         RouterKvView {
+            index: SharedRadixIndex::new(n_instances, capacity_blocks),
+        }
+    }
+
+    pub fn n_instances(&self) -> usize {
+        self.index.n_instances()
+    }
+
+    /// Matched *blocks* of `hashes` on every instance in ONE walk,
+    /// written into reusable buffers (`hit_blocks[i]` = blocks instance
+    /// `i` holds; `matched` = instances holding ≥ 1 block). The hot path:
+    /// zero allocation in steady state.
+    pub fn match_into(
+        &mut self,
+        hashes: &[u64],
+        hit_blocks: &mut Vec<usize>,
+        matched: &mut InstanceMask,
+    ) {
+        self.index.match_into(hashes, hit_blocks, matched);
+    }
+
+    /// Allocating convenience wrapper over [`Self::match_into`] (tests
+    /// and offline tools; the router uses the buffered form).
+    pub fn match_all(&mut self, hashes: &[u64], _now_us: u64) -> Vec<usize> {
+        let mut hits = Vec::new();
+        let mut matched = InstanceMask::default();
+        self.index.match_into(hashes, &mut hits, &mut matched);
+        hits
+    }
+
+    /// Optimistic insert at routing time (the routed instance will have
+    /// this prefix cached by the time the request prefills).
+    pub fn on_route(&mut self, inst: usize, hashes: &[u64], now_us: u64) {
+        self.index.insert(inst, hashes, now_us);
+    }
+
+    /// Authoritative insert at response time (prompt + generated tokens).
+    pub fn on_response(&mut self, inst: usize, full_hashes: &[u64], now_us: u64) {
+        self.index.insert(inst, full_hashes, now_us);
+    }
+
+    /// The underlying shared index (stats, invariant checks).
+    pub fn index(&self) -> &SharedRadixIndex {
+        &self.index
+    }
+}
+
+/// The pre-shared-index router view: N independent per-instance radix
+/// mirrors. Kept as the *reference model* for the shared index — the
+/// equivalence tests replay identical traffic through both and assert
+/// bit-identical hit vectors (and therefore routing decisions). Not used
+/// on any production path.
+#[derive(Debug)]
+pub struct MirrorKvView {
+    views: Vec<RadixTree>,
+}
+
+impl MirrorKvView {
+    pub fn new(n_instances: usize, capacity_blocks: usize) -> Self {
+        MirrorKvView {
             views: (0..n_instances)
                 .map(|_| RadixTree::new(capacity_blocks))
                 .collect(),
@@ -31,8 +113,7 @@ impl RouterKvView {
         self.views.len()
     }
 
-    /// Matched *blocks* of `hashes` on each instance. The per-instance
-    /// KV$-hit length in tokens is `matched * BLOCK_TOKENS`.
+    /// Matched blocks of `hashes` on each instance (N separate walks).
     pub fn match_all(&mut self, hashes: &[u64], now_us: u64) -> Vec<usize> {
         self.views
             .iter_mut()
@@ -40,18 +121,10 @@ impl RouterKvView {
             .collect()
     }
 
-    /// Matched blocks on one instance.
-    pub fn match_one(&mut self, inst: usize, hashes: &[u64], now_us: u64) -> usize {
-        self.views[inst].match_prefix(hashes, now_us, false)
-    }
-
-    /// Optimistic insert at routing time (the routed instance will have
-    /// this prefix cached by the time the request prefills).
     pub fn on_route(&mut self, inst: usize, hashes: &[u64], now_us: u64) {
         self.views[inst].insert(hashes, now_us);
     }
 
-    /// Authoritative insert at response time (prompt + generated tokens).
     pub fn on_response(&mut self, inst: usize, full_hashes: &[u64], now_us: u64) {
         self.views[inst].insert(full_hashes, now_us);
     }
@@ -64,6 +137,7 @@ impl RouterKvView {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::Rng;
 
     #[test]
     fn router_view_tracks_routing() {
@@ -74,5 +148,77 @@ mod tests {
         assert_eq!(rv.match_all(&h, 20), vec![0, 2, 0]);
         rv.on_response(1, &h, 30);
         assert_eq!(rv.match_all(&h, 40), vec![0, 4, 0]);
+    }
+
+    #[test]
+    fn match_into_reuses_buffers_and_fills_mask() {
+        let mut rv = RouterKvView::new(2, 0);
+        rv.on_route(1, &[5, 6], 0);
+        let mut hits = Vec::new();
+        let mut mask = InstanceMask::default();
+        rv.match_into(&[5, 6, 7], &mut hits, &mut mask);
+        assert_eq!(hits, vec![0, 2]);
+        assert_eq!(mask.iter_ones().collect::<Vec<_>>(), vec![1]);
+        // Second call with the same buffers: fully overwritten.
+        rv.match_into(&[9], &mut hits, &mut mask);
+        assert_eq!(hits, vec![0, 0]);
+        assert!(mask.is_empty());
+    }
+
+    /// The load-bearing contract of this module: under arbitrary mixed
+    /// traffic — optimistic and authoritative inserts on random instances,
+    /// bounded capacities forcing per-instance LRU eviction — the shared
+    /// presence-mask index and N dedicated per-instance mirrors report
+    /// IDENTICAL hit vectors on every lookup. Eviction order, timestamp
+    /// refresh and free-list reuse are replicated exactly, so any
+    /// divergence (which would change routing decisions) fails here.
+    #[test]
+    fn shared_index_equals_per_instance_mirrors_under_churn() {
+        for seed in 0..6u64 {
+            for cap in [0usize, 8, 32] {
+                let n = 5usize;
+                let mut shared = RouterKvView::new(n, cap);
+                let mut mirror = MirrorKvView::new(n, cap);
+                let mut rng = Rng::new(seed.wrapping_mul(0x9e37_79b9) ^ 0x5eed);
+                for step in 0..1500u64 {
+                    let base = rng.gen_range(0, 6);
+                    let len = rng.gen_range(1, 10) as usize;
+                    let chain: Vec<u64> =
+                        (0..len as u64).map(|i| base * 1000 + i).collect();
+                    match rng.gen_range(0, 4) {
+                        0 => {
+                            let i = rng.gen_range(0, n as u64) as usize;
+                            shared.on_route(i, &chain, step);
+                            mirror.on_route(i, &chain, step);
+                        }
+                        1 => {
+                            let i = rng.gen_range(0, n as u64) as usize;
+                            shared.on_response(i, &chain, step);
+                            mirror.on_response(i, &chain, step);
+                        }
+                        _ => {
+                            assert_eq!(
+                                shared.match_all(&chain, step),
+                                mirror.match_all(&chain, step),
+                                "diverged: seed {seed} cap {cap} step {step} chain {chain:?}"
+                            );
+                        }
+                    }
+                    if step % 251 == 0 {
+                        shared.index().check_invariants().unwrap();
+                    }
+                }
+                // Full-state probe: every possible chain agrees at the end.
+                for base in 0..6u64 {
+                    let chain: Vec<u64> = (0..10).map(|i| base * 1000 + i).collect();
+                    assert_eq!(
+                        shared.match_all(&chain, 10_000),
+                        mirror.match_all(&chain, 10_000),
+                        "final state diverged: seed {seed} cap {cap} base {base}"
+                    );
+                }
+                shared.index().check_invariants().unwrap();
+            }
+        }
     }
 }

@@ -114,11 +114,17 @@ impl RadixTree {
 
     fn touch(&mut self, node: usize, now: u64) {
         self.nodes[node].last_access = now;
-        if self.nodes[node].refcount == 0 && self.nodes[node].children.is_empty() {
+        // Unbounded trees never evict, so feeding their heap would only
+        // grow it by one entry per repeated touch, forever.
+        if self.capacity != 0
+            && self.nodes[node].refcount == 0
+            && self.nodes[node].children.is_empty()
+        {
             self.evict_heap.push(EvictCandidate {
                 last_access: now,
                 node,
             });
+            self.maybe_compact_heap();
         }
     }
 
@@ -132,6 +138,22 @@ impl RadixTree {
         for h in hashes {
             if let Some(&next) = self.nodes[cur].children.get(h) {
                 self.nodes[next].last_access = now;
+                // Refreshing an already-present free leaf invalidates its
+                // standing heap entry (lazy validation compares
+                // last_access), so it must be re-pushed here or it becomes
+                // permanently unevictable: under churn the heap drains and
+                // inserts truncate while unpinned leaves still exist.
+                // (Capacity-0 trees never evict: skip the push or the heap
+                // grows by one entry per repeated insert, unbounded.)
+                if self.capacity != 0
+                    && self.nodes[next].refcount == 0
+                    && self.nodes[next].children.is_empty()
+                {
+                    self.evict_heap.push(EvictCandidate {
+                        last_access: now,
+                        node: next,
+                    });
+                }
                 cur = next;
                 continue;
             }
@@ -147,14 +169,17 @@ impl RadixTree {
                 alive: true,
             });
             self.nodes[cur].children.insert(*h, idx);
-            self.evict_heap.push(EvictCandidate {
-                last_access: now,
-                node: idx,
-            });
+            if self.capacity != 0 {
+                self.evict_heap.push(EvictCandidate {
+                    last_access: now,
+                    node: idx,
+                });
+            }
             self.used += 1;
             created += 1;
             cur = idx;
         }
+        self.maybe_compact_heap();
         created
     }
 
@@ -189,7 +214,8 @@ impl RadixTree {
             }
         }
         // Re-register the tail as an eviction candidate if it became free.
-        if cur != ROOT
+        if self.capacity != 0
+            && cur != ROOT
             && self.nodes[cur].refcount == 0
             && self.nodes[cur].children.is_empty()
         {
@@ -198,12 +224,21 @@ impl RadixTree {
                 node: cur,
             });
         }
+        self.maybe_compact_heap();
     }
 
     /// Evict one LRU unpinned leaf. `protect` (and its ancestors) are the
     /// path currently being inserted — never evict it. Returns false if
     /// nothing is evictable.
     fn evict_one(&mut self, protect: usize) -> bool {
+        // At most one still-valid heap entry can refer to the protected
+        // node (older duplicates fail the last_access check). Park it and
+        // restore it on exit: protection must SKIP the candidate, not
+        // discard it — dropping it left the tail leaf of a truncated
+        // insert permanently unevictable (empty heap, nothing ever
+        // re-pushes it on the router path, which never pins/unpins).
+        let mut deferred: Option<EvictCandidate> = None;
+        let mut evicted = false;
         while let Some(cand) = self.evict_heap.pop() {
             let n = &self.nodes[cand.node];
             // Lazy validation: the entry must still describe reality.
@@ -211,16 +246,11 @@ impl RadixTree {
                 || n.refcount != 0
                 || !n.children.is_empty()
                 || n.last_access != cand.last_access
-                || cand.node == protect
             {
-                // A protected candidate is still evictable later.
-                if n.alive
-                    && cand.node == protect
-                    && n.refcount == 0
-                    && n.children.is_empty()
-                {
-                    continue; // drop; re-pushed on next unpin/touch
-                }
+                continue; // stale: drop
+            }
+            if cand.node == protect {
+                deferred = Some(cand);
                 continue;
             }
             let parent = n.parent;
@@ -238,9 +268,37 @@ impl RadixTree {
                     node: parent,
                 });
             }
-            return true;
+            evicted = true;
+            break;
         }
-        false
+        if let Some(c) = deferred {
+            self.evict_heap.push(c);
+        }
+        evicted
+    }
+
+    /// Compact the lazy heap when stale entries dominate. Below capacity
+    /// nothing ever pops, so refresh re-pushes (one per repeated insert /
+    /// touch / unpin) would otherwise accumulate without bound. Dropping
+    /// entries that fail validation NOW is behavior-preserving:
+    /// `last_access` only moves forward (a stale entry can never validate
+    /// later), and every transition that makes a node evictable again —
+    /// last child evicted, unpin, refresh — pushes a fresh entry.
+    fn maybe_compact_heap(&mut self) {
+        if self.evict_heap.len() <= 4 * self.used.max(16) {
+            return;
+        }
+        let old = std::mem::take(&mut self.evict_heap);
+        self.evict_heap = old
+            .into_iter()
+            .filter(|c| {
+                let n = &self.nodes[c.node];
+                n.alive
+                    && n.refcount == 0
+                    && n.children.is_empty()
+                    && n.last_access == c.last_access
+            })
+            .collect();
     }
 
     fn alloc(&mut self, node: Node) -> usize {
@@ -404,10 +462,102 @@ mod tests {
         t.check_invariants().unwrap();
     }
 
+    /// Regression for the eviction-starvation bug: `insert` used to
+    /// refresh `last_access` on already-present leaves WITHOUT re-pushing
+    /// an eviction candidate. The stale heap entry then failed
+    /// `evict_one`'s lazy validation (`last_access != cand.last_access`),
+    /// the heap drained, and the refreshed leaf became permanently
+    /// unevictable — inserts truncated ("full and nothing evictable")
+    /// while unpinned leaves existed.
+    #[test]
+    fn reinserted_chain_stays_evictable() {
+        let mut t = RadixTree::new(2);
+        t.insert(&[1, 2], 0);
+        assert_eq!(t.used_blocks(), 2);
+        // Re-insert the same chain: pure refresh, no new blocks. Under the
+        // old code this silently dropped leaf 2 from the eviction heap.
+        assert_eq!(t.insert(&[1, 2], 5), 0);
+        // A new chain must still be able to evict its way in.
+        assert_eq!(t.insert(&[9], 10), 1, "eviction starved after refresh");
+        assert_eq!(t.match_prefix(&[9], 20, false), 1);
+        assert_eq!(t.match_prefix(&[1, 2], 20, false), 1, "leaf 2 evicted");
+        assert_eq!(t.total_evicted_blocks, 1);
+        t.check_invariants().unwrap();
+    }
+
+    /// Residual starvation shape: a truncated insert pops the protected
+    /// path tail as an (otherwise valid) eviction candidate. Dropping
+    /// that entry — instead of parking and restoring it — left the tail
+    /// leaf permanently unevictable on paths that never pin/unpin (the
+    /// router views), with the heap fully drained.
+    #[test]
+    fn truncated_insert_keeps_tail_evictable() {
+        let mut t = RadixTree::new(2);
+        // 3-block chain into a 2-block tree: block 3 triggers eviction
+        // with the freshly created leaf 2 protected; the insert truncates.
+        assert_eq!(t.insert(&[1, 2, 3], 10), 2);
+        assert_eq!(t.used_blocks(), 2);
+        // Leaf 2 must still be evictable by a later insert.
+        assert_eq!(t.insert(&[9], 20), 1, "protected candidate was discarded");
+        assert_eq!(t.match_prefix(&[9], 30, false), 1);
+        assert_eq!(t.total_evicted_blocks, 1);
+        t.check_invariants().unwrap();
+    }
+
+    /// Same starvation shape through repeated refresh cycles: every
+    /// resident leaf is refreshed (invalidating every standing heap
+    /// entry), then an over-capacity insert must still evict.
+    #[test]
+    fn refresh_cycles_never_starve_eviction() {
+        let mut t = RadixTree::new(8);
+        t.insert(&[1, 2, 3, 4], 0);
+        t.insert(&[10, 20, 30, 40], 1);
+        assert_eq!(t.used_blocks(), 8);
+        for round in 0..5u64 {
+            let now = 10 + round;
+            // Refresh both resident chains (no allocation, pure touch).
+            let r1 = t.match_prefix(&[1, 2, 3, 4], now, false);
+            assert_eq!(t.insert(&[1, 2, 3, 4][..r1], now), 0);
+            let r2 = t.match_prefix(&[10, 20, 30, 40], now, false);
+            assert_eq!(t.insert(&[10, 20, 30, 40][..r2], now), 0);
+            // Over-capacity probe: must always evict exactly one block.
+            assert_eq!(t.insert(&[1000 + round], 100 + round), 1, "starved at round {round}");
+            assert_eq!(t.used_blocks(), 8);
+        }
+        assert!(t.total_evicted_blocks >= 5);
+        t.check_invariants().unwrap();
+    }
+
+    /// Below capacity nothing ever pops the lazy heap, so the refresh
+    /// re-push (starvation fix) must not let it grow with request count.
+    #[test]
+    fn refresh_heap_stays_bounded_below_capacity() {
+        let mut t = RadixTree::new(1024);
+        t.insert(&[1, 2, 3], 0);
+        for now in 1..5000u64 {
+            t.insert(&[1, 2, 3], now); // pure refresh, one push each
+        }
+        assert!(
+            t.evict_heap.len() <= 4 * t.used_blocks().max(16),
+            "heap leaked: {} entries for {} blocks",
+            t.evict_heap.len(),
+            t.used_blocks()
+        );
+        // Compaction must not have cost evictability.
+        let mut full = RadixTree::new(3);
+        full.insert(&[1, 2, 3], 0);
+        for now in 1..5000u64 {
+            full.insert(&[1, 2, 3], now);
+        }
+        assert_eq!(full.insert(&[9], 9000), 1);
+        full.check_invariants().unwrap();
+    }
+
     #[test]
     fn heavy_churn_keeps_invariants() {
         let mut t = RadixTree::new(64);
         let mut rng = crate::util::Rng::new(42);
+        let mut last_evicted = 0u64;
         for step in 0..2000u64 {
             let base = rng.gen_range(0, 8);
             let len = rng.gen_range(1, 12) as usize;
@@ -425,6 +575,9 @@ mod tests {
                     t.unpin(&chain, len, step + 1);
                 }
             }
+            // Lifetime eviction counter is monotone under churn.
+            assert!(t.total_evicted_blocks >= last_evicted);
+            last_evicted = t.total_evicted_blocks;
             if step % 101 == 0 {
                 t.check_invariants().unwrap();
             }
@@ -432,5 +585,14 @@ mod tests {
         t.check_invariants().unwrap();
         assert!(t.used_blocks() <= 64);
         assert!(t.total_evicted_blocks > 0);
+        // Eviction never starves: everything is unpinned by now, so an
+        // over-capacity insert of a fresh chain must always evict its way
+        // in rather than truncate.
+        let evicted_before = t.total_evicted_blocks;
+        let probe: Vec<u64> = (0..64u64).map(|i| 999_000 + i).collect();
+        assert_eq!(t.insert(&probe, 10_000), 64, "eviction starved after churn");
+        assert!(t.total_evicted_blocks > evicted_before);
+        assert!(t.used_blocks() <= 64);
+        t.check_invariants().unwrap();
     }
 }

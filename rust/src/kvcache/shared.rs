@@ -1,0 +1,730 @@
+//! The shared multi-instance prefix index: ONE radix tree over block-hash
+//! chains whose nodes carry a per-instance presence bitmask, replacing N
+//! independent per-instance radix mirrors on the router's hot path.
+//!
+//! A single walk from the root answers `KV$.match(req)` for *every*
+//! instance at once: the walk ANDs node masks into a shrinking live-set,
+//! and the depth at which an instance's bit drops out is that instance's
+//! hit length — N× fewer hash-chain walks than the mirror design, and the
+//! surviving first-level mask is exactly the hotspot detector's M-set
+//! (instances holding any prefix of the request), produced for free.
+//!
+//! Writes (the router's optimistic insert at route time, authoritative
+//! insert at response time) touch a single instance and replicate the
+//! per-instance mirror semantics *exactly* — including per-instance LRU
+//! eviction with the same lazy-heap algorithm, timestamps, slot-index
+//! tie-breaks and free-list reuse order as [`super::RadixTree`] — so
+//! routing decisions are bit-identical to the N-mirror design (see the
+//! equivalence tests in `kvcache/mod.rs` and `tests/policy_semantics.rs`).
+//! Nodes no instance holds are unlinked from the shared structure.
+//!
+//! Presence closure invariant: a node's mask is a subset of its parent's
+//! (an instance holding a block holds the whole prefix), which is what
+//! makes the single-walk AND correct and guarantees that an empty-mask
+//! node has no children left to orphan.
+
+use std::collections::{BinaryHeap, HashMap};
+
+use crate::core::InstanceMask;
+use crate::util::FastHash;
+
+const ROOT: usize = 0;
+const NONE: usize = usize::MAX;
+
+#[derive(Debug)]
+struct SharedNode {
+    hash: u64,
+    parent: usize,
+    children: HashMap<u64, usize, FastHash>,
+    alive: bool,
+}
+
+/// Max-heap entry ordered by *oldest* access first; ties break on the
+/// smaller per-instance slot — the same ordering as the per-instance
+/// mirror's `(last_access, node)` candidates.
+#[derive(Debug, PartialEq, Eq)]
+struct EvictCandidate {
+    last_access: u64,
+    slot: usize,
+}
+
+impl Ord for EvictCandidate {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other
+            .last_access
+            .cmp(&self.last_access)
+            .then(other.slot.cmp(&self.slot))
+    }
+}
+impl PartialOrd for EvictCandidate {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Per-(node, instance) LRU metadata, kept only for blocks the instance
+/// actually holds.
+#[derive(Debug)]
+struct InstMeta {
+    last_access: u64,
+    /// Children of this node present on this instance (0 = instance-leaf).
+    children: u32,
+    /// The instance-local node id, replicating the index a dedicated
+    /// per-instance mirror would have allocated (monotone counter + LIFO
+    /// free-list reuse) so eviction tie-breaks match the mirror exactly.
+    slot: usize,
+}
+
+/// Per-instance eviction state (used blocks, lazy heap, slot allocator).
+#[derive(Debug)]
+struct InstanceState {
+    used: usize,
+    meta: HashMap<usize, InstMeta, FastHash>,
+    heap: BinaryHeap<EvictCandidate>,
+    free_slots: Vec<usize>,
+    next_slot: usize,
+    /// slot -> shared node index currently occupying it (NONE = free).
+    slot_node: Vec<usize>,
+}
+
+impl InstanceState {
+    fn new() -> Self {
+        InstanceState {
+            used: 0,
+            meta: HashMap::default(),
+            heap: BinaryHeap::new(),
+            free_slots: Vec::new(),
+            // Slot 0 is the root sentinel (mirrors index their root at 0
+            // and never push it), so real slots start at 1.
+            next_slot: 1,
+            slot_node: vec![NONE],
+        }
+    }
+}
+
+/// The shared presence-mask prefix index. `capacity` is per-instance, in
+/// blocks (0 = unbounded), matching the per-instance mirror semantics.
+#[derive(Debug)]
+pub struct SharedRadixIndex {
+    n_instances: usize,
+    /// Mask words per node: ceil(n_instances / 64) — growable past 64.
+    words: usize,
+    capacity: usize,
+    nodes: Vec<SharedNode>,
+    /// Flat node masks: `masks[node*words .. (node+1)*words]`.
+    masks: Vec<u64>,
+    free_nodes: Vec<usize>,
+    inst: Vec<InstanceState>,
+    /// Scratch live-set for the match walk (no per-request allocation).
+    live: Vec<u64>,
+    /// Cumulative lookup accounting, aggregated over instances.
+    pub total_lookup_blocks: u64,
+    pub total_hit_blocks: u64,
+    pub total_evicted_blocks: u64,
+}
+
+impl SharedRadixIndex {
+    /// `capacity_blocks` is per instance; 0 means unbounded.
+    pub fn new(n_instances: usize, capacity_blocks: usize) -> Self {
+        let words = (n_instances + 63) / 64;
+        SharedRadixIndex {
+            n_instances,
+            words,
+            capacity: capacity_blocks,
+            nodes: vec![SharedNode {
+                hash: 0,
+                parent: ROOT,
+                children: HashMap::default(),
+                alive: true,
+            }],
+            masks: vec![0; words],
+            free_nodes: Vec::new(),
+            inst: (0..n_instances).map(|_| InstanceState::new()).collect(),
+            live: vec![0; words],
+            total_lookup_blocks: 0,
+            total_hit_blocks: 0,
+            total_evicted_blocks: 0,
+        }
+    }
+
+    pub fn n_instances(&self) -> usize {
+        self.n_instances
+    }
+
+    pub fn capacity_blocks(&self) -> usize {
+        self.capacity
+    }
+
+    /// Blocks instance `inst` currently holds.
+    pub fn used_blocks(&self, inst: usize) -> usize {
+        self.inst[inst].used
+    }
+
+    #[inline]
+    fn mask_get(&self, node: usize, i: usize) -> bool {
+        self.masks[node * self.words + i / 64] & (1u64 << (i % 64)) != 0
+    }
+
+    #[inline]
+    fn mask_set(&mut self, node: usize, i: usize) {
+        self.masks[node * self.words + i / 64] |= 1u64 << (i % 64);
+    }
+
+    #[inline]
+    fn mask_clear(&mut self, node: usize, i: usize) {
+        self.masks[node * self.words + i / 64] &= !(1u64 << (i % 64));
+    }
+
+    fn mask_is_empty(&self, node: usize) -> bool {
+        self.masks[node * self.words..(node + 1) * self.words]
+            .iter()
+            .all(|&w| w == 0)
+    }
+
+    /// One walk, all instances: fills `hit_blocks[i]` with the number of
+    /// leading blocks of `hashes` instance `i` holds, and `matched` with
+    /// the set of instances holding ≥ 1 block (the hotspot M-set).
+    /// Allocation-free in steady state (buffers are reused).
+    pub fn match_into(
+        &mut self,
+        hashes: &[u64],
+        hit_blocks: &mut Vec<usize>,
+        matched: &mut InstanceMask,
+    ) {
+        let n = self.n_instances;
+        let words = self.words;
+        hit_blocks.clear();
+        hit_blocks.resize(n, 0);
+        matched.reset(n);
+        self.live.clear();
+        self.live.resize(words, 0);
+        for w in 0..words {
+            let rem = n - w * 64;
+            self.live[w] = if rem >= 64 { u64::MAX } else { (1u64 << rem) - 1 };
+        }
+        let mut cur = ROOT;
+        let mut depth = 0usize;
+        for h in hashes {
+            let Some(&next) = self.nodes[cur].children.get(h) else {
+                break;
+            };
+            let mask = &self.masks[next * words..(next + 1) * words];
+            let mut any = false;
+            for w in 0..words {
+                let dropped = self.live[w] & !mask[w];
+                if dropped != 0 {
+                    // Instances leaving the live-set matched exactly the
+                    // blocks BEFORE this node.
+                    let mut bits = dropped;
+                    while bits != 0 {
+                        let b = bits.trailing_zeros() as usize;
+                        hit_blocks[w * 64 + b] = depth;
+                        bits &= bits - 1;
+                    }
+                    self.live[w] &= mask[w];
+                }
+                if self.live[w] != 0 {
+                    any = true;
+                }
+            }
+            if !any {
+                break; // no instance holds this block
+            }
+            depth += 1;
+            if depth == 1 {
+                // Survivors of the first block are exactly the instances
+                // holding ≥ 1 block of this prompt.
+                matched.copy_from_words(&self.live);
+            }
+            cur = next;
+        }
+        // Instances that survived the whole walk matched `depth` blocks.
+        for w in 0..words {
+            let mut bits = self.live[w];
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                hit_blocks[w * 64 + b] = depth;
+                bits &= bits - 1;
+            }
+        }
+        self.total_lookup_blocks += (hashes.len() * n) as u64;
+        self.total_hit_blocks += hit_blocks.iter().sum::<usize>() as u64;
+    }
+
+    /// Insert the chain for one instance, evicting that instance's LRU
+    /// blocks as needed — byte-for-byte the per-instance mirror's insert
+    /// semantics (including the re-push of refreshed free leaves; see the
+    /// starvation regression in `radix.rs`). Returns new blocks added for
+    /// this instance; on capacity pressure with nothing evictable, inserts
+    /// as many leading blocks as fit.
+    pub fn insert(&mut self, inst_id: usize, hashes: &[u64], now: u64) -> usize {
+        let mut cur = ROOT;
+        let mut cur_slot = 0usize; // root sentinel; never a candidate slot
+        let mut created = 0usize;
+        for h in hashes {
+            let child = self.nodes[cur].children.get(h).copied();
+            if let Some(c) = child {
+                if self.mask_get(c, inst_id) {
+                    // Already present: refresh LRU state; free leaves are
+                    // re-pushed so they stay evictable.
+                    let state = &mut self.inst[inst_id];
+                    let m = state.meta.get_mut(&c).expect("present bit without meta");
+                    m.last_access = now;
+                    let slot = m.slot;
+                    let is_leaf = m.children == 0;
+                    if self.capacity != 0 && is_leaf {
+                        state.heap.push(EvictCandidate {
+                            last_access: now,
+                            slot,
+                        });
+                    }
+                    cur = c;
+                    cur_slot = slot;
+                    continue;
+                }
+            }
+            // The instance doesn't hold this block: make room, then add
+            // its presence (reusing the shared node when one exists).
+            if self.capacity != 0
+                && self.inst[inst_id].used >= self.capacity
+                && !self.evict_one(inst_id, cur_slot)
+            {
+                break; // full and nothing evictable
+            }
+            let idx = match child {
+                Some(c) => c,
+                None => self.alloc_node(*h, cur),
+            };
+            self.mask_set(idx, inst_id);
+            let push_candidate = self.capacity != 0;
+            let state = &mut self.inst[inst_id];
+            let slot = match state.free_slots.pop() {
+                Some(s) => s,
+                None => {
+                    let s = state.next_slot;
+                    state.next_slot += 1;
+                    s
+                }
+            };
+            if slot >= state.slot_node.len() {
+                state.slot_node.resize(slot + 1, NONE);
+            }
+            state.slot_node[slot] = idx;
+            state.meta.insert(
+                idx,
+                InstMeta {
+                    last_access: now,
+                    children: 0,
+                    slot,
+                },
+            );
+            if push_candidate {
+                state.heap.push(EvictCandidate {
+                    last_access: now,
+                    slot,
+                });
+            }
+            state.used += 1;
+            if cur != ROOT {
+                state
+                    .meta
+                    .get_mut(&cur)
+                    .expect("parent missing instance meta")
+                    .children += 1;
+            }
+            created += 1;
+            cur = idx;
+            cur_slot = slot;
+        }
+        self.maybe_compact_heap(inst_id);
+        created
+    }
+
+    /// Compact an instance's lazy heap when stale entries dominate —
+    /// the same trigger and validity predicate as
+    /// `RadixTree::maybe_compact_heap`, so mirror equivalence is
+    /// preserved (identical push sequences give identical lengths, and
+    /// dropping now-invalid entries is behavior-preserving: they can
+    /// never validate again, and every evictability transition re-pushes).
+    fn maybe_compact_heap(&mut self, inst_id: usize) {
+        let state = &mut self.inst[inst_id];
+        if state.heap.len() <= 4 * state.used.max(16) {
+            return;
+        }
+        let old = std::mem::take(&mut state.heap);
+        let meta = &state.meta;
+        let slot_node = &state.slot_node;
+        state.heap = old
+            .into_iter()
+            .filter(|c| {
+                let node = slot_node.get(c.slot).copied().unwrap_or(NONE);
+                if node == NONE {
+                    return false;
+                }
+                match meta.get(&node) {
+                    Some(m) => {
+                        m.slot == c.slot
+                            && m.children == 0
+                            && m.last_access == c.last_access
+                    }
+                    None => false,
+                }
+            })
+            .collect();
+    }
+
+    /// Evict one LRU block of `inst_id`. `protect_slot` is the slot of the
+    /// path node currently being extended (0 = root sentinel) — never
+    /// evicted mid-insert. Returns false if nothing is evictable.
+    fn evict_one(&mut self, inst_id: usize, protect_slot: usize) -> bool {
+        // Same deferred-candidate discipline as `RadixTree::evict_one`:
+        // a valid-but-protected entry is parked and restored on exit, so
+        // protection skips it without discarding it (dropping it starved
+        // eviction after a truncated insert — see the regression tests).
+        let mut deferred: Option<EvictCandidate> = None;
+        let mut evicted = false;
+        while let Some(cand) = self.inst[inst_id].heap.pop() {
+            let node = self.inst[inst_id]
+                .slot_node
+                .get(cand.slot)
+                .copied()
+                .unwrap_or(NONE);
+            if node == NONE {
+                continue;
+            }
+            // Lazy validation: the entry must still describe reality
+            // (instance-leaf, timestamp unchanged since push).
+            let valid = match self.inst[inst_id].meta.get(&node) {
+                Some(m) => {
+                    m.slot == cand.slot
+                        && m.children == 0
+                        && m.last_access == cand.last_access
+                }
+                None => false,
+            };
+            if !valid {
+                continue;
+            }
+            if cand.slot == protect_slot {
+                deferred = Some(cand);
+                continue;
+            }
+            self.mask_clear(node, inst_id);
+            let parent = self.nodes[node].parent;
+            {
+                let state = &mut self.inst[inst_id];
+                state.meta.remove(&node);
+                state.slot_node[cand.slot] = NONE;
+                state.free_slots.push(cand.slot);
+                state.used -= 1;
+                if parent != ROOT {
+                    if let Some(pm) = state.meta.get_mut(&parent) {
+                        pm.children -= 1;
+                        if pm.children == 0 {
+                            // Parent became this instance's leaf.
+                            let (la, slot) = (pm.last_access, pm.slot);
+                            state.heap.push(EvictCandidate {
+                                last_access: la,
+                                slot,
+                            });
+                        }
+                    }
+                }
+            }
+            self.total_evicted_blocks += 1;
+            // Shared-structure GC: unlink nodes no instance holds. By the
+            // closure invariant such a node has no live children.
+            if self.mask_is_empty(node) {
+                debug_assert!(
+                    self.nodes[node].children.is_empty(),
+                    "presence closure violated"
+                );
+                let hash = self.nodes[node].hash;
+                self.nodes[parent].children.remove(&hash);
+                self.nodes[node].alive = false;
+                self.free_nodes.push(node);
+            }
+            evicted = true;
+            break;
+        }
+        if let Some(c) = deferred {
+            self.inst[inst_id].heap.push(c);
+        }
+        evicted
+    }
+
+    fn alloc_node(&mut self, hash: u64, parent: usize) -> usize {
+        let idx = if let Some(idx) = self.free_nodes.pop() {
+            debug_assert!(
+                self.masks[idx * self.words..(idx + 1) * self.words]
+                    .iter()
+                    .all(|&w| w == 0),
+                "recycled node with live presence bits"
+            );
+            let n = &mut self.nodes[idx];
+            debug_assert!(n.children.is_empty());
+            n.hash = hash;
+            n.parent = parent;
+            n.alive = true;
+            idx
+        } else {
+            self.nodes.push(SharedNode {
+                hash,
+                parent,
+                children: HashMap::default(),
+                alive: true,
+            });
+            self.masks.resize(self.nodes.len() * self.words, 0);
+            self.nodes.len() - 1
+        };
+        self.nodes[parent].children.insert(hash, idx);
+        idx
+    }
+
+    /// Lifetime block hit rate across all instances.
+    pub fn hit_rate(&self) -> f64 {
+        if self.total_lookup_blocks == 0 {
+            0.0
+        } else {
+            self.total_hit_blocks as f64 / self.total_lookup_blocks as f64
+        }
+    }
+
+    /// Invariant checker used by the property/equivalence tests.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let words = self.words;
+        let mut per_inst_live = vec![0usize; self.n_instances];
+        for (i, n) in self.nodes.iter().enumerate() {
+            if !n.alive {
+                continue;
+            }
+            if i != ROOT {
+                let p = &self.nodes[n.parent];
+                if !p.alive {
+                    return Err(format!("node {i} has dead parent {}", n.parent));
+                }
+                if p.children.get(&n.hash) != Some(&i) {
+                    return Err(format!("node {i} not linked from parent"));
+                }
+                let mut empty = true;
+                for w in 0..words {
+                    let nm = self.masks[i * words + w];
+                    // The root implicitly holds everything.
+                    let pm = if n.parent == ROOT {
+                        u64::MAX
+                    } else {
+                        self.masks[n.parent * words + w]
+                    };
+                    if nm & !pm != 0 {
+                        return Err(format!("presence closure violated at node {i}"));
+                    }
+                    if nm != 0 {
+                        empty = false;
+                    }
+                }
+                if empty {
+                    return Err(format!("alive node {i} held by no instance"));
+                }
+                for inst in 0..self.n_instances {
+                    if self.mask_get(i, inst) {
+                        per_inst_live[inst] += 1;
+                    }
+                }
+            }
+            for (&h, &c) in &n.children {
+                let ch = &self.nodes[c];
+                if !ch.alive || ch.parent != i || ch.hash != h {
+                    return Err(format!("bad child link {i}->{c}"));
+                }
+            }
+        }
+        for (inst, state) in self.inst.iter().enumerate() {
+            if state.used != per_inst_live[inst] {
+                return Err(format!(
+                    "instance {inst}: used={} but mask bits={}",
+                    state.used, per_inst_live[inst]
+                ));
+            }
+            if self.capacity != 0 && state.used > self.capacity {
+                return Err(format!(
+                    "instance {inst} over capacity: {}>{}",
+                    state.used, self.capacity
+                ));
+            }
+            if state.meta.len() != state.used {
+                return Err(format!(
+                    "instance {inst}: meta {} entries vs used {}",
+                    state.meta.len(),
+                    state.used
+                ));
+            }
+            for (&node, m) in &state.meta {
+                if !self.nodes[node].alive || !self.mask_get(node, inst) {
+                    return Err(format!("instance {inst}: meta for absent node {node}"));
+                }
+                if state.slot_node.get(m.slot).copied().unwrap_or(NONE) != node {
+                    return Err(format!("instance {inst}: slot map broken at node {node}"));
+                }
+                let cnt = self.nodes[node]
+                    .children
+                    .values()
+                    .filter(|&&c| self.mask_get(c, inst))
+                    .count() as u32;
+                if cnt != m.children {
+                    return Err(format!(
+                        "instance {inst}: node {node} children {} vs counted {cnt}",
+                        m.children
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hits(ix: &mut SharedRadixIndex, hashes: &[u64]) -> Vec<usize> {
+        let mut h = Vec::new();
+        let mut m = InstanceMask::default();
+        ix.match_into(hashes, &mut h, &mut m);
+        h
+    }
+
+    #[test]
+    fn one_walk_matches_all_instances() {
+        let mut ix = SharedRadixIndex::new(3, 0);
+        ix.insert(1, &[1, 2], 10);
+        ix.insert(2, &[1, 2, 3, 4], 20);
+        assert_eq!(hits(&mut ix, &[1, 2, 3, 4, 5]), vec![0, 2, 4]);
+        assert_eq!(hits(&mut ix, &[9]), vec![0, 0, 0]);
+        ix.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn matched_mask_is_first_block_survivors() {
+        let mut ix = SharedRadixIndex::new(4, 0);
+        ix.insert(0, &[1, 2], 0);
+        ix.insert(3, &[1], 0);
+        let mut h = Vec::new();
+        let mut m = InstanceMask::default();
+        ix.match_into(&[1, 2, 3], &mut h, &mut m);
+        assert_eq!(h, vec![2, 0, 0, 1]);
+        assert_eq!(m.iter_ones().collect::<Vec<_>>(), vec![0, 3]);
+        // A miss leaves the mask empty.
+        ix.match_into(&[7, 8], &mut h, &mut m);
+        assert_eq!(h, vec![0; 4]);
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn per_instance_capacity_and_eviction() {
+        let mut ix = SharedRadixIndex::new(2, 4);
+        ix.insert(0, &[1, 2], 0);
+        ix.insert(0, &[10, 20], 100);
+        // Instance 0 is at capacity; instance 1 untouched.
+        ix.insert(0, &[30], 200); // evicts instance-0 LRU leaf (2)
+        assert_eq!(ix.used_blocks(0), 4);
+        assert_eq!(ix.used_blocks(1), 0);
+        assert_eq!(hits(&mut ix, &[1, 2]), vec![1, 0]);
+        assert_eq!(hits(&mut ix, &[10, 20]), vec![2, 0]);
+        assert_eq!(hits(&mut ix, &[30]), vec![1, 0]);
+        // Instance 1 has its own budget: same chains fit fresh.
+        ix.insert(1, &[1, 2], 300);
+        assert_eq!(ix.used_blocks(1), 2);
+        ix.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn shared_node_gc_when_no_instance_holds_it() {
+        let mut ix = SharedRadixIndex::new(2, 2);
+        ix.insert(0, &[1, 2], 0);
+        // Evict everything on instance 0 by churning fresh chains through.
+        ix.insert(0, &[7], 10);
+        ix.insert(0, &[8], 20);
+        ix.insert(0, &[9], 30);
+        ix.check_invariants().unwrap();
+        assert!(ix.total_evicted_blocks >= 2);
+        // GC reclaims empty-mask nodes: the churn above reuses them, so
+        // the arena never grows past root + the two original blocks.
+        assert_eq!(ix.nodes.len(), 3);
+    }
+
+    #[test]
+    fn refreshed_leaves_stay_evictable_per_instance() {
+        // The same starvation regression as RadixTree, through the shared
+        // index: refresh then over-capacity insert must still evict.
+        let mut ix = SharedRadixIndex::new(1, 2);
+        ix.insert(0, &[1, 2], 0);
+        assert_eq!(ix.insert(0, &[1, 2], 5), 0); // pure refresh
+        assert_eq!(ix.insert(0, &[9], 10), 1, "eviction starved");
+        assert_eq!(hits(&mut ix, &[9]), vec![1]);
+        ix.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn truncated_insert_keeps_tail_evictable() {
+        // A truncated insert pops the protected path tail as a valid
+        // candidate; it must be parked and restored, not discarded, or
+        // the instance's eviction heap drains permanently.
+        let mut ix = SharedRadixIndex::new(1, 2);
+        assert_eq!(ix.insert(0, &[1, 2, 3], 10), 2);
+        assert_eq!(ix.insert(0, &[9], 20), 1, "protected candidate was discarded");
+        assert_eq!(hits(&mut ix, &[9]), vec![1]);
+        ix.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn supports_more_than_64_instances() {
+        let n = 70;
+        let mut ix = SharedRadixIndex::new(n, 8);
+        ix.insert(68, &[1, 2, 3], 0);
+        ix.insert(1, &[1, 2], 1);
+        let mut h = Vec::new();
+        let mut m = InstanceMask::default();
+        ix.match_into(&[1, 2, 3], &mut h, &mut m);
+        assert_eq!(h.len(), n);
+        assert_eq!(h[68], 3);
+        assert_eq!(h[1], 2);
+        assert_eq!(h[0], 0);
+        assert_eq!(m.iter_ones().collect::<Vec<_>>(), vec![1, 68]);
+        ix.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn truncates_when_everything_unevictable() {
+        // capacity 1, chain of 3: only the first block fits, and the
+        // in-flight path node is protected from self-eviction.
+        let mut ix = SharedRadixIndex::new(1, 1);
+        assert_eq!(ix.insert(0, &[1, 2, 3], 0), 1);
+        assert_eq!(ix.used_blocks(0), 1);
+        assert_eq!(hits(&mut ix, &[1, 2, 3]), vec![1]);
+        ix.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn refresh_heap_stays_bounded_below_capacity() {
+        let mut ix = SharedRadixIndex::new(2, 1024);
+        ix.insert(0, &[1, 2, 3], 0);
+        for now in 1..5000u64 {
+            ix.insert(0, &[1, 2, 3], now); // pure refresh, one push each
+        }
+        assert!(
+            ix.inst[0].heap.len() <= 4 * ix.used_blocks(0).max(16),
+            "heap leaked: {} entries for {} blocks",
+            ix.inst[0].heap.len(),
+            ix.used_blocks(0)
+        );
+        ix.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn hit_accounting_aggregates_instances() {
+        let mut ix = SharedRadixIndex::new(2, 0);
+        ix.insert(0, &[1, 2], 0);
+        hits(&mut ix, &[1, 2]); // inst0: 2/2, inst1: 0/2
+        assert!((ix.hit_rate() - 0.5).abs() < 1e-12);
+    }
+}

@@ -110,7 +110,8 @@ fn cmd_compare(flags: &HashMap<String, String>) {
         let mut pol = policy::build_default(name, &profile, exp.chunk_budget).unwrap();
         let m = run_des(&cfg, &trace, pol.as_mut());
         rows.push(
-            ResultRow::from_metrics(&pol.name(), &m).with("throughput_tok_s", m.output_throughput()),
+            ResultRow::from_metrics(&pol.name(), &m)
+                .with("throughput_tok_s", m.output_throughput()),
         );
     }
     println!("{}", render_table(&format!("{} / {}", exp.workload, exp.profile), &rows));

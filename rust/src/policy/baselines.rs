@@ -62,14 +62,7 @@ mod tests {
     use crate::router::Indicators;
 
     fn ctx(n: usize) -> RouteCtx {
-        RouteCtx {
-            now_us: 0,
-            req_id: 0,
-            class_id: 0,
-            input_len: 10,
-            hit_tokens: vec![0; n],
-            inds: vec![Indicators::default(); n],
-        }
+        RouteCtx::new(0, 0, 0, 10, vec![0; n], vec![Indicators::default(); n])
     }
 
     #[test]

@@ -45,14 +45,8 @@ mod tests {
         let mut i0 = Indicators::default();
         i0.total_context_tokens = 10_000; // heavy decode load
         let i1 = Indicators::default();
-        let ctx = RouteCtx {
-            now_us: 0,
-            req_id: 0,
-            class_id: 0,
-            input_len: 1000,
-            hit_tokens: vec![1000, 0], // full hit on the loaded one
-            inds: vec![i0, i1],
-        };
+        // full hit on the loaded one
+        let ctx = RouteCtx::new(0, 0, 0, 1000, vec![1000, 0], vec![i0, i1]);
         // KV-dominant α: hit instance wins despite decode load.
         assert_eq!(Dynamo::new(0.9).route(&ctx).instance, 0);
         // Load-dominant α: idle instance wins.

@@ -51,14 +51,7 @@ mod tests {
                 ..Default::default()
             })
             .collect();
-        RouteCtx {
-            now_us: 0,
-            req_id: 0,
-            class_id: 0,
-            input_len: 100,
-            hit_tokens: hits,
-            inds,
-        }
+        RouteCtx::new(0, 0, 0, 100, hits, inds)
     }
 
     #[test]

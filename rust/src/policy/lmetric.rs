@@ -100,14 +100,7 @@ mod tests {
                 ..Default::default()
             })
             .collect();
-        RouteCtx {
-            now_us: 0,
-            req_id: 0,
-            class_id: 0,
-            input_len: input,
-            hit_tokens: hits,
-            inds,
-        }
+        RouteCtx::new(0, 0, 0, input, hits, inds)
     }
 
     #[test]
@@ -174,14 +167,7 @@ mod tests {
             total_context_tokens: 100,
             ..Default::default()
         };
-        let c = RouteCtx {
-            now_us: 0,
-            req_id: 0,
-            class_id: 0,
-            input_len: 100,
-            hit_tokens: vec![0, 0],
-            inds: vec![i0, i1],
-        };
+        let c = RouteCtx::new(0, 0, 0, 100, vec![0, 0], vec![i0, i1]);
         let mut tok = LMetric::new(KvAwareIndicator::PToken, LoadIndicator::TotalTokens);
         let mut bs = LMetric::paper();
         assert_eq!(tok.route(&c).instance, 1, "#Tokens variant avoids big ctx");

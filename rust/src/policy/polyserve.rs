@@ -82,14 +82,7 @@ mod tests {
         let mut i2 = Indicators::default();
         i2.r_bs = 200;
         i2.total_context_tokens = 200 * 2000;
-        RouteCtx {
-            now_us: 0,
-            req_id: 0,
-            class_id: 0,
-            input_len: 500,
-            hit_tokens: vec![0, 0, 0],
-            inds: vec![i0, i1, i2],
-        }
+        RouteCtx::new(0, 0, 0, 500, vec![0, 0, 0], vec![i0, i1, i2])
     }
 
     #[test]

@@ -126,14 +126,7 @@ mod tests {
 
     fn ctx(now: u64, hits: Vec<usize>, input: usize) -> RouteCtx {
         let n = hits.len();
-        RouteCtx {
-            now_us: now,
-            req_id: 0,
-            class_id: 0,
-            input_len: input,
-            hit_tokens: hits,
-            inds: vec![Indicators::default(); n],
-        }
+        RouteCtx::new(now, 0, 0, input, hits, vec![Indicators::default(); n])
     }
 
     #[test]

@@ -47,14 +47,7 @@ mod tests {
         let mut p = SimBased::new(sim);
         let mut busy = Indicators::default();
         busy.queued_prefill_tokens = 50_000;
-        let ctx = RouteCtx {
-            now_us: 0,
-            req_id: 0,
-            class_id: 0,
-            input_len: 1000,
-            hit_tokens: vec![0, 0],
-            inds: vec![busy, Indicators::default()],
-        };
+        let ctx = RouteCtx::new(0, 0, 0, 1000, vec![0, 0], vec![busy, Indicators::default()]);
         let d = p.route(&ctx);
         assert_eq!(d.instance, 1);
         assert!(d.predicted_ttft_us.unwrap() > 0.0);
@@ -66,14 +59,14 @@ mod tests {
         // implicitly KV$-aware (a "higher-order combination", §4.6).
         let sim = LatencySimulator::tuned(ModelProfile::moe_30b(), 256);
         let mut p = SimBased::new(sim);
-        let ctx = RouteCtx {
-            now_us: 0,
-            req_id: 0,
-            class_id: 0,
-            input_len: 2000,
-            hit_tokens: vec![1600, 0],
-            inds: vec![Indicators::default(), Indicators::default()],
-        };
+        let ctx = RouteCtx::new(
+            0,
+            0,
+            0,
+            2000,
+            vec![1600, 0],
+            vec![Indicators::default(), Indicators::default()],
+        );
         assert_eq!(p.route(&ctx).instance, 0);
     }
 }

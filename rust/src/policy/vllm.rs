@@ -43,14 +43,8 @@ mod tests {
         inds[0].r_bs = 0;
         inds[1].q_bs = 0;
         inds[1].r_bs = 7; // score 7
-        let ctx = RouteCtx {
-            now_us: 0,
-            req_id: 0,
-            class_id: 0,
-            input_len: 100,
-            hit_tokens: vec![100, 0], // hits are IGNORED by design
-            inds,
-        };
+        // hits are IGNORED by design
+        let ctx = RouteCtx::new(0, 0, 0, 100, vec![100, 0], inds);
         let mut p = Vllm::new();
         assert_eq!(p.route(&ctx).instance, 1);
     }

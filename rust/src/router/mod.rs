@@ -5,13 +5,23 @@
 //! instance — refreshed whenever a response arrives, exactly as stale as
 //! the real system's — plus (b) router-side *optimistic deltas* applied at
 //! routing time (the router knows what it just sent where), and (c) the
-//! per-instance KV$ radix mirrors ([`RouterKvView`]).
+//! shared multi-instance KV$ prefix index
+//! ([`RouterKvView`](crate::kvcache::RouterKvView)): one radix tree whose
+//! nodes carry a per-instance presence bitmask, so one walk per request
+//! yields every instance's hit length at once.
 //!
 //! A scheduling policy is a function from a [`RouteCtx`] — the request's
 //! per-instance indicator values — to an instance choice, mirroring the
 //! paper's Fig. 4 programming model (`score` + `select_min`).
+//!
+//! **Hot-path contract:** [`IndicatorFactory::route_ctx`] fills reusable
+//! scratch buffers (`hit_tokens`, `inds`, `matched_mask`) and hands the
+//! policy a *borrowed* [`RouteCtx`]; steady-state routing performs zero
+//! heap allocation. Commit the decision with
+//! [`IndicatorFactory::on_route`] immediately after (it consumes the
+//! scratch state of the same request).
 
-use crate::core::Request;
+use crate::core::{InstanceMask, Request};
 use crate::engine::InstanceSnapshot;
 use crate::kvcache::RouterKvView;
 
@@ -35,7 +45,7 @@ impl Indicators {
 }
 
 /// Everything a policy may consult for one routing decision.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct RouteCtx {
     pub now_us: u64,
     pub req_id: u64,
@@ -43,10 +53,43 @@ pub struct RouteCtx {
     pub input_len: usize,
     /// Prompt tokens already cached per instance (block-aligned).
     pub hit_tokens: Vec<usize>,
+    /// Instances holding ≥ 1 cached block of this prompt — the hotspot
+    /// detector's M-set, produced by the shared-index walk for free.
+    /// Invariant: bit `i` set ⟺ `hit_tokens[i] > 0`.
+    pub matched_mask: InstanceMask,
     pub inds: Vec<Indicators>,
 }
 
 impl RouteCtx {
+    /// Build a context, deriving `matched_mask` from `hit_tokens` (the
+    /// factory's hot path fills the mask directly from the index walk;
+    /// tests and offline tools construct contexts through here).
+    pub fn new(
+        now_us: u64,
+        req_id: u64,
+        class_id: u32,
+        input_len: usize,
+        hit_tokens: Vec<usize>,
+        inds: Vec<Indicators>,
+    ) -> Self {
+        let matched_mask = InstanceMask::from_hit_tokens(&hit_tokens);
+        RouteCtx {
+            now_us,
+            req_id,
+            class_id,
+            input_len,
+            hit_tokens,
+            matched_mask,
+            inds,
+        }
+    }
+
+    /// Re-derive `matched_mask` from `hit_tokens` — call after mutating
+    /// `hit_tokens` directly (tests crafting adversarial states).
+    pub fn recompute_matched_mask(&mut self) {
+        self.matched_mask.fill_from_hit_tokens(&self.hit_tokens);
+    }
+
     pub fn n(&self) -> usize {
         self.inds.len()
     }
@@ -117,7 +160,8 @@ pub fn select_max(ctx: &RouteCtx, score: impl Fn(usize) -> f64) -> usize {
 }
 
 /// The indicator factory (§3): holds stale snapshots + optimistic deltas
-/// + KV$ mirrors; builds [`RouteCtx`]s; absorbs response piggybacks.
+/// + the shared KV$ prefix index; builds [`RouteCtx`]s into reusable
+/// scratch buffers; absorbs response piggybacks.
 pub struct IndicatorFactory {
     snapshots: Vec<InstanceSnapshot>,
     // Optimistic deltas since the instance's last response.
@@ -125,6 +169,8 @@ pub struct IndicatorFactory {
     opt_prefill_tokens: Vec<usize>,
     opt_ctx_tokens: Vec<usize>,
     pub kv: RouterKvView,
+    /// Reusable decision context — the allocation-free hot path.
+    scratch: RouteCtx,
 }
 
 impl IndicatorFactory {
@@ -135,6 +181,15 @@ impl IndicatorFactory {
             opt_prefill_tokens: vec![0; n_instances],
             opt_ctx_tokens: vec![0; n_instances],
             kv: RouterKvView::new(n_instances, kv_capacity_blocks),
+            scratch: RouteCtx {
+                now_us: 0,
+                req_id: u64::MAX,
+                class_id: 0,
+                input_len: 0,
+                hit_tokens: Vec::with_capacity(n_instances),
+                matched_mask: InstanceMask::with_capacity(n_instances),
+                inds: Vec::with_capacity(n_instances),
+            },
         }
     }
 
@@ -142,43 +197,52 @@ impl IndicatorFactory {
         self.snapshots.len()
     }
 
-    /// Build the per-instance indicator view for a request.
-    pub fn route_ctx(&mut self, req: &Request, now_us: u64) -> RouteCtx {
-        let hit_blocks = self.kv.match_all(&req.block_hashes, now_us);
+    /// Build the per-instance indicator view for a request into the
+    /// factory's scratch buffers and lend it out. ONE shared-index walk
+    /// answers `hit_tokens` for all instances (and the matched mask);
+    /// no heap allocation in steady state. Call [`Self::on_route`] with
+    /// the same request right after the policy decides.
+    pub fn route_ctx(&mut self, req: &Request, now_us: u64) -> &RouteCtx {
         let input_len = req.input_len();
-        let hit_tokens: Vec<usize> = hit_blocks
-            .iter()
-            .map(|b| (b * crate::core::BLOCK_TOKENS).min(input_len))
-            .collect();
-        let inds = (0..self.snapshots.len())
-            .map(|i| {
-                let s = &self.snapshots[i];
-                Indicators {
-                    r_bs: s.r_bs,
-                    q_bs: s.q_bs + self.opt_q_bs[i],
-                    queued_prefill_tokens: s.queued_prefill_tokens
-                        + self.opt_prefill_tokens[i],
-                    total_context_tokens: s.total_context_tokens + self.opt_ctx_tokens[i],
-                    kv_used_blocks: s.kv_used_blocks,
-                    kv_capacity_blocks: s.kv_capacity_blocks,
-                }
-            })
-            .collect();
-        RouteCtx {
-            now_us,
-            req_id: req.id,
-            class_id: req.class_id,
-            input_len,
-            hit_tokens,
-            inds,
+        self.kv.match_into(
+            &req.block_hashes,
+            &mut self.scratch.hit_tokens,
+            &mut self.scratch.matched_mask,
+        );
+        // The walk wrote matched *blocks*; convert to hit tokens in place.
+        for h in self.scratch.hit_tokens.iter_mut() {
+            *h = (*h * crate::core::BLOCK_TOKENS).min(input_len);
         }
+        self.scratch.inds.clear();
+        for i in 0..self.snapshots.len() {
+            let s = &self.snapshots[i];
+            self.scratch.inds.push(Indicators {
+                r_bs: s.r_bs,
+                q_bs: s.q_bs + self.opt_q_bs[i],
+                queued_prefill_tokens: s.queued_prefill_tokens + self.opt_prefill_tokens[i],
+                total_context_tokens: s.total_context_tokens + self.opt_ctx_tokens[i],
+                kv_used_blocks: s.kv_used_blocks,
+                kv_capacity_blocks: s.kv_capacity_blocks,
+            });
+        }
+        self.scratch.now_us = now_us;
+        self.scratch.req_id = req.id;
+        self.scratch.class_id = req.class_id;
+        self.scratch.input_len = input_len;
+        &self.scratch
     }
 
-    /// Commit a routing decision: optimistic indicator bumps + KV mirror.
-    pub fn on_route(&mut self, inst: usize, ctx: &RouteCtx, req: &Request, now_us: u64) {
+    /// Commit a routing decision for the request whose context was just
+    /// built by [`Self::route_ctx`]: optimistic indicator bumps + shared
+    /// KV$ index insert.
+    pub fn on_route(&mut self, inst: usize, req: &Request, now_us: u64) {
+        debug_assert_eq!(
+            self.scratch.req_id, req.id,
+            "on_route must follow route_ctx for the same request"
+        );
         self.opt_q_bs[inst] += 1;
-        self.opt_prefill_tokens[inst] += ctx.new_tokens(inst);
-        self.opt_ctx_tokens[inst] += ctx.input_len;
+        self.opt_prefill_tokens[inst] += self.scratch.new_tokens(inst);
+        self.opt_ctx_tokens[inst] += req.input_len();
         self.kv.on_route(inst, &req.block_hashes, now_us);
     }
 
@@ -192,7 +256,7 @@ impl IndicatorFactory {
     }
 
     /// Completion piggyback: cache the full (prompt+output) chain in the
-    /// KV mirror (the next conversation turn will hit it).
+    /// shared KV$ index (the next conversation turn will hit it).
     pub fn on_completion(&mut self, inst: usize, full_hashes: &[u64], now_us: u64) {
         self.kv.on_response(inst, full_hashes, now_us);
     }
@@ -222,12 +286,14 @@ mod tests {
         let req = mk_req(1, 160);
         let ctx = f.route_ctx(&req, 0);
         assert_eq!(ctx.inds[0].bs(), 0);
-        f.on_route(0, &ctx, &req, 0);
+        f.on_route(0, &req, 0);
         let ctx2 = f.route_ctx(&req, 1);
         assert_eq!(ctx2.inds[0].q_bs, 1);
-        // 2nd route sees the mirror insert from the 1st -> full hit.
+        // 2nd route sees the index insert from the 1st -> full hit.
         assert_eq!(ctx2.hit_tokens[0], 160);
         assert_eq!(ctx2.inds[0].queued_prefill_tokens, 160);
+        assert!(ctx2.matched_mask.get(0));
+        assert!(!ctx2.matched_mask.get(1));
         // Snapshot resets deltas.
         f.on_snapshot(0, crate::engine::InstanceSnapshot::default());
         let ctx3 = f.route_ctx(&req, 2);
@@ -250,13 +316,13 @@ mod tests {
 
     #[test]
     fn select_min_tiebreaks_deterministic() {
-        let ctx = RouteCtx {
-            now_us: 0,
-            req_id: 0,
-            class_id: 0,
-            input_len: 0,
-            hit_tokens: vec![0, 0, 0],
-            inds: vec![
+        let ctx = RouteCtx::new(
+            0,
+            0,
+            0,
+            0,
+            vec![0, 0, 0],
+            vec![
                 Indicators {
                     q_bs: 5,
                     ..Default::default()
@@ -270,7 +336,7 @@ mod tests {
                     ..Default::default()
                 },
             ],
-        };
+        );
         // equal scores -> smallest bs wins (instance 1)
         assert_eq!(select_min(&ctx, |_| 1.0), 1);
         // distinct scores -> min wins regardless of bs
@@ -287,5 +353,37 @@ mod tests {
         assert_eq!(ctx.hit_tokens, vec![0, 160]);
         assert!((ctx.hit_ratio(1) - 0.5).abs() < 1e-12);
         assert_eq!(ctx.new_tokens(1), 160);
+    }
+
+    #[test]
+    fn route_ctx_mask_matches_hits_and_ctx_new_agrees() {
+        let mut f = IndicatorFactory::new(3, 0);
+        let req = mk_req(4, 320);
+        f.kv.on_response(2, &req.block_hashes, 0);
+        let ctx = f.route_ctx(&req, 1);
+        assert_eq!(
+            ctx.matched_mask.iter_ones().collect::<Vec<_>>(),
+            vec![2],
+            "mask = instances with any hit"
+        );
+        // RouteCtx::new derives the identical mask from hit_tokens.
+        let rebuilt = RouteCtx::new(
+            ctx.now_us,
+            ctx.req_id,
+            ctx.class_id,
+            ctx.input_len,
+            ctx.hit_tokens.clone(),
+            ctx.inds.clone(),
+        );
+        assert_eq!(rebuilt.matched_mask, ctx.matched_mask);
+    }
+
+    #[test]
+    fn recompute_matched_mask_tracks_mutation() {
+        let mut ctx = RouteCtx::new(0, 0, 0, 100, vec![0, 50], vec![Indicators::default(); 2]);
+        assert!(ctx.matched_mask.get(1));
+        ctx.hit_tokens = vec![100, 0];
+        ctx.recompute_matched_mask();
+        assert!(ctx.matched_mask.get(0) && !ctx.matched_mask.get(1));
     }
 }

@@ -153,8 +153,9 @@ pub fn argmax(logits_row: &[f32]) -> i32 {
 pub(crate) fn load_manifest(
     dir: &Path,
 ) -> Result<(LiveModelConfig, Vec<ParamSpec>, BTreeMap<String, PathBuf>)> {
-    let text = std::fs::read_to_string(dir.join("manifest.json"))
-        .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+    let text = std::fs::read_to_string(dir.join("manifest.json")).with_context(|| {
+        format!("reading {}/manifest.json (run `make artifacts`)", dir.display())
+    })?;
     let v = Json::parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
     let model = v.get("model").ok_or_else(|| anyhow!("manifest: no model"))?;
     let geti = |k: &str| -> Result<usize> {

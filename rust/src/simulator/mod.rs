@@ -110,14 +110,7 @@ mod tests {
     use crate::router::Indicators;
 
     fn ctx_with(inds: Vec<Indicators>, hits: Vec<usize>, input: usize) -> RouteCtx {
-        RouteCtx {
-            now_us: 0,
-            req_id: 0,
-            class_id: 0,
-            input_len: input,
-            hit_tokens: hits,
-            inds,
-        }
+        RouteCtx::new(0, 0, 0, input, hits, inds)
     }
 
     #[test]

@@ -7,14 +7,7 @@ use lmetric::policy::{self, KvAwareIndicator, LMetric, LoadIndicator};
 use lmetric::router::{Indicators, Policy, RouteCtx};
 
 fn ctx(input: usize, hits: Vec<usize>, inds: Vec<Indicators>) -> RouteCtx {
-    RouteCtx {
-        now_us: 1_000_000,
-        req_id: 1,
-        class_id: 0,
-        input_len: input,
-        hit_tokens: hits,
-        inds,
-    }
+    RouteCtx::new(1_000_000, 1, 0, input, hits, inds)
 }
 
 fn ind(r_bs: usize, q_bs: usize, queued_tok: usize, ctx_tok: usize) -> Indicators {
@@ -38,7 +31,8 @@ fn vllm_weights_queued_4x_running() {
         vec![0, 0],
         vec![ind(0, 1, 0, 0), ind(3, 0, 0, 0)],
     );
-    let mut p = policy::build_default("vllm", &lmetric::engine::ModelProfile::moe_30b(), 256).unwrap();
+    let profile = lmetric::engine::ModelProfile::moe_30b();
+    let mut p = policy::build_default("vllm", &profile, 256).unwrap();
     assert_eq!(p.route(&c).instance, 1);
 }
 
@@ -50,7 +44,8 @@ fn vllm_is_kv_blind() {
         vec![1000, 0],
         vec![ind(5, 0, 0, 0), ind(4, 0, 0, 0)],
     );
-    let mut p = policy::build_default("vllm", &lmetric::engine::ModelProfile::moe_30b(), 256).unwrap();
+    let profile = lmetric::engine::ModelProfile::moe_30b();
+    let mut p = policy::build_default("vllm", &profile, 256).unwrap();
     assert_eq!(p.route(&c).instance, 1, "vLLM ignores hits by design");
 }
 
@@ -65,7 +60,8 @@ fn linear_normalizes_bs_against_current_max() {
         vec![0, 0],
         vec![ind(10, 0, 0, 0), ind(9, 0, 0, 0)],
     );
-    let mut p = policy::build("linear", 0.5, &lmetric::engine::ModelProfile::moe_30b(), 256).unwrap();
+    let profile = lmetric::engine::ModelProfile::moe_30b();
+    let mut p = policy::build("linear", 0.5, &profile, 256).unwrap();
     assert_eq!(p.route(&c).instance, 1);
 }
 
@@ -160,6 +156,79 @@ fn guarded_equals_plain_without_hotspot() {
         c.class_id = (k % 6) as u32;
         c.now_us = k * 50_000;
         assert_eq!(plain.route(&c).instance, guarded.route(&c).instance, "k={k}");
+    }
+}
+
+// ------------------------------- shared-index routing equivalence ------
+
+/// The tentpole contract of the shared presence-mask prefix index: for
+/// every workload family and every (deterministic) policy, routing
+/// decisions computed from the shared index are IDENTICAL to decisions
+/// computed from the old one-radix-mirror-per-instance design. Two
+/// policy instances replay the same trace — one fed by the real
+/// `IndicatorFactory` (shared index), one fed contexts whose hit vector
+/// comes from `MirrorKvView` — with bounded per-instance KV$ so LRU
+/// eviction is exercised, and must agree on every single decision.
+#[test]
+fn shared_index_reproduces_mirror_decisions_all_workloads_all_policies() {
+    use lmetric::core::BLOCK_TOKENS;
+    use lmetric::engine::ModelProfile;
+    use lmetric::kvcache::MirrorKvView;
+    use lmetric::router::IndicatorFactory;
+    use lmetric::trace::{generate, Workload, WorkloadSpec};
+
+    let profile = ModelProfile::moe_30b();
+    let n = 8usize;
+    let cap_blocks = 128usize; // small: heavy per-instance eviction churn
+    for workload in ["chatbot", "coder", "agent", "toolagent", "hotspot"] {
+        let spec = WorkloadSpec::preset(Workload::by_name(workload).unwrap(), 400, 7);
+        let trace = generate(&spec);
+        for name in policy::all_names() {
+            if *name == "random" {
+                continue; // stateful RNG across calls by design
+            }
+            let mut p_shared = policy::build_default(name, &profile, 256).unwrap();
+            let mut p_mirror = policy::build_default(name, &profile, 256).unwrap();
+            let mut factory = IndicatorFactory::new(n, cap_blocks);
+            let mut mirror = MirrorKvView::new(n, cap_blocks);
+            for (k, tr) in trace.requests.iter().enumerate() {
+                let now = tr.req.arrival_us;
+                let input_len = tr.req.input_len();
+                let mirror_hits: Vec<usize> = mirror
+                    .match_all(&tr.req.block_hashes, now)
+                    .iter()
+                    .map(|b| (b * BLOCK_TOKENS).min(input_len))
+                    .collect();
+                let ctx = factory.route_ctx(&tr.req, now);
+                assert_eq!(
+                    ctx.hit_tokens, mirror_hits,
+                    "{workload}/{name}: hit vector diverged at request {k}"
+                );
+                let mirror_ctx = RouteCtx::new(
+                    now,
+                    tr.req.id,
+                    tr.req.class_id,
+                    input_len,
+                    mirror_hits,
+                    ctx.inds.clone(),
+                );
+                let d = p_shared.route(ctx).instance;
+                let d_mirror = p_mirror.route(&mirror_ctx).instance;
+                assert_eq!(
+                    d, d_mirror,
+                    "{workload}/{name}: decision diverged at request {k}"
+                );
+                factory.on_route(d, &tr.req, now);
+                mirror.on_route(d_mirror, &tr.req.block_hashes, now);
+                // Periodic completion piggybacks (prompt+output chains),
+                // like the DES's response path.
+                if k % 3 == 0 {
+                    factory.on_completion(d, &tr.full_hashes, now);
+                    mirror.on_response(d_mirror, &tr.full_hashes, now);
+                }
+            }
+            factory.kv.index().check_invariants().unwrap();
+        }
     }
 }
 

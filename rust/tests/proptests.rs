@@ -96,6 +96,63 @@ fn prop_radix_capacity_and_pinning() {
     });
 }
 
+/// Eviction never starves (regression property for the insert-refresh
+/// starvation bug): under arbitrary churn — including refreshing every
+/// resident chain, which used to invalidate every standing heap entry —
+/// an over-capacity insert into a tree of *unpinned* blocks must always
+/// evict its way in, and the lifetime eviction counter grows monotonically.
+#[test]
+fn prop_eviction_never_starves() {
+    prop("eviction never starves", 30, |rng| {
+        let cap = rng.gen_range(4, 32) as usize;
+        let mut tree = RadixTree::new(cap);
+        let mut inserted: Vec<Vec<u64>> = Vec::new();
+        let mut last_evicted = 0u64;
+        let mut fresh = 1_000_000u64;
+        for step0 in 0..200u64 {
+            let step = step0 * 10; // leave room for the +1/+2 sub-steps
+            let base = rng.gen_range(0, 4);
+            let len = rng.gen_range(1, 6) as usize;
+            let chain: Vec<u64> = (0..len as u64).map(|i| base * 100 + i).collect();
+            tree.insert(&chain, step);
+            inserted.push(chain.clone());
+            if rng.gen_bool(0.3) {
+                // Transient pin/unpin cycle: nothing stays pinned.
+                let resident = tree.match_prefix(&chain, step, false);
+                tree.pin(&chain, resident);
+                tree.unpin(&chain, resident, step);
+            }
+            assert!(tree.total_evicted_blocks >= last_evicted, "counter went backwards");
+            last_evicted = tree.total_evicted_blocks;
+            if tree.used_blocks() >= cap {
+                // Refresh EVERY resident chain, at a timestamp strictly
+                // after every heap push so far: with the old insert this
+                // drained the eviction heap entirely (all entries stale,
+                // nothing re-pushed).
+                for c in &inserted {
+                    let resident = tree.match_prefix(c, step + 1, false);
+                    if resident > 0 {
+                        tree.insert(&c[..resident], step + 1);
+                    }
+                }
+                // The tree is full of unpinned blocks: a fresh insert must
+                // always succeed in evicting.
+                fresh += 1;
+                assert_eq!(
+                    tree.insert(&[fresh], step + 2),
+                    1,
+                    "eviction starved at step {step0}"
+                );
+                inserted.push(vec![fresh]);
+                assert!(tree.total_evicted_blocks > last_evicted, "no eviction happened");
+                last_evicted = tree.total_evicted_blocks;
+            }
+            assert!(tree.used_blocks() <= cap);
+        }
+        tree.check_invariants().unwrap();
+    });
+}
+
 // ------------------------------------------------------------- engine --
 
 fn random_request(rng: &mut Rng, id: u64) -> (Request, Vec<u64>) {
@@ -240,14 +297,14 @@ fn random_ctx(rng: &mut Rng, n: usize) -> RouteCtx {
             kv_capacity_blocks: 0,
         })
         .collect();
-    RouteCtx {
-        now_us: rng.next_u64() % 1_000_000_000,
-        req_id: rng.next_u64(),
-        class_id: rng.gen_range(0, 8) as u32,
-        input_len: input,
+    RouteCtx::new(
+        rng.next_u64() % 1_000_000_000,
+        rng.next_u64(),
+        rng.gen_range(0, 8) as u32,
+        input,
         hit_tokens,
         inds,
-    }
+    )
 }
 
 /// Every policy always routes in range, for arbitrary indicator states.
@@ -316,6 +373,7 @@ fn prop_lmetric_never_picks_dominated() {
         let mut ctx = random_ctx(rng, 4);
         // Make instance 2 strictly dominated by instance 0.
         ctx.hit_tokens[2] = ctx.hit_tokens[0].saturating_sub(BLOCK_TOKENS);
+        ctx.recompute_matched_mask();
         ctx.inds[2].r_bs = ctx.inds[0].r_bs + 5;
         ctx.inds[2].q_bs = ctx.inds[0].q_bs + 2;
         ctx.inds[2].queued_prefill_tokens = ctx.inds[0].queued_prefill_tokens + 1000;

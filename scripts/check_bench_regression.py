@@ -1,0 +1,77 @@
+#!/usr/bin/env python3
+"""CI gate: fail when router_throughput regresses >20% vs the committed baseline.
+
+Usage: check_bench_regression.py CURRENT_JSON BASELINE_JSON
+
+The committed baseline is BENCH_router_throughput.json at the repo root.
+While the baseline carries "seeded": false (no toolchain-equipped run has
+landed numbers yet), the gate runs in report-only mode: it prints the
+fresh numbers and instructions for seeding, and exits 0. Once seeded, a
+current des_end_to_end.req_per_s below 80% of the baseline fails the job.
+"""
+
+import json
+import sys
+
+THRESHOLD = 0.80  # fail below 80% of baseline req/s (= >20% regression)
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    current_path, baseline_path = sys.argv[1], sys.argv[2]
+
+    with open(current_path) as f:
+        current = json.load(f)
+    try:
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+    except FileNotFoundError:
+        print(f"no committed baseline at {baseline_path}; skipping gate")
+        return 0
+
+    cur_rps = (current.get("des_end_to_end") or {}).get("req_per_s")
+    print("current router_throughput:")
+    print(f"  des_end_to_end.req_per_s = {cur_rps}")
+    smoke = current.get("scale_smoke") or {}
+    print(
+        f"  scale_smoke: {smoke.get('requests')} requests @ "
+        f"{smoke.get('instances')} instances in {smoke.get('wall_s')}s "
+        f"({smoke.get('req_per_s')} req/s)"
+    )
+
+    if not baseline.get("seeded", False):
+        print(
+            "\nbaseline is unseeded (report-only mode). To arm the gate, commit "
+            "this run's JSON over BENCH_router_throughput.json with "
+            '"seeded": true.'
+        )
+        return 0
+
+    if current.get("quick_mode") != baseline.get("quick_mode"):
+        print(
+            "\nquick_mode mismatch between current run and baseline; "
+            "numbers are not comparable — skipping gate"
+        )
+        return 0
+
+    base_rps = (baseline.get("des_end_to_end") or {}).get("req_per_s")
+    if not base_rps or not cur_rps:
+        print("\nmissing req_per_s on one side; skipping gate")
+        return 0
+
+    ratio = cur_rps / base_rps
+    print(f"\nbaseline req_per_s = {base_rps:.1f}; current/baseline = {ratio:.3f}")
+    if ratio < THRESHOLD:
+        print(
+            f"FAIL: router_throughput regressed >{(1 - THRESHOLD) * 100:.0f}% "
+            f"({cur_rps:.1f} vs {base_rps:.1f} req/s)"
+        )
+        return 1
+    print("OK: within regression budget")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
