@@ -3,25 +3,46 @@
 //!
 //! Paper shape: U-shaped curves with a workload-dependent knee (ChatBot
 //! optimum ≈ 0.7, API/Agent ≈ 0.55, etc.) — no single λ wins everywhere.
+//!
+//! All (workload × λ) runs fan out through `benchlib::parallel_sweep`
+//! (deterministic; `LMETRIC_BENCH_THREADS=1` forces serial).
 
-use lmetric::benchlib::{experiment, figure_banner, run_policy, trace_for};
+use lmetric::benchlib::{experiment, figure_banner, parallel_sweep, run_policy, trace_for};
 use lmetric::metrics::{fmt_s, save_results, ResultRow};
+
+const WORKLOADS: [&str; 4] = ["chatbot", "coder", "agent", "toolagent"];
+const LAMBDAS: [f64; 5] = [0.4, 0.55, 0.7, 0.85, 0.95];
 
 fn main() {
     figure_banner("Fig 11", "linear-combination λ sweep across traces");
-    let lambdas = [0.4, 0.55, 0.7, 0.85, 0.95];
-    let mut all_rows = Vec::new();
-    let mut best: Vec<(String, f64)> = Vec::new();
-    for workload in ["chatbot", "coder", "agent", "toolagent"] {
+    let points = parallel_sweep(&WORKLOADS, |_, &workload| {
         let exp = experiment(workload, 8, 4000);
         let trace = trace_for(&exp);
+        (exp, trace)
+    });
+    let mut run_defs = Vec::new();
+    for pi in 0..points.len() {
+        for l in LAMBDAS {
+            run_defs.push((pi, l));
+        }
+    }
+    let runs = parallel_sweep(&run_defs, |_, &(pi, l)| {
+        let (exp, trace) = &points[pi];
+        let (m, _) = run_policy(exp, trace, "linear", l);
+        m
+    });
+
+    let mut all_rows = Vec::new();
+    let mut best: Vec<(String, f64)> = Vec::new();
+    for (wi, workload) in WORKLOADS.into_iter().enumerate() {
         println!(
             "\n{workload}:  {:>6} {:>10} {:>10} {:>10} {:>10}",
             "λ", "TTFT-p50", "TTFT-p95", "TPOT-p50", "TPOT-p95"
         );
         let mut best_l = (0.0, f64::INFINITY);
-        for &l in &lambdas {
-            let (m, _) = run_policy(&exp, &trace, "linear", l);
+        for (li, l) in LAMBDAS.into_iter().enumerate() {
+            // Index derived from the run_defs construction order above.
+            let m = &runs[wi * LAMBDAS.len() + li];
             let (t, p) = (m.ttft_summary(), m.tpot_summary());
             println!(
                 "        {l:>6.2} {:>10} {:>10} {:>10} {:>10}",
@@ -34,7 +55,7 @@ fn main() {
                 best_l = (l, t.mean);
             }
             all_rows.push(
-                ResultRow::from_metrics(&format!("{workload}/λ={l}"), &m).with("lambda", l),
+                ResultRow::from_metrics(&format!("{workload}/λ={l}"), m).with("lambda", l),
             );
         }
         println!("        best λ for {workload}: {}", best_l.0);

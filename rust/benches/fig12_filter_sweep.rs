@@ -4,19 +4,45 @@
 //!
 //! Paper shape: the optimal Range differs per workload, and filter-based
 //! stays at-or-behind a well-tuned linear combination.
+//!
+//! All (workload × policy-point) runs fan out through
+//! `benchlib::parallel_sweep` (deterministic; `LMETRIC_BENCH_THREADS=1`
+//! forces serial).
 
-use lmetric::benchlib::{experiment, figure_banner, run_policy, trace_for};
+use lmetric::benchlib::{experiment, figure_banner, parallel_sweep, run_policy, trace_for};
 use lmetric::metrics::{fmt_s, save_results, ResultRow};
+
+const WORKLOADS: [&str; 4] = ["chatbot", "coder", "agent", "toolagent"];
+const RANGES: [f64; 4] = [2.0, 4.0, 8.0, 16.0];
 
 fn main() {
     figure_banner("Fig 12", "filter-based Range sweep vs tuned linear (BL)");
+    let points = parallel_sweep(&WORKLOADS, |_, &workload| {
+        let exp = experiment(workload, 8, 4000);
+        let trace = trace_for(&exp);
+        (exp, trace)
+    });
+    // Per workload: one tuned-linear baseline run + the Range sweep.
+    let mut run_defs = Vec::new();
+    for pi in 0..points.len() {
+        run_defs.push((pi, "linear", 0.7));
+        for range in RANGES {
+            run_defs.push((pi, "filter_kv", range));
+        }
+    }
+    let runs = parallel_sweep(&run_defs, |_, &(pi, name, param)| {
+        let (exp, trace) = &points[pi];
+        let (m, _) = run_policy(exp, trace, name, param);
+        m
+    });
+
     let mut all_rows = Vec::new();
     let mut filter_never_beats_bl = true;
     let mut range_matters_somewhere = false;
-    for workload in ["chatbot", "coder", "agent", "toolagent"] {
-        let exp = experiment(workload, 8, 4000);
-        let trace = trace_for(&exp);
-        let (bl, _) = run_policy(&exp, &trace, "linear", 0.7);
+    // Per-workload stride in run_defs: 1 BL run + the Range sweep.
+    let stride = 1 + RANGES.len();
+    for (wi, workload) in WORKLOADS.into_iter().enumerate() {
+        let bl = &runs[wi * stride];
         println!(
             "\n{workload}:  {:>8} {:>10} {:>10} {:>10} {:>10}",
             "Range", "TTFT-p50", "TTFT-p95", "TPOT-p50", "TPOT-p95"
@@ -31,8 +57,8 @@ fn main() {
         );
         let mut best_filter = f64::INFINITY;
         let mut worst_filter: f64 = 0.0;
-        for range in [2.0, 4.0, 8.0, 16.0] {
-            let (m, _) = run_policy(&exp, &trace, "filter_kv", range);
+        for (ki, range) in RANGES.into_iter().enumerate() {
+            let m = &runs[wi * stride + 1 + ki];
             let (t, p) = (m.ttft_summary(), m.tpot_summary());
             println!(
                 "        {range:>8.0} {:>10} {:>10} {:>10} {:>10}",
@@ -44,7 +70,7 @@ fn main() {
             best_filter = best_filter.min(t.mean);
             worst_filter = worst_filter.max(t.mean);
             all_rows.push(
-                ResultRow::from_metrics(&format!("{workload}/range={range}"), &m)
+                ResultRow::from_metrics(&format!("{workload}/range={range}"), m)
                     .with("range", range),
             );
         }
@@ -55,7 +81,7 @@ fn main() {
         if worst_filter > best_filter * 1.5 {
             range_matters_somewhere = true;
         }
-        all_rows.push(ResultRow::from_metrics(&format!("{workload}/BL"), &bl));
+        all_rows.push(ResultRow::from_metrics(&format!("{workload}/BL"), bl));
     }
     println!(
         "\nshape checks: Range is workload-sensitive (≥1.5x spread somewhere): {}",

@@ -5,26 +5,47 @@
 //! Paper shape: LMETRIC best-or-tied on every trace; on ChatBot it cuts
 //! mean TTFT 92% and mean TPOT 24% vs vLLM and beats llm-d's P99 TPOT
 //! by 13%.
+//!
+//! 20 independent 6000-request DES runs: fanned out through
+//! `benchlib::parallel_sweep` (deterministic; `LMETRIC_BENCH_THREADS=1`
+//! forces serial).
 
-use lmetric::benchlib::{experiment, figure_banner, run_default, trace_for};
+use lmetric::benchlib::{experiment, figure_banner, parallel_sweep, run_default, trace_for};
 use lmetric::metrics::{render_table, save_results, ResultRow};
 
+const WORKLOADS: [&str; 4] = ["chatbot", "coder", "agent", "toolagent"];
 const POLICIES: [&str; 5] = ["vllm", "linear", "dynamo", "sim_llmd", "lmetric"];
 
 fn main() {
     figure_banner("Fig 22", "end-to-end TTFT/TPOT CDFs, 5 policies × 4 workloads");
-    for workload in ["chatbot", "coder", "agent", "toolagent"] {
+    let points = parallel_sweep(&WORKLOADS, |_, &workload| {
         let exp = experiment(workload, 8, 6000);
         let trace = trace_for(&exp);
+        (exp, trace)
+    });
+    let mut run_defs = Vec::new();
+    for pi in 0..points.len() {
+        for name in POLICIES {
+            run_defs.push((pi, name));
+        }
+    }
+    let runs = parallel_sweep(&run_defs, |_, &(pi, name)| {
+        let (exp, trace) = &points[pi];
+        run_default(exp, trace, name)
+    });
+
+    for (wi, workload) in WORKLOADS.iter().enumerate() {
+        let (exp, trace) = &points[wi];
         let mut rows = Vec::new();
         let mut cdfs = Vec::new();
         let mut stats = std::collections::BTreeMap::new();
-        for name in POLICIES {
-            let (m, label) = run_default(&exp, &trace, name);
+        for (ki, name) in POLICIES.into_iter().enumerate() {
+            // Index derived from the run_defs construction order above.
+            let (m, label) = &runs[wi * POLICIES.len() + ki];
             cdfs.push((format!("ttft_{name}"), m.ttfts()));
             cdfs.push((format!("tpot_{name}"), m.tpots()));
             stats.insert(name, (m.ttft_summary(), m.tpot_summary()));
-            rows.push(ResultRow::from_metrics(&label, &m));
+            rows.push(ResultRow::from_metrics(label, m));
         }
         println!(
             "{}",
@@ -38,7 +59,7 @@ fn main() {
                 &rows
             )
         );
-        if workload == "chatbot" {
+        if *workload == "chatbot" {
             let lm = &stats["lmetric"];
             let vl = &stats["vllm"];
             let sd = &stats["sim_llmd"];

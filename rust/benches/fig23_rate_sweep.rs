@@ -4,34 +4,70 @@
 //!
 //! Paper shape: LMETRIC lowest latency at every rate; gaps widen with
 //! rate.
+//!
+//! The heaviest figure bench (4 traces × 4 rates × 5 policies = 80 DES
+//! runs), so it fans out through `benchlib::parallel_sweep`: trace
+//! construction per sweep point first, then every (point × policy) run,
+//! all deterministic and reported in input order. `LMETRIC_BENCH_THREADS=1`
+//! forces the historical serial behaviour.
 
-use lmetric::benchlib::{experiment, figure_banner, run_default, trace_for};
+use lmetric::benchlib::{experiment, figure_banner, parallel_sweep, run_default, trace_for};
 use lmetric::metrics::{fmt_s, save_results, ResultRow};
 
 const POLICIES: [&str; 5] = ["vllm", "linear", "dynamo", "sim_llmd", "lmetric"];
+const RATES: [f64; 4] = [0.3, 0.5, 0.7, 0.85];
 
 fn main() {
     figure_banner("Fig 23", "rate sweep × policies × workloads");
-    let mut all_rows = Vec::new();
-    for (workload, profile) in [
+    let setups = [
         ("chatbot", "moe-30b"),
         ("agent", "dense-7b"),
         ("coder", "moe-30b"),
         ("toolagent", "moe-30b"),
-    ] {
+    ];
+    // Sweep points: build each point's scaled trace in parallel (trace
+    // profiling is itself a DES run, and there are 16 of them).
+    let mut point_defs = Vec::new();
+    for (workload, profile) in setups {
+        for rate in RATES {
+            point_defs.push((workload, profile, rate));
+        }
+    }
+    let points = parallel_sweep(&point_defs, |_, &(workload, profile, rate)| {
+        let mut exp = experiment(workload, 8, 4000);
+        exp.profile = profile.into();
+        exp.rate_scale = rate;
+        let trace = trace_for(&exp);
+        (exp, trace)
+    });
+    // Every (sweep-point × policy) DES run, fanned out.
+    let mut run_defs = Vec::new();
+    for pi in 0..points.len() {
+        for name in POLICIES {
+            run_defs.push((pi, name));
+        }
+    }
+    let runs = parallel_sweep(&run_defs, |_, &(pi, name)| {
+        let (exp, trace) = &points[pi];
+        let (m, _) = run_default(exp, trace, name);
+        m
+    });
+
+    // Serial reporting in the original order.
+    let mut all_rows = Vec::new();
+    for (si, (workload, profile)) in setups.into_iter().enumerate() {
         println!("\n=== {workload} on {profile} ===");
         println!(
             "{:>6} {:>12} {:>10} {:>10} {:>10} {:>10}",
             "rate", "policy", "TTFT-mean", "TTFT-p99", "TPOT-mean", "TPOT-p99"
         );
-        for rate in [0.3, 0.5, 0.7, 0.85] {
+        for (rj, rate) in RATES.into_iter().enumerate() {
             let mut best = (String::new(), f64::INFINITY);
-            let mut exp = experiment(workload, 8, 4000);
-            exp.profile = profile.into();
-            exp.rate_scale = rate;
-            let trace = trace_for(&exp); // shared across policies
-            for name in POLICIES {
-                let (m, _) = run_default(&exp, &trace, name);
+            for (ki, name) in POLICIES.into_iter().enumerate() {
+                // Index derived from the point_defs/run_defs construction
+                // order above: point = setup-major, run = policy-minor.
+                let pi = si * RATES.len() + rj;
+                let m = &runs[pi * POLICIES.len() + ki];
                 let (t, p) = (m.ttft_summary(), m.tpot_summary());
                 println!(
                     "{rate:>6.2} {name:>12} {:>10} {:>10} {:>10} {:>10}",
@@ -44,7 +80,7 @@ fn main() {
                     best = (name.to_string(), t.mean);
                 }
                 all_rows.push(
-                    ResultRow::from_metrics(&format!("{workload}/{profile}/{rate}/{name}"), &m)
+                    ResultRow::from_metrics(&format!("{workload}/{profile}/{rate}/{name}"), m)
                         .with("rate", rate),
                 );
             }

@@ -3,14 +3,18 @@
 //! router and 1.2× faster than AIBrix's Go one; here we measure absolute
 //! µs/decision per policy at 16 / 64 / 256 instances (one shared-index
 //! walk + borrowed scratch context per decision — the allocation-free hot
-//! path), the DES harness's end-to-end routed-requests/s, and a
-//! 32-instance × 50k-request DES scale smoke.
+//! path), the DES harness's end-to-end routed-requests/s, a 32-instance ×
+//! 50k-request DES scale smoke, and the parallel sweep harness's speedup
+//! over serial execution.
 //!
 //! The JSON this bench writes is the perf-trajectory record: CI compares
-//! `des_end_to_end.req_per_s` against the committed baseline
-//! (`BENCH_router_throughput.json`) and fails on a >20% regression.
+//! `des_end_to_end.req_per_s` (and, once seeded, the scale-smoke req/s
+//! and steps/s) against the committed baseline
+//! (`BENCH_router_throughput.json`) and fails on a >20% regression. The
+//! `admit_radix_walks` counters prove the engine's fused admission: one
+//! radix walk per admitted request.
 
-use lmetric::benchlib::{bench, figure_banner, scaled};
+use lmetric::benchlib::{bench, bench_threads, figure_banner, parallel_sweep, scaled};
 use lmetric::engine::ModelProfile;
 use lmetric::policy;
 use lmetric::router::IndicatorFactory;
@@ -23,6 +27,8 @@ fn main() {
     let profile = ModelProfile::moe_30b();
     let mut json_rows: Vec<Json> = Vec::new();
 
+    // Decision microbenches stay strictly serial: co-running timed
+    // iterations would contaminate each other's numbers.
     for n_instances in [16usize, 64, 256] {
         println!("\n--- {n_instances} instances ---");
         for name in ["vllm", "linear", "filter_kv", "preble", "sim_llmd", "lmetric"] {
@@ -67,19 +73,27 @@ fn main() {
     let mut pol = policy::build_default("lmetric", &profile, 256).unwrap();
     let m = lmetric::cluster::run_des(&cfg, &trace, pol.as_mut());
     let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(
+        m.admit_radix_walks,
+        m.records.len() as u64,
+        "fused admission: exactly one radix walk per request"
+    );
     println!(
-        "replayed {} requests ({:.0}s virtual) in {:.2}s wall = {:.0} req/s, {:.0}x real-time",
+        "replayed {} requests ({:.0}s virtual) in {:.2}s wall = {:.0} req/s, \
+         {:.0} steps/s, {:.0}x real-time",
         m.records.len(),
         m.duration_us as f64 / 1e6,
         wall,
         m.records.len() as f64 / wall,
+        m.total_steps as f64 / wall.max(1e-9),
         (m.duration_us as f64 / 1e6) / wall
     );
 
     // Scale smoke: 32 instances × 50k requests through the DES under
     // lmetric. Fixed size (NOT downscaled in quick mode) — this is the
-    // CI proof that the shared-index router data plane holds up at
-    // production-shaped scale inside the bench-smoke time budget.
+    // CI proof that the shared-index router data plane and the
+    // allocation-free engine hot path hold up at production-shaped scale
+    // inside the bench-smoke time budget.
     println!("\n--- scale smoke: 32 instances x 50k requests ---");
     let mut sexp = lmetric::config::ExperimentConfig::default();
     sexp.instances = 32;
@@ -95,12 +109,62 @@ fn main() {
         strace.requests.len(),
         "scale smoke lost requests"
     );
+    assert_eq!(
+        sm.admit_radix_walks,
+        sm.records.len() as u64,
+        "fused admission at scale: one radix walk per request"
+    );
     println!(
-        "replayed {} requests on 32 instances in {:.2}s wall = {:.0} req/s (mean hit ratio {:.3})",
+        "replayed {} requests on 32 instances in {:.2}s wall = {:.0} req/s, \
+         {:.0} steps/s (mean hit ratio {:.3}, {} admit walks)",
         sm.records.len(),
         swall,
         sm.records.len() as f64 / swall.max(1e-9),
-        sm.mean_hit_ratio()
+        sm.total_steps as f64 / swall.max(1e-9),
+        sm.mean_hit_ratio(),
+        sm.admit_radix_walks
+    );
+
+    // Parallel sweep harness: K independent DES runs serial vs fanned
+    // out over scoped threads. Results must be identical (virtual time is
+    // deterministic); only wall-clock may differ — that ratio is the
+    // recorded harness speedup.
+    println!("\n--- parallel sweep harness ---");
+    let sweep_jobs: Vec<&str> = vec!["vllm", "linear", "dynamo", "sim_llmd", "lmetric"];
+    let mut jexp = lmetric::config::ExperimentConfig::default();
+    jexp.instances = 8;
+    jexp.requests = scaled(2000);
+    let jtrace = lmetric::cluster::build_scaled_trace(&jexp);
+    let jcfg = lmetric::cluster::cluster_config(&jexp);
+    let run_job = |name: &str| {
+        let mut p = policy::build_default(name, &profile, 256).unwrap();
+        lmetric::cluster::run_des(&jcfg, &jtrace, p.as_mut())
+    };
+    let t0 = std::time::Instant::now();
+    let serial: Vec<_> = sweep_jobs.iter().map(|name| run_job(name)).collect();
+    let serial_wall = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    let parallel = parallel_sweep(&sweep_jobs, |_, name| run_job(name));
+    let parallel_wall = t0.elapsed().as_secs_f64();
+    for (s, p) in serial.iter().zip(&parallel) {
+        assert_eq!(s.records.len(), p.records.len(), "sweep determinism");
+        for (a, b) in s.records.iter().zip(&p.records) {
+            assert_eq!(
+                (a.id, a.instance, a.completion_us),
+                (b.id, b.instance, b.completion_us),
+                "parallel sweep must replay identically to serial"
+            );
+        }
+    }
+    let speedup = serial_wall / parallel_wall.max(1e-9);
+    println!(
+        "{} DES runs: serial {:.2}s, parallel {:.2}s on {} threads = {:.2}x \
+         (results identical)",
+        sweep_jobs.len(),
+        serial_wall,
+        parallel_wall,
+        bench_threads(),
+        speedup
     );
 
     // Machine-readable output: CI uploads this as the perf-trajectory
@@ -118,6 +182,11 @@ fn main() {
                 ("virtual_s", Json::Num(m.duration_us as f64 / 1e6)),
                 ("wall_s", Json::Num(wall)),
                 ("req_per_s", Json::Num(m.records.len() as f64 / wall.max(1e-9))),
+                (
+                    "steps_per_s",
+                    Json::Num(m.total_steps as f64 / wall.max(1e-9)),
+                ),
+                ("admit_radix_walks", Json::Num(m.admit_radix_walks as f64)),
             ]),
         ),
         (
@@ -130,6 +199,21 @@ fn main() {
                     "req_per_s",
                     Json::Num(sm.records.len() as f64 / swall.max(1e-9)),
                 ),
+                (
+                    "steps_per_s",
+                    Json::Num(sm.total_steps as f64 / swall.max(1e-9)),
+                ),
+                ("admit_radix_walks", Json::Num(sm.admit_radix_walks as f64)),
+            ]),
+        ),
+        (
+            "sweep",
+            Json::obj(vec![
+                ("jobs", Json::Num(sweep_jobs.len() as f64)),
+                ("threads", Json::Num(bench_threads() as f64)),
+                ("serial_wall_s", Json::Num(serial_wall)),
+                ("parallel_wall_s", Json::Num(parallel_wall)),
+                ("speedup", Json::Num(speedup)),
             ]),
         ),
     ]);

@@ -83,6 +83,77 @@ pub fn quick_mode() -> bool {
     std::env::var("LMETRIC_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
 }
 
+// ---------------------------------------------------------------------
+// Parallel sweep runner: deterministic fan-out of independent
+// (policy × sweep-point) DES runs across worker threads.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Worker count for [`parallel_sweep`]: `LMETRIC_BENCH_THREADS` when set
+/// (`=1` forces fully serial execution — the debugging escape hatch),
+/// otherwise `available_parallelism`. An unparsable value panics rather
+/// than silently degrading to serial (a typo'd var would otherwise be
+/// indistinguishable from a deliberate serial run in the bench JSON);
+/// set-but-empty counts as unset.
+pub fn bench_threads() -> usize {
+    match std::env::var("LMETRIC_BENCH_THREADS") {
+        Ok(v) if !v.trim().is_empty() => match v.trim().parse::<usize>() {
+            Ok(n) => n.max(1),
+            Err(_) => panic!("LMETRIC_BENCH_THREADS must be a positive integer, got {v:?}"),
+        },
+        _ => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    }
+}
+
+/// Run `f` over every item of `items` across [`bench_threads`] scoped
+/// worker threads (no extra dependencies — `std::thread::scope`),
+/// returning results **in input order**.
+///
+/// Jobs are claimed from a shared atomic counter, so scheduling is
+/// work-stealing-ish, but since every job is a pure function of its item
+/// (each DES run owns its instances, policy and metrics; traces are
+/// borrowed immutably) the results are bit-identical to a serial run —
+/// only wall-clock changes. With one thread (or one item) it degrades to
+/// a plain in-place loop, so `LMETRIC_BENCH_THREADS=1` reproduces the
+/// historical serial behaviour exactly.
+pub fn parallel_sweep<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let threads = bench_threads().min(items.len());
+    if threads <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(items.len());
+    slots.resize_with(items.len(), || None);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut done: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= items.len() {
+                            break;
+                        }
+                        done.push((i, f(i, &items[i])));
+                    }
+                    done
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, r) in h.join().expect("sweep worker panicked") {
+                slots[i] = Some(r);
+            }
+        }
+    });
+    slots.into_iter().map(|r| r.expect("sweep job skipped")).collect()
+}
+
 /// Scale a request count down in quick mode.
 pub fn scaled(n: usize) -> usize {
     if quick_mode() {
@@ -180,5 +251,38 @@ mod tests {
         assert!(fmt_ns(1500.0).contains("µs"));
         assert!(fmt_ns(2.5e6).contains("ms"));
         assert!(fmt_ns(3.0e9).contains("s"));
+    }
+
+    #[test]
+    fn sweep_returns_results_in_input_order() {
+        let items: Vec<usize> = (0..97).collect();
+        let out = parallel_sweep(&items, |i, &x| {
+            assert_eq!(i, x);
+            x * 3 + 1
+        });
+        assert_eq!(out, items.iter().map(|x| x * 3 + 1).collect::<Vec<_>>());
+        // Empty input is a no-op.
+        let empty: Vec<usize> = Vec::new();
+        assert!(parallel_sweep(&empty, |_, &x| x).is_empty());
+    }
+
+    /// Determinism across execution modes: a parallel fan-out of DES runs
+    /// must produce record-for-record identical results to the serial
+    /// path (parallelism may only change wall-clock, never virtual time).
+    #[test]
+    fn sweep_des_runs_match_serial() {
+        let mut exp = ExperimentConfig::default();
+        exp.instances = 2;
+        exp.requests = 120;
+        exp.rate_scale = 0.5;
+        let trace = build_scaled_trace(&exp);
+        let jobs = ["vllm", "lmetric", "linear"];
+        let run = |name: &str| -> Vec<(u64, u64, usize)> {
+            let (m, _) = run_policy(&exp, &trace, name, policy::default_param(name));
+            m.records.iter().map(|r| (r.id, r.completion_us, r.instance)).collect()
+        };
+        let par = parallel_sweep(&jobs, |_, name| run(name));
+        let ser: Vec<_> = jobs.iter().map(|name| run(name)).collect();
+        assert_eq!(par, ser);
     }
 }

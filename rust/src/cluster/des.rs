@@ -9,6 +9,7 @@
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::config::ExperimentConfig;
@@ -49,7 +50,11 @@ pub fn run_des(cfg: &ClusterConfig, trace: &Trace, policy: &mut dyn Policy) -> R
     let mut metrics = RunMetrics::new(n);
     let mut stepping = vec![false; n];
     let mut pending: Vec<Option<StepOutcome>> = (0..n).map(|_| None).collect();
-    let mut full_hashes: HashMap<u64, Vec<u64>> = HashMap::new();
+    // Per-in-flight-request bookkeeping. `full_hashes` values are
+    // Arc-shared with the trace (refcount bump, not a copy); all three
+    // maps are drained as requests progress — see the FirstToken /
+    // Completed handlers — so long traces never accumulate dead entries.
+    let mut full_hashes: HashMap<u64, Arc<[u64]>> = HashMap::new();
     let mut predicted: HashMap<u64, f64> = HashMap::new();
     let mut arrivals: HashMap<u64, u64> = HashMap::new();
 
@@ -105,10 +110,13 @@ pub fn run_des(cfg: &ClusterConfig, trace: &Trace, policy: &mut dyn Policy) -> R
                 for ev in &out.events {
                     match ev {
                         EngineEvent::FirstToken { req_id, at_us } => {
-                            if let (Some(pred), Some(arr)) =
-                                (predicted.get(req_id), arrivals.get(req_id))
-                            {
-                                let actual = (*at_us - *arr) as f64;
+                            // TTFT is decided here: drop the prediction /
+                            // arrival bookkeeping so long traces don't
+                            // accumulate dead map entries.
+                            let pred = predicted.remove(req_id);
+                            let arr = arrivals.remove(req_id);
+                            if let (Some(pred), Some(arr)) = (pred, arr) {
+                                let actual = (*at_us - arr) as f64;
                                 if actual > 0.0 {
                                     metrics
                                         .sim_error_ratio
@@ -121,10 +129,18 @@ pub fn run_des(cfg: &ClusterConfig, trace: &Trace, policy: &mut dyn Policy) -> R
                             if let Some(fh) = full_hashes.remove(&record.id) {
                                 factory.on_completion(d, &fh, now);
                             }
+                            // Defensive: FirstToken always precedes
+                            // Completed, so these are normally no-ops.
+                            predicted.remove(&record.id);
+                            arrivals.remove(&record.id);
                         }
                     }
                 }
                 factory.on_snapshot(d, out.snapshot);
+                // Hand the spent events buffer back: the DES steady state
+                // ping-pongs one Vec per instance instead of allocating a
+                // fresh one every step.
+                instances[d].recycle_events(out.events);
                 if instances[d].has_work() {
                     if let Some(out2) = begin_step(&mut instances[d], now, &mut metrics, d) {
                         let end = now + out2.duration_us;
@@ -141,6 +157,10 @@ pub fn run_des(cfg: &ClusterConfig, trace: &Trace, policy: &mut dyn Policy) -> R
     }
 
     metrics.duration_us = last_time;
+    for inst in &instances {
+        metrics.total_steps += inst.steps;
+        metrics.admit_radix_walks += inst.kv().admit_radix_walks;
+    }
     metrics
 }
 
@@ -169,28 +189,33 @@ pub fn profile_capacity_rps(engine: &EngineConfig, trace: &Trace, sample: usize)
     let mut inst = Instance::new(0, engine.clone());
     let half = sample.min(trace.requests.len() / 2).max(1);
     let mut now = 0u64;
-    // Warm phase (untimed).
+    // Warm phase (untimed). Enqueue hands over Arc clones of the trace's
+    // token/hash storage — no per-request Vec copies.
     for tr in trace.requests.iter().take(half) {
         inst.enqueue(tr.req.clone(), tr.full_hashes.clone(), now);
     }
     while inst.has_work() {
         let out = inst.step(now).expect("work pending");
         now += out.duration_us;
+        inst.recycle_events(out.events);
     }
     // Timed phase on the warm cache.
     let start = now;
-    let timed: Vec<_> = trace.requests.iter().skip(half).take(half).collect();
-    for tr in &timed {
+    let timed = trace.requests.iter().skip(half).take(half);
+    let mut n_timed = 0usize;
+    for tr in timed {
         inst.enqueue(tr.req.clone(), tr.full_hashes.clone(), now);
+        n_timed += 1;
     }
     while inst.has_work() {
         let out = inst.step(now).expect("work pending");
         now += out.duration_us;
+        inst.recycle_events(out.events);
     }
     if now == start {
         return f64::INFINITY;
     }
-    timed.len() as f64 / ((now - start) as f64 / 1e6)
+    n_timed as f64 / ((now - start) as f64 / 1e6)
 }
 
 /// Build trace + cluster from an [`ExperimentConfig`], scale the arrival
@@ -310,6 +335,18 @@ mod tests {
             m_lm.ttft_summary().mean,
             m_v.ttft_summary().mean
         );
+    }
+
+    /// Every request is admitted exactly once, and each admission costs
+    /// exactly one fused radix walk — the per-request KV$ overhead of the
+    /// whole harness, aggregated across instances.
+    #[test]
+    fn one_fused_radix_walk_per_request() {
+        let (exp, mut p) = small_exp("lmetric");
+        let m = run_experiment(&exp, p.as_mut());
+        assert_eq!(m.records.len(), 300);
+        assert_eq!(m.admit_radix_walks, 300, "admissions must fuse to one walk");
+        assert!(m.total_steps > 0);
     }
 
     #[test]

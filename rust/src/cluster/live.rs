@@ -9,7 +9,7 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -419,14 +419,14 @@ pub fn run_live(
 
     let mut factory = IndicatorFactory::new(n, 0);
     let mut metrics = RunMetrics::new(n);
-    let mut full_hashes: HashMap<u64, Vec<u64>> = HashMap::new();
+    let mut full_hashes: HashMap<u64, Arc<[u64]>> = HashMap::new();
     let mut completed = 0usize;
     let total = trace.requests.len();
 
     let absorb = |ev: (usize, Ev),
                       factory: &mut IndicatorFactory,
                       metrics: &mut RunMetrics,
-                      full_hashes: &mut HashMap<u64, Vec<u64>>,
+                      full_hashes: &mut HashMap<u64, Arc<[u64]>>,
                       completed: &mut usize|
      -> Result<()> {
         let (i, ev) = ev;

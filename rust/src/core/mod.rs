@@ -1,5 +1,7 @@
 //! Core types shared across the router, engines, traces and harnesses.
 
+use std::sync::Arc;
+
 /// Token-block granularity of the KV$ (vLLM-style prefix caching hashes
 /// chains of fixed-size blocks; a prefix hit is a whole number of blocks).
 pub const BLOCK_TOKENS: usize = 16;
@@ -22,7 +24,7 @@ impl InstanceMask {
     /// An all-zero mask sized for `n` instances.
     pub fn with_capacity(n: usize) -> Self {
         InstanceMask {
-            words: vec![0; n.saturating_add(63) / 64],
+            words: vec![0; n.div_ceil(64)],
         }
     }
 
@@ -48,7 +50,7 @@ impl InstanceMask {
     /// Clear all bits and re-size the word array for `n` instances.
     pub fn reset(&mut self, n: usize) {
         self.words.clear();
-        self.words.resize(n.saturating_add(63) / 64, 0);
+        self.words.resize(n.div_ceil(64), 0);
     }
 
     pub fn set(&mut self, i: usize) {
@@ -130,6 +132,13 @@ impl Iterator for MaskOnes<'_> {
 }
 
 /// A serving request as seen by the global scheduler.
+///
+/// Token and hash storage is `Arc`-shared: a request is cloned at every
+/// hop of the harness (router bookkeeping, instance queue, completion
+/// maps), and with `Vec` storage each hop re-copied the whole prompt.
+/// `Arc<[T]>` makes `Request::clone` a couple of refcount bumps, so the
+/// DES steady state performs zero per-request heap copies of token or
+/// hash data — one allocation at trace build, shared forever after.
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
@@ -139,14 +148,14 @@ pub struct Request {
     /// conversation history). Drives KV$ hit structure and the §5.2
     /// hotspot analysis.
     pub class_id: u32,
-    /// Prompt token ids.
-    pub tokens: Vec<u32>,
+    /// Prompt token ids (shared, immutable after trace build).
+    pub tokens: Arc<[u32]>,
     /// Number of output tokens the request will generate (from the trace;
     /// unknown to the scheduler a-priori, used by the engine only).
     pub output_len: u32,
     /// Chained block hashes of the prompt (see [`crate::tokenizer`]),
-    /// computed once at ingest; used by every KV$ lookup.
-    pub block_hashes: Vec<u64>,
+    /// computed once at ingest; used by every KV$ lookup (shared).
+    pub block_hashes: Arc<[u64]>,
 }
 
 impl Request {

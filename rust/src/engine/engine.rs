@@ -9,6 +9,7 @@
 //! the router receives piggybacked on responses.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 use crate::core::{Request, RequestRecord, BLOCK_TOKENS};
 use crate::kvcache::RadixTree;
@@ -75,7 +76,8 @@ struct Seq {
     first_token_us: Option<u64>,
     /// Block hashes of prompt+output, inserted into KV$ at completion
     /// (multi-turn reuse: the next turn's prompt extends this chain).
-    full_hashes: Vec<u64>,
+    /// Shared with the trace — enqueue costs a refcount bump, not a copy.
+    full_hashes: Arc<[u64]>,
 }
 
 impl Seq {
@@ -94,6 +96,18 @@ pub struct Instance {
     kv: RadixTree,
     waiting: VecDeque<Seq>,
     running: Vec<Seq>,
+    /// Incrementally-maintained indicator counters, updated on
+    /// enqueue/admit/prefill-progress/decode/completion so
+    /// [`Self::snapshot`] is O(1) instead of rescanning every sequence at
+    /// every step end. [`Self::recompute_snapshot`] is the from-scratch
+    /// reference; debug builds assert equality after every step.
+    queued_prefill_tokens: usize,
+    total_context_tokens: usize,
+    /// Recycled event buffer: [`Self::step`] moves it into the
+    /// [`StepOutcome`]; callers hand it back via
+    /// [`Self::recycle_events`] so the steady state allocates no fresh
+    /// events Vec per step.
+    events_scratch: Vec<EngineEvent>,
     /// Lifetime counters.
     pub steps: u64,
     pub busy_us: u64,
@@ -110,6 +124,9 @@ impl Instance {
             kv,
             waiting: VecDeque::new(),
             running: Vec::new(),
+            queued_prefill_tokens: 0,
+            total_context_tokens: 0,
+            events_scratch: Vec::new(),
             steps: 0,
             busy_us: 0,
             total_prefill_tokens: 0,
@@ -120,22 +137,33 @@ impl Instance {
     /// Route a request to this instance (enters the waiting queue).
     /// `full_hashes` covers prompt+output blocks for completion-time
     /// cache insertion (what the next conversation turn will hit).
-    pub fn enqueue(&mut self, req: Request, full_hashes: Vec<u64>, now_us: u64) {
+    pub fn enqueue(&mut self, req: Request, full_hashes: Arc<[u64]>, _now_us: u64) {
         // Estimate the KV$ hit now so the queued-prefill-token indicator
-        // is hit-aware ("new prefill tokens considering KV$ hits", §5.1);
-        // the authoritative match happens at admission.
-        let est_hit = self.kv.match_prefix(&req.block_hashes, now_us, false);
+        // is hit-aware ("new prefill tokens considering KV$ hits", §5.1).
+        // A read-only peek: the estimate must not touch LRU state — the
+        // authoritative, LRU-refreshing match happens at admission.
+        let est_hit = self.kv.peek_prefix(&req.block_hashes);
         let est_cached = (est_hit * BLOCK_TOKENS).min(req.input_len());
+        let new_total = (req.input_len() - est_cached).max(1);
+        self.queued_prefill_tokens += new_total;
         self.waiting.push_back(Seq {
             cached_tokens: 0,
             pinned_blocks: 0,
-            new_total: (req.input_len() - est_cached).max(1),
+            new_total,
             prefilled: 0,
             generated: 0,
             first_token_us: None,
             full_hashes,
             req,
         });
+    }
+
+    /// Hand a spent [`StepOutcome::events`] buffer back for reuse by the
+    /// next [`Self::step`] (cleared here). Optional: dropping the Vec is
+    /// always correct, recycling just keeps the hot loop allocation-free.
+    pub fn recycle_events(&mut self, mut events: Vec<EngineEvent>) {
+        events.clear();
+        self.events_scratch = events;
     }
 
     pub fn has_work(&self) -> bool {
@@ -153,7 +181,25 @@ impl Instance {
         &mut self.kv
     }
 
+    /// O(1): assembled from the incrementally-maintained counters (plus
+    /// the tree's own O(1) occupancy counters) — no rescan of the
+    /// waiting/running sets at every step end.
     pub fn snapshot(&self) -> InstanceSnapshot {
+        InstanceSnapshot {
+            r_bs: self.running.len(),
+            q_bs: self.waiting.len(),
+            queued_prefill_tokens: self.queued_prefill_tokens,
+            total_context_tokens: self.total_context_tokens,
+            kv_used_blocks: self.kv.used_blocks(),
+            kv_capacity_blocks: self.kv.capacity_blocks(),
+        }
+    }
+
+    /// From-scratch O(waiting+running) recomputation of
+    /// [`Self::snapshot`] — the reference implementation the incremental
+    /// counters are validated against (asserted after every step in debug
+    /// builds, and by the randomized churn test).
+    pub fn recompute_snapshot(&self) -> InstanceSnapshot {
         let queued_prefill_tokens = self
             .waiting
             .iter()
@@ -175,19 +221,23 @@ impl Instance {
             let Some(mut seq) = self.waiting.pop_front() else {
                 break;
             };
-            // KV$ prefix match (touch refreshes LRU), then make the full
-            // prompt chain resident and pin it for the sequence lifetime.
-            let hit_blocks = self.kv.match_prefix(&seq.req.block_hashes, now_us, true);
-            self.kv.insert(&seq.req.block_hashes, now_us);
-            // Insertion may be truncated under pinned-full pressure; pin
-            // only what is actually resident.
-            let resident = self.kv.match_prefix(&seq.req.block_hashes, now_us, false);
-            self.kv.pin(&seq.req.block_hashes, resident);
-            seq.pinned_blocks = resident;
-            seq.cached_tokens = (hit_blocks * BLOCK_TOKENS).min(seq.req.input_len());
+            // ONE fused KV$ walk: match the cached prefix (LRU-refreshed),
+            // make the rest of the prompt chain resident, and pin it all
+            // for the sequence lifetime (truncated under pinned-full
+            // pressure — pin covers exactly what is resident).
+            let est_remaining = seq.prefill_remaining();
+            let out = self.kv.admit_chain(&seq.req.block_hashes, now_us);
+            seq.pinned_blocks = out.resident;
+            seq.cached_tokens = (out.hit_blocks * BLOCK_TOKENS).min(seq.req.input_len());
             // A fully-cached prompt still prefills its last token to
             // produce the first output logit (vLLM recomputes ≥1 token).
             seq.new_total = (seq.req.input_len() - seq.cached_tokens).max(1);
+            // Replace the enqueue-time estimate with the authoritative
+            // prefill debt, and move the sequence's context into the
+            // running account.
+            self.queued_prefill_tokens -= est_remaining;
+            self.queued_prefill_tokens += seq.prefill_remaining();
+            self.total_context_tokens += seq.context_len();
             self.running.push(seq);
         }
     }
@@ -219,7 +269,7 @@ impl Instance {
                     chunk as f64 * (ctx0 as f64 + chunk as f64 / 2.0) / 1000.0;
                 prefill_tokens += chunk;
                 prefill_plan.push((i, chunk));
-            } else if seq.generated > 0 && (seq.generated as u32) < seq.req.output_len.max(1) {
+            } else if seq.generated > 0 && seq.generated < seq.req.output_len.max(1) {
                 decode_seqs += 1;
                 decode_ctx += seq.context_len();
             }
@@ -243,14 +293,18 @@ impl Instance {
         let end_us = now_us + duration_us;
 
         // ---- apply --------------------------------------------------
-        let mut events = Vec::new();
+        // Reuse the recycled buffer: no fresh events Vec per step.
+        let mut events = std::mem::take(&mut self.events_scratch);
+        debug_assert!(events.is_empty());
         for (i, chunk) in prefill_plan {
             let seq = &mut self.running[i];
             seq.prefilled += chunk;
+            self.queued_prefill_tokens -= chunk;
             self.total_prefill_tokens += chunk as u64;
             if seq.prefill_remaining() == 0 {
                 // Prefill complete -> first output token at step end.
                 seq.generated = 1;
+                self.total_context_tokens += 1;
                 seq.first_token_us = Some(end_us);
                 events.push(EngineEvent::FirstToken {
                     req_id: seq.req.id,
@@ -265,6 +319,7 @@ impl Instance {
                 && seq.generated < seq.req.output_len.max(1)
             {
                 seq.generated += 1;
+                self.total_context_tokens += 1;
                 self.total_decode_tokens += 1;
             }
         }
@@ -278,6 +333,7 @@ impl Instance {
             };
             if done {
                 let seq = self.running.swap_remove(i);
+                self.total_context_tokens -= seq.context_len();
                 self.kv.unpin(&seq.req.block_hashes, seq.pinned_blocks, end_us);
                 // Cache prompt+output for future turns.
                 self.kv.insert(&seq.full_hashes, end_us);
@@ -301,6 +357,11 @@ impl Instance {
 
         self.steps += 1;
         self.busy_us += duration_us;
+        debug_assert_eq!(
+            self.snapshot(),
+            self.recompute_snapshot(),
+            "incremental snapshot counters diverged from recompute"
+        );
 
         Some(StepOutcome {
             duration_us,
@@ -318,7 +379,7 @@ mod tests {
     use super::*;
     use crate::tokenizer::block_hashes;
 
-    fn mk_req(id: u64, input: usize, output: u32, class: u32) -> (Request, Vec<u64>) {
+    fn mk_req(id: u64, input: usize, output: u32, class: u32) -> (Request, Arc<[u64]>) {
         let tokens = crate::tokenizer::span(class, id, input, 1024);
         let hashes = block_hashes(&tokens);
         // full = prompt + output tokens (distinct per request id)
@@ -330,11 +391,11 @@ mod tests {
                 id,
                 arrival_us: 0,
                 class_id: class,
-                tokens,
+                tokens: tokens.into(),
                 output_len: output,
-                block_hashes: hashes,
+                block_hashes: hashes.into(),
             },
-            full_hashes,
+            full_hashes.into(),
         )
     }
 
@@ -490,6 +551,78 @@ mod tests {
         inst.enqueue(req, full, 0);
         let (recs, _) = drain(&mut inst, 0);
         assert_eq!(recs[0].first_token_us, recs[0].completion_us);
+    }
+
+    /// Acceptance proof for the fused admission: the KV$ is walked
+    /// exactly ONCE per admitted sequence (the old path walked it three
+    /// times per admission, plus once per enqueue estimate).
+    #[test]
+    fn one_radix_walk_per_admission() {
+        let mut inst = Instance::new(0, EngineConfig::default());
+        let n = 12u64;
+        for i in 0..n {
+            let (r, f) = mk_req(i, 200, 5, i as u32);
+            inst.enqueue(r, f, 0);
+        }
+        assert_eq!(inst.kv().admit_radix_walks, 0, "enqueue must not walk");
+        let _ = drain(&mut inst, 0);
+        assert_eq!(inst.kv().admit_radix_walks, n, "one walk per admission");
+    }
+
+    /// Satellite: randomized churn over mixed enqueue/step/complete
+    /// cycles, asserting the incremental snapshot counters equal a
+    /// from-scratch recompute after EVERY step (also exercised by the
+    /// debug_assert inside step(), but this holds in release too and
+    /// drives adversarial interleavings deliberately).
+    #[test]
+    fn incremental_snapshot_matches_recompute_under_churn() {
+        for seed in 0..8u64 {
+            let mut rng = crate::util::Rng::new(0x5eed ^ seed);
+            let cfg = EngineConfig {
+                profile: ModelProfile::moe_30b(),
+                chunk_budget: [64, 256][seed as usize % 2],
+                max_batch: 1 + (seed as usize % 7),
+                kv_capacity_blocks: [0, 96, 1024][seed as usize % 3],
+            };
+            let mut inst = Instance::new(0, cfg);
+            let mut now = 0u64;
+            let mut next_id = 0u64;
+            for _ in 0..120 {
+                match rng.gen_range(0, 3) {
+                    0 | 1 => {
+                        let input = rng.gen_range(8, 900) as usize;
+                        let output = rng.gen_range(1, 40) as u32;
+                        let class = rng.gen_range(0, 5) as u32;
+                        let (r, f) = mk_req(next_id, input, output, class);
+                        next_id += 1;
+                        inst.enqueue(r, f, now);
+                        assert_eq!(inst.snapshot(), inst.recompute_snapshot());
+                    }
+                    _ => {
+                        if let Some(out) = inst.step(now) {
+                            now += out.duration_us;
+                            inst.recycle_events(out.events);
+                        }
+                        assert_eq!(
+                            inst.snapshot(),
+                            inst.recompute_snapshot(),
+                            "diverged at seed {seed}, t={now}"
+                        );
+                    }
+                }
+            }
+            // Drain to empty: counters must return to zero.
+            while inst.has_work() {
+                let out = inst.step(now).unwrap();
+                now += out.duration_us;
+                inst.recycle_events(out.events);
+                assert_eq!(inst.snapshot(), inst.recompute_snapshot());
+            }
+            let end = inst.snapshot();
+            assert_eq!(end.queued_prefill_tokens, 0);
+            assert_eq!(end.total_context_tokens, 0);
+            assert_eq!((end.r_bs, end.q_bs), (0, 0));
+        }
     }
 
     #[test]

@@ -24,7 +24,7 @@
 mod radix;
 mod shared;
 
-pub use radix::RadixTree;
+pub use radix::{AdmitOutcome, RadixTree};
 pub use shared::SharedRadixIndex;
 
 use crate::core::InstanceMask;

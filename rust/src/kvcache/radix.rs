@@ -44,6 +44,18 @@ impl PartialOrd for EvictCandidate {
     }
 }
 
+/// Result of one [`RadixTree::admit_chain`] call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdmitOutcome {
+    /// Leading blocks that were already cached before this admission —
+    /// the KV$ hit the sequence's prefill is spared.
+    pub hit_blocks: usize,
+    /// Leading blocks resident (and pinned) after the admission: the hit
+    /// prefix plus newly allocated blocks. Less than the chain length
+    /// when pinned-full capacity pressure truncated the insertion.
+    pub resident: usize,
+}
+
 /// Prefix tree over block-hash chains with capacity + LRU eviction.
 #[derive(Debug)]
 pub struct RadixTree {
@@ -58,6 +70,12 @@ pub struct RadixTree {
     pub total_lookup_blocks: u64,
     pub total_hit_blocks: u64,
     pub total_evicted_blocks: u64,
+    /// Number of [`Self::admit_chain`] walks performed. The engine's
+    /// admission path is exactly one fused walk per admitted sequence, so
+    /// after a run this equals the number of admissions — the harness
+    /// asserts it (previously each admission cost three separate walks:
+    /// match → insert → match).
+    pub admit_radix_walks: u64,
 }
 
 impl RadixTree {
@@ -79,6 +97,7 @@ impl RadixTree {
             total_lookup_blocks: 0,
             total_hit_blocks: 0,
             total_evicted_blocks: 0,
+            admit_radix_walks: 0,
         }
     }
 
@@ -110,6 +129,93 @@ impl RadixTree {
         self.total_lookup_blocks += hashes.len() as u64;
         self.total_hit_blocks += matched as u64;
         matched
+    }
+
+    /// Read-only prefix probe: number of leading blocks of `hashes`
+    /// present, with NO LRU refresh and NO hit-rate accounting. The
+    /// enqueue-time hit *estimate* must not perturb eviction order (the
+    /// authoritative, LRU-touching match happens at admission), and a
+    /// `&self` probe keeps read-side callers free of `&mut` plumbing.
+    pub fn peek_prefix(&self, hashes: &[u64]) -> usize {
+        let mut cur = ROOT;
+        let mut matched = 0;
+        for h in hashes {
+            match self.nodes[cur].children.get(h) {
+                Some(&next) => {
+                    cur = next;
+                    matched += 1;
+                }
+                None => break,
+            }
+        }
+        matched
+    }
+
+    /// Fused admission walk: in ONE pass over `hashes`, (a) count and
+    /// LRU-refresh the already-cached prefix, (b) allocate the remainder
+    /// (evicting as needed, truncating under pinned-full pressure), and
+    /// (c) pin every resident block for the sequence's lifetime. This
+    /// replaces the engine's previous `match_prefix` → `insert` →
+    /// `match_prefix` → `pin` quadruple walk with identical
+    /// eviction-visible semantics:
+    ///
+    /// * Existing blocks get `last_access = now` and `refcount += 1`. No
+    ///   eviction candidate is pushed while pinned — the stale entry the
+    ///   old path pushed was unusable anyway (refcount check), and
+    ///   `unpin` re-registers the tail when the pin is released.
+    /// * New blocks are born pinned (`refcount = 1`), which also makes
+    ///   the old path's protect-the-fresh-leaf parking in `evict_one`
+    ///   unnecessary for them.
+    /// * Release with `unpin(&hashes, outcome.resident, now)` exactly as
+    ///   before.
+    ///
+    /// Counters: one lookup of `hashes.len()` blocks with `hit_blocks`
+    /// hits (the old path triple-counted lookups).
+    pub fn admit_chain(&mut self, hashes: &[u64], now: u64) -> AdmitOutcome {
+        self.admit_radix_walks += 1;
+        let mut cur = ROOT;
+        let mut hit = 0usize;
+        let mut resident = 0usize;
+        // Phase 1 (cached prefix): refresh, count, pin. After the first
+        // miss every lookup misses (new nodes have no children), so the
+        // same loop becomes phase 2: allocate, born pinned.
+        for h in hashes {
+            match self.nodes[cur].children.get(h) {
+                Some(&next) => {
+                    let n = &mut self.nodes[next];
+                    n.last_access = now;
+                    n.refcount += 1;
+                    hit += 1;
+                    resident += 1;
+                    cur = next;
+                }
+                None => {
+                    // Phase 2: allocate the remainder, born pinned.
+                    if self.capacity != 0 && self.used >= self.capacity && !self.evict_one(cur) {
+                        break; // full and nothing evictable: truncate
+                    }
+                    let idx = self.alloc(Node {
+                        hash: *h,
+                        parent: cur,
+                        children: HashMap::default(),
+                        refcount: 1,
+                        last_access: now,
+                        alive: true,
+                    });
+                    self.nodes[cur].children.insert(*h, idx);
+                    self.used += 1;
+                    resident += 1;
+                    cur = idx;
+                }
+            }
+        }
+        self.total_lookup_blocks += hashes.len() as u64;
+        self.total_hit_blocks += hit as u64;
+        self.maybe_compact_heap();
+        AdmitOutcome {
+            hit_blocks: hit,
+            resident,
+        }
     }
 
     fn touch(&mut self, node: usize, now: u64) {
@@ -551,6 +657,91 @@ mod tests {
         }
         assert_eq!(full.insert(&[9], 9000), 1);
         full.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn peek_prefix_matches_match_without_perturbing_lru() {
+        let mut t = RadixTree::new(4);
+        t.insert(&[1, 2], 0); // old chain
+        t.insert(&[10, 20], 100); // newer chain
+        assert_eq!(t.peek_prefix(&[1, 2, 3]), 2);
+        assert_eq!(t.peek_prefix(&[9]), 0);
+        // A peek at the old chain must NOT refresh it: the next eviction
+        // still takes leaf 2 (oldest), unlike a touching match_prefix.
+        t.peek_prefix(&[1, 2]);
+        t.insert(&[30], 200);
+        assert_eq!(t.match_prefix(&[1, 2], 300, false), 1, "peek must not protect");
+        assert_eq!(t.match_prefix(&[10, 20], 300, false), 2);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn peek_prefix_leaves_counters_untouched() {
+        let mut t = RadixTree::new(0);
+        t.insert(&[1, 2], 0);
+        let (lk, ht) = (t.total_lookup_blocks, t.total_hit_blocks);
+        assert_eq!(t.peek_prefix(&[1, 2]), 2);
+        assert_eq!((t.total_lookup_blocks, t.total_hit_blocks), (lk, ht));
+    }
+
+    /// The fused walk must be observationally equivalent to the old
+    /// match→insert→match→pin quadruple on the full admit/release cycle.
+    #[test]
+    fn admit_chain_equals_quadruple_walk() {
+        let mut ops: Vec<(u64, Vec<u64>)> = Vec::new();
+        let mut rng = crate::util::Rng::new(7);
+        for step in 0..600u64 {
+            let base = rng.gen_range(0, 6);
+            let len = rng.gen_range(1, 10) as usize;
+            let chain: Vec<u64> = (0..len as u64).map(|i| base * 1000 + i).collect();
+            ops.push((step, chain));
+        }
+        for cap in [0usize, 8, 32, 128] {
+            let mut fused = RadixTree::new(cap);
+            let mut quad = RadixTree::new(cap);
+            for (now, chain) in &ops {
+                let out = fused.admit_chain(chain, *now);
+                let hit = quad.match_prefix(chain, *now, true);
+                quad.insert(chain, *now);
+                let resident = quad.match_prefix(chain, *now, false);
+                quad.pin(chain, resident);
+                assert_eq!(out.hit_blocks, hit, "cap {cap} @ {now}");
+                assert_eq!(out.resident, resident, "cap {cap} @ {now}");
+                // Immediate release (the engine holds pins across a seq's
+                // lifetime; interleaved pin lifetimes are covered by the
+                // churn test below).
+                fused.unpin(chain, out.resident, now + 1);
+                quad.unpin(chain, resident, now + 1);
+                assert_eq!(fused.used_blocks(), quad.used_blocks());
+                // Identical future behavior: every chain probes the same.
+                for (_, probe) in ops.iter().take(12) {
+                    assert_eq!(fused.peek_prefix(probe), quad.peek_prefix(probe));
+                }
+                fused.check_invariants().unwrap();
+                quad.check_invariants().unwrap();
+            }
+            assert_eq!(fused.total_evicted_blocks, quad.total_evicted_blocks);
+        }
+    }
+
+    #[test]
+    fn admit_chain_pins_and_truncates_under_pressure() {
+        let mut t = RadixTree::new(3);
+        // 5-block chain into a 3-block tree: truncated, resident pinned.
+        let out = t.admit_chain(&[1, 2, 3, 4, 5], 0);
+        assert_eq!((out.hit_blocks, out.resident), (0, 3));
+        // Everything resident is pinned: a new chain cannot evict in.
+        assert_eq!(t.insert(&[9], 10), 0);
+        t.unpin(&[1, 2, 3, 4, 5], out.resident, 20);
+        // Released: evictable again.
+        assert_eq!(t.insert(&[9], 30), 1);
+        // Re-admit over the partial chain: hit = what survived.
+        let hit = t.peek_prefix(&[1, 2, 3]);
+        let out2 = t.admit_chain(&[1, 2, 3], 40);
+        assert_eq!(out2.hit_blocks, hit);
+        assert!(out2.resident >= out2.hit_blocks);
+        assert_eq!(t.admit_radix_walks, 2);
+        t.check_invariants().unwrap();
     }
 
     #[test]

@@ -24,6 +24,13 @@ pub struct RunMetrics {
     pub sim_error_ratio: Vec<f64>,
     /// Virtual (or wall) duration of the run, µs.
     pub duration_us: u64,
+    /// Engine steps executed across all instances (DES runs; the bench
+    /// harness derives steps/s from it).
+    pub total_steps: u64,
+    /// Fused KV$ admission walks across all instances. The engine walks
+    /// its radix tree exactly once per admission, so this equals the
+    /// number of admitted requests — the harness asserts it.
+    pub admit_radix_walks: u64,
 }
 
 impl RunMetrics {
@@ -35,6 +42,8 @@ impl RunMetrics {
             sched_overhead_us: Vec::new(),
             sim_error_ratio: Vec::new(),
             duration_us: 0,
+            total_steps: 0,
+            admit_radix_walks: 0,
         }
     }
 

@@ -274,9 +274,9 @@ mod tests {
             id,
             arrival_us: 0,
             class_id: 9,
-            tokens,
+            tokens: tokens.into(),
             output_len: 10,
-            block_hashes,
+            block_hashes: block_hashes.into(),
         }
     }
 

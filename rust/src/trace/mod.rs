@@ -8,15 +8,20 @@ mod synth;
 pub use replay::{load_jsonl, save_jsonl};
 pub use synth::{generate, Workload, WorkloadSpec};
 
+use std::sync::Arc;
+
 use crate::core::Request;
 
 /// One trace entry: the request plus the block-hash chain of
 /// prompt+output (what the instance caches at completion — the next
-/// conversation turn's prompt extends it).
+/// conversation turn's prompt extends it). `full_hashes` is `Arc`-shared
+/// for the same reason as [`Request::tokens`]: the DES hands it to the
+/// instance queue and to its completion bookkeeping map, and both hops
+/// must be refcount bumps, not `Vec` copies.
 #[derive(Debug, Clone)]
 pub struct TraceRequest {
     pub req: Request,
-    pub full_hashes: Vec<u64>,
+    pub full_hashes: Arc<[u64]>,
 }
 
 /// A replayable trace, sorted by arrival time.

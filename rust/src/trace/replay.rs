@@ -79,10 +79,10 @@ pub fn load_jsonl(name: &str, path: &Path) -> Result<Trace, String> {
                 arrival_us: v.get("arrival_us").and_then(|x| x.as_u64()).unwrap_or(0),
                 class_id: v.get("class").and_then(|x| x.as_u64()).unwrap_or(0) as u32,
                 output_len: v.get("output_len").and_then(|x| x.as_u64()).unwrap_or(1) as u32,
-                tokens,
-                block_hashes: hashes,
+                tokens: tokens.into(),
+                block_hashes: hashes.into(),
             },
-            full_hashes,
+            full_hashes: full_hashes.into(),
         });
     }
     requests.sort_by_key(|r| r.req.arrival_us);

@@ -254,7 +254,9 @@ pub fn generate(spec: &WorkloadSpec) -> Trace {
             let output_len =
                 clamp_len(rng.lognormal(out_median, spec.output_sigma), 1, 4096) as u32;
 
-            let tokens = prompt.clone();
+            // Freeze the prompt into shared storage (the one copy every
+            // later hop — router, queue, bookkeeping — will refcount).
+            let tokens: std::sync::Arc<[u32]> = prompt.as_slice().into();
             let hashes = block_hashes(&tokens);
             // assistant reply tokens (deterministic: next turn reuses them)
             let assistant = span(
@@ -263,9 +265,9 @@ pub fn generate(spec: &WorkloadSpec) -> Trace {
                 output_len as usize,
                 spec.vocab,
             );
-            let mut full_tokens = tokens.clone();
-            full_tokens.extend(&assistant);
-            let full_hashes = block_hashes(&full_tokens);
+            // next turn's prompt = this prompt + assistant (+ next user)
+            prompt.extend(&assistant);
+            let full_hashes = block_hashes(&prompt);
 
             requests.push(TraceRequest {
                 req: Request {
@@ -274,14 +276,11 @@ pub fn generate(spec: &WorkloadSpec) -> Trace {
                     class_id: class,
                     tokens,
                     output_len,
-                    block_hashes: hashes,
+                    block_hashes: hashes.into(),
                 },
-                full_hashes,
+                full_hashes: full_hashes.into(),
             });
             next_id += 1;
-
-            // next turn's prompt = this prompt + assistant + (next user)
-            prompt = full_tokens;
             t_s += rng.exp(spec.turn_gap_s);
         }
     }

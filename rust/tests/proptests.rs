@@ -155,7 +155,7 @@ fn prop_eviction_never_starves() {
 
 // ------------------------------------------------------------- engine --
 
-fn random_request(rng: &mut Rng, id: u64) -> (Request, Vec<u64>) {
+fn random_request(rng: &mut Rng, id: u64) -> (Request, std::sync::Arc<[u64]>) {
     let class = rng.gen_range(0, 4) as u32;
     let input = rng.gen_range(8, 1200) as usize;
     let output = rng.gen_range(1, 120) as u32;
@@ -169,11 +169,11 @@ fn random_request(rng: &mut Rng, id: u64) -> (Request, Vec<u64>) {
             id,
             arrival_us: 0,
             class_id: class,
-            tokens,
+            tokens: tokens.into(),
             output_len: output,
-            block_hashes: hashes,
+            block_hashes: hashes.into(),
         },
-        full_hashes,
+        full_hashes.into(),
     )
 }
 
@@ -404,7 +404,7 @@ fn prop_trace_wellformed() {
             assert!(tr.req.arrival_us >= last);
             last = tr.req.arrival_us;
             assert!(tr.req.output_len >= 1);
-            assert_eq!(tr.req.block_hashes, block_hashes(&tr.req.tokens));
+            assert_eq!(&tr.req.block_hashes[..], &block_hashes(&tr.req.tokens)[..]);
             assert!(tr.full_hashes.len() >= tr.req.block_hashes.len());
             assert_eq!(
                 &tr.full_hashes[..tr.req.block_hashes.len()],
