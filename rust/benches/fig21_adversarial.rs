@@ -5,7 +5,7 @@
 //! detector (lmetric_guarded) recovers.
 
 use lmetric::benchlib::{experiment, figure_banner, run_boxed, run_default, trace_for};
-use lmetric::hotspot::GuardedLMetric;
+use lmetric::hotspot::HotspotGuarded;
 use lmetric::metrics::{fmt_s, save_results, ResultRow};
 use lmetric::util::stats::Summary;
 
@@ -37,7 +37,7 @@ fn main() {
     let mut window_ttft = std::collections::BTreeMap::new();
     let (m_v, _) = run_default(&exp, &trace, "vllm");
     let (m_l, _) = run_default(&exp, &trace, "lmetric");
-    let mut guarded = GuardedLMetric::new();
+    let mut guarded = HotspotGuarded::new();
     let m_g = run_boxed(&exp, &trace, &mut guarded);
     println!(
         "detector: {} phase-1 alarms, {} mitigations",

@@ -1,0 +1,238 @@
+//! Fig 33: the failure-condition guard under its own failure regimes.
+//!
+//! Part A sweeps the cross-spread window directly on crafted router
+//! snapshots: for every (KV-spread × load-spread) grid point it
+//! measures the analytically predicted misranking fraction (breakpoint
+//! oracle, [`window_slack`]), the detector's detection rate against it
+//! (must be 100% of non-borderline predictions — asserted), and the
+//! false-positive rate. A degenerate-tie sweep measures the secondary
+//! key's mitigation: every re-ranked tie must gain (never lose) cached
+//! prefix tokens.
+//!
+//! Part B replays the adversarial DES traces (idle-fleet bursts,
+//! shared-prefix floods, spread stress) under plain LMETRIC vs the
+//! guarded policy and records the guard counters plus the TTFT delta
+//! of mitigation — non-negative by construction, since on
+//! DES-reachable states the guard's overrides are confined to exact
+//! ties it re-ranks toward max cache reuse.
+
+use lmetric::benchlib::{figure_banner, parallel_sweep, scaled};
+use lmetric::cluster::{run_des, ClusterConfig};
+use lmetric::engine::EngineConfig;
+use lmetric::metrics::{fmt_s, save_results, ResultRow, RunMetrics};
+use lmetric::policy::{
+    window_slack, FailureAnalyzer, GuardedLMetric, INVERSION_MARGIN, LMetric, W_HI, W_LO,
+};
+use lmetric::router::{select_min, Policy};
+use lmetric::trace::adversarial::{degenerate_tie_ctx, spread_route_ctx};
+use lmetric::trace::{generate_adversarial, AdversarialScenario, AdversarialSpec};
+use lmetric::util::Rng;
+
+/// Oracle slack below which a misranking counts as analytically
+/// predicted; |slack| below it is borderline and skipped.
+const SLACK_EPS: f64 = 1e-7;
+
+struct SweepPoint {
+    kv_spread: f64,
+    load_spread: f64,
+    cases: usize,
+    predicted: usize,
+    detected: usize,
+    false_pos: usize,
+    degenerate: usize,
+    borderline: usize,
+}
+
+fn sweep_point(kv_spread: f64, load_spread: f64, cases: usize, seed: u64) -> SweepPoint {
+    let mut rng = Rng::new(seed ^ 0xf1633);
+    let score = LMetric::paper();
+    let analyzer = FailureAnalyzer::default();
+    let mut out = SweepPoint {
+        kv_spread,
+        load_spread,
+        cases,
+        predicted: 0,
+        detected: 0,
+        false_pos: 0,
+        degenerate: 0,
+        borderline: 0,
+    };
+    for _ in 0..cases {
+        let ctx = spread_route_ctx(&mut rng, 8, 4096, kv_spread, load_spread);
+        let p = select_min(&ctx, |i| score.score(&ctx, i));
+        let v = analyzer.analyze(&ctx, &score, p);
+        if v.degenerate() {
+            out.degenerate += 1;
+            continue; // the envelope question is posed on non-degenerate states
+        }
+        let kv: Vec<f64> = (0..ctx.n()).map(|i| score.factors(&ctx, i).0).collect();
+        let ld: Vec<f64> = (0..ctx.n()).map(|i| score.factors(&ctx, i).1).collect();
+        let slack = window_slack(&kv, &ld, p, W_LO, W_HI, INVERSION_MARGIN);
+        if slack.abs() < SLACK_EPS {
+            out.borderline += 1;
+            continue;
+        }
+        if slack < 0.0 {
+            out.predicted += 1;
+            if v.inversion {
+                out.detected += 1;
+            }
+        } else if v.inversion {
+            out.false_pos += 1;
+        }
+    }
+    out
+}
+
+fn main() {
+    figure_banner(
+        "Fig 33",
+        "failure-condition guard: spread-window sweep + adversarial DES replay",
+    );
+    let cases = if lmetric::benchlib::quick_mode() { 120 } else { 400 };
+    let mut rows: Vec<ResultRow> = Vec::new();
+
+    // ---------------- Part A: the spread window ------------------------
+    println!("\n--- spread-window sweep ({cases} snapshots per point) ---");
+    println!(
+        "{:>8} {:>8} {:>10} {:>10} {:>9} {:>10}",
+        "kv", "load", "predicted", "detected", "falsepos", "degenerate"
+    );
+    let mut grid: Vec<(f64, f64)> = Vec::new();
+    for &ks in &[1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0] {
+        for &ls in &[1.0, 4.0, 16.0, 64.0] {
+            grid.push((ks, ls));
+        }
+    }
+    let points = parallel_sweep(&grid, |i, &(ks, ls)| sweep_point(ks, ls, cases, i as u64));
+    let mut total_predicted = 0usize;
+    let mut total_detected = 0usize;
+    for p in &points {
+        assert_eq!(
+            p.detected, p.predicted,
+            "detector must catch every non-borderline predicted misranking \
+             (and only those) at kv={} load={}",
+            p.kv_spread, p.load_spread
+        );
+        assert_eq!(
+            p.false_pos, 0,
+            "no false positives at kv={} load={}",
+            p.kv_spread, p.load_spread
+        );
+        total_predicted += p.predicted;
+        total_detected += p.detected;
+        println!(
+            "{:>7}x {:>7}x {:>10} {:>10} {:>9} {:>10}",
+            p.kv_spread, p.load_spread, p.predicted, p.detected, p.false_pos, p.degenerate
+        );
+        let denom = p.cases.max(1) as f64;
+        rows.push(
+            ResultRow::from_metrics(
+                &format!("sweep_kv{}x_load{}x", p.kv_spread, p.load_spread),
+                &RunMetrics::new(1),
+            )
+            .with("predicted_frac", p.predicted as f64 / denom)
+            .with("detected_frac", p.detected as f64 / denom)
+            .with("false_pos", p.false_pos as f64)
+            .with("borderline", p.borderline as f64),
+        );
+    }
+    println!(
+        "\ndetection: {total_detected}/{total_predicted} analytically predicted \
+         misrankings caught (>= predicted fraction: {})",
+        if total_detected >= total_predicted { "YES" } else { "NO" }
+    );
+
+    // Degenerate-tie mitigation: the secondary key may only move a tied
+    // decision toward MORE cached prefix.
+    let mut rng = Rng::new(4242);
+    let mut guarded = GuardedLMetric::new();
+    let mut plain = LMetric::paper();
+    let (mut ties, mut moved, mut hit_gain_tokens) = (0usize, 0usize, 0i64);
+    for _ in 0..cases {
+        let ctx = degenerate_tie_ctx(&mut rng, 8, 2048);
+        let g = guarded.route(&ctx).instance;
+        let p = plain.route(&ctx).instance;
+        ties += 1;
+        if g != p {
+            moved += 1;
+        }
+        let gain = ctx.hit_tokens[g] as i64 - ctx.hit_tokens[p] as i64;
+        assert!(gain >= 0, "tie re-rank must never lose cached prefix");
+        hit_gain_tokens += gain;
+    }
+    println!(
+        "degenerate ties: {moved}/{ties} re-ranked, mean prefix gain {:.0} tokens",
+        hit_gain_tokens as f64 / ties.max(1) as f64
+    );
+    assert!(moved > 0, "crafted ties must exercise the secondary key");
+    assert_eq!(guarded.counters.degenerate, ties as u64);
+    assert_eq!(guarded.counters.mitigated, moved as u64);
+    rows.push(
+        ResultRow::from_metrics("degenerate_tie_mitigation", &RunMetrics::new(1))
+            .with("ties", ties as f64)
+            .with("mitigated", moved as f64)
+            .with("mean_hit_gain_tokens", hit_gain_tokens as f64 / ties.max(1) as f64),
+    );
+
+    // ---------------- Part B: adversarial DES replay --------------------
+    println!("\n--- adversarial DES traces (8 instances) ---");
+    let cfg = ClusterConfig::new(8, EngineConfig::default());
+    for scenario in [
+        AdversarialScenario::IdleFleetBurst,
+        AdversarialScenario::SharedPrefixFlood,
+        AdversarialScenario::SpreadStress,
+    ] {
+        let spec = AdversarialSpec::preset(scenario, scaled(1500), 17);
+        let trace = generate_adversarial(&spec);
+        let mut plain = lmetric::policy::build("lmetric", 0.0, &cfg.engine.profile, 256).unwrap();
+        let m_plain = run_des(&cfg, &trace, plain.as_mut());
+        let mut guarded = GuardedLMetric::new();
+        let m_guard = run_des(&cfg, &trace, &mut guarded);
+        assert_eq!(m_guard.guard, guarded.counters, "counters must flow into RunMetrics");
+        assert_eq!(
+            m_guard.guard.checks,
+            trace.requests.len() as u64,
+            "one guard check per routed request"
+        );
+        let ttft_delta = m_plain.ttft_summary().mean - m_guard.ttft_summary().mean;
+        assert!(
+            ttft_delta >= -1e-9,
+            "{}: mitigation must not regress TTFT (delta {ttft_delta})",
+            scenario.name()
+        );
+        println!(
+            "{:<22} checks {:>6}  degenerate {:>6}  inversion {:>6}  mitigated {:>4}  \
+             TTFT {} -> {} (improvement {:+.1}ms)",
+            scenario.name(),
+            m_guard.guard.checks,
+            m_guard.guard.degenerate,
+            m_guard.guard.inversion,
+            m_guard.guard.mitigated,
+            fmt_s(m_plain.ttft_summary().mean),
+            fmt_s(m_guard.ttft_summary().mean),
+            ttft_delta * 1e3
+        );
+        match scenario {
+            AdversarialScenario::IdleFleetBurst | AdversarialScenario::SharedPrefixFlood => {
+                assert!(
+                    m_guard.guard.degenerate > 0,
+                    "{}: degenerate regime must be detected",
+                    scenario.name()
+                );
+            }
+            AdversarialScenario::SpreadStress => {}
+        }
+        rows.push(
+            ResultRow::from_metrics(&format!("des_{}", scenario.name()), &m_guard)
+                .with("guard_checks", m_guard.guard.checks as f64)
+                .with("guard_degenerate", m_guard.guard.degenerate as f64)
+                .with("guard_inversion", m_guard.guard.inversion as f64)
+                .with("guard_mitigated", m_guard.guard.mitigated as f64)
+                .with("ttft_improvement_s", ttft_delta),
+        );
+    }
+
+    let path = save_results("fig33_guard_sweep", &rows, &[]).unwrap();
+    println!("saved {}", path.display());
+}

@@ -125,6 +125,34 @@ fn main() {
         sm.admit_radix_walks
     );
 
+    // Failure-condition guard counters: the same natural chatbot replay
+    // under the guarded policy (the "extremely rare in practice" record
+    // — natural_mitigated should stay 0), plus an adversarial
+    // shared-prefix flood where the degenerate detector must fire.
+    println!("\n--- failure-condition guard ---");
+    let mut gpol = lmetric::policy::GuardedLMetric::new();
+    let gm = lmetric::cluster::run_des(&cfg, &trace, &mut gpol);
+    let natural = gm.guard;
+    println!(
+        "natural chatbot : checks {} degenerate {} inversion {} mitigated {}",
+        natural.checks, natural.degenerate, natural.inversion, natural.mitigated
+    );
+    let fspec = lmetric::trace::AdversarialSpec::preset(
+        lmetric::trace::AdversarialScenario::SharedPrefixFlood,
+        scaled(1600),
+        5,
+    );
+    let ftrace = lmetric::trace::generate_adversarial(&fspec);
+    let mut fpol = lmetric::policy::GuardedLMetric::new();
+    let fm = lmetric::cluster::run_des(&cfg, &ftrace, &mut fpol);
+    let flood = fm.guard;
+    assert_eq!(flood.checks, ftrace.requests.len() as u64);
+    assert!(flood.degenerate > 0, "flood must trip the degenerate detector");
+    println!(
+        "prefix flood    : checks {} degenerate {} inversion {} mitigated {}",
+        flood.checks, flood.degenerate, flood.inversion, flood.mitigated
+    );
+
     // Parallel sweep harness: K independent DES runs serial vs fanned
     // out over scoped threads. Results must be identical (virtual time is
     // deterministic); only wall-clock may differ — that ratio is the
@@ -204,6 +232,19 @@ fn main() {
                     Json::Num(sm.total_steps as f64 / swall.max(1e-9)),
                 ),
                 ("admit_radix_walks", Json::Num(sm.admit_radix_walks as f64)),
+            ]),
+        ),
+        (
+            "guard",
+            Json::obj(vec![
+                ("natural_checks", Json::Num(natural.checks as f64)),
+                ("natural_degenerate", Json::Num(natural.degenerate as f64)),
+                ("natural_inversion", Json::Num(natural.inversion as f64)),
+                ("natural_mitigated", Json::Num(natural.mitigated as f64)),
+                ("flood_checks", Json::Num(flood.checks as f64)),
+                ("flood_degenerate", Json::Num(flood.degenerate as f64)),
+                ("flood_inversion", Json::Num(flood.inversion as f64)),
+                ("flood_mitigated", Json::Num(flood.mitigated as f64)),
             ]),
         ),
         (

@@ -7,7 +7,7 @@
 
 use lmetric::cluster::{build_scaled_trace, cluster_config, run_des};
 use lmetric::config::ExperimentConfig;
-use lmetric::hotspot::GuardedLMetric;
+use lmetric::hotspot::HotspotGuarded;
 use lmetric::metrics::{render_table, ResultRow};
 use lmetric::policy;
 use lmetric::util::stats::Windowed;
@@ -47,7 +47,7 @@ fn main() {
         );
     }
     // Guarded run, keeping detector counters.
-    let mut guarded = GuardedLMetric::new();
+    let mut guarded = HotspotGuarded::new();
     let m = run_des(&cfg, &trace, &mut guarded);
     println!(
         "\ndetector: {} phase-1 alarms, {} mitigations",

@@ -43,6 +43,9 @@ enum Event {
 /// the full metrics bundle.
 pub fn run_des(cfg: &ClusterConfig, trace: &Trace, policy: &mut dyn Policy) -> RunMetrics {
     let n = cfg.n_instances;
+    // Guard counters accumulate over the policy's lifetime; report this
+    // run's delta.
+    let guard_start = policy.guard_counters().unwrap_or_default();
     let mut instances: Vec<Instance> = (0..n)
         .map(|i| Instance::new(i, cfg.engine.clone()))
         .collect();
@@ -161,6 +164,7 @@ pub fn run_des(cfg: &ClusterConfig, trace: &Trace, policy: &mut dyn Policy) -> R
         metrics.total_steps += inst.steps;
         metrics.admit_radix_walks += inst.kv().admit_radix_walks;
     }
+    metrics.guard = policy.guard_counters().unwrap_or_default().since(guard_start);
     metrics
 }
 

@@ -404,6 +404,9 @@ pub fn run_live(
     policy: &mut dyn Policy,
 ) -> Result<RunMetrics> {
     let n = cfg.n_instances;
+    // Guard counters accumulate over the policy's lifetime; report this
+    // run's delta.
+    let guard_start = policy.guard_counters().unwrap_or_default();
     let epoch = Instant::now();
     let (ev_tx, ev_rx) = mpsc::channel::<(usize, Ev)>();
     let mut cmd_txs = Vec::new();
@@ -491,5 +494,6 @@ pub fn run_live(
     }
     metrics.duration_us = epoch.elapsed().as_micros() as u64;
     metrics.records.sort_by_key(|r| r.id);
+    metrics.guard = policy.guard_counters().unwrap_or_default().since(guard_start);
     Ok(metrics)
 }

@@ -191,30 +191,32 @@ impl Default for HotspotDetector {
     }
 }
 
-/// LMetric wrapped with the detector: the production configuration
-/// (`lmetric_guarded`). On mitigation, routes by pure load balancing
-/// restricted to M̄ (the paper's "filter out the suspected instances").
-pub struct GuardedLMetric {
+/// LMetric wrapped with the detector — registry name `lmetric_guarded`.
+/// On mitigation, routes by pure load balancing restricted to M̄ (the
+/// paper's "filter out the suspected instances"). (Previously named
+/// `GuardedLMetric`; that name now belongs to the §5 failure-condition
+/// guard, [`crate::policy::GuardedLMetric`].)
+pub struct HotspotGuarded {
     inner: LMetric,
     pub detector: HotspotDetector,
 }
 
-impl GuardedLMetric {
+impl HotspotGuarded {
     pub fn new() -> Self {
-        GuardedLMetric {
+        HotspotGuarded {
             inner: LMetric::paper(),
             detector: HotspotDetector::new(),
         }
     }
 }
 
-impl Default for GuardedLMetric {
+impl Default for HotspotGuarded {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl Policy for GuardedLMetric {
+impl Policy for HotspotGuarded {
     fn name(&self) -> String {
         "lmetric_guarded".into()
     }
@@ -292,7 +294,7 @@ mod tests {
 
     #[test]
     fn mitigation_filters_m_and_load_balances() {
-        let mut p = GuardedLMetric::new();
+        let mut p = HotspotGuarded::new();
         // Drive into mitigation.
         let mut routed = Vec::new();
         for k in 0..60u64 {

@@ -23,8 +23,12 @@
 //! * [`runtime`] — loads the AOT HLO artifacts produced by
 //!   `python/compile/aot.py` and executes them on the PJRT CPU client.
 //! * [`trace`] — synthetic workload generators matching the paper's four
-//!   trace families, plus replayer and rate scaling.
+//!   trace families, plus replayer, rate scaling and the adversarial
+//!   failure-regime generators ([`trace::adversarial`]).
 //! * [`hotspot`] — the §5.2 two-phase KV$-hotspot detector.
+//! * [`policy::GuardedLMetric`] — the failure-condition guard
+//!   (`lmetric_safe`): detects the derived degenerate / cross-spread
+//!   misranking regimes per decision and re-ranks degenerate ties.
 //! * [`simulator`] — the VIDUR-like latency predictor used by the
 //!   simulation-based baselines (llm-d, PolyServe).
 

@@ -91,6 +91,13 @@ fn cmd_replay(flags: &HashMap<String, String>) {
         .with("throughput_tok_s", m.output_throughput())
         .with("imbalance_s", m.imbalance_score());
     println!("{}", render_table(&format!("{} / {}", exp.workload, exp.profile), &[row]));
+    if pol.guard_counters().is_some() {
+        let g = m.guard;
+        println!(
+            "guard: {} checks, {} degenerate, {} inversion, {} mitigated",
+            g.checks, g.degenerate, g.inversion, g.mitigated
+        );
+    }
 }
 
 fn cmd_compare(flags: &HashMap<String, String>) {

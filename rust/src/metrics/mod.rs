@@ -6,6 +6,7 @@ use std::io::Write;
 use std::path::Path;
 
 use crate::core::RequestRecord;
+use crate::router::GuardCounters;
 use crate::util::json::Json;
 use crate::util::stats::{cdf_points, stddev, Summary, Windowed};
 
@@ -31,6 +32,12 @@ pub struct RunMetrics {
     /// its radix tree exactly once per admission, so this equals the
     /// number of admitted requests — the harness asserts it.
     pub admit_radix_walks: u64,
+    /// Failure-condition guard counters of the run's policy (all-zero
+    /// for unguarded policies). Populated by both the DES and the live
+    /// cluster at the end of a run from
+    /// [`Policy::guard_counters`](crate::router::Policy::guard_counters),
+    /// as THIS run's delta (policies accumulate over their lifetime).
+    pub guard: GuardCounters,
 }
 
 impl RunMetrics {
@@ -44,6 +51,7 @@ impl RunMetrics {
             duration_us: 0,
             total_steps: 0,
             admit_radix_walks: 0,
+            guard: GuardCounters::default(),
         }
     }
 

@@ -1,0 +1,528 @@
+//! The failure-condition analyzer + guarded LMETRIC — the paper's last
+//! claim made executable: it "mathematically derive[s] the conditions
+//! under which multiplication may fail, and find[s] that such conditions
+//! are extremely rare in practice and can be detected (and mitigated)
+//! beforehand".
+//!
+//! Multiplication compares instances by `kv_i × load_i`. The implicit
+//! claim is that the product's argmin tracks the argmin of the true cost,
+//! which is some positive linear combination `a·kv + b·load` whose
+//! weights need no tuning because they cancel under cross-instance
+//! comparison. The derived conditions where that cancellation breaks:
+//!
+//! * **Degenerate factor** — one factor stops discriminating, so the
+//!   product collapses onto the other axis (or onto a tie):
+//!   - *all-idle*: every candidate has `BS == 0`, so `BS+1` ties at 1
+//!     cluster-wide and ties can no longer be broken by load;
+//!   - *zero annihilation*: `P-token == 0` on ≥ 2 instances; their
+//!     products all equal 0 regardless of load, so the score cannot
+//!     rank them on the load axis at all.
+//! * **Cross-spread inversion** — the spreads of the two indicator
+//!   axes land in a window where the product's argmin is *provably*
+//!   outside the moderate linear envelope: after per-axis mean
+//!   normalization (the cancelled weights), there is **no** mixing
+//!   weight `w ∈ [W_LO, W_HI]` for which the product's choice comes
+//!   within [`INVERSION_MARGIN`] of minimizing
+//!   `w·kv̂ + (1−w)·load̂`. Detected in one O(N) pass by intersecting,
+//!   per instance, the half-interval of weights under which the product
+//!   choice survives ([`FailureAnalyzer::analyze`]); empty intersection
+//!   = misranking window.
+//!
+//! When a condition fires, [`GuardedLMetric`] applies the mitigation:
+//! fall back to a deterministic secondary key — the lexicographic
+//! `(P-token, BS)` comparison with the residual tie resolved toward the
+//! *highest* prefix hit (max cache reuse), then lowest index — over the
+//! set of instances the product left undetermined (its argmin tie set).
+//! The two regimes differ in what that means:
+//!
+//! * Degenerate fires are discrimination collapses: the tie set is real
+//!   (several instances share the minimal product) and the secondary
+//!   key re-ranks it. This is where `guard_mitigated` can move.
+//! * Inversion fires flag a *confident* product choice (singleton
+//!   argmin); the guard reports it through the counters rather than
+//!   forcibly re-ranking — any override there would replace one
+//!   outside-the-envelope ranking with another (`fig33_guard_sweep`
+//!   measures exactly this).
+//!
+//! On any decision where no condition fires, `GuardedLMetric` is
+//! byte-identical to [`LMetric::paper`] by construction (it routes via
+//! the same [`select_min`] over the same score). Moreover, on every
+//! indicator state reachable through the DES/live data plane — where
+//! queued prefill tokens imply queued batch members and prefix hits are
+//! block-aligned prompt prefixes — the degenerate re-rank provably
+//! agrees with `select_min`'s own tie-break, so `guard_mitigated == 0`
+//! on natural traffic is a theorem; the decision-replay test enforces
+//! it end to end.
+
+use crate::router::{
+    select_min, GuardCounters, IndicatorStats, Policy, RouteCtx, RouteDecision,
+};
+
+use super::lmetric::LMetric;
+
+/// Lower edge of the moderate linear-envelope window: the true cost is
+/// assumed to weight the (normalized) KV axis at least 1:3 vs load.
+pub const W_LO: f64 = 0.25;
+/// Upper edge of the envelope window (KV weighted at most 3:1 vs load).
+pub const W_HI: f64 = 0.75;
+/// Relative slack before an inversion counts: the product's choice must
+/// be beaten by more than this fraction at *every* window weight.
+/// Absorbs indicator staleness and sub-block P-token noise; borderline
+/// inversions are not actionable misrankings.
+pub const INVERSION_MARGIN: f64 = 0.25;
+
+/// The per-decision analysis result.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GuardVerdict {
+    /// All candidates idle: the load factor ties at 1 cluster-wide.
+    pub degenerate_idle: bool,
+    /// KV factor is exactly zero on ≥ 2 instances.
+    pub degenerate_zero: bool,
+    /// Product argmin provably outside the linear envelope window.
+    pub inversion: bool,
+    /// Cross-instance max/min ratio of the KV axis at this decision.
+    pub kv_spread: f64,
+    /// Cross-instance max/min ratio of the load axis.
+    pub load_spread: f64,
+}
+
+impl GuardVerdict {
+    pub fn degenerate(&self) -> bool {
+        self.degenerate_idle || self.degenerate_zero
+    }
+
+    pub fn fired(&self) -> bool {
+        self.degenerate() || self.inversion
+    }
+}
+
+/// One logged routing decision of [`GuardedLMetric::with_log`]: enough
+/// to recount every counter offline (the DES churn test does exactly
+/// that).
+#[derive(Debug, Clone, Copy)]
+pub struct GuardDecision {
+    pub req_id: u64,
+    pub degenerate: bool,
+    pub inversion: bool,
+    /// What bare `select_min` over the product would have chosen.
+    pub product_choice: usize,
+    /// What the guarded policy actually chose.
+    pub final_choice: usize,
+}
+
+/// The stateless failure-condition analyzer: evaluates the derived
+/// misranking conditions on a borrowed [`RouteCtx`] in O(N) with zero
+/// allocation.
+#[derive(Debug, Clone, Copy)]
+pub struct FailureAnalyzer {
+    pub w_lo: f64,
+    pub w_hi: f64,
+    pub margin: f64,
+}
+
+impl Default for FailureAnalyzer {
+    fn default() -> Self {
+        FailureAnalyzer {
+            w_lo: W_LO,
+            w_hi: W_HI,
+            margin: INVERSION_MARGIN,
+        }
+    }
+}
+
+impl FailureAnalyzer {
+    /// Analyze one decision. `product_choice` must be the bare
+    /// `select_min` argmin of `score` on this context (the caller just
+    /// computed it to route).
+    pub fn analyze(&self, ctx: &RouteCtx, score: &LMetric, product_choice: usize) -> GuardVerdict {
+        let n = ctx.n();
+        let stats = IndicatorStats::collect(ctx, |i| score.factors(ctx, i));
+        let mut v = GuardVerdict {
+            kv_spread: stats.kv_spread(),
+            load_spread: stats.load_spread(),
+            ..GuardVerdict::default()
+        };
+        if n < 2 {
+            return v; // a single candidate cannot be misranked
+        }
+        v.degenerate_idle = stats.all_idle;
+        v.degenerate_zero = stats.kv_zeros >= 2;
+        let k_mean = stats.kv_mean();
+        let l_mean = stats.load_mean();
+        if v.degenerate() || k_mean <= 0.0 {
+            // Tie/annihilation regimes are the degenerate detector's
+            // job; the envelope is undefined on an all-zero KV axis.
+            return v;
+        }
+        // Feasible-weight interval: the product choice `p` survives
+        // weight w iff for every j,
+        //   w·kv̂_j + (1−w)·load̂_j ≥ (1−margin)·(w·kv̂_p + (1−w)·load̂_p).
+        // Each j contributes one linear constraint in w, i.e. one
+        // half-interval; intersect them all with [w_lo, w_hi].
+        let (kp, lp) = score.factors(ctx, product_choice);
+        let kp = kp / k_mean * (1.0 - self.margin);
+        let lp = lp / l_mean * (1.0 - self.margin);
+        let mut lo = self.w_lo;
+        let mut hi = self.w_hi;
+        for j in 0..n {
+            let (kj, lj) = score.factors(ctx, j);
+            let a = kj / k_mean - kp;
+            let b = lj / l_mean - lp;
+            let d = a - b;
+            if d > 0.0 {
+                lo = lo.max(-b / d);
+            } else if d < 0.0 {
+                hi = hi.min(-b / d);
+            } else if b < 0.0 {
+                // Constant constraint, violated at every weight.
+                lo = f64::INFINITY;
+            }
+            if lo > hi {
+                break;
+            }
+        }
+        v.inversion = lo > hi;
+        v
+    }
+
+    /// The mitigation: re-rank the product's argmin *tie set* (every
+    /// instance whose score equals `product_choice`'s — the set the
+    /// product provably cannot discriminate) with the deterministic
+    /// secondary key: lexicographic (KV factor asc, load factor asc,
+    /// prefix hit desc, index asc). For the paper configuration this is
+    /// the `(P-token, BS)` comparison, with residual ties resolved
+    /// toward the instance holding the longest cached prefix.
+    pub fn secondary_choice(
+        &self,
+        ctx: &RouteCtx,
+        score: &LMetric,
+        product_choice: usize,
+    ) -> usize {
+        let min_score = score.score(ctx, product_choice);
+        let key = |i: usize| {
+            let (kv, load) = score.factors(ctx, i);
+            (kv, load, -(ctx.hit_tokens[i] as f64))
+        };
+        let mut best = product_choice;
+        let mut best_key = key(product_choice);
+        for i in 0..ctx.n() {
+            if i == product_choice || score.score(ctx, i) != min_score {
+                continue;
+            }
+            let k = key(i);
+            if k < best_key {
+                best_key = k;
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+/// Reference oracle for the inversion condition, by a *different*
+/// algorithm than [`FailureAnalyzer::analyze`]'s interval intersection:
+/// evaluate the survival slack
+/// `min_j (L_w(j) − (1−margin)·L_w(i*))` at the window endpoints and at
+/// every per-instance constraint root. The slack function is a min of
+/// linear functions of w (concave piecewise linear), so its sign over
+/// the window is decided at exactly these candidate weights. Returns
+/// the best slack found: ≥ 0 ⟺ some window weight justifies `i_star`
+/// (no inversion). Used by the property suite and `fig33_guard_sweep`
+/// to cross-check the detector.
+pub fn window_slack(
+    kv: &[f64],
+    load: &[f64],
+    i_star: usize,
+    w_lo: f64,
+    w_hi: f64,
+    margin: f64,
+) -> f64 {
+    let n = kv.len();
+    assert_eq!(n, load.len());
+    assert!(n >= 2, "window_slack needs >= 2 instances");
+    let k_mean = kv.iter().sum::<f64>() / n as f64;
+    let l_mean = load.iter().sum::<f64>() / n as f64;
+    if k_mean <= 0.0 {
+        return 0.0; // all-zero KV axis: envelope undefined, treat as safe
+    }
+    let kh = |i: usize| kv[i] / k_mean;
+    let lh = |i: usize| load[i] / l_mean;
+    let lw = |w: f64, i: usize| w * kh(i) + (1.0 - w) * lh(i);
+    let slack_at = |w: f64| -> f64 {
+        let target = (1.0 - margin) * lw(w, i_star);
+        (0..n).map(|j| lw(w, j) - target).fold(f64::INFINITY, f64::min)
+    };
+    let mut best = slack_at(w_lo).max(slack_at(w_hi));
+    for j in 0..n {
+        let a = kh(j) - (1.0 - margin) * kh(i_star);
+        let b = lh(j) - (1.0 - margin) * lh(i_star);
+        let d = a - b;
+        if d != 0.0 {
+            let w = -b / d;
+            if w > w_lo && w < w_hi {
+                best = best.max(slack_at(w));
+            }
+        }
+    }
+    best
+}
+
+/// LMETRIC wrapped with the failure-condition guard — registry name
+/// `lmetric_safe`. Identical to [`LMetric::paper`] on every decision
+/// where no derived failure condition holds; on a degenerate detection,
+/// re-ranks the product's tie set with the deterministic secondary key
+/// and counts whether that actually changed the choice; on an inversion
+/// detection, counts and flags (see the module docs for why a forced
+/// override is not applied).
+pub struct GuardedLMetric {
+    inner: LMetric,
+    pub analyzer: FailureAnalyzer,
+    pub counters: GuardCounters,
+    /// Per-decision record, enabled by [`GuardedLMetric::with_log`]
+    /// (off by default: the hot path stays allocation-free).
+    pub log: Option<Vec<GuardDecision>>,
+}
+
+impl GuardedLMetric {
+    pub fn new() -> Self {
+        GuardedLMetric {
+            inner: LMetric::paper(),
+            analyzer: FailureAnalyzer::default(),
+            counters: GuardCounters::default(),
+            log: None,
+        }
+    }
+
+    /// A guarded policy that also records every decision (tests and
+    /// offline analysis; the DES churn test recounts the counters from
+    /// this log).
+    pub fn with_log() -> Self {
+        let mut g = GuardedLMetric::new();
+        g.log = Some(Vec::new());
+        g
+    }
+
+    pub fn inner(&self) -> &LMetric {
+        &self.inner
+    }
+}
+
+impl Default for GuardedLMetric {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Policy for GuardedLMetric {
+    fn name(&self) -> String {
+        "lmetric_safe".into()
+    }
+
+    fn guard_counters(&self) -> Option<GuardCounters> {
+        Some(self.counters)
+    }
+
+    fn route(&mut self, ctx: &RouteCtx) -> RouteDecision {
+        self.counters.checks += 1;
+        // Exactly the unguarded decision, same arithmetic + tie-breaks.
+        let product_choice = select_min(ctx, |i| self.inner.score(ctx, i));
+        let v = self.analyzer.analyze(ctx, &self.inner, product_choice);
+        if v.degenerate() {
+            self.counters.degenerate += 1;
+        }
+        if v.inversion {
+            self.counters.inversion += 1;
+        }
+        let mut choice = product_choice;
+        if v.degenerate() {
+            // Discrimination collapse: re-rank the product's tie set
+            // with the secondary key. Inversion fires leave the
+            // (confident, singleton-argmin) choice standing and are
+            // surfaced through the counters instead.
+            let alt = self.analyzer.secondary_choice(ctx, &self.inner, product_choice);
+            if alt != choice {
+                self.counters.mitigated += 1;
+                choice = alt;
+            }
+        }
+        if let Some(log) = &mut self.log {
+            log.push(GuardDecision {
+                req_id: ctx.req_id,
+                degenerate: v.degenerate(),
+                inversion: v.inversion,
+                product_choice,
+                final_choice: choice,
+            });
+        }
+        RouteDecision::to(choice)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::router::Indicators;
+
+    fn ctx(input: usize, hits: Vec<usize>, bss: Vec<usize>, queued: Vec<usize>) -> RouteCtx {
+        let inds = bss
+            .iter()
+            .zip(&queued)
+            .map(|(b, q)| Indicators {
+                r_bs: *b,
+                queued_prefill_tokens: *q,
+                ..Default::default()
+            })
+            .collect();
+        RouteCtx::new(0, 0, 0, input, hits, inds)
+    }
+
+    fn analyze(c: &RouteCtx) -> GuardVerdict {
+        let score = LMetric::paper();
+        let a = FailureAnalyzer::default();
+        let p = select_min(c, |i| score.score(c, i));
+        a.analyze(c, &score, p)
+    }
+
+    #[test]
+    fn benign_snapshot_fires_nothing() {
+        // Distinct loads, distinct hits, product winner is also the
+        // balanced winner: no condition holds.
+        let c = ctx(1000, vec![800, 0], vec![4, 2], vec![0, 0]);
+        let v = analyze(&c);
+        assert!(!v.fired(), "{v:?}");
+        assert!(v.kv_spread > 1.0);
+    }
+
+    #[test]
+    fn all_idle_fleet_is_degenerate() {
+        let c = ctx(1000, vec![0, 0, 0], vec![0, 0, 0], vec![0, 0, 0]);
+        let v = analyze(&c);
+        assert!(v.degenerate_idle);
+        assert!(!v.degenerate_zero);
+    }
+
+    #[test]
+    fn multi_zero_ptoken_is_degenerate() {
+        // Full hit + empty queue on two instances: both products are 0,
+        // load can no longer rank them.
+        let c = ctx(320, vec![320, 320, 0], vec![3, 9, 1], vec![0, 0, 0]);
+        let v = analyze(&c);
+        assert!(v.degenerate_zero);
+        assert!(!v.degenerate_idle);
+        assert_eq!(v.kv_spread, f64::INFINITY);
+    }
+
+    #[test]
+    fn single_zero_is_not_the_zero_degeneracy() {
+        let c = ctx(320, vec![320, 0], vec![3, 1], vec![0, 0]);
+        let v = analyze(&c);
+        assert!(!v.degenerate_zero);
+    }
+
+    #[test]
+    fn inversion_fires_when_product_choice_leaves_the_envelope() {
+        // Instance 0: a tiny KV factor annihilates a huge batch — the
+        // product drags the decision there. Instance 1 is moderately
+        // good on BOTH axes and beats 0 at every window weight by more
+        // than the margin (2 and 3 are plain cold instances).
+        let c = ctx(1000, vec![960, 700, 0, 0], vec![40, 5, 1, 2], vec![0, 0, 0, 0]);
+        // kv = p_token = (40, 300, 1000, 1000); load = (41, 6, 2, 3).
+        // products: 1640, 1800, 2000, 3000 -> argmin = 0, but after
+        // mean normalization instance 1 undercuts (1 - margin) of
+        // instance 0's linear score across all of w in [0.25, 0.75].
+        let score = LMetric::paper();
+        let p = select_min(&c, |i| score.score(&c, i));
+        assert_eq!(p, 0);
+        let v = analyze(&c);
+        assert!(v.inversion, "annihilated choice must be flagged: {v:?}");
+        // Cross-check against the breakpoint oracle.
+        let kv: Vec<f64> = (0..4).map(|i| score.factors(&c, i).0).collect();
+        let ld: Vec<f64> = (0..4).map(|i| score.factors(&c, i).1).collect();
+        assert!(window_slack(&kv, &ld, p, W_LO, W_HI, INVERSION_MARGIN) < 0.0);
+    }
+
+    #[test]
+    fn balanced_product_choice_stays_inside_the_envelope() {
+        // The overload_overrides_hit scenario: product picks the idle
+        // instance — which any moderate linear weighting also prefers.
+        let c = ctx(1000, vec![800, 0], vec![40, 1], vec![0, 0]);
+        let v = analyze(&c);
+        assert!(!v.inversion, "{v:?}");
+        let score = LMetric::paper();
+        let kv: Vec<f64> = (0..2).map(|i| score.factors(&c, i).0).collect();
+        let ld: Vec<f64> = (0..2).map(|i| score.factors(&c, i).1).collect();
+        assert!(window_slack(&kv, &ld, 1, W_LO, W_HI, INVERSION_MARGIN) >= 0.0);
+    }
+
+    #[test]
+    fn guarded_identical_to_paper_when_inert() {
+        let mut plain = LMetric::paper();
+        let mut guarded = GuardedLMetric::new();
+        let mut rng = crate::util::Rng::new(11);
+        for k in 0..300u64 {
+            let n = 5usize;
+            let hits: Vec<usize> = (0..n).map(|_| (rng.gen_range(0, 20) * 16) as usize).collect();
+            let bss: Vec<usize> = (0..n).map(|_| rng.gen_range(1, 30) as usize).collect();
+            let queued: Vec<usize> = (0..n).map(|_| rng.gen_range(0, 4000) as usize).collect();
+            let mut c = ctx(400, hits, bss, queued);
+            c.req_id = k;
+            let g = guarded.route(&c).instance;
+            let p = plain.route(&c).instance;
+            if guarded.counters.mitigated == 0 {
+                assert_eq!(g, p, "inert guard must replay paper decisions (k={k})");
+            }
+        }
+        assert_eq!(guarded.counters.checks, 300);
+    }
+
+    #[test]
+    fn all_idle_tie_mitigation_picks_max_hit() {
+        // Regression for the all-idle tie degeneracy: every instance at
+        // BS = 0, scores tie (p_token equal via queued compensation),
+        // but the prefix hits differ. Bare select_min resolves the
+        // 0-spread tie by lowest index; the guard's secondary key must
+        // pick the max-hit instance.
+        let c = ctx(1000, vec![800, 1000], vec![0, 0], vec![0, 200]);
+        // p_token: (0+200, 200+0) = (200, 200); BS+1 = (1, 1): exact tie.
+        let mut plain = LMetric::paper();
+        assert_eq!(
+            plain.route(&c).instance,
+            0,
+            "the old tie-break: lowest index wins"
+        );
+        let mut g = GuardedLMetric::new();
+        assert_eq!(
+            g.route(&c).instance,
+            1,
+            "guard must prefer the instance holding the longer prefix"
+        );
+        assert_eq!(g.counters.degenerate, 1);
+        assert_eq!(g.counters.mitigated, 1);
+    }
+
+    #[test]
+    fn log_records_every_decision() {
+        let mut g = GuardedLMetric::with_log();
+        for k in 0..10u64 {
+            let mut c = ctx(320, vec![0, 0], vec![1, 2], vec![0, 0]);
+            c.req_id = k;
+            g.route(&c);
+        }
+        let log = g.log.as_ref().unwrap();
+        assert_eq!(log.len(), 10);
+        assert_eq!(g.counters.checks, 10);
+        let mitigated =
+            log.iter().filter(|d| d.product_choice != d.final_choice).count() as u64;
+        assert_eq!(mitigated, g.counters.mitigated);
+    }
+
+    #[test]
+    fn single_instance_never_fires() {
+        let c = ctx(100, vec![0], vec![0], vec![0]);
+        let v = analyze(&c);
+        assert!(!v.fired());
+        let mut g = GuardedLMetric::new();
+        assert_eq!(g.route(&c).instance, 0);
+        assert_eq!(g.counters.degenerate + g.counters.inversion, 0);
+    }
+}

@@ -51,9 +51,11 @@ impl LMetric {
         LMetric::new(KvAwareIndicator::PToken, LoadIndicator::BatchSize)
     }
 
-    /// The multiplicative score for instance `i` (public so the hotspot
-    /// detector's phase-2 comparison reuses the exact same arithmetic).
-    pub fn score(&self, ctx: &RouteCtx, i: usize) -> f64 {
+    /// The two factors of the product for instance `i`: `(KV-aware,
+    /// load)`. Public so the failure-condition guard's envelope analysis
+    /// ([`crate::policy::FailureAnalyzer`]) evaluates the *same*
+    /// indicator arithmetic it guards, factor by factor.
+    pub fn factors(&self, ctx: &RouteCtx, i: usize) -> (f64, f64) {
         let kv = match self.kv {
             KvAwareIndicator::PToken => ctx.p_token(i) as f64,
             KvAwareIndicator::OneMinusHitRatio => 1.0 - ctx.hit_ratio(i),
@@ -62,6 +64,13 @@ impl LMetric {
             LoadIndicator::BatchSize => (ctx.inds[i].bs() + 1) as f64,
             LoadIndicator::TotalTokens => (ctx.inds[i].total_context_tokens + 1) as f64,
         };
+        (kv, load)
+    }
+
+    /// The multiplicative score for instance `i` (public so the hotspot
+    /// detector's phase-2 comparison reuses the exact same arithmetic).
+    pub fn score(&self, ctx: &RouteCtx, i: usize) -> f64 {
+        let (kv, load) = self.factors(ctx, i);
         kv * load
     }
 }

@@ -15,6 +15,7 @@
 //! | `polyserve`    | §6.2/A.2 | SLO filter → load gradient | τ (SLO_TPOT) |
 //! | `lmetric`      | §5    | **P-token × BS** | none |
 //! | `lmetric_guarded` | §5.2 | lmetric + two-phase hotspot detector | none |
+//! | `lmetric_safe` | §5    | lmetric + failure-condition guard | none |
 //!
 //! Ablation variants for Figs 18/19: `lmetric_hit_ratio` uses
 //! (1−hit-ratio)×BS; `lmetric_tokens` uses P-token×#Tokens.
@@ -22,6 +23,7 @@
 mod baselines;
 mod dynamo;
 mod filter_kv;
+mod guard;
 mod linear;
 mod lmetric;
 mod polyserve;
@@ -32,6 +34,10 @@ mod vllm;
 pub use baselines::{Random, RoundRobin};
 pub use dynamo::Dynamo;
 pub use filter_kv::FilterKv;
+pub use guard::{
+    window_slack, FailureAnalyzer, GuardDecision, GuardVerdict, GuardedLMetric,
+    INVERSION_MARGIN, W_HI, W_LO,
+};
 pub use linear::Linear;
 pub use lmetric::{KvAwareIndicator, LMetric, LoadIndicator};
 pub use polyserve::PolyServe;
@@ -40,7 +46,7 @@ pub use sim_based::SimBased;
 pub use vllm::Vllm;
 
 use crate::engine::ModelProfile;
-use crate::hotspot::GuardedLMetric;
+use crate::hotspot::HotspotGuarded;
 use crate::router::Policy;
 use crate::simulator::LatencySimulator;
 
@@ -83,7 +89,8 @@ pub fn build_with_simulator(
             KvAwareIndicator::PToken,
             LoadIndicator::TotalTokens,
         )),
-        "lmetric_guarded" => Box::new(GuardedLMetric::new()),
+        "lmetric_guarded" => Box::new(HotspotGuarded::new()),
+        "lmetric_safe" => Box::new(GuardedLMetric::new()),
         _ => return None,
     })
 }
@@ -133,6 +140,7 @@ pub fn all_names() -> &'static [&'static str] {
         "polyserve",
         "lmetric",
         "lmetric_guarded",
+        "lmetric_safe",
     ]
 }
 

@@ -136,6 +136,132 @@ impl RouteDecision {
 pub trait Policy: Send {
     fn name(&self) -> String;
     fn route(&mut self, ctx: &RouteCtx) -> RouteDecision;
+
+    /// Failure-condition guard counters, for policies that carry the
+    /// guard (see [`crate::policy::GuardedLMetric`]); `None` for
+    /// unguarded policies. The DES and live harnesses fold these into
+    /// [`crate::metrics::RunMetrics::guard`] at the end of a run.
+    fn guard_counters(&self) -> Option<GuardCounters> {
+        None
+    }
+}
+
+/// Counters of the failure-condition guard, one bump per routing
+/// decision analyzed. `checks` counts decisions, `degenerate` /
+/// `inversion` count detections of the two derived failure regimes, and
+/// `mitigated` counts decisions the secondary-key fallback actually
+/// *changed* — the paper's "extremely rare in practice" claim is
+/// `mitigated == 0` on natural traffic.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GuardCounters {
+    pub checks: u64,
+    pub degenerate: u64,
+    pub inversion: u64,
+    pub mitigated: u64,
+}
+
+impl GuardCounters {
+    /// Counter delta since `start` — policies accumulate over their
+    /// lifetime, so a harness reusing one policy across runs snapshots
+    /// the counters at run start and reports the difference.
+    pub fn since(self, start: GuardCounters) -> GuardCounters {
+        GuardCounters {
+            checks: self.checks.saturating_sub(start.checks),
+            degenerate: self.degenerate.saturating_sub(start.degenerate),
+            inversion: self.inversion.saturating_sub(start.inversion),
+            mitigated: self.mitigated.saturating_sub(start.mitigated),
+        }
+    }
+}
+
+/// One-pass summary statistics of a decision's two indicator axes — the
+/// per-snapshot analysis the failure-condition guard (and any offline
+/// tooling) evaluates in O(N) with zero allocation. `axes(i)` returns
+/// the (KV-aware, load) factor pair of instance `i`.
+#[derive(Debug, Clone, Copy)]
+pub struct IndicatorStats {
+    pub n: usize,
+    pub kv_min: f64,
+    pub kv_max: f64,
+    pub kv_sum: f64,
+    pub load_min: f64,
+    pub load_max: f64,
+    pub load_sum: f64,
+    /// Instances whose KV-axis factor is exactly zero (P-token = 0 in
+    /// the paper configuration: full prefix hit and an empty queue).
+    pub kv_zeros: usize,
+    /// Every instance idle (`BS == 0`, so the load factor ties at 1).
+    pub all_idle: bool,
+}
+
+impl IndicatorStats {
+    pub fn collect(ctx: &RouteCtx, mut axes: impl FnMut(usize) -> (f64, f64)) -> IndicatorStats {
+        let n = ctx.n();
+        let mut s = IndicatorStats {
+            n,
+            kv_min: f64::INFINITY,
+            kv_max: 0.0,
+            kv_sum: 0.0,
+            load_min: f64::INFINITY,
+            load_max: 0.0,
+            load_sum: 0.0,
+            kv_zeros: 0,
+            all_idle: n > 0,
+        };
+        for i in 0..n {
+            let (kv, load) = axes(i);
+            s.kv_min = s.kv_min.min(kv);
+            s.kv_max = s.kv_max.max(kv);
+            s.kv_sum += kv;
+            s.load_min = s.load_min.min(load);
+            s.load_max = s.load_max.max(load);
+            s.load_sum += load;
+            if kv == 0.0 {
+                s.kv_zeros += 1;
+            }
+            if ctx.inds[i].bs() != 0 {
+                s.all_idle = false;
+            }
+        }
+        s
+    }
+
+    pub fn kv_mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.kv_sum / self.n as f64
+        }
+    }
+
+    pub fn load_mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.load_sum / self.n as f64
+        }
+    }
+
+    /// Cross-instance spread ratio (max/min) of the KV axis: 1.0 when
+    /// flat (or empty), ∞ when a zero coexists with a non-zero value.
+    pub fn kv_spread(&self) -> f64 {
+        spread_ratio(self.kv_min, self.kv_max)
+    }
+
+    /// Cross-instance spread ratio of the load axis.
+    pub fn load_spread(&self) -> f64 {
+        spread_ratio(self.load_min, self.load_max)
+    }
+}
+
+fn spread_ratio(min: f64, max: f64) -> f64 {
+    if max <= 0.0 || !min.is_finite() {
+        1.0
+    } else if min == 0.0 {
+        f64::INFINITY
+    } else {
+        max / min
+    }
 }
 
 /// `instances.select_min(score)` from the paper's programming model:
@@ -376,6 +502,49 @@ mod tests {
             ctx.inds.clone(),
         );
         assert_eq!(rebuilt.matched_mask, ctx.matched_mask);
+    }
+
+    #[test]
+    fn indicator_stats_one_pass_summary() {
+        let ctx = RouteCtx::new(
+            0,
+            0,
+            0,
+            1000,
+            vec![1000, 0, 500],
+            vec![
+                Indicators::default(), // full hit, idle: kv axis = 0
+                Indicators {
+                    r_bs: 4,
+                    ..Default::default()
+                },
+                Indicators {
+                    q_bs: 1,
+                    queued_prefill_tokens: 500,
+                    ..Default::default()
+                },
+            ],
+        );
+        let s = IndicatorStats::collect(&ctx, |i| {
+            (ctx.p_token(i) as f64, (ctx.inds[i].bs() + 1) as f64)
+        });
+        assert_eq!(s.n, 3);
+        assert_eq!(s.kv_zeros, 1);
+        assert!(!s.all_idle);
+        assert_eq!(s.kv_min, 0.0);
+        assert_eq!(s.kv_max, 1000.0);
+        assert_eq!(s.load_min, 1.0);
+        assert_eq!(s.load_max, 5.0);
+        assert_eq!(s.kv_spread(), f64::INFINITY);
+        assert_eq!(s.load_spread(), 5.0);
+        // kv axis = p_token = (0, 1000, 500 + 500) -> mean 2000/3.
+        assert!((s.kv_mean() - 2000.0 / 3.0).abs() < 1e-12);
+        // An all-idle fleet reports the degenerate load tie.
+        let idle = RouteCtx::new(0, 0, 0, 100, vec![0, 0], vec![Indicators::default(); 2]);
+        let si = IndicatorStats::collect(&idle, |i| (idle.p_token(i) as f64, 1.0));
+        assert!(si.all_idle);
+        assert_eq!(si.kv_spread(), 1.0);
+        assert_eq!(si.load_spread(), 1.0);
     }
 
     #[test]

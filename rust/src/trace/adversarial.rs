@@ -1,0 +1,443 @@
+//! Adversarial workload generators for the failure-condition guard:
+//! traces (and raw router snapshots) that synthesize, on demand, the
+//! regimes where the multiplicative score provably degrades — so the
+//! detector's true/false-positive behaviour is *measurable* instead of
+//! asserted. Three scenario families:
+//!
+//! * **IdleFleetBurst** — simultaneous same-length bursts into a fully
+//!   drained fleet. Every wave leader sees `BS == 0` everywhere and an
+//!   identical P-token on every instance: the all-idle degenerate tie.
+//! * **SharedPrefixFlood** — waves of byte-identical prompts separated
+//!   by drain gaps. After the first wave several instances hold the
+//!   full prompt, so wave leaders see `P-token == 0` on ≥ 2 instances:
+//!   the zero-annihilation degeneracy.
+//! * **SpreadStress** — a sticky-decode hot class (long shared prefix,
+//!   long outputs) over background singletons: KV-axis and load-axis
+//!   spreads open up simultaneously, the cross-spread inversion
+//!   precondition.
+//!
+//! Plus two snapshot-level generators ([`spread_route_ctx`],
+//! [`degenerate_tie_ctx`]) that craft `RouteCtx` states at *chosen*
+//! spread ratios directly — the spread-window sweep of
+//! `fig33_guard_sweep` and the property suite drive the analyzer
+//! through its whole detection window with them.
+
+use crate::core::{Request, BLOCK_TOKENS};
+use crate::router::{Indicators, RouteCtx};
+use crate::tokenizer::{block_hashes, span};
+use crate::util::Rng;
+
+use super::{Trace, TraceRequest};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdversarialScenario {
+    IdleFleetBurst,
+    SharedPrefixFlood,
+    SpreadStress,
+}
+
+impl AdversarialScenario {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdversarialScenario::IdleFleetBurst => "idle_fleet_burst",
+            AdversarialScenario::SharedPrefixFlood => "shared_prefix_flood",
+            AdversarialScenario::SpreadStress => "spread_stress",
+        }
+    }
+}
+
+/// Parameters of one adversarial trace.
+#[derive(Debug, Clone)]
+pub struct AdversarialSpec {
+    pub scenario: AdversarialScenario,
+    pub n_requests: usize,
+    pub seed: u64,
+    pub vocab: u32,
+    /// Requests per wave (burst scenarios); hot-class share driver for
+    /// `SpreadStress` is fixed at 1/2.
+    pub burst_size: usize,
+    /// Idle gap between waves in seconds (long enough for the fleet to
+    /// drain), or the mean inter-arrival time for `SpreadStress`.
+    pub gap_s: f64,
+    /// Prompt length in tokens. Block-multiple, so a fully cached
+    /// prompt collapses P-token to exactly 0.
+    pub prompt_len: usize,
+    /// Output tokens per request (`SpreadStress` hot class overrides
+    /// with sticky long decodes).
+    pub output_len: u32,
+    /// Background classes (`SpreadStress`).
+    pub n_classes: usize,
+}
+
+impl AdversarialSpec {
+    pub fn preset(scenario: AdversarialScenario, n_requests: usize, seed: u64) -> AdversarialSpec {
+        let base = AdversarialSpec {
+            scenario,
+            n_requests,
+            seed,
+            vocab: 50_000,
+            burst_size: 8,
+            gap_s: 240.0,
+            prompt_len: 512,
+            output_len: 8,
+            n_classes: 6,
+        };
+        match scenario {
+            AdversarialScenario::IdleFleetBurst => base,
+            AdversarialScenario::SharedPrefixFlood => AdversarialSpec {
+                burst_size: 16,
+                gap_s: 180.0,
+                prompt_len: 4096,
+                output_len: 16,
+                ..base
+            },
+            AdversarialScenario::SpreadStress => AdversarialSpec {
+                gap_s: 0.04,
+                prompt_len: 4096,
+                output_len: 64,
+                ..base
+            },
+        }
+    }
+}
+
+/// Generate an adversarial trace. Deterministic in
+/// `(spec.scenario, spec.n_requests, spec.seed)`.
+pub fn generate_adversarial(spec: &AdversarialSpec) -> Trace {
+    let mut rng = Rng::new(spec.seed ^ ((spec.scenario as u64) << 40) ^ 0xadf0_0d01);
+    let mut requests: Vec<TraceRequest> = Vec::with_capacity(spec.n_requests);
+    let salt_base = spec.seed.wrapping_mul(1_000_003);
+    match spec.scenario {
+        AdversarialScenario::IdleFleetBurst => {
+            let mut t_us: u64 = 0;
+            let mut wave: u64 = 0;
+            while requests.len() < spec.n_requests {
+                for slot in 0..spec.burst_size {
+                    if requests.len() >= spec.n_requests {
+                        break;
+                    }
+                    // Unique content per (seed, wave, slot): no request
+                    // ever hits another's prefix — pure idle ties.
+                    let salt = salt_base + wave * 10_000 + slot as u64;
+                    push_request(
+                        &mut requests,
+                        slot as u32,
+                        t_us,
+                        span(slot as u32, salt, spec.prompt_len, spec.vocab),
+                        spec.output_len,
+                        salt,
+                        spec.vocab,
+                    );
+                }
+                t_us += (spec.gap_s * 1e6) as u64;
+                wave += 1;
+            }
+        }
+        AdversarialScenario::SharedPrefixFlood => {
+            // ONE prompt for the whole flood (per seed): after the first
+            // wave is served and cached, wave leaders see P-token = 0 on
+            // every instance that ever served it.
+            let prompt = span(7, salt_base, spec.prompt_len, spec.vocab);
+            let mut t_us: u64 = 0;
+            let mut k: u64 = 0;
+            while requests.len() < spec.n_requests {
+                for _ in 0..spec.burst_size {
+                    if requests.len() >= spec.n_requests {
+                        break;
+                    }
+                    k += 1;
+                    push_request(
+                        &mut requests,
+                        7,
+                        t_us,
+                        prompt.clone(),
+                        spec.output_len,
+                        salt_base + k,
+                        spec.vocab,
+                    );
+                }
+                t_us += (spec.gap_s * 1e6) as u64;
+            }
+        }
+        AdversarialScenario::SpreadStress => {
+            let hot_class = spec.n_classes as u32;
+            let hot_prefix = span(hot_class, salt_base, spec.prompt_len, spec.vocab);
+            let mut t_s: f64 = 0.0;
+            let mut k: u64 = 0;
+            while requests.len() < spec.n_requests {
+                t_s += rng.exp(spec.gap_s);
+                k += 1;
+                let t_us = (t_s * 1e6) as u64;
+                if rng.gen_bool(0.5) {
+                    // Hot: share a variable-depth slice of the prefix
+                    // (partial hits -> mid-range KV values) and decode
+                    // long (sticky batches -> load spread).
+                    let depth_blocks = [
+                        spec.prompt_len / BLOCK_TOKENS / 2,
+                        spec.prompt_len / BLOCK_TOKENS * 3 / 4,
+                        spec.prompt_len / BLOCK_TOKENS,
+                    ][rng.gen_range(0, 3) as usize];
+                    let mut prompt = hot_prefix[..depth_blocks * BLOCK_TOKENS].to_vec();
+                    prompt.extend(span(
+                        hot_class,
+                        salt_base + k,
+                        rng.gen_range(1, 12) as usize * BLOCK_TOKENS,
+                        spec.vocab,
+                    ));
+                    push_request(
+                        &mut requests,
+                        hot_class,
+                        t_us,
+                        prompt,
+                        16 * spec.output_len,
+                        salt_base + k,
+                        spec.vocab,
+                    );
+                } else {
+                    let class = rng.gen_range(0, spec.n_classes as u64) as u32;
+                    let mut prompt = span(class, 0, 256, spec.vocab);
+                    prompt.extend(span(class, salt_base + k, 768, spec.vocab));
+                    push_request(
+                        &mut requests,
+                        class,
+                        t_us,
+                        prompt,
+                        spec.output_len,
+                        salt_base + k,
+                        spec.vocab,
+                    );
+                }
+            }
+        }
+    }
+    requests.sort_by_key(|r| r.req.arrival_us);
+    for (i, r) in requests.iter_mut().enumerate() {
+        r.req.id = i as u64;
+    }
+    Trace {
+        name: format!("adversarial_{}", spec.scenario.name()),
+        requests,
+    }
+}
+
+fn push_request(
+    requests: &mut Vec<TraceRequest>,
+    class: u32,
+    arrival_us: u64,
+    prompt: Vec<u32>,
+    output_len: u32,
+    salt: u64,
+    vocab: u32,
+) {
+    let hashes = block_hashes(&prompt);
+    let mut full = prompt.clone();
+    full.extend(span(class, salt ^ 0x0a57, output_len as usize, vocab));
+    let full_hashes = block_hashes(&full);
+    requests.push(TraceRequest {
+        req: Request {
+            id: 0, // re-assigned in arrival order by the caller
+            arrival_us,
+            class_id: class,
+            tokens: prompt.into(),
+            output_len,
+            block_hashes: hashes.into(),
+        },
+        full_hashes: full_hashes.into(),
+    });
+}
+
+/// Craft a router snapshot whose two indicator axes sit at the chosen
+/// cross-instance spread ratios (`kv_spread`, `load_spread` = max/min),
+/// anti-correlated (small KV ↔ large load — the cross-spread regime).
+/// Values are realized through DES-plausible fields: block-aligned
+/// prefix hits, queued prefill carried by a queued batch member. The
+/// spread-window sweep walks the analyzer's whole detection window with
+/// these.
+pub fn spread_route_ctx(
+    rng: &mut Rng,
+    n: usize,
+    input_len: usize,
+    kv_spread: f64,
+    load_spread: f64,
+) -> RouteCtx {
+    assert!(n >= 2);
+    let mut hit_tokens = vec![0usize; n];
+    let mut inds = vec![Indicators::default(); n];
+    let k_base = (input_len as f64 / kv_spread.max(1.0)).max(1.0);
+    for i in 0..n {
+        let frac = i as f64 / (n - 1) as f64;
+        // KV ladder ascends, load ladder descends: anti-correlated.
+        let k_target = k_base * kv_spread.max(1.0).powf(frac) * rng.gen_f64(0.95, 1.05);
+        let l_target = (2.0 * load_spread.max(1.0).powf(1.0 - frac)).round().max(2.0);
+        let k = k_target.round().max(0.0) as usize;
+        let (hit, queued) = if k <= input_len {
+            // hit must be block-aligned and >= input - k: round UP.
+            let hit = ((input_len - k).div_ceil(BLOCK_TOKENS) * BLOCK_TOKENS).min(input_len);
+            (hit, k - (input_len - hit))
+        } else {
+            (0, k - input_len)
+        };
+        let bs = l_target as usize - 1;
+        let q_bs = if queued > 0 { 1 } else { 0 };
+        hit_tokens[i] = hit;
+        inds[i] = Indicators {
+            r_bs: bs.saturating_sub(q_bs),
+            q_bs,
+            queued_prefill_tokens: queued,
+            ..Default::default()
+        };
+    }
+    RouteCtx::new(rng.next_u64() % 1_000_000_000, rng.next_u64(), 0, input_len, hit_tokens, inds)
+}
+
+/// Craft an all-idle degenerate tie: every instance at `BS == 0`, all
+/// products exactly equal, but *different* prefix hits (queued prefill
+/// compensates). Bare `select_min` resolves this 0-spread tie by lowest
+/// index; the guard's secondary key must pick the max-hit instance.
+/// (Deliberately outside the DES-reachable state space — queued tokens
+/// without queued batch members — which is exactly why natural traffic
+/// never trips the mitigation.)
+pub fn degenerate_tie_ctx(rng: &mut Rng, n: usize, input_len: usize) -> RouteCtx {
+    assert!(n >= 2);
+    let blocks = input_len / BLOCK_TOKENS;
+    let mut hit_tokens = vec![0usize; n];
+    let mut inds = vec![Indicators::default(); n];
+    for i in 0..n {
+        let hit = rng.gen_range(0, blocks as u64 + 1) as usize * BLOCK_TOKENS;
+        // p_token = queued + (input - hit) == input for every instance.
+        hit_tokens[i] = hit.min(input_len);
+        inds[i].queued_prefill_tokens = hit_tokens[i];
+    }
+    RouteCtx::new(rng.next_u64() % 1_000_000_000, rng.next_u64(), 0, input_len, hit_tokens, inds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer::shared_blocks;
+
+    #[test]
+    fn deterministic_per_seed() {
+        for scenario in [
+            AdversarialScenario::IdleFleetBurst,
+            AdversarialScenario::SharedPrefixFlood,
+            AdversarialScenario::SpreadStress,
+        ] {
+            let a = generate_adversarial(&AdversarialSpec::preset(scenario, 300, 9));
+            let b = generate_adversarial(&AdversarialSpec::preset(scenario, 300, 9));
+            assert_eq!(a.requests.len(), b.requests.len());
+            for (x, y) in a.requests.iter().zip(&b.requests) {
+                assert_eq!(x.req.tokens, y.req.tokens, "{}", scenario.name());
+                assert_eq!(x.req.arrival_us, y.req.arrival_us);
+                assert_eq!(x.full_hashes, y.full_hashes);
+            }
+            let c = generate_adversarial(&AdversarialSpec::preset(scenario, 300, 10));
+            assert!(
+                a.requests.iter().zip(&c.requests).any(|(x, y)| x.req.tokens != y.req.tokens),
+                "{}: different seed must change content",
+                scenario.name()
+            );
+        }
+    }
+
+    #[test]
+    fn idle_bursts_arrive_simultaneously_with_drain_gaps() {
+        let spec = AdversarialSpec::preset(AdversarialScenario::IdleFleetBurst, 64, 3);
+        let t = generate_adversarial(&spec);
+        assert_eq!(t.requests.len(), 64);
+        let gap_us = (spec.gap_s * 1e6) as u64;
+        for (i, tr) in t.requests.iter().enumerate() {
+            let wave = i / spec.burst_size;
+            assert_eq!(tr.req.arrival_us, wave as u64 * gap_us, "request {i}");
+            assert_eq!(tr.req.input_len(), spec.prompt_len, "equal-length ties");
+        }
+        // No cross-request prefix sharing: every tie is a pure idle tie.
+        let a = &t.requests[0];
+        let b = &t.requests[1];
+        assert_eq!(shared_blocks(&a.req.block_hashes, &b.req.block_hashes), 0);
+    }
+
+    #[test]
+    fn flood_prompts_are_identical_and_block_aligned() {
+        let spec = AdversarialSpec::preset(AdversarialScenario::SharedPrefixFlood, 80, 5);
+        let t = generate_adversarial(&spec);
+        assert_eq!(spec.prompt_len % BLOCK_TOKENS, 0, "exact P-token collapse");
+        let first = &t.requests[0];
+        for tr in &t.requests {
+            assert_eq!(tr.req.tokens, first.req.tokens, "one prompt floods the fleet");
+            assert_eq!(tr.req.class_id, 7);
+        }
+        // Waves are separated by drain gaps.
+        let w0_end = t.requests[spec.burst_size - 1].req.arrival_us;
+        let w1_start = t.requests[spec.burst_size].req.arrival_us;
+        assert!(w1_start >= w0_end + (spec.gap_s * 0.9 * 1e6) as u64);
+    }
+
+    #[test]
+    fn stress_mixes_sticky_hot_class_with_background() {
+        let spec = AdversarialSpec::preset(AdversarialScenario::SpreadStress, 600, 11);
+        let t = generate_adversarial(&spec);
+        let hot: Vec<_> = t
+            .requests
+            .iter()
+            .filter(|r| r.req.class_id == spec.n_classes as u32)
+            .collect();
+        let share = hot.len() as f64 / t.requests.len() as f64;
+        assert!((0.35..0.65).contains(&share), "hot share {share}");
+        // Hot requests share the prefix at (varying) depth and decode long.
+        let deep = shared_blocks(&hot[0].req.block_hashes, &hot[1].req.block_hashes);
+        assert!(deep >= spec.prompt_len / BLOCK_TOKENS / 2, "shared depth {deep}");
+        let hot_out = hot.iter().map(|r| r.req.output_len as u64).sum::<u64>() / hot.len() as u64;
+        assert!(hot_out >= 16 * spec.output_len as u64 / 2, "sticky decodes");
+    }
+
+    #[test]
+    fn spread_ctx_lands_in_the_requested_window() {
+        let mut rng = Rng::new(21);
+        for &(ks, ls) in &[(1.0, 1.0), (4.0, 8.0), (32.0, 16.0), (100.0, 4.0)] {
+            let ctx = spread_route_ctx(&mut rng, 8, 4096, ks, ls);
+            let kv: Vec<f64> = (0..8).map(|i| ctx.p_token(i) as f64).collect();
+            let ld: Vec<f64> = (0..8).map(|i| (ctx.inds[i].bs() + 1) as f64).collect();
+            let kmin = kv.iter().cloned().fold(f64::INFINITY, f64::min);
+            let kmax = kv.iter().cloned().fold(0.0, f64::max);
+            let lmin = ld.iter().cloned().fold(f64::INFINITY, f64::min);
+            let lmax = ld.iter().cloned().fold(0.0, f64::max);
+            assert!(kmin > 0.0);
+            let got_ks = kmax / kmin;
+            let got_ls = lmax / lmin;
+            assert!(
+                got_ks >= ks * 0.7 && got_ks <= ks * 1.5 + 1.0,
+                "kv spread {got_ks} vs target {ks}"
+            );
+            assert!(
+                got_ls >= ls * 0.6 && got_ls <= ls * 1.6 + 1.0,
+                "load spread {got_ls} vs target {ls}"
+            );
+            // DES-plausible: block-aligned hits, queued implies a queued
+            // batch member.
+            for i in 0..8 {
+                assert_eq!(ctx.hit_tokens[i] % BLOCK_TOKENS, 0);
+                if ctx.inds[i].queued_prefill_tokens > 0 {
+                    assert!(ctx.inds[i].q_bs > 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_tie_ctx_ties_exactly_with_distinct_hits() {
+        let mut rng = Rng::new(33);
+        let mut saw_distinct = false;
+        for _ in 0..20 {
+            let ctx = degenerate_tie_ctx(&mut rng, 6, 1024);
+            // All idle: the product reduces to P-token, which must tie.
+            let scores: Vec<usize> = (0..6).map(|i| ctx.p_token(i)).collect();
+            assert!(scores.iter().all(|&s| s == scores[0]), "products must tie");
+            assert!(ctx.inds.iter().all(|d| d.bs() == 0), "all idle");
+            if ctx.hit_tokens.iter().any(|&h| h != ctx.hit_tokens[0]) {
+                saw_distinct = true;
+            }
+        }
+        assert!(saw_distinct, "hits must differ so the tie-break matters");
+    }
+}

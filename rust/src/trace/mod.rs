@@ -1,10 +1,15 @@
 //! Workload traces: synthetic generators matching the paper's four trace
-//! families (Fig 5 characteristics), a jsonl replayer format, and the
-//! §4.1 rate-scaling methodology.
+//! families (Fig 5 characteristics), a jsonl replayer format, the §4.1
+//! rate-scaling methodology, and the [`adversarial`] generators that
+//! synthesize the failure-condition guard's misranking regimes on
+//! demand (idle-fleet bursts, shared-prefix floods, spread-window
+//! stress).
 
+pub mod adversarial;
 mod replay;
 mod synth;
 
+pub use adversarial::{generate_adversarial, AdversarialScenario, AdversarialSpec};
 pub use replay::{load_jsonl, save_jsonl};
 pub use synth::{generate, Workload, WorkloadSpec};
 

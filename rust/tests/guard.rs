@@ -1,0 +1,130 @@
+//! End-to-end contracts of the failure-condition guard subsystem: the
+//! adversarial generators drive the DES into the derived failure
+//! regimes, the detector counts them, the counters flow into
+//! `RunMetrics`, and an independent recount from the decision log
+//! agrees with every counter.
+
+use lmetric::cluster::{run_des, ClusterConfig};
+use lmetric::engine::EngineConfig;
+use lmetric::policy::{self, GuardedLMetric};
+use lmetric::trace::{generate_adversarial, AdversarialScenario, AdversarialSpec};
+
+fn cluster8() -> ClusterConfig {
+    ClusterConfig::new(8, EngineConfig::default())
+}
+
+/// Idle-fleet bursts: every wave leader faces the all-idle degenerate
+/// tie, so the detector must fire at least once per wave — while the
+/// decisions stay byte-identical to bare lmetric (the re-ranked ties
+/// are exact, zero-hit, equal-length: the secondary key agrees with
+/// select_min on them).
+#[test]
+fn idle_fleet_bursts_fire_degenerate_and_replay_identically() {
+    let cfg = cluster8();
+    let spec = AdversarialSpec::preset(AdversarialScenario::IdleFleetBurst, 160, 3);
+    let trace = generate_adversarial(&spec);
+    let n_waves = trace.requests.len().div_ceil(spec.burst_size);
+    let mut plain = policy::build_default("lmetric", &cfg.engine.profile, 256).unwrap();
+    let m_p = run_des(&cfg, &trace, plain.as_mut());
+    let mut guarded = GuardedLMetric::new();
+    let m_g = run_des(&cfg, &trace, &mut guarded);
+    assert_eq!(m_g.records.len(), trace.requests.len(), "all requests complete");
+    for (a, b) in m_p.records.iter().zip(&m_g.records) {
+        assert_eq!((a.id, a.instance), (b.id, b.instance), "decision diverged");
+    }
+    assert!(
+        m_g.guard.degenerate >= n_waves as u64,
+        "every drained-fleet wave leader is an all-idle tie: {} < {n_waves}",
+        m_g.guard.degenerate
+    );
+    assert_eq!(m_g.guard.mitigated, 0, "equal ties re-rank to the same pick");
+    assert_eq!(m_g.guard.checks, trace.requests.len() as u64);
+}
+
+/// Shared-prefix floods: once >= 2 instances hold the full prompt,
+/// wave leaders see P-token == 0 on several instances — the
+/// zero-annihilation degeneracy — and the hit ratio confirms the flood
+/// actually reuses the prefix.
+#[test]
+fn shared_prefix_flood_fires_zero_annihilation() {
+    let cfg = cluster8();
+    let spec = AdversarialSpec::preset(AdversarialScenario::SharedPrefixFlood, 160, 5);
+    let trace = generate_adversarial(&spec);
+    let mut guarded = GuardedLMetric::new();
+    let m = run_des(&cfg, &trace, &mut guarded);
+    assert_eq!(m.records.len(), trace.requests.len());
+    assert!(
+        m.guard.degenerate > 0,
+        "flood must trip the degenerate detector: {:?}",
+        m.guard
+    );
+    assert!(
+        m.mean_hit_ratio() > 0.5,
+        "flood must actually hit the shared prefix: {}",
+        m.mean_hit_ratio()
+    );
+    assert_eq!(m.guard.mitigated, 0, "zero-ties have equal (full) hits");
+}
+
+/// Spread stress completes and is checked decision-by-decision; the
+/// counters flow into `RunMetrics` verbatim.
+#[test]
+fn spread_stress_counts_every_decision_into_run_metrics() {
+    let cfg = cluster8();
+    let spec = AdversarialSpec::preset(AdversarialScenario::SpreadStress, 300, 11);
+    let trace = generate_adversarial(&spec);
+    let mut guarded = GuardedLMetric::new();
+    let m = run_des(&cfg, &trace, &mut guarded);
+    assert_eq!(m.records.len(), trace.requests.len());
+    assert_eq!(m.guard, guarded.counters, "RunMetrics must carry the counters");
+    assert_eq!(m.guard.checks, trace.requests.len() as u64);
+    // Unguarded policies report all-zero counters through the same path.
+    let mut plain = policy::build_default("lmetric", &cfg.engine.profile, 256).unwrap();
+    let m_p = run_des(&cfg, &trace, plain.as_mut());
+    assert_eq!(m_p.guard, Default::default());
+}
+
+/// The churn contract: every `guard_*` counter equals an independent
+/// recount from the decision log — no decision is double-counted or
+/// dropped, across a DES run that mixes all three adversarial regimes.
+#[test]
+fn counters_equal_independent_recount_from_decision_log() {
+    let cfg = cluster8();
+    let mut guarded = GuardedLMetric::with_log();
+    let mut total = 0u64;
+    for (scenario, seed) in [
+        (AdversarialScenario::IdleFleetBurst, 21u64),
+        (AdversarialScenario::SharedPrefixFlood, 22),
+        (AdversarialScenario::SpreadStress, 23),
+    ] {
+        let trace = generate_adversarial(&AdversarialSpec::preset(scenario, 120, seed));
+        total += trace.requests.len() as u64;
+        let m = run_des(&cfg, &trace, &mut guarded);
+        // RunMetrics reports THIS run's delta even though the policy's
+        // own counters accumulate across the three runs.
+        assert_eq!(m.guard.checks, trace.requests.len() as u64, "per-run delta");
+    }
+    let log = guarded.log.as_ref().expect("with_log records decisions");
+    assert_eq!(log.len() as u64, total, "one log entry per routed request");
+    let recount_deg = log.iter().filter(|d| d.degenerate).count() as u64;
+    let recount_inv = log.iter().filter(|d| d.inversion).count() as u64;
+    let recount_mit = log.iter().filter(|d| d.product_choice != d.final_choice).count() as u64;
+    assert_eq!(guarded.counters.checks, total);
+    assert_eq!(guarded.counters.degenerate, recount_deg);
+    assert_eq!(guarded.counters.inversion, recount_inv);
+    assert_eq!(guarded.counters.mitigated, recount_mit);
+    assert!(recount_deg > 0, "the adversarial mix must exercise the detector");
+}
+
+/// Registry contract: `lmetric_safe` is buildable by name, self-reports
+/// its name, and exposes counters through the `Policy` trait (unguarded
+/// policies return None).
+#[test]
+fn lmetric_safe_registry_and_trait_surface() {
+    let profile = lmetric::engine::ModelProfile::moe_30b();
+    let pol = policy::build_default("lmetric_safe", &profile, 256).unwrap();
+    assert_eq!(pol.name(), "lmetric_safe");
+    assert_eq!(pol.guard_counters(), Some(Default::default()));
+    let plain = policy::build_default("lmetric", &profile, 256).unwrap();
+    assert_eq!(plain.guard_counters(), None);
+}

@@ -188,7 +188,7 @@ fn guarded_lmetric_harmless_on_benign_traces() {
     let trace = build_scaled_trace(&exp);
     let cfg = cluster_config(&exp);
     let mut plain = policy::build_default("lmetric", &cfg.engine.profile, 256).unwrap();
-    let mut guarded = lmetric::hotspot::GuardedLMetric::new();
+    let mut guarded = lmetric::hotspot::HotspotGuarded::new();
     let m_p = run_des(&cfg, &trace, plain.as_mut());
     let m_g = run_des(&cfg, &trace, &mut guarded);
     let ratio = m_g.ttft_summary().mean / m_p.ttft_summary().mean;

@@ -144,7 +144,7 @@ fn polyserve_prefers_most_loaded_feasible() {
 fn guarded_equals_plain_without_hotspot() {
     // On states with broad cache coverage the detector must be inert.
     let mut plain = LMetric::paper();
-    let mut guarded = lmetric::hotspot::GuardedLMetric::new();
+    let mut guarded = lmetric::hotspot::HotspotGuarded::new();
     let mut rng = lmetric::util::Rng::new(9);
     for k in 0..200u64 {
         let n = 4;
@@ -157,6 +157,91 @@ fn guarded_equals_plain_without_hotspot() {
         c.now_us = k * 50_000;
         assert_eq!(plain.route(&c).instance, guarded.route(&c).instance, "k={k}");
     }
+}
+
+// ------------------------------- failure-condition guard ---------------
+
+/// The paper's "extremely rare in practice" claim as a regression test:
+/// the failure-guarded policy (`lmetric_safe`) replays byte-identical
+/// decisions to bare `LMetric::paper()` through the full DES on every
+/// natural workload × seed — and its mitigation counter stays at 0.
+/// (Detections may fire — idle lulls and full-hit annihilations exist in
+/// natural traffic — but on DES-reachable indicator states the guard's
+/// tie re-rank provably agrees with select_min, so decisions never
+/// move.)
+#[test]
+fn safe_lmetric_replays_paper_decisions_on_all_natural_workloads() {
+    use lmetric::cluster::{build_scaled_trace, cluster_config, run_des};
+    use lmetric::config::ExperimentConfig;
+    use lmetric::policy::GuardedLMetric;
+
+    for workload in ["chatbot", "coder", "agent", "toolagent", "hotspot"] {
+        for seed in [1u64, 7] {
+            let mut exp = ExperimentConfig::default();
+            exp.workload = workload.into();
+            exp.instances = 8;
+            exp.requests = 250;
+            exp.rate_scale = 0.5;
+            exp.seed = seed;
+            let trace = build_scaled_trace(&exp);
+            let cfg = cluster_config(&exp);
+            let mut plain = policy::build_default("lmetric", &cfg.engine.profile, 256).unwrap();
+            let m_p = run_des(&cfg, &trace, plain.as_mut());
+            let mut guarded = GuardedLMetric::new();
+            let m_g = run_des(&cfg, &trace, &mut guarded);
+            assert_eq!(m_p.records.len(), m_g.records.len(), "{workload}/{seed}");
+            for (a, b) in m_p.records.iter().zip(&m_g.records) {
+                assert_eq!(
+                    (a.id, a.instance, a.first_token_us, a.completion_us, a.cached_tokens),
+                    (b.id, b.instance, b.first_token_us, b.completion_us, b.cached_tokens),
+                    "{workload}/{seed}: guarded decision diverged at request {}",
+                    a.id
+                );
+            }
+            assert_eq!(
+                m_g.guard.mitigated, 0,
+                "{workload}/{seed}: mitigation fired on natural traffic"
+            );
+            assert_eq!(
+                m_g.guard.checks,
+                trace.requests.len() as u64,
+                "{workload}/{seed}: one guard check per decision"
+            );
+        }
+    }
+}
+
+/// Regression for the all-idle tie degeneracy: with every instance at
+/// `BS == 0` and the products exactly tied, bare `select_min` resolves
+/// the 0-spread tie by lowest index — discarding an 800-token cached
+/// prefix difference. The guard's secondary key must pick the max-hit
+/// instance. (The first assertion documents the old behaviour this
+/// guards against; the second fails on pre-guard code.)
+#[test]
+fn all_idle_tie_guard_prefers_max_hit_instance() {
+    use lmetric::policy::GuardedLMetric;
+    // P-token: (0 + (1600-800), 800 + (1600-1600)) = (800, 800); BS = 0
+    // everywhere, so the products tie at 800 x 1 with an 800-token hit
+    // gap between the instances.
+    let c = ctx(
+        1600,
+        vec![800, 1600],
+        vec![ind(0, 0, 0, 0), ind(0, 0, 800, 0)],
+    );
+    let mut plain = LMetric::paper();
+    assert_eq!(
+        plain.route(&c).instance,
+        0,
+        "old code: lowest index wins the 0-spread tie"
+    );
+    let mut guarded = GuardedLMetric::new();
+    assert_eq!(
+        guarded.route(&c).instance,
+        1,
+        "guard must resolve the tie toward the longest cached prefix"
+    );
+    assert_eq!(guarded.counters.degenerate, 1);
+    assert_eq!(guarded.counters.mitigated, 1);
 }
 
 // ------------------------------- shared-index routing equivalence ------

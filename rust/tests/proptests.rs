@@ -8,9 +8,12 @@ use std::collections::HashSet;
 use lmetric::core::{Request, BLOCK_TOKENS};
 use lmetric::engine::{EngineConfig, EngineEvent, Instance, ModelProfile};
 use lmetric::kvcache::RadixTree;
-use lmetric::policy::LMetric;
+use lmetric::policy::{
+    window_slack, FailureAnalyzer, GuardedLMetric, INVERSION_MARGIN, LMetric, W_HI, W_LO,
+};
 use lmetric::router::{select_min, Indicators, Policy, RouteCtx};
 use lmetric::tokenizer::block_hashes;
+use lmetric::trace::adversarial::{degenerate_tie_ctx, spread_route_ctx};
 use lmetric::util::Rng;
 
 /// Run `case` for `n` seeds; panic with the seed on failure.
@@ -379,6 +382,148 @@ fn prop_lmetric_never_picks_dominated() {
         ctx.inds[2].queued_prefill_tokens = ctx.inds[0].queued_prefill_tokens + 1000;
         let mut p = LMetric::paper();
         assert_ne!(p.route(&ctx).instance, 2);
+    });
+}
+
+// -------------------------------------------------- failure guard ------
+
+/// The weight-cancellation theorem as an executable invariant, easy
+/// direction: on snapshots with a strictly dominant instance (best on
+/// BOTH indicator axes — provably outside every derived failure
+/// window), the product argmin equals the argmin of `a·KV + b·LB` for
+/// ALL sampled positive `(a, b)`, and the guard is fully inert.
+#[test]
+fn prop_guard_dominant_instance_agrees_for_all_weights() {
+    prop("dominance => all-(a,b) agreement", 60, |rng| {
+        let n = rng.gen_range(3, 10) as usize;
+        let input = 160usize;
+        let dom = rng.gen_range(0, n as u64) as usize;
+        let mut hits = vec![0usize; n];
+        let mut inds = vec![Indicators::default(); n];
+        for i in 0..n {
+            // KV axis via queued prefill (carried by a queued batch
+            // member — DES-plausible); dominant strictly smallest.
+            let k = if i == dom {
+                200
+            } else {
+                rng.gen_range(300, 5000) as usize
+            };
+            let bs = if i == dom {
+                1
+            } else {
+                rng.gen_range(2, 40) as usize
+            };
+            hits[i] = 0;
+            inds[i] = Indicators {
+                r_bs: bs - 1,
+                q_bs: 1,
+                queued_prefill_tokens: k - input,
+                ..Default::default()
+            };
+        }
+        let ctx = RouteCtx::new(0, 1, 0, input, hits, inds);
+        let score = LMetric::paper();
+        let p = select_min(&ctx, |i| score.score(&ctx, i));
+        assert_eq!(p, dom, "the dominant instance is the product argmin");
+        for _ in 0..25 {
+            let a = rng.gen_f64(1e-3, 1e3);
+            let b = rng.gen_f64(1e-3, 1e3);
+            let lin = select_min(&ctx, |i| {
+                let (kv, load) = score.factors(&ctx, i);
+                a * kv + b * load
+            });
+            assert_eq!(lin, dom, "every positive linear combination agrees");
+        }
+        let mut guarded = GuardedLMetric::new();
+        assert_eq!(guarded.route(&ctx).instance, dom);
+        assert_eq!(guarded.counters.degenerate, 0);
+        assert_eq!(guarded.counters.inversion, 0);
+        assert_eq!(guarded.counters.mitigated, 0);
+    });
+}
+
+/// Hard direction, via the independent breakpoint oracle: the O(N)
+/// interval detector fires on exactly the snapshots where NO window
+/// weight justifies the product argmin within the margin (inside the
+/// derived window => the guard must fire; outside => it must not), and
+/// whenever nothing fires the guarded policy replays the bare product
+/// decision byte-identically.
+#[test]
+fn prop_guard_detector_matches_breakpoint_oracle() {
+    prop("detector == oracle", 60, |rng| {
+        let score = LMetric::paper();
+        let analyzer = FailureAnalyzer::default();
+        for _ in 0..20 {
+            let n = rng.gen_range(2, 12) as usize;
+            let ctx = if rng.gen_bool(0.5) {
+                let ks = rng.gen_f64(1.0, 64.0);
+                let ls = rng.gen_f64(1.0, 32.0);
+                spread_route_ctx(rng, n, 4096, ks, ls)
+            } else {
+                random_ctx(rng, n)
+            };
+            let p = select_min(&ctx, |i| score.score(&ctx, i));
+            let v = analyzer.analyze(&ctx, &score, p);
+            let mut guarded = GuardedLMetric::new();
+            let routed = guarded.route(&ctx).instance;
+            if !v.fired() {
+                assert_eq!(routed, p, "inert guard must be byte-identical");
+                assert_eq!(guarded.counters.mitigated, 0);
+            }
+            if v.degenerate() {
+                continue; // the envelope question is posed on non-degenerate states
+            }
+            let kv: Vec<f64> = (0..ctx.n()).map(|i| score.factors(&ctx, i).0).collect();
+            let ld: Vec<f64> = (0..ctx.n()).map(|i| score.factors(&ctx, i).1).collect();
+            let slack = window_slack(&kv, &ld, p, W_LO, W_HI, INVERSION_MARGIN);
+            if slack.abs() < 1e-7 {
+                continue; // borderline: fp-sensitive either way
+            }
+            assert_eq!(
+                v.inversion,
+                slack < 0.0,
+                "detector vs oracle diverged (slack {slack}, kv {kv:?}, load {ld:?})"
+            );
+        }
+    });
+}
+
+/// Inside the degenerate window the guard must fire, and its secondary
+/// key must resolve the all-idle tie toward the max-hit instance —
+/// never losing cached prefix relative to bare select_min's
+/// lowest-index pick.
+#[test]
+fn prop_guard_degenerate_window_fires_and_reranks_to_max_hit() {
+    prop("degenerate fires + max-hit rerank", 60, |rng| {
+        // All-idle exact ties with distinct hits.
+        let n = rng.gen_range(2, 10) as usize;
+        let ctx = degenerate_tie_ctx(rng, n, 2048);
+        let mut plain = LMetric::paper();
+        let mut guarded = GuardedLMetric::new();
+        let p = plain.route(&ctx).instance;
+        let g = guarded.route(&ctx).instance;
+        assert_eq!(guarded.counters.degenerate, 1, "all-idle tie must fire");
+        let max_hit = *ctx.hit_tokens.iter().max().unwrap();
+        assert_eq!(ctx.hit_tokens[g], max_hit, "guard picks a max-hit instance");
+        assert!(ctx.hit_tokens[g] >= ctx.hit_tokens[p], "never lose prefix");
+        // Zero-annihilation: >= 2 instances at P-token == 0 must fire.
+        let n = 4usize;
+        let input = 640usize;
+        let mut inds = vec![Indicators::default(); n];
+        let mut hits = vec![0usize; n];
+        for i in 0..n {
+            if i < 2 {
+                hits[i] = input; // full hit, empty queue: P-token = 0
+                inds[i].r_bs = rng.gen_range(0, 20) as usize;
+            } else {
+                hits[i] = 0;
+                inds[i].r_bs = rng.gen_range(0, 20) as usize;
+            }
+        }
+        let zctx = RouteCtx::new(0, 2, 0, input, hits, inds);
+        let mut g2 = GuardedLMetric::new();
+        g2.route(&zctx);
+        assert_eq!(g2.counters.degenerate, 1, "zero-annihilation must fire");
     });
 }
 

@@ -18,6 +18,13 @@ values for them — report-only otherwise, matching how des_end_to_end was
 armed.) The admit_radix_walks counters are reported for the artifact but
 not gated: they are an exactness invariant (one fused radix walk per
 admitted request) already asserted inside the bench binary itself.
+
+The `guard` section (failure-condition guard counters: natural vs
+shared-prefix-flood degenerate/inversion/mitigated counts) is likewise
+report-only: legacy baselines without the section, and null-seeded
+fields, never trip the gate. natural_mitigated is expected to read 0 —
+the paper's "extremely rare in practice" claim — but it is enforced by
+the tier-1 decision-replay test, not here.
 """
 
 import json
@@ -36,6 +43,14 @@ FIELDS = [
     ("scale_smoke", "admit_radix_walks", False),
     ("sweep", "speedup", False),
     ("sweep", "threads", False),
+    ("guard", "natural_checks", False),
+    ("guard", "natural_degenerate", False),
+    ("guard", "natural_inversion", False),
+    ("guard", "natural_mitigated", False),
+    ("guard", "flood_checks", False),
+    ("guard", "flood_degenerate", False),
+    ("guard", "flood_inversion", False),
+    ("guard", "flood_mitigated", False),
 ]
 
 
