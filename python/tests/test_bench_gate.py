@@ -1,0 +1,194 @@
+"""The bench regression gate's decision table, exercised end-to-end.
+
+scripts/check_bench_regression.py is the CI step that (once the baseline
+is seeded) fails the build on a >20% req/s or steps/s regression. Its
+tolerate-then-gate behaviour for newer JSON sections (guard, sessions)
+must hold across baseline generations, so this suite runs the actual
+script as a subprocess through the four paths that matter:
+
+1. unseeded baseline               -> report-only, exit 0
+2. seeded legacy baseline (no
+   sessions section)               -> sessions fields report-only, exit 0
+3. seeded baseline with sessions   -> within budget, exit 0
+4. seeded baseline with sessions,
+   regressed current run           -> exit 1
+
+plus --emit-seeded (the auto-arming path) and the quick_mode-mismatch
+escape hatch.
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[2]
+SCRIPT = REPO / "scripts" / "check_bench_regression.py"
+
+
+def run_gate(tmp_path, current, baseline, extra=()):
+    cur = tmp_path / "current.json"
+    base = tmp_path / "baseline.json"
+    cur.write_text(json.dumps(current))
+    base.write_text(json.dumps(baseline))
+    proc = subprocess.run(
+        [sys.executable, str(SCRIPT), str(cur), str(base), *extra],
+        capture_output=True,
+        text=True,
+    )
+    return proc
+
+
+def bench_doc(req_per_s=1000.0, with_sessions=True, seeded=False):
+    doc = {
+        "bench": "router_throughput",
+        "seeded": seeded,
+        "quick_mode": True,
+        "des_end_to_end": {
+            "requests": 2000,
+            "req_per_s": req_per_s,
+            "steps_per_s": 5 * req_per_s,
+            "admit_radix_walks": 2000,
+        },
+        "scale_smoke": {
+            "instances": 32,
+            "requests": 50000,
+            "wall_s": 10.0,
+            "req_per_s": req_per_s * 3,
+            "steps_per_s": req_per_s * 20,
+            "admit_radix_walks": 50000,
+        },
+        "guard": {
+            "natural_checks": 2000,
+            "natural_degenerate": 0,
+            "natural_inversion": 0,
+            "natural_mitigated": 0,
+            "flood_checks": 1600,
+            "flood_degenerate": 900,
+            "flood_inversion": 0,
+            "flood_mitigated": 0,
+        },
+        "sweep": {"jobs": 5, "threads": 8, "speedup": 3.1},
+    }
+    if with_sessions:
+        doc["sessions"] = {
+            "sessions": 400,
+            "turns": 2000,
+            "wall_s": 2.0,
+            "req_per_s": req_per_s / 2,
+            "affinity_lmetric": 0.9,
+            "affinity_sticky": 1.0,
+            "turn0_hit": 0.3,
+            "late_turn_hit": 0.85,
+        }
+    return doc
+
+
+def test_path1_unseeded_baseline_is_report_only(tmp_path):
+    proc = run_gate(tmp_path, bench_doc(), bench_doc(seeded=False))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "report-only" in proc.stdout
+
+
+def test_path2_seeded_legacy_baseline_tolerates_missing_sessions(tmp_path):
+    # Baseline predates the sessions section entirely; current carries it.
+    legacy = bench_doc(seeded=True, with_sessions=False)
+    proc = run_gate(tmp_path, bench_doc(req_per_s=990.0), legacy)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "sessions.req_per_s: baseline unseeded" in proc.stdout
+    assert "OK: within regression budget" in proc.stdout
+
+
+def test_path3_seeded_with_sessions_within_budget(tmp_path):
+    proc = run_gate(tmp_path, bench_doc(req_per_s=900.0), bench_doc(seeded=True))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "OK: within regression budget" in proc.stdout
+
+
+def test_path4_seeded_with_sessions_regression_fails(tmp_path):
+    proc = run_gate(tmp_path, bench_doc(req_per_s=500.0), bench_doc(seeded=True))
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert "FAIL" in proc.stdout
+    assert "sessions.req_per_s" in proc.stdout
+
+
+def test_sessions_only_regression_trips_gate(tmp_path):
+    # des/scale numbers fine, ONLY the closed-loop rate collapsed.
+    current = bench_doc(req_per_s=1000.0)
+    current["sessions"]["req_per_s"] = 100.0
+    proc = run_gate(tmp_path, current, bench_doc(seeded=True))
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert "sessions.req_per_s" in proc.stdout
+
+
+def test_quick_mode_mismatch_skips_gate(tmp_path):
+    current = bench_doc(req_per_s=100.0)
+    current["quick_mode"] = False
+    proc = run_gate(tmp_path, current, bench_doc(seeded=True))
+    assert proc.returncode == 0
+    assert "quick_mode mismatch" in proc.stdout
+
+
+def test_emit_seeded_never_writes_on_failure(tmp_path):
+    # A regressed run must not be able to arm (or replace) the baseline.
+    out = tmp_path / "should_not_exist.json"
+    proc = run_gate(
+        tmp_path,
+        bench_doc(req_per_s=100.0),
+        bench_doc(seeded=True),
+        extra=["--emit-seeded", str(out)],
+    )
+    assert proc.returncode == 1
+    assert not out.exists(), "failed runs must not emit a seeded baseline"
+
+
+def test_emit_seeded_refuses_incomplete_current(tmp_path):
+    # A run missing a gated field (bench sub-stage skipped) must not arm
+    # the gate, even in report-only mode.
+    current = bench_doc()
+    del current["sessions"]
+    out = tmp_path / "seeded.json"
+    proc = run_gate(tmp_path, current, bench_doc(seeded=False), extra=["--emit-seeded", str(out)])
+    assert proc.returncode == 0
+    assert "refusing to seed" in proc.stdout
+    assert not out.exists()
+
+
+def test_emit_seeded_onto_baseline_path_compares_old_contents_first(tmp_path):
+    # The CI wiring passes OUT == the baseline path itself: the gate must
+    # compare against the OLD (unseeded) contents, then overwrite.
+    cur = tmp_path / "current.json"
+    base = tmp_path / "baseline.json"
+    cur.write_text(json.dumps(bench_doc(req_per_s=777.0)))
+    base.write_text(json.dumps(bench_doc(seeded=False)))
+    proc = subprocess.run(
+        [sys.executable, str(SCRIPT), str(cur), str(base), "--emit-seeded", str(base)],
+        capture_output=True,
+        text=True,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "report-only" in proc.stdout
+    seeded = json.loads(base.read_text())
+    assert seeded["seeded"] is True
+    # Gated fields seed at the 0.85 headroom discount; the rest verbatim.
+    assert seeded["des_end_to_end"]["req_per_s"] == 777.0 * 0.85
+    assert seeded["des_end_to_end"]["requests"] == 2000
+
+
+def test_emit_seeded_stamps_and_keeps_note(tmp_path):
+    baseline = bench_doc(seeded=False)
+    baseline["note"] = "schema documentation survives seeding"
+    out = tmp_path / "seeded.json"
+    proc = run_gate(tmp_path, bench_doc(), baseline, extra=["--emit-seeded", str(out)])
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    seeded = json.loads(out.read_text())
+    assert seeded["seeded"] is True
+    assert seeded["note"] == "schema documentation survives seeding"
+    assert seeded["seed_headroom"] == 0.85
+    assert seeded["des_end_to_end"]["req_per_s"] == 1000.0 * 0.85
+    # And a seeded file arms the gate for the next run: a re-run at the
+    # seeding run's own speed passes (headroom), a collapse fails.
+    proc_same = run_gate(tmp_path, bench_doc(req_per_s=1000.0), seeded)
+    assert proc_same.returncode == 0
+    proc2 = run_gate(tmp_path, bench_doc(req_per_s=100.0), seeded)
+    assert proc2.returncode == 1

@@ -153,6 +153,48 @@ fn main() {
         flood.checks, flood.degenerate, flood.inversion, flood.mitigated
     );
 
+    // Closed-loop sessions: the reactive DES path (turn k+1 released at
+    // turn k's completion + think time) replayed under plain lmetric and
+    // under explicit session pinning. Records the closed-loop replay
+    // rate plus the affinity/prefix-reuse headline numbers ("P-token
+    // captures affinity for free") for the perf-trajectory JSON.
+    println!("\n--- closed-loop sessions (chat archetype) ---");
+    let ses_spec = lmetric::trace::SessionSpec::preset(
+        lmetric::trace::SessionKind::Chat,
+        scaled(2000),
+        42,
+    );
+    let ses_trace = lmetric::cluster::build_scaled_sessions(&ses_spec, &cfg, 0.5);
+    let t0 = std::time::Instant::now();
+    let mut ses_pol = policy::build_default("lmetric", &profile, 256).unwrap();
+    let ses_m = lmetric::cluster::run_session_des(&cfg, &ses_trace, ses_pol.as_mut());
+    let ses_wall = t0.elapsed().as_secs_f64();
+    assert_eq!(
+        ses_m.records.len(),
+        ses_trace.n_turns(),
+        "closed loop lost session turns"
+    );
+    let ses_sm = lmetric::metrics::SessionMetrics::collect(&ses_m, &ses_trace);
+    let mut sticky_pol = policy::build_default("sticky", &profile, 256).unwrap();
+    let sticky_m = lmetric::cluster::run_session_des(&cfg, &ses_trace, sticky_pol.as_mut());
+    let sticky_sm = lmetric::metrics::SessionMetrics::collect(&sticky_m, &ses_trace);
+    assert!(
+        (sticky_sm.affinity_ratio() - 1.0).abs() < 1e-12,
+        "sticky affinity must be 1.0 by construction"
+    );
+    println!(
+        "{} sessions / {} turns in {:.2}s wall = {:.0} turns/s; affinity \
+         lmetric {:.1}% vs sticky {:.1}%; hit turn0 {:.1}% -> warm {:.1}%",
+        ses_trace.sessions.len(),
+        ses_m.records.len(),
+        ses_wall,
+        ses_m.records.len() as f64 / ses_wall.max(1e-9),
+        ses_sm.affinity_ratio() * 100.0,
+        sticky_sm.affinity_ratio() * 100.0,
+        ses_sm.turn0_hit() * 100.0,
+        ses_sm.late_turn_hit() * 100.0
+    );
+
     // Parallel sweep harness: K independent DES runs serial vs fanned
     // out over scoped threads. Results must be identical (virtual time is
     // deterministic); only wall-clock may differ — that ratio is the
@@ -245,6 +287,22 @@ fn main() {
                 ("flood_degenerate", Json::Num(flood.degenerate as f64)),
                 ("flood_inversion", Json::Num(flood.inversion as f64)),
                 ("flood_mitigated", Json::Num(flood.mitigated as f64)),
+            ]),
+        ),
+        (
+            "sessions",
+            Json::obj(vec![
+                ("sessions", Json::Num(ses_trace.sessions.len() as f64)),
+                ("turns", Json::Num(ses_m.records.len() as f64)),
+                ("wall_s", Json::Num(ses_wall)),
+                (
+                    "req_per_s",
+                    Json::Num(ses_m.records.len() as f64 / ses_wall.max(1e-9)),
+                ),
+                ("affinity_lmetric", Json::Num(ses_sm.affinity_ratio())),
+                ("affinity_sticky", Json::Num(sticky_sm.affinity_ratio())),
+                ("turn0_hit", Json::Num(ses_sm.turn0_hit())),
+                ("late_turn_hit", Json::Num(ses_sm.late_turn_hit())),
             ]),
         ),
         (

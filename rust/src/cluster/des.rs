@@ -6,6 +6,16 @@
 //! completions, the indicator snapshot piggyback) materializing at the
 //! step's *end*. Requests arriving mid-step wait for the next step
 //! boundary, exactly like continuous batching on real engines.
+//!
+//! Two release modes share one event core ([`run_des_core`]):
+//!
+//! * **open-loop** ([`run_des`]) — every request's arrival is fixed by
+//!   the trace (the classic replay every figure bench uses);
+//! * **closed-loop** ([`run_session_des`]) — only each session's first
+//!   turn is pre-scheduled; turn `k+1` is *released at turn `k`'s
+//!   completion + think time*, so a congested cluster automatically
+//!   delays the rest of the conversation, exactly like a real client
+//!   that cannot send a follow-up before it has received the answer.
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
@@ -16,7 +26,9 @@ use crate::config::ExperimentConfig;
 use crate::engine::{EngineConfig, EngineEvent, Instance, ModelProfile, StepOutcome};
 use crate::metrics::RunMetrics;
 use crate::router::{IndicatorFactory, Policy};
-use crate::trace::{generate, Trace, Workload, WorkloadSpec};
+use crate::trace::{
+    generate, generate_sessions, SessionSpec, SessionTrace, Trace, Workload, WorkloadSpec,
+};
 
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
@@ -39,10 +51,86 @@ enum Event {
     StepEnd(usize),
 }
 
+/// Reactive follow-up edge: when the request at the owning index
+/// completes, the request at `next` is released `think_us` later (its
+/// `arrival_us` is stamped at release).
+#[derive(Debug, Clone, Copy)]
+struct Followup {
+    next: usize,
+    think_us: u64,
+}
+
 /// Run `trace` through the cluster under `policy`. Virtual time; returns
-/// the full metrics bundle.
+/// the full metrics bundle. Open-loop: every arrival is pre-scheduled.
 pub fn run_des(cfg: &ClusterConfig, trace: &Trace, policy: &mut dyn Policy) -> RunMetrics {
+    // Cloning the request vector is refcount bumps (token/hash storage is
+    // `Arc`-shared), not data copies; it lets the reactive core own its
+    // requests so closed-loop runs can stamp release times in place.
+    let reqs = trace.requests.to_vec();
+    let initial: Vec<usize> = (0..reqs.len()).collect();
+    run_des_core(cfg, reqs, &initial, &[], policy)
+}
+
+/// Run a closed-loop [`SessionTrace`]: each session's first turn arrives
+/// at its scheduled time; every later turn is released at the previous
+/// turn's completion + its pre-sampled think time. Join the returned
+/// records back to sessions with
+/// [`SessionMetrics::collect`](crate::metrics::SessionMetrics::collect).
+pub fn run_session_des(
+    cfg: &ClusterConfig,
+    strace: &SessionTrace,
+    policy: &mut dyn Policy,
+) -> RunMetrics {
+    let n_turns = strace.n_turns();
+    let mut reqs: Vec<crate::trace::TraceRequest> = Vec::with_capacity(n_turns);
+    let mut followups: Vec<Option<Followup>> = vec![None; n_turns];
+    let mut initial: Vec<(u64, u64, usize)> = Vec::with_capacity(strace.sessions.len());
+    for s in &strace.sessions {
+        let base = reqs.len();
+        for (ti, t) in s.turns.iter().enumerate() {
+            reqs.push(crate::trace::TraceRequest {
+                req: t.req.clone(),
+                full_hashes: t.full_hashes.clone(),
+            });
+            if ti + 1 < s.turns.len() {
+                followups[base + ti] = Some(Followup {
+                    next: base + ti + 1,
+                    think_us: s.turns[ti + 1].think_us,
+                });
+            }
+        }
+        if !s.turns.is_empty() {
+            initial.push((s.start_us, reqs[base].req.id, base));
+        }
+    }
+    // Release first turns in (time, id) order — the same push order the
+    // open-loop path uses on a flattened trace, so a single-turn session
+    // trace replays byte-identically to its open-loop equivalent.
+    initial.sort_by_key(|&(at, id, _)| (at, id));
+    let initial: Vec<usize> = initial.into_iter().map(|(_, _, i)| i).collect();
+    run_des_core(cfg, reqs, &initial, &followups, policy)
+}
+
+/// The shared event core. `initial` lists the indices released at their
+/// pre-stamped `arrival_us` (in push order — ties break FIFO); `followups`
+/// (empty for open-loop runs, else one slot per request) encodes the
+/// reactive dependency edges resolved at completion time.
+fn run_des_core(
+    cfg: &ClusterConfig,
+    mut reqs: Vec<crate::trace::TraceRequest>,
+    initial: &[usize],
+    followups: &[Option<Followup>],
+    policy: &mut dyn Policy,
+) -> RunMetrics {
     let n = cfg.n_instances;
+    let reactive = followups.iter().any(Option::is_some);
+    // Completion → follow-up lookup; only needed (and only built) when
+    // the trace has reactive edges, so open-loop runs pay nothing.
+    let idx_of: HashMap<u64, usize> = if reactive {
+        reqs.iter().enumerate().map(|(i, tr)| (tr.req.id, i)).collect()
+    } else {
+        HashMap::new()
+    };
     // Guard counters accumulate over the policy's lifetime; report this
     // run's delta.
     let guard_start = policy.guard_counters().unwrap_or_default();
@@ -72,8 +160,8 @@ pub fn run_des(cfg: &ClusterConfig, trace: &Trace, policy: &mut dyn Policy) -> R
         q.push((Reverse(t), Reverse(*tb), e));
     };
 
-    for (i, tr) in trace.requests.iter().enumerate() {
-        push(&mut queue, &mut tiebreak, tr.req.arrival_us, Event::Arrival(i));
+    for &i in initial {
+        push(&mut queue, &mut tiebreak, reqs[i].req.arrival_us, Event::Arrival(i));
     }
 
     let mut last_time = 0u64;
@@ -81,7 +169,7 @@ pub fn run_des(cfg: &ClusterConfig, trace: &Trace, policy: &mut dyn Policy) -> R
         last_time = last_time.max(now);
         match event {
             Event::Arrival(idx) => {
-                let tr = &trace.requests[idx];
+                let tr = &reqs[idx];
                 // Borrowed scratch context: the whole route decision is
                 // allocation-free on the router side.
                 let ctx = factory.route_ctx(&tr.req, now);
@@ -136,6 +224,17 @@ pub fn run_des(cfg: &ClusterConfig, trace: &Trace, policy: &mut dyn Policy) -> R
                             // Completed, so these are normally no-ops.
                             predicted.remove(&record.id);
                             arrivals.remove(&record.id);
+                            // Closed-loop release: the next turn of this
+                            // request's session arrives think-time after
+                            // the completion the client just observed.
+                            if reactive {
+                                let fu = idx_of.get(&record.id).and_then(|&i| followups[i]);
+                                if let Some(f) = fu {
+                                    let at = now + f.think_us;
+                                    reqs[f.next].req.arrival_us = at;
+                                    push(&mut queue, &mut tiebreak, at, Event::Arrival(f.next));
+                                }
+                            }
                         }
                     }
                 }
@@ -265,6 +364,42 @@ pub fn build_scaled_trace(exp: &ExperimentConfig) -> Trace {
         trace = generate(&spec);
     }
     trace
+}
+
+/// Scale a session workload's *session arrival rate* until the open-loop
+/// (flattened) request rate hits `rate_scale × profiled capacity` — the
+/// same §4.1 methodology [`build_scaled_trace`] applies to the synth
+/// traces, adapted to the closed loop: think times and in-session
+/// causality are untouched (they are replayed reactively), only the
+/// session inter-arrival gaps compress. The flattened rate is the load a
+/// fast cluster would see; under congestion the closed loop throttles
+/// itself below it, which is exactly the behaviour being studied.
+pub fn build_scaled_sessions(
+    spec: &SessionSpec,
+    cfg: &ClusterConfig,
+    rate_scale: f64,
+) -> SessionTrace {
+    let mut spec = spec.clone();
+    let probe = generate_sessions(&spec);
+    let cap = profile_capacity_rps(&cfg.engine, &probe.flatten(), 200);
+    let target = rate_scale * cap * cfg.n_instances as f64;
+    let mut strace = probe;
+    // Request rate is sublinear in session rate (think-time gaps do not
+    // compress); a few correction passes converge like the open-loop
+    // scaler's.
+    for _ in 0..3 {
+        let natural = strace.flatten().steady_rps();
+        if !natural.is_finite() || natural <= 0.0 {
+            break;
+        }
+        let ratio = (target / natural).clamp(0.05, 20.0);
+        if (ratio - 1.0).abs() < 0.03 {
+            break;
+        }
+        spec.session_rate *= ratio;
+        strace = generate_sessions(&spec);
+    }
+    strace
 }
 
 pub fn cluster_config(exp: &ExperimentConfig) -> ClusterConfig {

@@ -7,6 +7,6 @@ mod des;
 pub mod live;
 
 pub use des::{
-    build_scaled_trace, cluster_config, profile_capacity_rps, run_des, run_experiment,
-    ClusterConfig,
+    build_scaled_sessions, build_scaled_trace, cluster_config, profile_capacity_rps, run_des,
+    run_experiment, run_session_des, ClusterConfig,
 };

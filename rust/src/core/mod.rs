@@ -142,12 +142,19 @@ impl Iterator for MaskOnes<'_> {
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
-    /// Arrival time in µs since trace start.
+    /// Arrival time in µs since trace start. For reactive session turns
+    /// (see [`crate::trace::sessions`]) this is stamped by the DES at
+    /// release time — completion of the previous turn plus think time.
     pub arrival_us: u64,
     /// Prefix-sharing class (≈ application/user: shared system prompt +
     /// conversation history). Drives KV$ hit structure and the §5.2
     /// hotspot analysis.
     pub class_id: u32,
+    /// Session identity (0 = sessionless single-shot request). Turns of
+    /// one conversation / agent loop share a session id; session-aware
+    /// policies ([`crate::policy::StickySession`],
+    /// [`crate::policy::SessionBalance`]) key their affinity state on it.
+    pub session_id: u64,
     /// Prompt token ids (shared, immutable after trace build).
     pub tokens: Arc<[u32]>,
     /// Number of output tokens the request will generate (from the trace;

@@ -391,6 +391,7 @@ mod tests {
                 id,
                 arrival_us: 0,
                 class_id: class,
+                session_id: 0,
                 tokens: tokens.into(),
                 output_len: output,
                 block_hashes: hashes.into(),

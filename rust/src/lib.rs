@@ -14,7 +14,8 @@
 //!
 //! Layout (three layers; Python never on the request path):
 //! * [`router`] + [`policy`] — the paper's contribution: indicator factory
-//!   and the ten scheduling policies studied in the paper.
+//!   and the scheduling policies studied in the paper, plus session-aware
+//!   baselines (`sticky`, `smetric`).
 //! * [`engine`] — a vLLM-v1-like instance: continuous batching, chunked
 //!   prefill, radix-tree KV$, analytic step cost model.
 //! * [`cluster`] — a discrete-event simulation harness (virtual time, used
@@ -23,8 +24,10 @@
 //! * [`runtime`] — loads the AOT HLO artifacts produced by
 //!   `python/compile/aot.py` and executes them on the PJRT CPU client.
 //! * [`trace`] — synthetic workload generators matching the paper's four
-//!   trace families, plus replayer, rate scaling and the adversarial
-//!   failure-regime generators ([`trace::adversarial`]).
+//!   trace families, plus replayer, rate scaling, the adversarial
+//!   failure-regime generators ([`trace::adversarial`]) and the
+//!   closed-loop session engine ([`trace::sessions`], replayed
+//!   reactively by [`cluster`]'s `run_session_des`).
 //! * [`hotspot`] — the §5.2 two-phase KV$-hotspot detector.
 //! * [`policy::GuardedLMetric`] — the failure-condition guard
 //!   (`lmetric_safe`): detects the derived degenerate / cross-spread

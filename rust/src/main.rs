@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   replay       run one policy on one workload through the DES cluster
+//!   sessions     closed-loop session replay (reactive turn release)
 //!   compare      run every policy on one workload, print the table
 //!   serve        live cluster: real PJRT transformer, wall-clock latencies
 //!   gen-trace    write a synthetic workload as jsonl
@@ -96,6 +97,77 @@ fn cmd_replay(flags: &HashMap<String, String>) {
         println!(
             "guard: {} checks, {} degenerate, {} inversion, {} mitigated",
             g.checks, g.degenerate, g.inversion, g.mitigated
+        );
+    }
+}
+
+fn cmd_sessions(flags: &HashMap<String, String>) {
+    use lmetric::cluster::{build_scaled_sessions, run_session_des, ClusterConfig};
+    use lmetric::engine::EngineConfig;
+    use lmetric::metrics::{fmt_s, SessionMetrics, TURN_CURVE_CAP};
+    use lmetric::trace::{SessionKind, SessionSpec};
+
+    let kind = flags
+        .get("kind")
+        .map(|k| {
+            SessionKind::by_name(k).unwrap_or_else(|| {
+                eprintln!("unknown session kind {k} (try: chat api coding)");
+                std::process::exit(2);
+            })
+        })
+        .unwrap_or(SessionKind::Chat);
+    let requests: usize = flags.get("requests").map(|v| v.parse().unwrap()).unwrap_or(2000);
+    let instances: usize = flags.get("instances").map(|v| v.parse().unwrap()).unwrap_or(8);
+    let seed: u64 = flags.get("seed").map(|v| v.parse().unwrap()).unwrap_or(42);
+    let rate_scale: f64 = flags.get("rate-scale").map(|v| v.parse().unwrap()).unwrap_or(0.5);
+    let policy_name = flags.get("policy").map(String::as_str).unwrap_or("lmetric");
+
+    let profile = ModelProfile::moe_30b();
+    let mut pol = policy::build_default(policy_name, &profile, 256).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    let cfg = ClusterConfig::new(instances, EngineConfig::default());
+    let spec = SessionSpec::preset(kind, requests, seed);
+    let strace = build_scaled_sessions(&spec, &cfg, rate_scale);
+    println!(
+        "closed-loop replay: {} sessions / {} turns ({}) on {instances} instances under {}",
+        strace.sessions.len(),
+        strace.n_turns(),
+        kind.name(),
+        pol.name()
+    );
+    let m = run_session_des(&cfg, &strace, pol.as_mut());
+    let sm = SessionMetrics::collect(&m, &strace);
+    let row = ResultRow::from_metrics(&pol.name(), &m)
+        .with("affinity", sm.affinity_ratio())
+        .with("turn0_hit", sm.turn0_hit())
+        .with("late_turn_hit", sm.late_turn_hit());
+    println!("{}", render_table(&format!("sessions/{}", kind.name()), &[row]));
+    println!(
+        "sessions: {} completed, span p50 {}, session-mean TTFT p50 {}",
+        sm.sessions,
+        fmt_s(sm.session_span_s.p50),
+        fmt_s(sm.session_mean_ttft.p50)
+    );
+    println!(
+        "affinity: {:.1}% of consecutive turns stayed on the previous instance",
+        sm.affinity_ratio() * 100.0
+    );
+    println!("per-turn prefix-hit curve:");
+    for ti in 0..TURN_CURVE_CAP {
+        if sm.turn_hit_counts[ti] == 0 {
+            continue;
+        }
+        println!(
+            "  turn {:>3}: {:>5.1}%  ({} samples)",
+            if ti == TURN_CURVE_CAP - 1 {
+                format!("{ti}+")
+            } else {
+                ti.to_string()
+            },
+            sm.turn_hit_curve[ti] * 100.0,
+            sm.turn_hit_counts[ti]
         );
     }
 }
@@ -292,6 +364,7 @@ fn usage() -> ! {
 
 commands:
   replay       --workload W --policy P [--instances N --requests N --rate-scale F --param F --profile M --seed S --config FILE]
+  sessions     --kind chat|api|coding [--policy P --instances N --requests N --rate-scale F --seed S]
   compare      --workload W [--instances N --requests N ...]
   serve        [--instances N --requests N --policy P --time-scale F]
   gen-trace    --workload W --requests N --out FILE
@@ -311,6 +384,7 @@ fn main() {
     let flags = parse_flags(&args[1..]);
     match cmd.as_str() {
         "replay" => cmd_replay(&flags),
+        "sessions" => cmd_sessions(&flags),
         "compare" => cmd_compare(&flags),
         "serve" => cmd_serve(&flags),
         "gen-trace" => cmd_gen_trace(&flags),

@@ -151,6 +151,142 @@ impl RunMetrics {
     }
 }
 
+/// Turn indices at or above this are folded into the last bucket of the
+/// per-turn prefix-hit curve (long agent loops get a "deep turns" tail
+/// instead of an unbounded vector).
+pub const TURN_CURVE_CAP: usize = 16;
+
+/// Per-session aggregates of a closed-loop run
+/// ([`crate::cluster::run_session_des`]): joins the flat
+/// [`RequestRecord`]s back to their (session, turn) positions.
+#[derive(Debug, Clone)]
+pub struct SessionMetrics {
+    /// Sessions with at least one completed turn / completed turns seen.
+    pub sessions: usize,
+    pub turns: usize,
+    /// Consecutive-turn pairs routed to the same instance, out of all
+    /// consecutive pairs with both records present. The affinity a sticky
+    /// router gets by construction — and the one an indicator router must
+    /// earn through its KV$-awareness.
+    pub affinity_hits: usize,
+    pub affinity_total: usize,
+    /// Mean prompt KV$ hit ratio by turn index (bucket `TURN_CURVE_CAP-1`
+    /// aggregates all deeper turns), with per-bucket sample counts.
+    pub turn_hit_curve: Vec<f64>,
+    pub turn_hit_counts: Vec<usize>,
+    pub turn_ttft: Summary,
+    pub turn_tpot: Summary,
+    /// Distribution of per-session *mean* TTFT (one sample per session).
+    pub session_mean_ttft: Summary,
+    /// Per-session wall span, first arrival → last completion, seconds.
+    pub session_span_s: Summary,
+}
+
+impl SessionMetrics {
+    /// Join `m.records` to `st`'s sessions. Records absent from `m`
+    /// (warm-up-discarded or still in flight) are skipped; affinity pairs
+    /// require both sides present.
+    pub fn collect(m: &RunMetrics, st: &crate::trace::SessionTrace) -> SessionMetrics {
+        let rec_of: BTreeMap<u64, &RequestRecord> = m.records.iter().map(|r| (r.id, r)).collect();
+        let mut out = SessionMetrics {
+            sessions: 0,
+            turns: 0,
+            affinity_hits: 0,
+            affinity_total: 0,
+            turn_hit_curve: vec![0.0; TURN_CURVE_CAP],
+            turn_hit_counts: vec![0; TURN_CURVE_CAP],
+            turn_ttft: Summary::of(&[]),
+            turn_tpot: Summary::of(&[]),
+            session_mean_ttft: Summary::of(&[]),
+            session_span_s: Summary::of(&[]),
+        };
+        let mut ttfts: Vec<f64> = Vec::new();
+        let mut tpots: Vec<f64> = Vec::new();
+        let mut session_means: Vec<f64> = Vec::new();
+        let mut spans: Vec<f64> = Vec::new();
+        for s in &st.sessions {
+            let recs: Vec<(usize, &RequestRecord)> = s
+                .turns
+                .iter()
+                .enumerate()
+                .filter_map(|(ti, t)| rec_of.get(&t.req.id).map(|r| (ti, *r)))
+                .collect();
+            if recs.is_empty() {
+                continue;
+            }
+            out.sessions += 1;
+            let mut sess_ttft_sum = 0.0;
+            for &(ti, r) in &recs {
+                out.turns += 1;
+                let bucket = ti.min(TURN_CURVE_CAP - 1);
+                out.turn_hit_curve[bucket] += r.hit_ratio();
+                out.turn_hit_counts[bucket] += 1;
+                ttfts.push(r.ttft_s());
+                sess_ttft_sum += r.ttft_s();
+                if r.output_len > 1 {
+                    tpots.push(r.tpot_s());
+                }
+            }
+            for w in recs.windows(2) {
+                if w[1].0 == w[0].0 + 1 {
+                    out.affinity_total += 1;
+                    if w[1].1.instance == w[0].1.instance {
+                        out.affinity_hits += 1;
+                    }
+                }
+            }
+            session_means.push(sess_ttft_sum / recs.len() as f64);
+            let first_arrival = recs.iter().map(|(_, r)| r.arrival_us).min().unwrap();
+            let last_done = recs.iter().map(|(_, r)| r.completion_us).max().unwrap();
+            spans.push((last_done - first_arrival) as f64 / 1e6);
+        }
+        for i in 0..TURN_CURVE_CAP {
+            out.turn_hit_curve[i] = if out.turn_hit_counts[i] == 0 {
+                f64::NAN
+            } else {
+                out.turn_hit_curve[i] / out.turn_hit_counts[i] as f64
+            };
+        }
+        out.turn_ttft = Summary::of(&ttfts);
+        out.turn_tpot = Summary::of(&tpots);
+        out.session_mean_ttft = Summary::of(&session_means);
+        out.session_span_s = Summary::of(&spans);
+        out
+    }
+
+    /// Fraction of consecutive turns kept on the previous turn's
+    /// instance (NaN when the run had no multi-turn pairs).
+    pub fn affinity_ratio(&self) -> f64 {
+        if self.affinity_total == 0 {
+            f64::NAN
+        } else {
+            self.affinity_hits as f64 / self.affinity_total as f64
+        }
+    }
+
+    /// Mean hit ratio of turn 0 (the cold entry point of every session).
+    pub fn turn0_hit(&self) -> f64 {
+        self.turn_hit_curve[0]
+    }
+
+    /// Mean hit ratio over all turns past the first — how much the
+    /// growing shared context pays once a session is warm.
+    pub fn late_turn_hit(&self) -> f64 {
+        let (mut sum, mut n) = (0.0, 0usize);
+        for i in 1..TURN_CURVE_CAP {
+            if self.turn_hit_counts[i] > 0 {
+                sum += self.turn_hit_curve[i] * self.turn_hit_counts[i] as f64;
+                n += self.turn_hit_counts[i];
+            }
+        }
+        if n == 0 {
+            f64::NAN
+        } else {
+            sum / n as f64
+        }
+    }
+}
+
 /// One labelled result row (e.g. one policy on one trace).
 #[derive(Debug, Clone)]
 pub struct ResultRow {
@@ -329,6 +465,56 @@ mod tests {
             }
         }
         assert!(m.imbalance_score() > b.imbalance_score());
+    }
+
+    #[test]
+    fn session_metrics_affinity_and_curve() {
+        use crate::trace::{generate_sessions, SessionKind, SessionSpec};
+        let mut spec = SessionSpec::preset(SessionKind::ApiCall, 60, 5);
+        spec.mean_turns = 3.0;
+        let st = generate_sessions(&spec);
+        let mut m = RunMetrics::new(2);
+        // Fabricate one record per turn: even-indexed sessions ping-pong
+        // between instances (zero affinity), odd-indexed stay put (full).
+        let mut expect_hits = 0usize;
+        let mut expect_total = 0usize;
+        for (si, s) in st.sessions.iter().enumerate() {
+            if si == 0 {
+                continue; // dropped session: must be skipped, not crash
+            }
+            for (ti, t) in s.turns.iter().enumerate() {
+                let instance = if si % 2 == 0 { ti % 2 } else { 0 };
+                let arrival = (si * 1000 + ti * 10) as u64 * 1000;
+                m.records.push(RequestRecord {
+                    id: t.req.id,
+                    class_id: t.req.class_id,
+                    instance,
+                    arrival_us: arrival,
+                    first_token_us: arrival + 50_000,
+                    completion_us: arrival + 250_000,
+                    input_len: t.req.input_len() as u32,
+                    output_len: t.req.output_len.max(2),
+                    cached_tokens: (t.req.input_len() / 2) as u32,
+                });
+            }
+            expect_total += s.turns.len().saturating_sub(1);
+            if si % 2 != 0 {
+                expect_hits += s.turns.len().saturating_sub(1);
+            }
+        }
+        let sm = SessionMetrics::collect(&m, &st);
+        assert_eq!(sm.sessions, st.sessions.len() - 1);
+        assert_eq!(sm.turns, m.records.len());
+        assert_eq!(sm.affinity_total, expect_total);
+        assert_eq!(sm.affinity_hits, expect_hits);
+        assert!((sm.affinity_ratio() - expect_hits as f64 / expect_total as f64).abs() < 1e-12);
+        // Every record was fabricated with a 50% prompt-hit ratio (give or
+        // take integer division), so every populated curve bucket sits
+        // near 0.5 and turn 0 is populated.
+        assert!(sm.turn_hit_counts[0] > 0);
+        assert!((sm.turn0_hit() - 0.5).abs() < 0.05);
+        assert!((sm.turn_ttft.mean - 0.05).abs() < 1e-9);
+        assert!(sm.session_span_s.n == sm.sessions);
     }
 
     #[test]

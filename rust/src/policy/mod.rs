@@ -13,6 +13,8 @@
 //! | `sim_llmd`     | §4.6 (llm-d) | min simulated TTFT | simulator |
 //! | `preble`       | §6.2/A.1 | hit filter → windowed linear fallback | T |
 //! | `polyserve`    | §6.2/A.2 | SLO filter → load gradient | τ (SLO_TPOT) |
+//! | `sticky`       | —     | session affinity: pin turns to first placement | — |
+//! | `smetric`      | — (SMetric, PAPERS.md) | sticky + balanced live-session context | — |
 //! | `lmetric`      | §5    | **P-token × BS** | none |
 //! | `lmetric_guarded` | §5.2 | lmetric + two-phase hotspot detector | none |
 //! | `lmetric_safe` | §5    | lmetric + failure-condition guard | none |
@@ -28,6 +30,7 @@ mod linear;
 mod lmetric;
 mod polyserve;
 mod preble;
+mod session;
 mod sim_based;
 mod vllm;
 
@@ -42,6 +45,7 @@ pub use linear::Linear;
 pub use lmetric::{KvAwareIndicator, LMetric, LoadIndicator};
 pub use polyserve::PolyServe;
 pub use preble::Preble;
+pub use session::{SessionBalance, StickySession};
 pub use sim_based::SimBased;
 pub use vllm::Vllm;
 
@@ -80,6 +84,8 @@ pub fn build_with_simulator(
         "sim_llmd" => Box::new(SimBased::new(sim)),
         "preble" => Box::new(Preble::new(param)),
         "polyserve" => Box::new(PolyServe::new(sim, param * 1000.0)),
+        "sticky" => Box::new(StickySession::new()),
+        "smetric" => Box::new(SessionBalance::new()),
         "lmetric" => Box::new(LMetric::paper()),
         "lmetric_hit_ratio" => Box::new(LMetric::new(
             KvAwareIndicator::OneMinusHitRatio,
@@ -138,6 +144,8 @@ pub fn all_names() -> &'static [&'static str] {
         "sim_llmd",
         "preble",
         "polyserve",
+        "sticky",
+        "smetric",
         "lmetric",
         "lmetric_guarded",
         "lmetric_safe",

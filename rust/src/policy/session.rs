@@ -1,0 +1,278 @@
+//! Session-aware competitor policies: the baselines LMETRIC must match
+//! or beat on closed-loop session workloads *without* ever looking at
+//! the session id.
+//!
+//! * [`StickySession`] — classic session-affinity routing (the gateway
+//!   pattern): a session's first turn is placed on the least-loaded
+//!   instance, every later turn is pinned there. Perfect prefix reuse by
+//!   construction, zero load adaptivity: a pinned instance that turns hot
+//!   keeps its sessions forever.
+//! * [`SessionBalance`] — an SMetric-style *balanced session-centric*
+//!   scheduler (PAPERS.md): sessions stay sticky, but placement balances
+//!   the per-instance sum of active-session context footprints (a
+//!   session's cost ≈ its current prompt length, which grows every turn),
+//!   and sessions idle past a TTL are retired from the account so dead
+//!   conversations stop occupying routing weight.
+//!
+//! Both key their state on [`RouteCtx::session_id`]; on sessionless
+//! traffic (`session_id == 0`) they degrade to their placement rule
+//! applied per request, so they remain valid baselines on every
+//! single-shot workload in the registry.
+
+use std::collections::HashMap;
+
+use crate::router::{select_min, Policy, RouteCtx, RouteDecision};
+
+/// Plain session-affinity routing: first turn → least-BS instance, later
+/// turns → wherever the session lives.
+pub struct StickySession {
+    pins: HashMap<u64, usize>,
+}
+
+impl StickySession {
+    pub fn new() -> Self {
+        StickySession {
+            pins: HashMap::new(),
+        }
+    }
+}
+
+impl Default for StickySession {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Policy for StickySession {
+    fn name(&self) -> String {
+        "sticky".into()
+    }
+
+    fn route(&mut self, ctx: &RouteCtx) -> RouteDecision {
+        if ctx.session_id != 0 {
+            if let Some(&i) = self.pins.get(&ctx.session_id) {
+                if i < ctx.n() {
+                    return RouteDecision::to(i);
+                }
+            }
+        }
+        let i = select_min(ctx, |i| ctx.inds[i].bs() as f64);
+        if ctx.session_id != 0 {
+            self.pins.insert(ctx.session_id, i);
+        }
+        RouteDecision::to(i)
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct SessionPin {
+    inst: usize,
+    /// Last observed context footprint (prompt tokens) of the session.
+    ctx_tokens: usize,
+    last_us: u64,
+}
+
+/// SMetric-style balanced session-centric scheduling: sticky placement,
+/// but new sessions go to the instance carrying the least *live session
+/// context*, and a returning turn updates its session's footprint in the
+/// account (context grows every turn). Sessions idle longer than
+/// `ttl_us` are expired lazily before each decision.
+pub struct SessionBalance {
+    ttl_us: u64,
+    pins: HashMap<u64, SessionPin>,
+    /// Per-instance sum of live-session context tokens.
+    load: Vec<u64>,
+    /// Virtual time of the last full expiry sweep. Sweeps are paced to
+    /// once per TTL of virtual time, so the per-decision cost stays O(1)
+    /// amortized (the routed session's own pin is TTL-checked lazily on
+    /// lookup; the sweep only drains *abandoned* sessions from the load
+    /// account).
+    last_sweep_us: u64,
+}
+
+impl SessionBalance {
+    /// Default TTL: 10 virtual minutes — an order of magnitude above the
+    /// chat archetype's mean think time, so live conversations survive
+    /// their gaps but abandoned ones drain from the account.
+    pub const DEFAULT_TTL_US: u64 = 600_000_000;
+
+    pub fn new() -> Self {
+        Self::with_ttl(Self::DEFAULT_TTL_US)
+    }
+
+    pub fn with_ttl(ttl_us: u64) -> Self {
+        SessionBalance {
+            ttl_us,
+            pins: HashMap::new(),
+            load: Vec::new(),
+            last_sweep_us: 0,
+        }
+    }
+
+    /// Drop every pin idle past the TTL and drain its context tokens
+    /// from the load account. Called at most once per TTL of virtual
+    /// time — see `last_sweep_us`.
+    fn sweep(&mut self, now_us: u64) {
+        let ttl = self.ttl_us;
+        let load = &mut self.load;
+        self.pins.retain(|_, p| {
+            if now_us.saturating_sub(p.last_us) > ttl {
+                if let Some(l) = load.get_mut(p.inst) {
+                    *l = l.saturating_sub(p.ctx_tokens as u64);
+                }
+                false
+            } else {
+                true
+            }
+        });
+        self.last_sweep_us = now_us;
+    }
+
+    /// Live sessions currently pinned to `inst` would cost this many
+    /// context tokens (tests / introspection).
+    pub fn live_load(&self, inst: usize) -> u64 {
+        self.load.get(inst).copied().unwrap_or(0)
+    }
+}
+
+impl Default for SessionBalance {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Policy for SessionBalance {
+    fn name(&self) -> String {
+        "smetric".into()
+    }
+
+    fn route(&mut self, ctx: &RouteCtx) -> RouteDecision {
+        if self.load.len() < ctx.n() {
+            self.load.resize(ctx.n(), 0);
+        }
+        if ctx.now_us.saturating_sub(self.last_sweep_us) > self.ttl_us {
+            self.sweep(ctx.now_us);
+        }
+        if ctx.session_id != 0 {
+            let mut stale = false;
+            if let Some(p) = self.pins.get_mut(&ctx.session_id) {
+                if ctx.now_us.saturating_sub(p.last_us) > self.ttl_us {
+                    // Lazy per-pin TTL check: a returning-but-expired
+                    // session re-places below instead of resuming.
+                    stale = true;
+                } else if p.inst < ctx.n() {
+                    // Returning turn: refresh the footprint (the prompt
+                    // now contains the whole history) and the liveness.
+                    self.load[p.inst] += ctx.input_len.saturating_sub(p.ctx_tokens) as u64;
+                    p.ctx_tokens = p.ctx_tokens.max(ctx.input_len);
+                    p.last_us = ctx.now_us;
+                    return RouteDecision::to(p.inst);
+                }
+            }
+            if stale {
+                if let Some(p) = self.pins.remove(&ctx.session_id) {
+                    if let Some(l) = self.load.get_mut(p.inst) {
+                        *l = l.saturating_sub(p.ctx_tokens as u64);
+                    }
+                }
+            }
+        }
+        // New session (or sessionless request): balance live context.
+        let i = select_min(ctx, |i| self.load[i] as f64);
+        if ctx.session_id != 0 {
+            self.pins.insert(
+                ctx.session_id,
+                SessionPin {
+                    inst: i,
+                    ctx_tokens: ctx.input_len,
+                    last_us: ctx.now_us,
+                },
+            );
+            self.load[i] += ctx.input_len as u64;
+        }
+        RouteDecision::to(i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::router::Indicators;
+
+    fn ctx(n: usize, session: u64, input: usize, now: u64) -> RouteCtx {
+        RouteCtx::new(now, 0, 0, input, vec![0; n], vec![Indicators::default(); n])
+            .with_session(session)
+    }
+
+    #[test]
+    fn sticky_pins_sessions_and_ignores_load_after() {
+        let mut p = StickySession::new();
+        let first = p.route(&ctx(3, 7, 100, 0)).instance;
+        // Later turn, even with that instance drowning in batch, stays.
+        let mut busy = ctx(3, 7, 500, 10);
+        busy.inds[first].r_bs = 50;
+        assert_eq!(p.route(&busy).instance, first);
+        // A different session spreads by least BS (away from the busy one).
+        assert_ne!(p.route(&busy.clone().with_session(8)).instance, first);
+    }
+
+    #[test]
+    fn sticky_sessionless_does_not_pin() {
+        let mut p = StickySession::new();
+        let mut c = ctx(2, 0, 100, 0);
+        c.inds[0].r_bs = 4;
+        assert_eq!(p.route(&c).instance, 1);
+        let mut c2 = ctx(2, 0, 100, 1);
+        c2.inds[1].r_bs = 9;
+        assert_eq!(p.route(&c2).instance, 0, "no pin: decisions stay load-driven");
+        assert!(p.pins.is_empty());
+    }
+
+    #[test]
+    fn smetric_balances_session_context_and_stays_sticky() {
+        let mut p = SessionBalance::new();
+        // Session 1 brings a huge context to instance 0 (first placement
+        // tie-breaks to index 0 on an idle fleet).
+        assert_eq!(p.route(&ctx(2, 1, 10_000, 0)).instance, 0);
+        assert_eq!(p.live_load(0), 10_000);
+        // Session 2 lands on the other instance: balanced placement.
+        assert_eq!(p.route(&ctx(2, 2, 100, 1)).instance, 1);
+        // Session 1's next turn returns to instance 0 and grows the
+        // footprint to the new prompt length.
+        assert_eq!(p.route(&ctx(2, 1, 12_000, 2)).instance, 0);
+        assert_eq!(p.live_load(0), 12_000);
+        // Session 3 avoids the heavy instance even though BS is equal.
+        assert_eq!(p.route(&ctx(2, 3, 100, 3)).instance, 1);
+    }
+
+    #[test]
+    fn smetric_lazy_expiry_between_sweeps() {
+        let mut p = SessionBalance::with_ttl(1_000_000);
+        assert_eq!(p.route(&ctx(2, 1, 4_000, 500_000)).instance, 0);
+        // This decision triggers a sweep; session 1 (idle 0.5 s of the
+        // 1 s TTL) survives it, and session 2 balances to instance 1.
+        assert_eq!(p.route(&ctx(2, 2, 100, 1_000_001)).instance, 1);
+        assert_eq!(p.live_load(0), 4_000);
+        // Before the next sweep is due, session 1 returns expired: the
+        // lazy per-pin check drains its stale 4 000-token account, so
+        // placement sees load (0, 100) and picks the drained instance —
+        // a leaked account would have sent it to instance 1.
+        assert_eq!(p.route(&ctx(2, 1, 5_000, 1_600_000)).instance, 0);
+        assert_eq!(p.live_load(0), 5_000);
+        assert_eq!(p.live_load(1), 100);
+    }
+
+    #[test]
+    fn smetric_expires_idle_sessions() {
+        let mut p = SessionBalance::with_ttl(1_000_000); // 1 s TTL
+        assert_eq!(p.route(&ctx(2, 1, 5_000, 0)).instance, 0);
+        assert_eq!(p.live_load(0), 5_000);
+        // 2 s later the session is dead: account drains, and a new
+        // session sees a clean slate (ties back to instance 0).
+        assert_eq!(p.route(&ctx(2, 2, 100, 2_000_000)).instance, 0);
+        assert_eq!(p.live_load(0), 100);
+        // The expired session's next turn re-places instead of pinning.
+        let d = p.route(&ctx(2, 1, 6_000, 2_000_001)).instance;
+        assert_eq!(d, 1, "expired session re-balances onto the lighter instance");
+    }
+}

@@ -50,6 +50,10 @@ pub struct RouteCtx {
     pub now_us: u64,
     pub req_id: u64,
     pub class_id: u32,
+    /// Session the request belongs to (0 = sessionless). Lets
+    /// session-aware policies key affinity state without any side
+    /// channel; indicator-based policies ignore it.
+    pub session_id: u64,
     pub input_len: usize,
     /// Prompt tokens already cached per instance (block-aligned).
     pub hit_tokens: Vec<usize>,
@@ -77,11 +81,19 @@ impl RouteCtx {
             now_us,
             req_id,
             class_id,
+            session_id: 0,
             input_len,
             hit_tokens,
             matched_mask,
             inds,
         }
+    }
+
+    /// Attach a session id (builder-style; [`RouteCtx::new`] defaults to
+    /// sessionless so the many non-session call sites stay unchanged).
+    pub fn with_session(mut self, session_id: u64) -> Self {
+        self.session_id = session_id;
+        self
     }
 
     /// Re-derive `matched_mask` from `hit_tokens` — call after mutating
@@ -311,6 +323,7 @@ impl IndicatorFactory {
                 now_us: 0,
                 req_id: u64::MAX,
                 class_id: 0,
+                session_id: 0,
                 input_len: 0,
                 hit_tokens: Vec::with_capacity(n_instances),
                 matched_mask: InstanceMask::with_capacity(n_instances),
@@ -354,6 +367,7 @@ impl IndicatorFactory {
         self.scratch.now_us = now_us;
         self.scratch.req_id = req.id;
         self.scratch.class_id = req.class_id;
+        self.scratch.session_id = req.session_id;
         self.scratch.input_len = input_len;
         &self.scratch
     }
@@ -400,6 +414,7 @@ mod tests {
             id,
             arrival_us: 0,
             class_id: 9,
+            session_id: 0,
             tokens: tokens.into(),
             output_len: 10,
             block_hashes: block_hashes.into(),

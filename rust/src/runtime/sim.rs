@@ -277,6 +277,6 @@ mod tests {
         assert!(rt.prefill_chunk(&kv, &[1; 16], 9, 0, 16).is_err(), "bad slot");
         assert!(rt.prefill_chunk(&kv, &[1; 16], 0, 4, 16).is_err(), "pos gap");
         let lens = vec![3i32; 8];
-        assert!(rt.decode_step(&kv, &vec![1; 8], &lens).is_err(), "len mismatch");
+        assert!(rt.decode_step(&kv, &[1; 8], &lens).is_err(), "len mismatch");
     }
 }

@@ -238,6 +238,7 @@ fn push_request(
             id: 0, // re-assigned in arrival order by the caller
             arrival_us,
             class_id: class,
+            session_id: 0,
             tokens: prompt.into(),
             output_len,
             block_hashes: hashes.into(),

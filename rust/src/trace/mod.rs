@@ -1,21 +1,32 @@
 //! Workload traces: synthetic generators matching the paper's four trace
 //! families (Fig 5 characteristics), a jsonl replayer format, the §4.1
-//! rate-scaling methodology, and the [`adversarial`] generators that
+//! rate-scaling methodology, the [`adversarial`] generators that
 //! synthesize the failure-condition guard's misranking regimes on
 //! demand (idle-fleet bursts, shared-prefix floods, spread-window
-//! stress).
+//! stress), and the closed-loop [`sessions`] engine (multi-turn
+//! chat / API-call / coding-agent traces with reactive arrivals).
 
 pub mod adversarial;
 mod replay;
+pub mod sessions;
 mod synth;
 
 pub use adversarial::{generate_adversarial, AdversarialScenario, AdversarialSpec};
 pub use replay::{load_jsonl, save_jsonl};
+pub use sessions::{
+    generate_sessions, Session, SessionKind, SessionSpec, SessionTrace, SessionTurn,
+};
 pub use synth::{generate, Workload, WorkloadSpec};
 
 use std::sync::Arc;
 
 use crate::core::Request;
+
+/// Clamp a sampled (lognormal) length into `[lo, hi]` — shared by the
+/// synth and session generators.
+pub(crate) fn clamp_len(x: f64, lo: usize, hi: usize) -> usize {
+    (x as usize).clamp(lo, hi)
+}
 
 /// One trace entry: the request plus the block-hash chain of
 /// prompt+output (what the instance caches at completion — the next

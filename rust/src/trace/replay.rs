@@ -23,6 +23,7 @@ pub fn save_jsonl(trace: &Trace, path: &Path) -> std::io::Result<()> {
             ("id", Json::Num(tr.req.id as f64)),
             ("arrival_us", Json::Num(tr.req.arrival_us as f64)),
             ("class", Json::Num(tr.req.class_id as f64)),
+            ("session", Json::Num(tr.req.session_id as f64)),
             ("output_len", Json::Num(tr.req.output_len as f64)),
             (
                 "tokens",
@@ -57,7 +58,7 @@ pub fn load_jsonl(name: &str, path: &Path) -> Result<Trace, String> {
         let tokens: Vec<u32> = v
             .get("tokens")
             .and_then(|t| t.as_arr())
-            .ok_or(format!("line {}: missing tokens", lineno + 1))?
+            .ok_or_else(|| format!("line {}: missing tokens", lineno + 1))?
             .iter()
             .filter_map(|x| x.as_f64())
             .map(|x| x as u32)
@@ -78,6 +79,8 @@ pub fn load_jsonl(name: &str, path: &Path) -> Result<Trace, String> {
                 id: v.get("id").and_then(|x| x.as_u64()).unwrap_or(lineno as u64),
                 arrival_us: v.get("arrival_us").and_then(|x| x.as_u64()).unwrap_or(0),
                 class_id: v.get("class").and_then(|x| x.as_u64()).unwrap_or(0) as u32,
+                // Absent in pre-session trace files: default sessionless.
+                session_id: v.get("session").and_then(|x| x.as_u64()).unwrap_or(0),
                 output_len: v.get("output_len").and_then(|x| x.as_u64()).unwrap_or(1) as u32,
                 tokens: tokens.into(),
                 block_hashes: hashes.into(),
@@ -110,6 +113,7 @@ mod tests {
             assert_eq!(a.req.tokens, b.req.tokens);
             assert_eq!(a.req.arrival_us, b.req.arrival_us);
             assert_eq!(a.req.class_id, b.req.class_id);
+            assert_eq!(a.req.session_id, b.req.session_id);
             assert_eq!(a.req.output_len, b.req.output_len);
             assert_eq!(a.req.block_hashes, b.req.block_hashes);
             assert_eq!(a.full_hashes, b.full_hashes);

@@ -1,0 +1,518 @@
+//! Closed-loop *session* workloads: multi-turn conversations and agent
+//! loops whose turn `k+1` depends on turn `k`'s response.
+//!
+//! The single-shot generators in [`super::synth`] emit sessions too, but
+//! with *open-loop* (pre-scheduled) arrivals: every turn's timestamp is
+//! fixed at generation time, so a slow cluster receives future turns of a
+//! conversation before it has answered the previous one. Real agentic
+//! traffic is closed-loop: the client only sends turn `k+1` after it has
+//! *seen* turn `k`'s completion, then thinks (a human) or executes a tool
+//! call (an agent) for a while. This module generates that structure:
+//!
+//! * a [`SessionTrace`] is a set of sessions, each a chain of
+//!   [`SessionTurn`]s where turn `k+1`'s prompt = turn `k`'s full
+//!   (prompt + assistant reply) context + the new user/tool span;
+//! * only the *first* turn of a session carries a wall-clock arrival
+//!   (sessions arrive Poisson); every later turn carries a pre-sampled
+//!   `think_us` and is **released by the DES at the previous turn's
+//!   completion + think time** ([`crate::cluster::run_session_des`]);
+//! * all randomness is drawn at generation time, so a closed-loop replay
+//!   is exactly as deterministic as an open-loop one.
+//!
+//! Three session archetypes cover the paper's claimed deployment mix
+//! ("chatbots, API calls, and coding agents"): human-paced chat,
+//! short tool-latency API call chains, and long coding-agent loops with
+//! chunky tool results and machine-speed turn gaps.
+//!
+//! **Turn-growth recurrence.** Prompt/context lengths follow
+//!
+//! ```text
+//! ctx_0      = sys_len
+//! prompt_k   = min(ctx_k + user_k, max_input)   // truncation guard
+//! full_k     = prompt_k + reply_k               // cached at completion
+//! ctx_{k+1}  = full_k
+//! ```
+//!
+//! exposed verbatim as [`turn_growth`] so tests (and the Python mirror
+//! suite, `python/tests/test_session_growth.py`, which fuzzes the
+//! recurrence against a token-list simulation in the container that has
+//! no Rust toolchain) can check the generator's arithmetic out-of-band.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::core::Request;
+use crate::tokenizer::{block_hashes, span};
+use crate::util::rng::Zipf;
+use crate::util::Rng;
+
+use super::{clamp_len, Trace, TraceRequest};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionKind {
+    /// Human conversations: shared system prompts, ~20 s think times,
+    /// long assistant replies.
+    Chat,
+    /// API-call chains: short prompts, sub-second tool latencies, short
+    /// chains (often one call plus one follow-up).
+    ApiCall,
+    /// Coding agents: long per-repo context, chunky tool-result spans,
+    /// many machine-paced turns, short replies.
+    CodingAgent,
+}
+
+impl SessionKind {
+    pub fn by_name(name: &str) -> Option<SessionKind> {
+        Some(match name {
+            "chat" => SessionKind::Chat,
+            "api" => SessionKind::ApiCall,
+            "coding" => SessionKind::CodingAgent,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SessionKind::Chat => "chat",
+            SessionKind::ApiCall => "api",
+            SessionKind::CodingAgent => "coding",
+        }
+    }
+}
+
+/// Distribution parameters of one session workload.
+#[derive(Debug, Clone)]
+pub struct SessionSpec {
+    pub kind: SessionKind,
+    /// Total turns (= requests) to generate across all sessions.
+    pub n_requests: usize,
+    pub seed: u64,
+    pub vocab: u32,
+    /// Request classes (apps/users with shared system prompts) and the
+    /// Zipf exponent of their popularity.
+    pub n_classes: usize,
+    pub class_skew: f64,
+    /// Median system-prompt / per-turn user-span / reply lengths.
+    pub sys_prompt_median: f64,
+    pub user_span_median: f64,
+    pub output_median: f64,
+    pub output_sigma: f64,
+    /// Turns per session: geometric with this mean, capped at `max_turns`.
+    pub mean_turns: f64,
+    pub max_turns: usize,
+    /// Mean think time (human) / tool latency (agent) between a turn's
+    /// completion and the next turn's arrival, seconds. Exponentially
+    /// distributed, sampled per turn at generation time.
+    pub think_time_s: f64,
+    /// Session arrival rate, sessions/s (Poisson; pre-scaling).
+    pub session_rate: f64,
+    /// Max prompt length (long-context truncation guard).
+    pub max_input: usize,
+}
+
+impl SessionSpec {
+    pub fn preset(kind: SessionKind, n_requests: usize, seed: u64) -> SessionSpec {
+        let base = SessionSpec {
+            kind,
+            n_requests,
+            seed,
+            vocab: 50_000,
+            n_classes: 12,
+            class_skew: 1.1,
+            sys_prompt_median: 400.0,
+            user_span_median: 60.0,
+            output_median: 250.0,
+            output_sigma: 0.7,
+            mean_turns: 5.0,
+            max_turns: 40,
+            think_time_s: 20.0,
+            session_rate: 2.0,
+            max_input: 16_384,
+        };
+        match kind {
+            SessionKind::Chat => base,
+            SessionKind::ApiCall => SessionSpec {
+                n_classes: 30,
+                class_skew: 1.2,
+                sys_prompt_median: 150.0,
+                user_span_median: 80.0,
+                output_median: 60.0,
+                output_sigma: 0.6,
+                mean_turns: 2.0,
+                max_turns: 12,
+                think_time_s: 0.5,
+                session_rate: 6.0,
+                ..base
+            },
+            SessionKind::CodingAgent => SessionSpec {
+                n_classes: 8,
+                class_skew: 0.9,
+                sys_prompt_median: 2500.0,
+                user_span_median: 300.0, // tool results are chunky
+                output_median: 120.0,
+                output_sigma: 0.6,
+                mean_turns: 10.0,
+                max_turns: 40,
+                think_time_s: 1.0,
+                session_rate: 1.0,
+                ..base
+            },
+        }
+    }
+}
+
+/// One turn of a session. `req.arrival_us` is the session start for turn
+/// 0 and a placeholder (0) for later turns — the reactive DES stamps it
+/// at release time. `think_us` is the sampled gap between the *previous*
+/// turn's completion and this turn's arrival (0 for turn 0).
+#[derive(Debug, Clone)]
+pub struct SessionTurn {
+    pub req: Request,
+    pub full_hashes: Arc<[u64]>,
+    pub think_us: u64,
+}
+
+/// One session: a causal chain of turns sharing a growing context.
+#[derive(Debug, Clone)]
+pub struct Session {
+    pub sid: u64,
+    pub class_id: u32,
+    pub start_us: u64,
+    pub turns: Vec<SessionTurn>,
+}
+
+/// A closed-loop trace: sessions ordered by start time; request ids are
+/// dense (0..n_turns) in (session, turn) order.
+#[derive(Debug, Clone)]
+pub struct SessionTrace {
+    pub name: String,
+    pub sessions: Vec<Session>,
+}
+
+impl SessionTrace {
+    /// Total turns (= requests) in the trace.
+    pub fn n_turns(&self) -> usize {
+        self.sessions.iter().map(|s| s.turns.len()).sum()
+    }
+
+    /// Map request id → (session index, turn index) for joining
+    /// [`crate::core::RequestRecord`]s back to their session position.
+    pub fn turn_index(&self) -> HashMap<u64, (usize, usize)> {
+        let mut map = HashMap::with_capacity(self.n_turns());
+        for (si, s) in self.sessions.iter().enumerate() {
+            for (ti, t) in s.turns.iter().enumerate() {
+                map.insert(t.req.id, (si, ti));
+            }
+        }
+        map
+    }
+
+    /// The open-loop (fixed-schedule) view of this trace: every turn's
+    /// arrival is stamped as the previous turn's *arrival* + think time —
+    /// i.e. service time is approximated away. Used for capacity probing
+    /// (the rate a fast cluster would see) and as the exact equivalent of
+    /// a single-turn session trace; a closed-loop replay of multi-turn
+    /// sessions goes through [`crate::cluster::run_session_des`] instead.
+    pub fn flatten(&self) -> Trace {
+        let mut requests: Vec<TraceRequest> = Vec::with_capacity(self.n_turns());
+        for s in &self.sessions {
+            let mut t_us = s.start_us;
+            for (ti, turn) in s.turns.iter().enumerate() {
+                if ti > 0 {
+                    t_us += turn.think_us;
+                }
+                let mut req = turn.req.clone();
+                req.arrival_us = t_us;
+                requests.push(TraceRequest {
+                    req,
+                    full_hashes: turn.full_hashes.clone(),
+                });
+            }
+        }
+        requests.sort_by_key(|r| (r.req.arrival_us, r.req.id));
+        Trace {
+            name: self.name.clone(),
+            requests,
+        }
+    }
+}
+
+/// The module-doc turn-growth recurrence in closed form: per turn,
+/// `(prompt_len, full_len)` given the system-prompt length and the
+/// per-turn user/reply span lengths. The generator's token vectors obey
+/// this exactly (asserted in tests); the Python mirror suite fuzzes it
+/// against an independent token-list simulation.
+pub fn turn_growth(
+    sys_len: usize,
+    user_lens: &[usize],
+    reply_lens: &[usize],
+    max_input: usize,
+) -> Vec<(usize, usize)> {
+    let mut ctx = sys_len;
+    user_lens
+        .iter()
+        .zip(reply_lens)
+        .map(|(&u, &r)| {
+            let prompt = (ctx + u).min(max_input);
+            let full = prompt + r;
+            ctx = full;
+            (prompt, full)
+        })
+        .collect()
+}
+
+/// Generate a closed-loop session trace. Deterministic in
+/// `(spec.kind, spec.n_requests, spec.seed)`.
+///
+/// NOTE: the turn-chain construction mirrors [`super::generate`]'s
+/// (that one open-loop, this one closed-loop); keep the span/truncate
+/// arithmetic in sync with [`turn_growth`] and with synth's copy.
+pub fn generate_sessions(spec: &SessionSpec) -> SessionTrace {
+    let mut rng = Rng::new(spec.seed ^ ((spec.kind as u64) << 52) ^ 0x5e55_0000_0001);
+    let zipf = Zipf::new(spec.n_classes, spec.class_skew);
+    let mut sessions: Vec<Session> = Vec::new();
+    let mut clock_s: f64 = 0.0;
+    let mut total = 0usize;
+    let mut sid: u64 = 0;
+
+    while total < spec.n_requests {
+        // Poisson session arrivals; the per-turn pacing inside a session
+        // is reactive, so there is no burst modulation knob here — load
+        // shape under pressure emerges from the closed loop itself.
+        clock_s += rng.exp(1.0 / spec.session_rate);
+        sid += 1;
+        let class = zipf.sample(&mut rng) as u32;
+        let start_us = (clock_s * 1e6) as u64;
+
+        let sys_len = clamp_len(
+            rng.lognormal(spec.sys_prompt_median, 0.3),
+            32,
+            spec.max_input / 2,
+        );
+        let p_stop = 1.0 / spec.mean_turns.max(1.0);
+        let mut n_turns = 1usize;
+        while !rng.gen_bool(p_stop) && n_turns < spec.max_turns {
+            n_turns += 1;
+        }
+
+        let mut prompt: Vec<u32> = span(class, 0, sys_len, spec.vocab);
+        let mut turns: Vec<SessionTurn> = Vec::with_capacity(n_turns);
+        for turn in 0..n_turns {
+            if total >= spec.n_requests {
+                break;
+            }
+            // Fresh user/tool span, unique to this (session, turn).
+            let user_len = clamp_len(
+                rng.lognormal(spec.user_span_median, 0.6),
+                4,
+                spec.max_input / 4,
+            );
+            prompt.extend(span(
+                class,
+                sid * 100_000 + turn as u64 * 2 + 1,
+                user_len,
+                spec.vocab,
+            ));
+            if prompt.len() > spec.max_input {
+                prompt.truncate(spec.max_input);
+            }
+            let output_len =
+                clamp_len(rng.lognormal(spec.output_median, spec.output_sigma), 1, 4096) as u32;
+
+            let tokens: Arc<[u32]> = prompt.as_slice().into();
+            let hashes = block_hashes(&tokens);
+            // Deterministic assistant reply: the next turn's prompt (and
+            // the completion-time cache chain) extend it.
+            let assistant = span(
+                class,
+                sid * 100_000 + turn as u64 * 2 + 2,
+                output_len as usize,
+                spec.vocab,
+            );
+            prompt.extend(&assistant);
+            let full_hashes = block_hashes(&prompt);
+
+            let think_us = if turn == 0 {
+                0
+            } else {
+                (rng.exp(spec.think_time_s) * 1e6) as u64
+            };
+            turns.push(SessionTurn {
+                req: Request {
+                    id: 0, // dense ids assigned below, in (session, turn) order
+                    arrival_us: if turn == 0 { start_us } else { 0 },
+                    class_id: class,
+                    session_id: sid,
+                    tokens,
+                    output_len,
+                    block_hashes: hashes.into(),
+                },
+                full_hashes: full_hashes.into(),
+                think_us,
+            });
+            total += 1;
+        }
+        sessions.push(Session {
+            sid,
+            class_id: class,
+            start_us,
+            turns,
+        });
+    }
+
+    // The arrival clock only moves forward, so sessions are already in
+    // start order; the sort pins the invariant against future edits.
+    sessions.sort_by_key(|s| (s.start_us, s.sid));
+    let mut id = 0u64;
+    for s in sessions.iter_mut() {
+        for t in s.turns.iter_mut() {
+            t.req.id = id;
+            id += 1;
+        }
+    }
+    SessionTrace {
+        name: format!("sessions-{}", spec.kind.name()),
+        sessions,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer::shared_blocks;
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = generate_sessions(&SessionSpec::preset(SessionKind::Chat, 300, 9));
+        let b = generate_sessions(&SessionSpec::preset(SessionKind::Chat, 300, 9));
+        assert_eq!(a.n_turns(), b.n_turns());
+        for (sa, sb) in a.sessions.iter().zip(&b.sessions) {
+            assert_eq!(sa.start_us, sb.start_us);
+            assert_eq!(sa.turns.len(), sb.turns.len());
+            for (ta, tb) in sa.turns.iter().zip(&sb.turns) {
+                assert_eq!(ta.req.tokens, tb.req.tokens);
+                assert_eq!(ta.think_us, tb.think_us);
+                assert_eq!(ta.full_hashes, tb.full_hashes);
+            }
+        }
+        let c = generate_sessions(&SessionSpec::preset(SessionKind::Chat, 300, 10));
+        let differs = a
+            .sessions
+            .iter()
+            .zip(&c.sessions)
+            .any(|(sa, sc)| sa.start_us != sc.start_us || sa.turns.len() != sc.turns.len());
+        assert!(differs, "different seeds must produce different schedules");
+    }
+
+    #[test]
+    fn ids_dense_in_session_turn_order() {
+        let t = generate_sessions(&SessionSpec::preset(SessionKind::ApiCall, 250, 3));
+        assert_eq!(t.n_turns(), 250);
+        let mut expect = 0u64;
+        for s in &t.sessions {
+            for turn in &s.turns {
+                assert_eq!(turn.req.id, expect);
+                assert_eq!(turn.req.session_id, s.sid);
+                assert!(turn.req.session_id != 0, "0 is reserved for sessionless");
+                expect += 1;
+            }
+        }
+        for w in t.sessions.windows(2) {
+            assert!(w[0].start_us <= w[1].start_us);
+        }
+        let idx = t.turn_index();
+        assert_eq!(idx.len(), 250);
+        assert_eq!(idx[&0], (0, 0));
+    }
+
+    #[test]
+    fn turns_extend_previous_full_context() {
+        let t = generate_sessions(&SessionSpec::preset(SessionKind::CodingAgent, 400, 5));
+        let mut multi = 0;
+        for s in &t.sessions {
+            for w in s.turns.windows(2) {
+                multi += 1;
+                let prev_full = &w[0].full_hashes;
+                let next = &w[1].req.block_hashes;
+                // Next turn's prompt chain starts with the previous
+                // turn's full chain (possibly truncated at max_input).
+                let shared = shared_blocks(next, prev_full);
+                assert_eq!(
+                    shared,
+                    prev_full.len().min(next.len()),
+                    "turn must extend (a prefix of) the previous full chain"
+                );
+                assert!(w[1].think_us > 0, "reactive turns carry think time");
+            }
+        }
+        assert!(multi > 50, "coding agents must be multi-turn");
+    }
+
+    #[test]
+    fn generator_lengths_obey_turn_growth_recurrence() {
+        let spec = SessionSpec::preset(SessionKind::Chat, 300, 21);
+        let t = generate_sessions(&spec);
+        for s in &t.sessions {
+            if s.turns.is_empty() {
+                continue;
+            }
+            // Anchor on the first prompt and walk the recurrence bound:
+            // full_k >= prompt_k and prompt_{k+1} = min(full_k + user, max),
+            // so prompt_{k+1} >= min(prompt_k, max) = prompt_k.
+            let mut ctx = s.turns[0].req.tokens.len();
+            for w in s.turns.windows(2) {
+                let p_next = w[1].req.tokens.len();
+                assert!(p_next <= spec.max_input);
+                assert!(p_next >= ctx.min(spec.max_input), "prompts must grow");
+                ctx = p_next;
+            }
+        }
+        // And the closed form itself.
+        let g = turn_growth(100, &[10, 20, 30], &[5, 5, 1000], 200);
+        assert_eq!(g, vec![(110, 115), (135, 140), (170, 1170)]);
+        let g2 = turn_growth(100, &[200, 10], &[50, 1], 250);
+        assert_eq!(g2, vec![(250, 300), (250, 251)]); // truncation clamps
+    }
+
+    #[test]
+    fn kind_shapes_differ() {
+        let chat = generate_sessions(&SessionSpec::preset(SessionKind::Chat, 400, 1));
+        let api = generate_sessions(&SessionSpec::preset(SessionKind::ApiCall, 400, 1));
+        let coding = generate_sessions(&SessionSpec::preset(SessionKind::CodingAgent, 400, 1));
+        let mean_turns = |t: &SessionTrace| t.n_turns() as f64 / t.sessions.len() as f64;
+        assert!(mean_turns(&coding) > mean_turns(&api), "agents loop more");
+        let mean_think = |t: &SessionTrace| {
+            let (mut sum, mut n) = (0u64, 0u64);
+            for s in &t.sessions {
+                for turn in s.turns.iter().skip(1) {
+                    sum += turn.think_us;
+                    n += 1;
+                }
+            }
+            sum as f64 / n.max(1) as f64
+        };
+        assert!(
+            mean_think(&chat) > 4.0 * mean_think(&coding),
+            "humans think slower than tools run"
+        );
+        let (chat_in, _) = chat.flatten().token_stats();
+        let (api_in, _) = api.flatten().token_stats();
+        assert!(chat_in > api_in, "api prompts shortest");
+    }
+
+    #[test]
+    fn flatten_is_sorted_and_exact_for_single_turn() {
+        let mut spec = SessionSpec::preset(SessionKind::Chat, 200, 4);
+        spec.max_turns = 1;
+        let st = generate_sessions(&spec);
+        assert!(st.sessions.iter().all(|s| s.turns.len() == 1));
+        let t = st.flatten();
+        assert_eq!(t.requests.len(), 200);
+        for w in t.requests.windows(2) {
+            assert!(w[0].req.arrival_us <= w[1].req.arrival_us);
+        }
+        for (tr, s) in t.requests.iter().zip(&st.sessions) {
+            assert_eq!(tr.req.arrival_us, s.start_us, "single turns keep start times");
+        }
+    }
+}

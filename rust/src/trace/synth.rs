@@ -23,7 +23,7 @@ use crate::tokenizer::{block_hashes, span};
 use crate::util::rng::Zipf;
 use crate::util::Rng;
 
-use super::{Trace, TraceRequest};
+use super::{clamp_len, Trace, TraceRequest};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Workload {
@@ -156,11 +156,17 @@ impl WorkloadSpec {
     }
 }
 
-fn clamp_len(x: f64, lo: usize, hi: usize) -> usize {
-    (x as usize).clamp(lo, hi)
-}
-
 /// Generate a trace. Deterministic in (spec.workload, n_requests, seed).
+///
+/// NOTE: the turn-chain construction below (geometric turn count,
+/// span-extend + truncate-at-max_input, assistant-extend) is
+/// deliberately mirrored by [`super::sessions::generate_sessions`] —
+/// this copy schedules arrivals open-loop, that one closed-loop. Keep
+/// the turn-growth arithmetic in sync with
+/// [`super::sessions::turn_growth`] (fuzzed out-of-band by
+/// `python/tests/test_session_growth.py`); restructuring THIS function
+/// would shift its RNG call order and silently re-seed every committed
+/// figure.
 pub fn generate(spec: &WorkloadSpec) -> Trace {
     let mut rng = Rng::new(spec.seed ^ (spec.workload as u64) << 48);
     let zipf = Zipf::new(spec.n_classes, spec.class_skew);
@@ -274,6 +280,7 @@ pub fn generate(spec: &WorkloadSpec) -> Trace {
                     id: next_id,
                     arrival_us: (t_s * 1e6) as u64,
                     class_id: class,
+                    session_id: session,
                     tokens,
                     output_len,
                     block_hashes: hashes.into(),

@@ -296,7 +296,8 @@ fn shared_index_reproduces_mirror_decisions_all_workloads_all_policies() {
                     input_len,
                     mirror_hits,
                     ctx.inds.clone(),
-                );
+                )
+                .with_session(tr.req.session_id);
                 let d = p_shared.route(ctx).instance;
                 let d_mirror = p_mirror.route(&mirror_ctx).instance;
                 assert_eq!(

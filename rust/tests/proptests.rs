@@ -172,6 +172,7 @@ fn random_request(rng: &mut Rng, id: u64) -> (Request, std::sync::Arc<[u64]>) {
             id,
             arrival_us: 0,
             class_id: class,
+            session_id: 0,
             tokens: tokens.into(),
             output_len: output,
             block_hashes: hashes.into(),

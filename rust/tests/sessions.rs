@@ -1,0 +1,261 @@
+//! Closed-loop session engine contracts: determinism, reactive-arrival
+//! causality, per-turn prefix-hit growth, and the open-loop equivalence
+//! that pins the reactive DES core to the classic replay path.
+
+use std::collections::HashMap;
+
+use lmetric::cluster::{build_scaled_sessions, run_des, run_session_des, ClusterConfig};
+use lmetric::core::{RequestRecord, BLOCK_TOKENS};
+use lmetric::engine::EngineConfig;
+use lmetric::metrics::SessionMetrics;
+use lmetric::policy;
+use lmetric::trace::{generate_sessions, SessionKind, SessionSpec};
+
+fn cfg(n: usize) -> ClusterConfig {
+    ClusterConfig::new(n, EngineConfig::default())
+}
+
+fn lmetric_policy() -> Box<dyn lmetric::router::Policy> {
+    policy::build_default("lmetric", &lmetric::engine::ModelProfile::moe_30b(), 256).unwrap()
+}
+
+fn by_id(records: &[RequestRecord]) -> HashMap<u64, RequestRecord> {
+    records.iter().map(|r| (r.id, *r)).collect()
+}
+
+/// Every observable field of a record, for byte-identity comparisons.
+#[allow(clippy::type_complexity)]
+fn record_key(r: &RequestRecord) -> (u64, usize, u64, u64, u64, u32, u32, u32) {
+    (
+        r.id,
+        r.instance,
+        r.arrival_us,
+        r.first_token_us,
+        r.completion_us,
+        r.cached_tokens,
+        r.input_len,
+        r.output_len,
+    )
+}
+
+/// Closed-loop replays are exactly as deterministic as open-loop ones:
+/// the same seed replays record-for-record identically.
+#[test]
+fn session_des_deterministic_by_seed() {
+    let spec = SessionSpec::preset(SessionKind::Chat, 300, 11);
+    let strace = generate_sessions(&spec);
+    let c = cfg(4);
+    let mut p1 = lmetric_policy();
+    let mut p2 = lmetric_policy();
+    let a = run_session_des(&c, &strace, p1.as_mut());
+    let b = run_session_des(&c, &strace, p2.as_mut());
+    assert_eq!(a.records.len(), 300);
+    assert_eq!(a.records.len(), b.records.len());
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(record_key(x), record_key(y));
+    }
+    // A different seed produces a different schedule.
+    let other = generate_sessions(&SessionSpec::preset(SessionKind::Chat, 300, 12));
+    let mut p3 = lmetric_policy();
+    let m3 = run_session_des(&c, &other, p3.as_mut());
+    assert!(
+        m3.records.iter().zip(&a.records).any(|(x, y)| x.completion_us != y.completion_us),
+        "different seeds must not replay identically"
+    );
+}
+
+/// The reactive-release contract, exactly: turn k+1's stamped arrival is
+/// turn k's completion plus the pre-sampled think time — so no turn can
+/// ever enqueue before its predecessor has completed, no matter how
+/// congested the cluster is.
+#[test]
+fn reactive_arrival_is_completion_plus_think() {
+    let spec = SessionSpec::preset(SessionKind::Chat, 400, 7);
+    let strace = generate_sessions(&spec);
+    let c = cfg(2); // small fleet: real queueing delays push completions out
+    let mut p = lmetric_policy();
+    let m = run_session_des(&c, &strace, p.as_mut());
+    assert_eq!(m.records.len(), strace.n_turns(), "every turn completes");
+    let recs = by_id(&m.records);
+    let mut pairs = 0usize;
+    for s in &strace.sessions {
+        for (ti, w) in s.turns.windows(2).enumerate() {
+            let prev = recs[&w[0].req.id];
+            let next = recs[&w[1].req.id];
+            assert_eq!(
+                next.arrival_us,
+                prev.completion_us + w[1].think_us,
+                "session {} turn {}: release must be completion + think",
+                s.sid,
+                ti + 1
+            );
+            assert!(next.arrival_us >= prev.completion_us, "causality");
+            pairs += 1;
+        }
+        // First turns keep their scheduled session start.
+        assert_eq!(recs[&s.turns[0].req.id].arrival_us, s.start_us);
+    }
+    assert!(pairs > 100, "chat sessions must be multi-turn (got {pairs} pairs)");
+}
+
+/// Decision-replay equivalence: a session trace with single-turn
+/// sessions has no reactive edges, so the closed-loop runner must
+/// reproduce the open-loop DES on the flattened trace byte-identically.
+#[test]
+fn single_turn_sessions_replay_open_loop_byte_identical() {
+    let mut spec = SessionSpec::preset(SessionKind::Chat, 200, 4);
+    spec.max_turns = 1;
+    let strace = generate_sessions(&spec);
+    let flat = strace.flatten();
+    let c = cfg(4);
+    let mut p_closed = lmetric_policy();
+    let mut p_open = lmetric_policy();
+    let closed = run_session_des(&c, &strace, p_closed.as_mut());
+    let open = run_des(&c, &flat, p_open.as_mut());
+    assert_eq!(closed.records.len(), open.records.len());
+    for (a, b) in closed.records.iter().zip(&open.records) {
+        assert_eq!(
+            record_key(a),
+            record_key(b),
+            "single-turn closed loop must equal the open-loop replay"
+        );
+    }
+    assert_eq!(closed.total_steps, open.total_steps);
+    assert_eq!(closed.admit_radix_walks, open.admit_radix_walks);
+}
+
+/// Structural prefix-hit growth on one instance with an unbounded KV$:
+/// because turn k+1 is only released after turn k completed (and its
+/// full prompt+reply chain entered the cache), every later turn's cached
+/// prefix must cover the whole previous full chain (or its truncated
+/// prompt, whichever is shorter). This is the property reactive release
+/// buys: an open-loop replay under load would break it.
+#[test]
+fn per_turn_prefix_hits_cover_previous_context_single_instance() {
+    let mut spec = SessionSpec::preset(SessionKind::CodingAgent, 300, 13);
+    // A short system prompt keeps turn 0 cold-ish (class sharing alone),
+    // so the in-session growth dominates the curve contrast below.
+    spec.sys_prompt_median = 200.0;
+    let strace = generate_sessions(&spec);
+    let mut engine = EngineConfig::default();
+    engine.kv_capacity_blocks = 0; // unbounded: no eviction noise
+    let c = ClusterConfig::new(1, engine);
+    let mut p = lmetric_policy();
+    let m = run_session_des(&c, &strace, p.as_mut());
+    let recs = by_id(&m.records);
+    let mut checked = 0usize;
+    for s in &strace.sessions {
+        for w in s.turns.windows(2) {
+            let next = recs[&w[1].req.id];
+            let own_blocks = w[1].req.input_len() / BLOCK_TOKENS;
+            let guaranteed =
+                (w[0].full_hashes.len() * BLOCK_TOKENS).min(own_blocks * BLOCK_TOKENS);
+            assert!(
+                next.cached_tokens as usize >= guaranteed,
+                "turn hit {} must cover the previous full chain ({guaranteed})",
+                next.cached_tokens
+            );
+            checked += 1;
+        }
+    }
+    assert!(checked > 50);
+    // And the aggregate curve reflects it: warm turns beat cold entry.
+    let sm = SessionMetrics::collect(&m, &strace);
+    assert!(
+        sm.late_turn_hit() > sm.turn0_hit() + 0.1,
+        "late {} vs turn0 {}",
+        sm.late_turn_hit(),
+        sm.turn0_hit()
+    );
+}
+
+/// Multi-instance agent loops under LMETRIC: the per-turn prefix-hit
+/// curve rises after turn 0 (P-token keeps pulling a session's turns
+/// back to the instance that cached them), and the affinity it earns
+/// without session pinning is substantial — while explicit pinning is
+/// 1.0 by construction.
+#[test]
+fn agent_loop_hit_curve_and_affinity_multi_instance() {
+    let mut spec = SessionSpec::preset(SessionKind::CodingAgent, 500, 17);
+    // Short shared system prompt: turn 0 stays visibly colder than the
+    // in-session continuation turns regardless of class popularity.
+    spec.sys_prompt_median = 400.0;
+    let c = cfg(4);
+    let strace = build_scaled_sessions(&spec, &c, 0.5);
+    let mut p = lmetric_policy();
+    let m = run_session_des(&c, &strace, p.as_mut());
+    assert_eq!(m.records.len(), strace.n_turns());
+    let sm = SessionMetrics::collect(&m, &strace);
+    for k in 1..4 {
+        if sm.turn_hit_counts[k] >= 10 {
+            assert!(
+                sm.turn_hit_curve[k] > sm.turn0_hit(),
+                "turn {k} hit {} must beat cold turn-0 hit {}",
+                sm.turn_hit_curve[k],
+                sm.turn0_hit()
+            );
+        }
+    }
+    assert!(
+        sm.affinity_ratio() > 0.5,
+        "P-token should earn affinity for free, got {}",
+        sm.affinity_ratio()
+    );
+    // Explicit pinning on the identical trace: affinity 1.0 by
+    // construction.
+    let mut sticky = policy::StickySession::new();
+    let ms = run_session_des(&c, &strace, &mut sticky);
+    let sms = SessionMetrics::collect(&ms, &strace);
+    assert_eq!(sms.affinity_hits, sms.affinity_total);
+    assert!(sms.affinity_total > 0);
+    assert!((sms.affinity_ratio() - 1.0).abs() < 1e-12);
+}
+
+/// Every registry policy survives a closed-loop replay (the reactive
+/// path exercises stateful policies — simulators, session pinning — on
+/// arrivals that depend on their own past decisions).
+#[test]
+fn every_policy_survives_a_session_run() {
+    let spec = SessionSpec::preset(SessionKind::ApiCall, 120, 3);
+    let strace = generate_sessions(&spec);
+    let c = cfg(4);
+    let profile = lmetric::engine::ModelProfile::moe_30b();
+    for name in policy::all_names() {
+        let mut p = policy::build_default(name, &profile, 256).unwrap();
+        let m = run_session_des(&c, &strace, p.as_mut());
+        assert_eq!(m.records.len(), strace.n_turns(), "{name} lost session turns");
+        let mut ids: Vec<u64> = m.records.iter().map(|r| r.id).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), strace.n_turns(), "{name} duplicated turns");
+    }
+}
+
+/// Session-balanced scheduling keeps sessions sticky too (its TTL is far
+/// above the archetypes' think times), so both session-aware baselines
+/// report perfect affinity on an uncongested replay.
+#[test]
+fn smetric_pins_live_sessions() {
+    let spec = SessionSpec::preset(SessionKind::ApiCall, 200, 9);
+    let strace = generate_sessions(&spec);
+    let c = cfg(3);
+    let mut p = policy::SessionBalance::new();
+    let m = run_session_des(&c, &strace, &mut p);
+    let sm = SessionMetrics::collect(&m, &strace);
+    assert_eq!(m.records.len(), strace.n_turns());
+    if sm.affinity_total > 0 {
+        assert!((sm.affinity_ratio() - 1.0).abs() < 1e-12, "smetric must stay sticky");
+    }
+}
+
+/// The session-rate scaler lands the open-loop request rate in the
+/// target's neighbourhood and scaling is monotone in `rate_scale`.
+#[test]
+fn session_rate_scaler_is_monotone() {
+    let spec = SessionSpec::preset(SessionKind::Chat, 400, 2);
+    let c = cfg(4);
+    let lo = build_scaled_sessions(&spec, &c, 0.3).flatten().steady_rps();
+    let hi = build_scaled_sessions(&spec, &c, 0.9).flatten().steady_rps();
+    assert!(lo.is_finite() && lo > 0.0);
+    assert!(hi > lo, "higher rate_scale must produce a denser trace ({lo} vs {hi})");
+}

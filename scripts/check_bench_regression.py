@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """CI gate: fail when router_throughput regresses >20% vs the committed baseline.
 
-Usage: check_bench_regression.py CURRENT_JSON BASELINE_JSON
+Usage: check_bench_regression.py CURRENT_JSON BASELINE_JSON [--emit-seeded OUT]
 
 The committed baseline is BENCH_router_throughput.json at the repo root.
 While the baseline carries "seeded": false (no toolchain-equipped run has
@@ -12,25 +12,48 @@ gate fails when any of these drops below 80% of its baseline:
   des_end_to_end.req_per_s
   scale_smoke.req_per_s
   scale_smoke.steps_per_s
+  sessions.req_per_s
 
-(scale_smoke fields gate only when the seeded baseline carries non-null
-values for them — report-only otherwise, matching how des_end_to_end was
-armed.) The admit_radix_walks counters are reported for the artifact but
-not gated: they are an exactness invariant (one fused radix walk per
-admitted request) already asserted inside the bench binary itself.
+(Fields beyond des_end_to_end gate only when the seeded baseline carries
+non-null values for them — report-only otherwise, matching how
+des_end_to_end was armed.) The admit_radix_walks counters are reported
+for the artifact but not gated: they are an exactness invariant (one
+fused radix walk per admitted request) already asserted inside the bench
+binary itself.
 
 The `guard` section (failure-condition guard counters: natural vs
 shared-prefix-flood degenerate/inversion/mitigated counts) is likewise
 report-only: legacy baselines without the section, and null-seeded
 fields, never trip the gate. natural_mitigated is expected to read 0 —
 the paper's "extremely rare in practice" claim — but it is enforced by
-the tier-1 decision-replay test, not here.
+the tier-1 decision-replay test, not here. The `sessions` section
+(closed-loop session replay) follows the same tolerate-then-gate shape:
+baselines that predate it never trip the gate; once a seeded baseline
+carries sessions.req_per_s, that one field gates and the affinity / hit
+fields stay report-only (affinity_sticky == 1.0 is asserted inside the
+bench itself).
+
+--emit-seeded OUT writes the *current* run's JSON with "seeded": true to
+OUT — but only after the checks ran AND passed, so a regressed or
+corrupt run can never become the armed baseline (OUT may safely be the
+baseline path itself: the comparison runs against the old contents
+first). Gated throughput fields are recorded at SEED_HEADROOM (85%) of
+the seeding run's measurement so a single fast runner can't lock in a
+baseline that normal shared-runner variance fails. This is the one-step
+way for CI to arm the gate from the first toolchain-equipped run on
+main.
 """
 
 import json
 import sys
 
 THRESHOLD = 0.80  # fail below 80% of baseline (= >20% regression)
+
+# --emit-seeded records gated throughput fields at this fraction of the
+# seeding run's measurement: one fast runner must not lock in a baseline
+# that median shared-runner variance can't reach (the effective failure
+# point becomes HEADROOM x THRESHOLD of the seeding run).
+SEED_HEADROOM = 0.85
 
 # (section, field, gated) — gated fields compare against the baseline;
 # the rest are printed so the uploaded artifact/log carries them.
@@ -51,6 +74,12 @@ FIELDS = [
     ("guard", "flood_degenerate", False),
     ("guard", "flood_inversion", False),
     ("guard", "flood_mitigated", False),
+    ("sessions", "turns", False),
+    ("sessions", "req_per_s", True),
+    ("sessions", "affinity_lmetric", False),
+    ("sessions", "affinity_sticky", False),
+    ("sessions", "turn0_hit", False),
+    ("sessions", "late_turn_hit", False),
 ]
 
 
@@ -59,18 +88,70 @@ def get(doc, section, field):
 
 
 def main() -> int:
-    if len(sys.argv) != 3:
+    args = list(sys.argv[1:])
+    emit_seeded = None
+    if "--emit-seeded" in args:
+        i = args.index("--emit-seeded")
+        try:
+            emit_seeded = args[i + 1]
+        except IndexError:
+            print(__doc__)
+            return 2
+        del args[i : i + 2]
+    if len(args) != 2:
         print(__doc__)
         return 2
-    current_path, baseline_path = sys.argv[1], sys.argv[2]
+    current_path, baseline_path = args
 
     with open(current_path) as f:
         current = json.load(f)
+
     try:
         with open(baseline_path) as f:
             baseline = json.load(f)
     except FileNotFoundError:
+        baseline = None
+
+    def write_seeded():
+        # Only reached on a passing run (every failure path returns before
+        # its caller), so a regressed/corrupt run can never become the
+        # armed baseline — even when OUT is the baseline path itself, the
+        # comparison above already ran against the *old* file contents.
+        if not emit_seeded:
+            return
+        missing = [
+            f"{s}.{f}" for s, f, gated in FIELDS if gated and not get(current, s, f)
+        ]
+        if missing:
+            print(
+                "refusing to seed: current run is missing gated fields "
+                f"({', '.join(missing)}) — a bench sub-stage did not report"
+            )
+            return
+        seeded_doc = json.loads(json.dumps(current))  # deep copy
+        seeded_doc["seeded"] = True
+        # Shared-runner wall-clock variance routinely approaches the gate's
+        # 20% budget, and the seeding run is a single unvetted sample. Seed
+        # the gated fields at a discount so the effective trip point is
+        # (headroom x threshold) of the seeding run's throughput — a
+        # median-speed runner stays green, a real regression still trips.
+        seeded_doc["seed_headroom"] = SEED_HEADROOM
+        for s, f, gated in FIELDS:
+            if gated:
+                seeded_doc[s][f] = get(current, s, f) * SEED_HEADROOM
+        # Carry the committed baseline's schema note forward, so seeding
+        # does not strip the documentation from the repo-root file.
+        note = (baseline or {}).get("note")
+        if note:
+            seeded_doc["note"] = note
+        with open(emit_seeded, "w") as f:
+            json.dump(seeded_doc, f, indent=2)
+            f.write("\n")
+        print(f"wrote seeded baseline candidate to {emit_seeded}")
+
+    if baseline is None:
         print(f"no committed baseline at {baseline_path}; skipping gate")
+        write_seeded()
         return 0
 
     print("current router_throughput:")
@@ -88,6 +169,7 @@ def main() -> int:
             "this run's JSON over BENCH_router_throughput.json with "
             '"seeded": true.'
         )
+        write_seeded()
         return 0
 
     if current.get("quick_mode") != baseline.get("quick_mode"):
@@ -121,6 +203,7 @@ def main() -> int:
     if failed:
         return 1
     print("OK: within regression budget")
+    write_seeded()
     return 0
 
 
