@@ -2,9 +2,9 @@
 
 scripts/check_bench_regression.py is the CI step that (once the baseline
 is seeded) fails the build on a >20% req/s or steps/s regression. Its
-tolerate-then-gate behaviour for newer JSON sections (guard, sessions)
-must hold across baseline generations, so this suite runs the actual
-script as a subprocess through the four paths that matter:
+tolerate-then-gate behaviour for newer JSON sections (guard, sessions,
+overload) must hold across baseline generations, so this suite runs the
+actual script as a subprocess through the four paths that matter:
 
 1. unseeded baseline               -> report-only, exit 0
 2. seeded legacy baseline (no
@@ -39,7 +39,7 @@ def run_gate(tmp_path, current, baseline, extra=()):
     return proc
 
 
-def bench_doc(req_per_s=1000.0, with_sessions=True, seeded=False):
+def bench_doc(req_per_s=1000.0, with_sessions=True, seeded=False, with_overload=True):
     doc = {
         "bench": "router_throughput",
         "seeded": seeded,
@@ -81,6 +81,17 @@ def bench_doc(req_per_s=1000.0, with_sessions=True, seeded=False):
             "turn0_hit": 0.3,
             "late_turn_hit": 0.85,
         }
+    if with_overload:
+        doc["overload"] = {
+            "slo_ttft_s": 0.5,
+            "slo_tpot_s": 0.05,
+            "depth_threshold": 64,
+            "goodput_at_capacity": 1.0,
+            "goodput_overload_admit_all": 0.4,
+            "goodput_overload_session_shed": 0.9,
+            "shed_overload": 350,
+            "orphaned_turns": 0,
+        }
     return doc
 
 
@@ -91,11 +102,13 @@ def test_path1_unseeded_baseline_is_report_only(tmp_path):
 
 
 def test_path2_seeded_legacy_baseline_tolerates_missing_sessions(tmp_path):
-    # Baseline predates the sessions section entirely; current carries it.
-    legacy = bench_doc(seeded=True, with_sessions=False)
+    # Baseline predates the sessions AND overload sections entirely;
+    # current carries both.
+    legacy = bench_doc(seeded=True, with_sessions=False, with_overload=False)
     proc = run_gate(tmp_path, bench_doc(req_per_s=990.0), legacy)
     assert proc.returncode == 0, proc.stdout + proc.stderr
     assert "sessions.req_per_s: baseline unseeded" in proc.stdout
+    assert "overload.goodput_at_capacity: baseline unseeded" in proc.stdout
     assert "OK: within regression budget" in proc.stdout
 
 
@@ -119,6 +132,16 @@ def test_sessions_only_regression_trips_gate(tmp_path):
     proc = run_gate(tmp_path, current, bench_doc(seeded=True))
     assert proc.returncode == 1, proc.stdout + proc.stderr
     assert "sessions.req_per_s" in proc.stdout
+
+
+def test_overload_goodput_collapse_trips_gate(tmp_path):
+    # Throughput fine, but goodput at capacity collapsed (admission
+    # control broke): the gate must catch it.
+    current = bench_doc(req_per_s=1000.0)
+    current["overload"]["goodput_at_capacity"] = 0.5
+    proc = run_gate(tmp_path, current, bench_doc(seeded=True))
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert "overload.goodput_at_capacity" in proc.stdout
 
 
 def test_quick_mode_mismatch_skips_gate(tmp_path):

@@ -195,6 +195,74 @@ fn main() {
         ses_sm.late_turn_hit() * 100.0
     );
 
+    // Overload control: goodput on an open mixed-archetype trace at
+    // 0.8x (at capacity) and 1.2x (past it), admit_all vs session-aware
+    // shedding. All virtual-time quantities — byte-stable run to run, so
+    // the regression gate can hold the at-capacity goodput. Thresholds
+    // and SLO are derived from an at-capacity probe (2x the peak depth,
+    // 3x the worst request), so the 0.8x point sheds nothing by
+    // construction and its goodput is exactly the SLO attainment.
+    println!("\n--- overload control (open arrivals) ---");
+    let ospec = lmetric::trace::OpenSpec::new(
+        lmetric::trace::RateProgram::constant(10.0, 120.0),
+        51,
+    )
+    .with_cap(scaled(2000));
+    let under = lmetric::cluster::build_scaled_open(&ospec, &cfg, 0.8);
+    let over = lmetric::cluster::build_scaled_open(&ospec, &cfg, 1.2);
+    let mut probe = lmetric::cluster::QueueDepthShed::new(usize::MAX);
+    let mut opol = policy::build_default("lmetric", &profile, 256).unwrap();
+    let m_probe = lmetric::cluster::run(
+        lmetric::cluster::RunSpec::sessions(&cfg, &under)
+            .with_admission(Box::new(&mut probe)),
+        opol.as_mut(),
+    );
+    assert_eq!(m_probe.overload.shed, 0, "probe must not shed");
+    let worst_ttft = m_probe.ttfts().iter().copied().fold(0.0, f64::max);
+    let worst_tpot = m_probe.tpots().iter().copied().fold(0.0, f64::max);
+    let slo = lmetric::metrics::SloSpec::new(
+        3.0 * worst_ttft.max(1e-3),
+        3.0 * worst_tpot.max(1e-3),
+    );
+    let depth_thr = (2 * probe.peak_min_depth).max(8);
+    let mk_sess_shed = || -> Box<dyn lmetric::cluster::AdmissionPolicy> {
+        let inner = lmetric::cluster::QueueDepthShed::new(depth_thr);
+        Box::new(lmetric::cluster::SessionAwareShed::new(Box::new(inner)))
+    };
+    let run_admitted = |strace: &lmetric::trace::SessionTrace,
+                        adm: Box<dyn lmetric::cluster::AdmissionPolicy>| {
+        let mut p = policy::build_default("lmetric", &profile, 256).unwrap();
+        lmetric::cluster::run(
+            lmetric::cluster::RunSpec::sessions(&cfg, strace)
+                .with_admission(adm)
+                .with_slo(slo),
+            p.as_mut(),
+        )
+    };
+    let m_under = run_admitted(&under, mk_sess_shed());
+    let m_over_all = run_admitted(&over, Box::new(lmetric::cluster::AdmitAll));
+    let m_over_sess = run_admitted(&over, mk_sess_shed());
+    assert_eq!(m_under.overload.shed, 0, "derived threshold must not shed at 0.8x");
+    assert!(
+        m_under.goodput_ratio(slo) >= 0.99,
+        "at-capacity goodput {} must be >= 99%",
+        m_under.goodput_ratio(slo)
+    );
+    assert_eq!(
+        m_over_sess.overload.orphaned_turns, 0,
+        "session-aware shedding must never orphan turns"
+    );
+    println!(
+        "0.8x session_shed: goodput {:.1}%; 1.2x admit_all {:.1}% vs session_shed \
+         {:.1}% (shed {} of {}, {} orphans)",
+        m_under.goodput_ratio(slo) * 100.0,
+        m_over_all.goodput_ratio(slo) * 100.0,
+        m_over_sess.goodput_ratio(slo) * 100.0,
+        m_over_sess.overload.shed,
+        m_over_sess.overload.offered,
+        m_over_sess.overload.orphaned_turns
+    );
+
     // Parallel sweep harness: K independent DES runs serial vs fanned
     // out over scoped threads. Results must be identical (virtual time is
     // deterministic); only wall-clock may differ — that ratio is the
@@ -303,6 +371,34 @@ fn main() {
                 ("affinity_sticky", Json::Num(sticky_sm.affinity_ratio())),
                 ("turn0_hit", Json::Num(ses_sm.turn0_hit())),
                 ("late_turn_hit", Json::Num(ses_sm.late_turn_hit())),
+            ]),
+        ),
+        (
+            "overload",
+            Json::obj(vec![
+                ("slo_ttft_s", Json::Num(slo.ttft_s)),
+                ("slo_tpot_s", Json::Num(slo.tpot_s)),
+                ("depth_threshold", Json::Num(depth_thr as f64)),
+                (
+                    "goodput_at_capacity",
+                    Json::Num(m_under.goodput_ratio(slo)),
+                ),
+                (
+                    "goodput_overload_admit_all",
+                    Json::Num(m_over_all.goodput_ratio(slo)),
+                ),
+                (
+                    "goodput_overload_session_shed",
+                    Json::Num(m_over_sess.goodput_ratio(slo)),
+                ),
+                (
+                    "shed_overload",
+                    Json::Num(m_over_sess.overload.shed as f64),
+                ),
+                (
+                    "orphaned_turns",
+                    Json::Num(m_over_sess.overload.orphaned_turns as f64),
+                ),
             ]),
         ),
         (

@@ -196,7 +196,7 @@ pub fn run_policy(
 ) -> (RunMetrics, String) {
     let cfg = cluster_config(exp);
     let mut pol = policy::build(name, param, &cfg.engine.profile, exp.chunk_budget)
-        .unwrap_or_else(|| panic!("unknown policy {name}"));
+        .unwrap_or_else(|e| panic!("{e}"));
     let mut m = run_des(&cfg, trace, pol.as_mut());
     m.discard_warmup(WARMUP);
     (m, pol.name())

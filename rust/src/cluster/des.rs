@@ -18,16 +18,18 @@
 //!   that cannot send a follow-up before it has received the answer.
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::{BinaryHeap, HashMap, HashSet};
 use std::sync::Arc;
 use std::time::Instant;
 
+use super::overload::AdmissionPolicy;
 use crate::config::ExperimentConfig;
 use crate::engine::{EngineConfig, EngineEvent, Instance, ModelProfile, StepOutcome};
-use crate::metrics::RunMetrics;
+use crate::metrics::{RunMetrics, SloSpec};
 use crate::router::{IndicatorFactory, Policy};
 use crate::trace::{
-    generate, generate_sessions, SessionSpec, SessionTrace, Trace, Workload, WorkloadSpec,
+    generate, generate_open, generate_sessions, OpenSpec, SessionSpec, SessionTrace, Trace,
+    Workload, WorkloadSpec,
 };
 
 #[derive(Debug, Clone)]
@@ -60,15 +62,125 @@ struct Followup {
     think_us: u64,
 }
 
+/// What a [`RunSpec`] replays: a flat open-loop [`Trace`] or a
+/// multi-turn [`SessionTrace`].
+pub enum Source<'a> {
+    Trace(&'a Trace),
+    Sessions(&'a SessionTrace),
+}
+
+/// How follow-up turns are released. [`Release::OpenLoop`] pre-schedules
+/// every arrival at its stamped time; [`Release::Reactive`] releases turn
+/// `k+1` at turn `k`'s completion + think time. A flat [`Source::Trace`]
+/// has no follow-up edges, so the two modes coincide there.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Release {
+    OpenLoop,
+    Reactive,
+}
+
+/// The unified run description: one entry point ([`run`]) for every
+/// combination the harness supports — open- or closed-loop release,
+/// optional admission control, optional SLO annotation for goodput
+/// accounting. [`run_des`] and [`run_session_des`] are thin wrappers over
+/// this.
+pub struct RunSpec<'a> {
+    pub cluster: &'a ClusterConfig,
+    pub source: Source<'a>,
+    pub release: Release,
+    /// Non-`'static` so a bench can lend `Box::new(&mut probe)` and read
+    /// the probe's peak counters back after the run.
+    pub admission: Option<Box<dyn AdmissionPolicy + 'a>>,
+    pub slo: Option<SloSpec>,
+}
+
+impl<'a> RunSpec<'a> {
+    /// Open-loop replay of a flat trace — what [`run_des`] does.
+    pub fn open_loop(cluster: &'a ClusterConfig, trace: &'a Trace) -> RunSpec<'a> {
+        RunSpec {
+            cluster,
+            source: Source::Trace(trace),
+            release: Release::OpenLoop,
+            admission: None,
+            slo: None,
+        }
+    }
+
+    /// Reactive replay of a session trace — what [`run_session_des`]
+    /// does. Switch to open-loop release with [`RunSpec::with_release`].
+    pub fn sessions(cluster: &'a ClusterConfig, strace: &'a SessionTrace) -> RunSpec<'a> {
+        RunSpec {
+            cluster,
+            source: Source::Sessions(strace),
+            release: Release::Reactive,
+            admission: None,
+            slo: None,
+        }
+    }
+
+    pub fn with_release(mut self, release: Release) -> RunSpec<'a> {
+        self.release = release;
+        self
+    }
+
+    pub fn with_admission(mut self, admission: Box<dyn AdmissionPolicy + 'a>) -> RunSpec<'a> {
+        self.admission = Some(admission);
+        self
+    }
+
+    pub fn with_slo(mut self, slo: SloSpec) -> RunSpec<'a> {
+        self.slo = Some(slo);
+        self
+    }
+}
+
+/// Run a [`RunSpec`] under `policy` — the single entry point the CLI,
+/// benches and tests share. Without admission or SLO the trajectory is
+/// byte-identical to the legacy wrappers ([`run_des`],
+/// [`run_session_des`]); with them, shed/goodput accounting lands in
+/// [`RunMetrics::overload`](crate::metrics::OverloadCounters) and
+/// [`RunMetrics::slo`].
+pub fn run(spec: RunSpec<'_>, policy: &mut dyn Policy) -> RunMetrics {
+    let RunSpec {
+        cluster,
+        source,
+        release,
+        mut admission,
+        slo,
+    } = spec;
+    let adm = admission.as_deref_mut();
+    let mut m = match (source, release) {
+        (Source::Trace(trace), _) => {
+            // Cloning the request vector is refcount bumps (token/hash
+            // storage is `Arc`-shared), not data copies; it lets the
+            // reactive core own its requests so closed-loop runs can
+            // stamp release times in place.
+            let reqs = trace.requests.to_vec();
+            let initial: Vec<usize> = (0..reqs.len()).collect();
+            run_des_core(cluster, reqs, &initial, &[], policy, adm)
+        }
+        (Source::Sessions(strace), Release::OpenLoop) => {
+            let flat = strace.flatten();
+            let initial: Vec<usize> = (0..flat.requests.len()).collect();
+            run_des_core(cluster, flat.requests, &initial, &[], policy, adm)
+        }
+        (Source::Sessions(strace), Release::Reactive) => {
+            let (reqs, initial, followups) = session_schedule(strace);
+            run_des_core(cluster, reqs, &initial, &followups, policy, adm)
+        }
+    };
+    m.admission_name = admission.map(|a| a.name());
+    m.slo = slo;
+    m
+}
+
 /// Run `trace` through the cluster under `policy`. Virtual time; returns
 /// the full metrics bundle. Open-loop: every arrival is pre-scheduled.
+///
+/// Legacy wrapper for `run(RunSpec::open_loop(cfg, trace), policy)` —
+/// prefer [`run`], which also carries admission control and SLO specs.
 pub fn run_des(cfg: &ClusterConfig, trace: &Trace, policy: &mut dyn Policy) -> RunMetrics {
-    // Cloning the request vector is refcount bumps (token/hash storage is
-    // `Arc`-shared), not data copies; it lets the reactive core own its
-    // requests so closed-loop runs can stamp release times in place.
-    let reqs = trace.requests.to_vec();
-    let initial: Vec<usize> = (0..reqs.len()).collect();
-    run_des_core(cfg, reqs, &initial, &[], policy)
+    run(RunSpec::open_loop(cfg, trace), policy)
 }
 
 /// Run a closed-loop [`SessionTrace`]: each session's first turn arrives
@@ -76,11 +188,26 @@ pub fn run_des(cfg: &ClusterConfig, trace: &Trace, policy: &mut dyn Policy) -> R
 /// turn's completion + its pre-sampled think time. Join the returned
 /// records back to sessions with
 /// [`SessionMetrics::collect`](crate::metrics::SessionMetrics::collect).
+///
+/// Legacy wrapper for `run(RunSpec::sessions(cfg, strace), policy)` —
+/// prefer [`run`], which also carries admission control and SLO specs.
 pub fn run_session_des(
     cfg: &ClusterConfig,
     strace: &SessionTrace,
     policy: &mut dyn Policy,
 ) -> RunMetrics {
+    run(RunSpec::sessions(cfg, strace), policy)
+}
+
+/// Lower a session trace to the core's request table: the flattened
+/// request vector, the initial release set (first turns, in (time, id)
+/// order — the same push order the open-loop path uses on a flattened
+/// trace, so a single-turn session trace replays byte-identically to its
+/// open-loop equivalent), and the reactive follow-up edges.
+#[allow(clippy::type_complexity)]
+fn session_schedule(
+    strace: &SessionTrace,
+) -> (Vec<crate::trace::TraceRequest>, Vec<usize>, Vec<Option<Followup>>) {
     let n_turns = strace.n_turns();
     let mut reqs: Vec<crate::trace::TraceRequest> = Vec::with_capacity(n_turns);
     let mut followups: Vec<Option<Followup>> = vec![None; n_turns];
@@ -103,24 +230,26 @@ pub fn run_session_des(
             initial.push((s.start_us, reqs[base].req.id, base));
         }
     }
-    // Release first turns in (time, id) order — the same push order the
-    // open-loop path uses on a flattened trace, so a single-turn session
-    // trace replays byte-identically to its open-loop equivalent.
     initial.sort_by_key(|&(at, id, _)| (at, id));
     let initial: Vec<usize> = initial.into_iter().map(|(_, _, i)| i).collect();
-    run_des_core(cfg, reqs, &initial, &followups, policy)
+    (reqs, initial, followups)
 }
 
 /// The shared event core. `initial` lists the indices released at their
 /// pre-stamped `arrival_us` (in push order — ties break FIFO); `followups`
 /// (empty for open-loop runs, else one slot per request) encodes the
-/// reactive dependency edges resolved at completion time.
+/// reactive dependency edges resolved at completion time. `admission`,
+/// when present, is consulted before every route decision: a shed request
+/// never reaches the router, and the overload counters in the returned
+/// metrics account for it. With `admission == None` the trajectory is
+/// byte-identical to the pre-overload core.
 fn run_des_core(
     cfg: &ClusterConfig,
     mut reqs: Vec<crate::trace::TraceRequest>,
     initial: &[usize],
     followups: &[Option<Followup>],
     policy: &mut dyn Policy,
+    mut admission: Option<&mut dyn AdmissionPolicy>,
 ) -> RunMetrics {
     let n = cfg.n_instances;
     let reactive = followups.iter().any(Option::is_some);
@@ -148,6 +277,11 @@ fn run_des_core(
     let mut full_hashes: HashMap<u64, Arc<[u64]>> = HashMap::new();
     let mut predicted: HashMap<u64, f64> = HashMap::new();
     let mut arrivals: HashMap<u64, u64> = HashMap::new();
+    // Sessions that have at least one admitted turn — lets the shed
+    // accounting distinguish a clean turn-0 rejection (the client saw it
+    // and went away) from a mid-conversation orphan. Only populated when
+    // admission control is active; `HashSet::new` does not allocate.
+    let mut admitted_sessions: HashSet<u64> = HashSet::new();
 
     // (Reverse(time), Reverse(tiebreak), event)
     let mut queue: BinaryHeap<(Reverse<u64>, Reverse<u64>, Event)> = BinaryHeap::new();
@@ -173,6 +307,31 @@ fn run_des_core(
                 // Borrowed scratch context: the whole route decision is
                 // allocation-free on the router side.
                 let ctx = factory.route_ctx(&tr.req, now);
+                if let Some(adm) = admission.as_deref_mut() {
+                    metrics.overload.offered += 1;
+                    let sid = tr.req.session_id;
+                    if !adm.admit(ctx) {
+                        metrics.overload.shed += 1;
+                        if sid != 0 && admitted_sessions.contains(&sid) {
+                            metrics.overload.shed_mid_session += 1;
+                            // Every later turn of this session is now
+                            // stranded: its release was chained to this
+                            // turn's completion, which will never happen.
+                            let mut cur = idx;
+                            while let Some(f) = followups.get(cur).copied().flatten() {
+                                metrics.overload.orphaned_turns += 1;
+                                cur = f.next;
+                            }
+                        } else if sid != 0 {
+                            metrics.overload.shed_sessions += 1;
+                        }
+                        continue;
+                    }
+                    metrics.overload.admitted += 1;
+                    if sid != 0 {
+                        admitted_sessions.insert(sid);
+                    }
+                }
                 let t0 = Instant::now();
                 let decision = policy.route(ctx);
                 metrics
@@ -398,6 +557,34 @@ pub fn build_scaled_sessions(
         }
         spec.session_rate *= ratio;
         strace = generate_sessions(&spec);
+    }
+    strace
+}
+
+/// Scale an open-arrival workload's *rate program* until the flattened
+/// request rate hits `rate_scale × profiled capacity` — the §4.1
+/// methodology of [`build_scaled_sessions`], adapted to the open engine:
+/// the whole program is multiplied by one factor ([`RateProgram::scaled`]
+/// via [`OpenSpec`]), so ramps, diurnal swings and flash crowds keep
+/// their *shape* while the mean load lands on target. `rate_scale > 1`
+/// is the overload regime the admission policies are judged in.
+pub fn build_scaled_open(spec: &OpenSpec, cfg: &ClusterConfig, rate_scale: f64) -> SessionTrace {
+    let mut spec = spec.clone();
+    let probe = generate_open(&spec);
+    let cap = profile_capacity_rps(&cfg.engine, &probe.flatten(), 200);
+    let target = rate_scale * cap * cfg.n_instances as f64;
+    let mut strace = probe;
+    for _ in 0..3 {
+        let natural = strace.flatten().steady_rps();
+        if !natural.is_finite() || natural <= 0.0 {
+            break;
+        }
+        let ratio = (target / natural).clamp(0.05, 20.0);
+        if (ratio - 1.0).abs() < 0.03 {
+            break;
+        }
+        spec.program = spec.program.scaled(ratio);
+        strace = generate_open(&spec);
     }
     strace
 }

@@ -1,12 +1,19 @@
 //! Cluster harnesses: the discrete-event simulation driver (virtual time —
-//! every figure bench runs on this) and the live threaded cluster
-//! (wall-clock time + real PJRT transformer compute — the end-to-end
-//! validation path).
+//! every figure bench runs on this), the [`overload`] admission-control
+//! subsystem it consults under open-system load, and the live threaded
+//! cluster (wall-clock time + real PJRT transformer compute — the
+//! end-to-end validation path).
 
 mod des;
 pub mod live;
+pub mod overload;
 
 pub use des::{
-    build_scaled_sessions, build_scaled_trace, cluster_config, profile_capacity_rps, run_des,
-    run_experiment, run_session_des, ClusterConfig,
+    build_scaled_open, build_scaled_sessions, build_scaled_trace, cluster_config,
+    profile_capacity_rps, run, run_des, run_experiment, run_session_des, ClusterConfig, Release,
+    RunSpec, Source,
+};
+pub use overload::{
+    all_admission_names, build_admission, default_admission_param, AdmissionPolicy, AdmitAll,
+    QueueDepthShed, SessionAwareShed, TtftShed,
 };

@@ -1,0 +1,303 @@
+//! Overload control: pluggable admission policies for the open-system
+//! regime where offered load can exceed profiled capacity.
+//!
+//! A routing policy decides *where* an admitted request runs; an
+//! [`AdmissionPolicy`] decides *whether* it runs at all. The DES core
+//! consults the admission policy before the route decision — a shed
+//! request never touches the router, never costs a radix walk, and
+//! never occupies a queue slot. Shedding is what turns throughput into
+//! *goodput* under overload: past saturation, `admit_all` lets queues
+//! grow without bound and every request blows its SLO, while a shedding
+//! policy keeps the admitted fraction inside the latency budget (see
+//! `benches/fig51_overload_sweep.rs`).
+//!
+//! Policies:
+//!
+//! * [`AdmitAll`] — the closed-system baseline; never sheds.
+//! * [`QueueDepthShed`] — sheds when every instance's engine-visible
+//!   depth (running + queued) is at or above a threshold.
+//! * [`TtftShed`] — sheds on a cost-model TTFT estimate: pending prefill
+//!   tokens on the least-loaded instance, priced by the profile.
+//! * [`SessionAwareShed`] — wraps any inner policy with the
+//!   conversation-integrity rule: a session with admitted turns is never
+//!   shed mid-conversation (its later turns bypass the inner check), and
+//!   a session rejected at turn 0 stays rejected, so no orphaned turns
+//!   are ever produced.
+
+use std::collections::HashSet;
+
+use crate::engine::ModelProfile;
+use crate::router::RouteCtx;
+
+/// Decides, per arrival, whether the cluster accepts the request.
+/// Stateful (counters, session memory) and consulted in arrival order.
+pub trait AdmissionPolicy: Send {
+    fn name(&self) -> String;
+    /// `true` = admit (route + enqueue), `false` = shed.
+    fn admit(&mut self, ctx: &RouteCtx) -> bool;
+}
+
+/// Forwarding impl so a caller can lend a policy to a run and inspect
+/// its state (peak counters) afterwards:
+/// `spec.with_admission(Box::new(&mut probe))`.
+impl<T: AdmissionPolicy + ?Sized> AdmissionPolicy for &mut T {
+    fn name(&self) -> String {
+        (**self).name()
+    }
+
+    fn admit(&mut self, ctx: &RouteCtx) -> bool {
+        (**self).admit(ctx)
+    }
+}
+
+/// Admit everything — the degenerate policy every closed-system run
+/// implicitly uses.
+#[derive(Debug, Default)]
+pub struct AdmitAll;
+
+impl AdmissionPolicy for AdmitAll {
+    fn name(&self) -> String {
+        "admit_all".into()
+    }
+
+    fn admit(&mut self, _ctx: &RouteCtx) -> bool {
+        true
+    }
+}
+
+/// Shed when the *least-loaded* instance already holds `max_depth`
+/// requests (running + queued): if even the best placement is saturated,
+/// the cluster as a whole is. `peak_min_depth` records the high-water
+/// mark of that best-placement depth, so a probe run with
+/// `max_depth = usize::MAX` measures the uncongested operating range.
+#[derive(Debug)]
+pub struct QueueDepthShed {
+    pub max_depth: usize,
+    pub peak_min_depth: usize,
+}
+
+impl QueueDepthShed {
+    pub fn new(max_depth: usize) -> QueueDepthShed {
+        QueueDepthShed {
+            max_depth,
+            peak_min_depth: 0,
+        }
+    }
+}
+
+impl AdmissionPolicy for QueueDepthShed {
+    fn name(&self) -> String {
+        format!("queue_shed({})", self.max_depth)
+    }
+
+    fn admit(&mut self, ctx: &RouteCtx) -> bool {
+        let min_depth = (0..ctx.n()).map(|i| ctx.inds[i].bs()).min().unwrap_or(0);
+        self.peak_min_depth = self.peak_min_depth.max(min_depth);
+        min_depth < self.max_depth
+    }
+}
+
+/// Shed on a cost-model TTFT estimate: the pending prefill work ahead of
+/// this request on its best placement (queued prefill tokens + its own
+/// new tokens), priced at the profile's per-token prefill rate. Cheap,
+/// allocation-free, and directly in SLO units. `peak_est_us` records the
+/// largest estimate seen, for probe runs.
+#[derive(Debug)]
+pub struct TtftShed {
+    pub budget_us: f64,
+    pub peak_est_us: f64,
+    step_fixed_us: f64,
+    prefill_us_per_token: f64,
+}
+
+impl TtftShed {
+    pub fn new(budget_us: f64, profile: &ModelProfile) -> TtftShed {
+        TtftShed {
+            budget_us,
+            peak_est_us: 0.0,
+            step_fixed_us: profile.step_fixed_us,
+            prefill_us_per_token: profile.prefill_us_per_token,
+        }
+    }
+
+    fn estimate_us(&self, ctx: &RouteCtx) -> f64 {
+        let best = (0..ctx.n()).map(|i| ctx.p_token(i)).min().unwrap_or(0);
+        self.step_fixed_us + best as f64 * self.prefill_us_per_token
+    }
+}
+
+impl AdmissionPolicy for TtftShed {
+    fn name(&self) -> String {
+        format!("ttft_shed({:.0}ms)", self.budget_us / 1000.0)
+    }
+
+    fn admit(&mut self, ctx: &RouteCtx) -> bool {
+        let est = self.estimate_us(ctx);
+        self.peak_est_us = self.peak_est_us.max(est);
+        est <= self.budget_us
+    }
+}
+
+/// Conversation-integrity wrapper: shed decisions are made once per
+/// *session*, at its first turn, by the inner policy. Later turns of an
+/// admitted session always pass (a mid-conversation rejection orphans
+/// the session's cached context and wastes every token already spent on
+/// it); turns of a rejected session always fail (the client saw the
+/// rejection and went away). Sessionless requests (`session_id == 0`)
+/// fall through to the inner policy per-request.
+pub struct SessionAwareShed {
+    inner: Box<dyn AdmissionPolicy>,
+    admitted: HashSet<u64>,
+    rejected: HashSet<u64>,
+}
+
+impl SessionAwareShed {
+    pub fn new(inner: Box<dyn AdmissionPolicy>) -> SessionAwareShed {
+        SessionAwareShed {
+            inner,
+            admitted: HashSet::new(),
+            rejected: HashSet::new(),
+        }
+    }
+}
+
+impl AdmissionPolicy for SessionAwareShed {
+    fn name(&self) -> String {
+        format!("session_shed[{}]", self.inner.name())
+    }
+
+    fn admit(&mut self, ctx: &RouteCtx) -> bool {
+        let sid = ctx.session_id;
+        if sid == 0 {
+            return self.inner.admit(ctx);
+        }
+        if self.admitted.contains(&sid) {
+            return true;
+        }
+        if self.rejected.contains(&sid) {
+            return false;
+        }
+        let ok = self.inner.admit(ctx);
+        if ok {
+            self.admitted.insert(sid);
+        } else {
+            self.rejected.insert(sid);
+        }
+        ok
+    }
+}
+
+/// Registry names, in display order. Mirrors `policy::all_names`.
+pub fn all_admission_names() -> Vec<&'static str> {
+    vec!["admit_all", "queue_shed", "ttft_shed", "session_shed"]
+}
+
+/// The parameter each named policy gets when the caller has no opinion:
+/// queue depths in requests, TTFT budgets in seconds.
+pub fn default_admission_param(name: &str) -> f64 {
+    match name {
+        "queue_shed" | "session_shed" => 192.0,
+        "ttft_shed" => 2.0,
+        _ => 0.0,
+    }
+}
+
+/// Build an admission policy by registry name. `param` is the queue
+/// depth for `queue_shed`/`session_shed` and the TTFT budget (seconds)
+/// for `ttft_shed`; ignored by `admit_all`. The error lists the valid
+/// names, mirroring `policy::build`'s contract.
+pub fn build_admission(
+    name: &str,
+    param: f64,
+    profile: &ModelProfile,
+) -> Result<Box<dyn AdmissionPolicy>, String> {
+    Ok(match name {
+        "admit_all" => Box::new(AdmitAll),
+        "queue_shed" => Box::new(QueueDepthShed::new(param.max(1.0) as usize)),
+        "ttft_shed" => Box::new(TtftShed::new(param * 1e6, profile)),
+        "session_shed" => {
+            let inner = QueueDepthShed::new(param.max(1.0) as usize);
+            Box::new(SessionAwareShed::new(Box::new(inner)))
+        }
+        _ => {
+            return Err(format!(
+                "unknown admission policy '{name}'; valid policies: {}",
+                all_admission_names().join(", ")
+            ))
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::router::{Indicators, RouteCtx};
+
+    fn inds(depths: &[usize]) -> Vec<Indicators> {
+        depths
+            .iter()
+            .map(|&d| Indicators {
+                r_bs: d,
+                q_bs: 0,
+                queued_prefill_tokens: d * 100,
+                total_context_tokens: 0,
+                kv_used_blocks: 0,
+                kv_capacity_blocks: 1000,
+            })
+            .collect()
+    }
+
+    fn ctx(inds: &[Indicators], sid: u64) -> RouteCtx {
+        RouteCtx::new(0, 1, 0, 200, vec![0; inds.len()], inds.to_vec()).with_session(sid)
+    }
+
+    #[test]
+    fn queue_depth_uses_least_loaded_instance() {
+        let mut p = QueueDepthShed::new(4);
+        let free = inds(&[9, 9, 1]);
+        assert!(p.admit(&ctx(&free, 0)), "one free instance admits");
+        let full = inds(&[9, 9, 4]);
+        assert!(!p.admit(&ctx(&full, 0)), "all at threshold sheds");
+        assert_eq!(p.peak_min_depth, 4, "probe records the best-placement peak");
+    }
+
+    #[test]
+    fn ttft_shed_prices_pending_prefill() {
+        let profile = ModelProfile::moe_30b();
+        let mut tight = TtftShed::new(profile.step_fixed_us + 1.0, &profile);
+        let loaded = inds(&[2, 3, 4]);
+        assert!(!tight.admit(&ctx(&loaded, 0)), "pending prefill blows a ~0 budget");
+        let mut lavish = TtftShed::new(1e9, &profile);
+        assert!(lavish.admit(&ctx(&loaded, 0)));
+        assert!(lavish.peak_est_us > 0.0);
+    }
+
+    #[test]
+    fn session_shed_is_sticky_both_ways() {
+        // Inner threshold 1: admits only when some instance is empty.
+        let mut p = SessionAwareShed::new(Box::new(QueueDepthShed::new(1)));
+        let free = inds(&[0, 0]);
+        let busy = inds(&[5, 5]);
+        assert!(p.admit(&ctx(&free, 7)), "session 7 admitted at turn 0");
+        assert!(p.admit(&ctx(&busy, 7)), "later turns bypass the inner check");
+        assert!(!p.admit(&ctx(&busy, 8)), "session 8 rejected at turn 0");
+        assert!(!p.admit(&ctx(&free, 8)), "rejected sessions stay rejected");
+        // Sessionless traffic falls through per-request.
+        assert!(p.admit(&ctx(&free, 0)));
+        assert!(!p.admit(&ctx(&busy, 0)));
+    }
+
+    #[test]
+    fn registry_builds_and_rejects_with_name_list() {
+        let profile = ModelProfile::moe_30b();
+        for name in all_admission_names() {
+            let p = build_admission(name, default_admission_param(name), &profile);
+            assert!(p.is_ok(), "{name} must build");
+        }
+        let err = build_admission("yolo", 1.0, &profile).err().unwrap();
+        assert!(err.contains("yolo"));
+        for name in all_admission_names() {
+            assert!(err.contains(name), "error must list {name}");
+        }
+    }
+}

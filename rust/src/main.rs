@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   replay       run one policy on one workload through the DES cluster
 //!   sessions     closed-loop session replay (reactive turn release)
+//!   open         open-arrival replay: rate programs, admission, goodput
 //!   compare      run every policy on one workload, print the table
 //!   serve        live cluster: real PJRT transformer, wall-clock latencies
 //!   gen-trace    write a synthetic workload as jsonl
@@ -13,10 +14,10 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use lmetric::cluster::live::{run_live, LiveClusterConfig};
-use lmetric::cluster::{self, run_des};
+use lmetric::cluster::{self, run_des, AdmissionPolicy, RunSpec};
 use lmetric::config::{ConfigDoc, ExperimentConfig};
 use lmetric::engine::ModelProfile;
-use lmetric::metrics::{render_table, ResultRow};
+use lmetric::metrics::{render_table, ResultRow, SloSpec};
 use lmetric::policy;
 use lmetric::trace::{generate, load_jsonl, save_jsonl, Workload, WorkloadSpec};
 
@@ -75,19 +76,80 @@ fn exp_from_flags(flags: &HashMap<String, String>) -> ExperimentConfig {
     exp
 }
 
+/// `--admission NAME [--admission-param F]` → an admission policy, or
+/// `None` when the flag is absent (admit everything, legacy behaviour).
+fn admission_from_flags(
+    flags: &HashMap<String, String>,
+    profile: &ModelProfile,
+) -> Option<Box<dyn AdmissionPolicy>> {
+    let name = flags.get("admission")?;
+    let param: f64 = flags
+        .get("admission-param")
+        .map(|v| v.parse().expect("--admission-param"))
+        .unwrap_or_else(|| cluster::default_admission_param(name));
+    let adm = cluster::build_admission(name, param, profile).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    Some(adm)
+}
+
+/// `--slo-ttft S` / `--slo-tpot S` (seconds) → an [`SloSpec`]; a missing
+/// bound is unconstrained.
+fn slo_from_flags(flags: &HashMap<String, String>) -> Option<SloSpec> {
+    let ttft: Option<f64> = flags.get("slo-ttft").map(|v| v.parse().expect("--slo-ttft"));
+    let tpot: Option<f64> = flags.get("slo-tpot").map(|v| v.parse().expect("--slo-tpot"));
+    if ttft.is_none() && tpot.is_none() {
+        return None;
+    }
+    let slo = SloSpec::new(ttft.unwrap_or(f64::INFINITY), tpot.unwrap_or(f64::INFINITY));
+    Some(slo)
+}
+
+/// Shared overload/goodput epilogue for `replay`, `sessions` and `open`.
+fn print_overload_summary(m: &lmetric::metrics::RunMetrics) {
+    if let Some(name) = &m.admission_name {
+        let o = m.overload;
+        println!(
+            "admission {name}: offered {}, admitted {}, shed {} \
+             ({} whole sessions, {} mid-session, {} orphaned turns)",
+            o.offered, o.admitted, o.shed, o.shed_sessions, o.shed_mid_session, o.orphaned_turns
+        );
+    }
+    if let Some(slo) = m.slo {
+        println!(
+            "goodput: {:.1}% of offered within SLO (ttft ≤ {:.2}s, tpot ≤ {:.3}s), \
+             {:.2} good req/s",
+            m.goodput_ratio(slo) * 100.0,
+            slo.ttft_s,
+            slo.tpot_s,
+            m.goodput_rps(slo)
+        );
+    }
+}
+
 fn cmd_replay(flags: &HashMap<String, String>) {
     let exp = exp_from_flags(flags);
     let profile = ModelProfile::by_name(&exp.profile).expect("profile");
     let mut pol =
-        policy::build(&exp.policy, exp.param, &profile, exp.chunk_budget).unwrap_or_else(|| {
-            eprintln!("unknown policy {} (try: {:?})", exp.policy, policy::all_names());
+        policy::build(&exp.policy, exp.param, &profile, exp.chunk_budget).unwrap_or_else(|e| {
+            eprintln!("{e}");
             std::process::exit(2);
         });
     println!(
         "replaying {} ({} reqs) on {}×{} under {} ...",
         exp.workload, exp.requests, exp.instances, exp.profile, pol.name()
     );
-    let m = cluster::run_experiment(&exp, pol.as_mut());
+    let trace = cluster::build_scaled_trace(&exp);
+    let cfg = cluster::cluster_config(&exp);
+    let mut spec = RunSpec::open_loop(&cfg, &trace);
+    if let Some(adm) = admission_from_flags(flags, &profile) {
+        spec = spec.with_admission(adm);
+    }
+    if let Some(slo) = slo_from_flags(flags) {
+        spec = spec.with_slo(slo);
+    }
+    let m = cluster::run(spec, pol.as_mut());
     let row = ResultRow::from_metrics(&pol.name(), &m)
         .with("throughput_tok_s", m.output_throughput())
         .with("imbalance_s", m.imbalance_score());
@@ -99,6 +161,66 @@ fn cmd_replay(flags: &HashMap<String, String>) {
             g.checks, g.degenerate, g.inversion, g.mitigated
         );
     }
+    print_overload_summary(&m);
+}
+
+/// Open-arrival replay: Poisson session starts under a rate program,
+/// reactive turn release, optional admission control and SLO accounting —
+/// the CLI face of the `trace::open` + `cluster::overload` engines.
+fn cmd_open(flags: &HashMap<String, String>) {
+    use lmetric::cluster::{build_scaled_open, ClusterConfig};
+    use lmetric::engine::EngineConfig;
+    use lmetric::metrics::SessionMetrics;
+    use lmetric::trace::{OpenSpec, RateProgram};
+
+    let shape = flags.get("shape").map(String::as_str).unwrap_or("constant");
+    let dur: f64 = flags.get("duration").map(|v| v.parse().unwrap()).unwrap_or(120.0);
+    let instances: usize = flags.get("instances").map(|v| v.parse().unwrap()).unwrap_or(8);
+    let seed: u64 = flags.get("seed").map(|v| v.parse().unwrap()).unwrap_or(42);
+    let rate_scale: f64 = flags.get("rate-scale").map(|v| v.parse().unwrap()).unwrap_or(0.8);
+    let cap: usize = flags.get("requests").map(|v| v.parse().unwrap()).unwrap_or(4000);
+    let policy_name = flags.get("policy").map(String::as_str).unwrap_or("lmetric");
+
+    let program = match shape {
+        "constant" => RateProgram::constant(10.0, dur),
+        "ramp" => RateProgram::ramp(2.0, 20.0, dur),
+        "diurnal" => RateProgram::diurnal(10.0, 0.6, dur, dur),
+        "flash" => RateProgram::flash_crowd(8.0, 6.0, dur * 0.4, dur * 0.2, dur),
+        other => {
+            eprintln!("unknown shape {other} (try: constant ramp diurnal flash)");
+            std::process::exit(2);
+        }
+    };
+    let profile = ModelProfile::moe_30b();
+    let mut pol = policy::build_default(policy_name, &profile, 256).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    let cfg = ClusterConfig::new(instances, EngineConfig::default());
+    let ospec = OpenSpec::new(program, seed).with_cap(cap);
+    let strace = build_scaled_open(&ospec, &cfg, rate_scale);
+    println!(
+        "open-arrival replay: {} ({} sessions / {} turns) at {rate_scale}× capacity \
+         on {instances} instances under {}",
+        strace.name,
+        strace.sessions.len(),
+        strace.n_turns(),
+        pol.name()
+    );
+    let mut spec = RunSpec::sessions(&cfg, &strace);
+    if let Some(adm) = admission_from_flags(flags, &cfg.engine.profile) {
+        spec = spec.with_admission(adm);
+    }
+    if let Some(slo) = slo_from_flags(flags) {
+        spec = spec.with_slo(slo);
+    }
+    let m = cluster::run(spec, pol.as_mut());
+    let sm = SessionMetrics::collect(&m, &strace);
+    let row = ResultRow::from_metrics(&pol.name(), &m)
+        .with("throughput_tok_s", m.output_throughput())
+        .with("affinity", sm.affinity_ratio());
+    println!("{}", render_table(&format!("open/{shape}"), &[row]));
+    print_overload_summary(&m);
 }
 
 fn cmd_sessions(flags: &HashMap<String, String>) {
@@ -364,16 +486,21 @@ fn usage() -> ! {
 
 commands:
   replay       --workload W --policy P [--instances N --requests N --rate-scale F --param F --profile M --seed S --config FILE]
+               [--admission A --admission-param F --slo-ttft S --slo-tpot S]
   sessions     --kind chat|api|coding [--policy P --instances N --requests N --rate-scale F --seed S]
+  open         --shape constant|ramp|diurnal|flash [--duration S --rate-scale F --instances N
+               --requests N --seed S --policy P --admission A --admission-param F --slo-ttft S --slo-tpot S]
   compare      --workload W [--instances N --requests N ...]
   serve        [--instances N --requests N --policy P --time-scale F]
   gen-trace    --workload W --requests N --out FILE
   trace-stats  [--workload W | --file F]
   calibrate
 
-workloads: chatbot coder agent toolagent hotspot
-policies:  {:?}",
-        policy::all_names()
+workloads:  chatbot coder agent toolagent hotspot
+policies:   {:?}
+admission:  {:?}",
+        policy::all_names(),
+        cluster::all_admission_names()
     );
     std::process::exit(2);
 }
@@ -385,6 +512,7 @@ fn main() {
     match cmd.as_str() {
         "replay" => cmd_replay(&flags),
         "sessions" => cmd_sessions(&flags),
+        "open" => cmd_open(&flags),
         "compare" => cmd_compare(&flags),
         "serve" => cmd_serve(&flags),
         "gen-trace" => cmd_gen_trace(&flags),

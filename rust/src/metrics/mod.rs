@@ -10,6 +10,52 @@ use crate::router::GuardCounters;
 use crate::util::json::Json;
 use crate::util::stats::{cdf_points, stddev, Summary, Windowed};
 
+/// A latency SLO: a request is *good* when its TTFT and (if it decoded)
+/// its TPOT are both within budget. Goodput = good requests per second —
+/// the metric that actually collapses under overload while raw
+/// throughput keeps looking fine (see `cluster::overload`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloSpec {
+    /// TTFT budget, seconds.
+    pub ttft_s: f64,
+    /// TPOT budget, seconds per output token.
+    pub tpot_s: f64,
+}
+
+impl SloSpec {
+    pub fn new(ttft_s: f64, tpot_s: f64) -> SloSpec {
+        SloSpec { ttft_s, tpot_s }
+    }
+
+    /// Whether `r` met the SLO. Single-token requests have no decode
+    /// phase, so only their TTFT counts (mirroring
+    /// [`RunMetrics::tpots`]' filter).
+    pub fn met_by(&self, r: &RequestRecord) -> bool {
+        r.ttft_s() <= self.ttft_s && (r.output_len <= 1 || r.tpot_s() <= self.tpot_s)
+    }
+}
+
+/// Admission-control outcome counters for one run. All-zero when the run
+/// had no admission policy (`offered == admitted == 0` then means
+/// "overload control not in play", and goodput denominators fall back to
+/// completed records).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OverloadCounters {
+    /// Arrivals presented to the admission policy.
+    pub offered: u64,
+    pub admitted: u64,
+    pub shed: u64,
+    /// Sessions rejected whole at their first turn.
+    pub shed_sessions: u64,
+    /// Sheds that hit a session with previously admitted turns — the
+    /// conversation-integrity violation session-aware shedding exists to
+    /// prevent (0 for it, by construction).
+    pub shed_mid_session: u64,
+    /// Follow-up turns stranded by mid-session sheds (the reactive chain
+    /// behind a shed turn can never release).
+    pub orphaned_turns: u64,
+}
+
 /// Everything a cluster run produces.
 #[derive(Debug)]
 pub struct RunMetrics {
@@ -38,6 +84,14 @@ pub struct RunMetrics {
     /// [`Policy::guard_counters`](crate::router::Policy::guard_counters),
     /// as THIS run's delta (policies accumulate over their lifetime).
     pub guard: GuardCounters,
+    /// Admission-control counters (all-zero when no admission policy ran).
+    pub overload: OverloadCounters,
+    /// Name of the admission policy that ran, if any.
+    pub admission_name: Option<String>,
+    /// The SLO this run was evaluated against, if any (set by
+    /// [`crate::cluster::RunSpec::with_slo`]; goodput methods take an
+    /// explicit spec too so post-hoc evaluation works).
+    pub slo: Option<SloSpec>,
 }
 
 impl RunMetrics {
@@ -52,7 +106,48 @@ impl RunMetrics {
             total_steps: 0,
             admit_radix_walks: 0,
             guard: GuardCounters::default(),
+            overload: OverloadCounters::default(),
+            admission_name: None,
+            slo: None,
         }
+    }
+
+    /// Completed requests that met `slo`.
+    pub fn slo_good(&self, slo: SloSpec) -> usize {
+        self.records.iter().filter(|r| slo.met_by(r)).count()
+    }
+
+    /// Fraction of *completed* requests inside the SLO.
+    pub fn slo_attainment(&self, slo: SloSpec) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.slo_good(slo) as f64 / self.records.len() as f64
+    }
+
+    /// Goodput ratio: SLO-good completions over *offered* load. Shed
+    /// requests count against goodput — an admission policy cannot look
+    /// better by rejecting everything. Runs without admission control
+    /// (offered == 0) fall back to completed records as the denominator,
+    /// making this identical to [`RunMetrics::slo_attainment`] there.
+    pub fn goodput_ratio(&self, slo: SloSpec) -> f64 {
+        let denom = if self.overload.offered > 0 {
+            self.overload.offered as usize
+        } else {
+            self.records.len()
+        };
+        if denom == 0 {
+            return 0.0;
+        }
+        self.slo_good(slo) as f64 / denom as f64
+    }
+
+    /// Goodput in SLO-good requests per second of run time.
+    pub fn goodput_rps(&self, slo: SloSpec) -> f64 {
+        if self.duration_us == 0 {
+            return 0.0;
+        }
+        self.slo_good(slo) as f64 / (self.duration_us as f64 / 1e6)
     }
 
     pub fn ttfts(&self) -> Vec<f64> {
@@ -440,6 +535,32 @@ mod tests {
         assert!((m.tpot_summary().mean - 0.1).abs() < 1e-9);
         assert!((m.mean_hit_ratio() - 0.5).abs() < 1e-9);
         assert!(m.output_throughput() > 0.0);
+    }
+
+    #[test]
+    fn slo_and_goodput_accounting() {
+        let mut m = RunMetrics::new(1);
+        // TTFT 0.1 s, TPOT 0.1 s -> good under (0.2, 0.2).
+        m.records.push(mk_record(1, 0, 100_000, 1_100_000, 11));
+        // TTFT 0.3 s -> blown.
+        m.records.push(mk_record(2, 0, 300_000, 2_300_000, 21));
+        // Single-token: only TTFT counts (0.1 s -> good).
+        m.records.push(mk_record(3, 0, 100_000, 100_000, 1));
+        m.duration_us = 2_000_000;
+        let slo = SloSpec::new(0.2, 0.2);
+        assert!(slo.met_by(&m.records[0]));
+        assert!(!slo.met_by(&m.records[1]));
+        assert!(slo.met_by(&m.records[2]));
+        assert_eq!(m.slo_good(slo), 2);
+        assert!((m.slo_attainment(slo) - 2.0 / 3.0).abs() < 1e-12);
+        // No admission policy: goodput denominates over completions.
+        assert!((m.goodput_ratio(slo) - 2.0 / 3.0).abs() < 1e-12);
+        assert!((m.goodput_rps(slo) - 1.0).abs() < 1e-12);
+        // With admission counters, shed requests drag goodput down.
+        m.overload.offered = 8;
+        m.overload.admitted = 3;
+        m.overload.shed = 5;
+        assert!((m.goodput_ratio(slo) - 0.25).abs() < 1e-12);
     }
 
     #[test]

@@ -54,16 +54,28 @@ use crate::hotspot::HotspotGuarded;
 use crate::router::Policy;
 use crate::simulator::LatencySimulator;
 
+/// The rejection every registry entry point shares: unknown names fail
+/// with an error that lists every valid name (the CLI and the benches
+/// surface it verbatim).
+fn unknown_policy_error(name: &str) -> String {
+    format!(
+        "unknown policy '{name}'; valid policies: {} (plus ablations: \
+         lmetric_hit_ratio, lmetric_tokens)",
+        all_names().join(", ")
+    )
+}
+
 /// Build a policy by name. `param` is the policy's single hyperparameter
 /// knob (λ / α / Range / T / τ-ms; ignored where hyperparameter-free).
 /// Simulation-based policies get a *tuned* simulator for `profile`;
 /// use [`build_with_simulator`] to study mis-tuned ones (Fig 15).
+/// Unknown names are rejected with the name-listing error.
 pub fn build(
     name: &str,
     param: f64,
     profile: &ModelProfile,
     chunk_budget: usize,
-) -> Option<Box<dyn Policy>> {
+) -> Result<Box<dyn Policy>, String> {
     let sim = LatencySimulator::tuned(profile.clone(), chunk_budget);
     build_with_simulator(name, param, sim)
 }
@@ -73,8 +85,8 @@ pub fn build_with_simulator(
     name: &str,
     param: f64,
     sim: LatencySimulator,
-) -> Option<Box<dyn Policy>> {
-    Some(match name {
+) -> Result<Box<dyn Policy>, String> {
+    Ok(match name {
         "round_robin" => Box::new(RoundRobin::new()),
         "random" => Box::new(Random::new(7)),
         "vllm" => Box::new(Vllm::new()),
@@ -97,7 +109,7 @@ pub fn build_with_simulator(
         )),
         "lmetric_guarded" => Box::new(HotspotGuarded::new()),
         "lmetric_safe" => Box::new(GuardedLMetric::new()),
-        _ => return None,
+        _ => return Err(unknown_policy_error(name)),
     })
 }
 
@@ -116,20 +128,13 @@ pub fn default_param(name: &str) -> f64 {
 }
 
 /// Build a policy with its default hyperparameter. Unknown names are
-/// rejected with an error that lists every valid name (the CLI and the
-/// benches surface it verbatim).
+/// rejected with the same name-listing error as [`build`].
 pub fn build_default(
     name: &str,
     profile: &ModelProfile,
     chunk_budget: usize,
 ) -> Result<Box<dyn Policy>, String> {
-    build(name, default_param(name), profile, chunk_budget).ok_or_else(|| {
-        format!(
-            "unknown policy '{name}'; valid policies: {} (plus ablations: \
-             lmetric_hit_ratio, lmetric_tokens)",
-            all_names().join(", ")
-        )
-    })
+    build(name, default_param(name), profile, chunk_budget)
 }
 
 /// All policy names (for `lmetric replay --policy all` sweeps).
@@ -161,11 +166,25 @@ mod tests {
         let p = ModelProfile::moe_30b();
         for name in all_names() {
             let pol = build(name, 0.7, &p, 256);
-            assert!(pol.is_some(), "missing policy {name}");
+            assert!(pol.is_ok(), "missing policy {name}");
         }
-        assert!(build("lmetric_hit_ratio", 0.0, &p, 256).is_some());
-        assert!(build("lmetric_tokens", 0.0, &p, 256).is_some());
-        assert!(build("nope", 0.0, &p, 256).is_none());
+        assert!(build("lmetric_hit_ratio", 0.0, &p, 256).is_ok());
+        assert!(build("lmetric_tokens", 0.0, &p, 256).is_ok());
+        assert!(build("nope", 0.0, &p, 256).is_err());
+    }
+
+    #[test]
+    fn every_entry_point_rejects_with_the_name_listing_error() {
+        let p = ModelProfile::moe_30b();
+        let sim = LatencySimulator::tuned(p.clone(), 256);
+        let via_build = build("no_such_policy", 0.7, &p, 256).err().unwrap();
+        let via_sim = build_with_simulator("no_such_policy", 0.7, sim).err().unwrap();
+        let via_default = build_default("no_such_policy", &p, 256).err().unwrap();
+        assert_eq!(via_build, via_sim);
+        assert_eq!(via_build, via_default);
+        for name in ["lmetric_safe", "sticky", "smetric"] {
+            assert!(via_build.contains(name), "error lists '{name}': {via_build}");
+        }
     }
 
     #[test]

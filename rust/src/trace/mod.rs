@@ -3,15 +3,19 @@
 //! rate-scaling methodology, the [`adversarial`] generators that
 //! synthesize the failure-condition guard's misranking regimes on
 //! demand (idle-fleet bursts, shared-prefix floods, spread-window
-//! stress), and the closed-loop [`sessions`] engine (multi-turn
-//! chat / API-call / coding-agent traces with reactive arrivals).
+//! stress), the closed-loop [`sessions`] engine (multi-turn
+//! chat / API-call / coding-agent traces with reactive arrivals), and
+//! the [`open`] engine (open-system Poisson session arrivals under
+//! time-varying rate programs, with heterogeneous archetype mixes).
 
 pub mod adversarial;
+pub mod open;
 mod replay;
 pub mod sessions;
 mod synth;
 
 pub use adversarial::{generate_adversarial, AdversarialScenario, AdversarialSpec};
+pub use open::{generate_open, sample_arrivals, OpenSpec, RateProgram, RateSegment};
 pub use replay::{load_jsonl, save_jsonl};
 pub use sessions::{
     generate_sessions, Session, SessionKind, SessionSpec, SessionTrace, SessionTurn,
@@ -77,20 +81,40 @@ impl Trace {
         (n / 2) as f64 / ((hi - lo) as f64 / 1e6)
     }
 
-    /// Rescale arrival times so the mean rate becomes `target_rps`
-    /// (§4.1: traces are scaled to the testbed's capacity; burst
-    /// structure is preserved because all gaps scale uniformly).
-    pub fn scale_to_rps(&mut self, target_rps: f64) {
-        let cur = self.mean_rps();
+    /// A copy of this trace with arrival times rescaled so the mean rate
+    /// becomes `target_rps` (§4.1: traces are scaled to the testbed's
+    /// capacity; burst structure is preserved because all gaps scale
+    /// uniformly). Builder-style: the receiver is untouched, so a trace
+    /// whose `Arc`-shared token/hash chains are already handed out can
+    /// be rescaled without mutating behind anyone's back.
+    pub fn with_rps(&self, target_rps: f64) -> Trace {
+        let mut out = self.clone();
+        let cur = out.mean_rps();
         if !cur.is_finite() || cur <= 0.0 || target_rps <= 0.0 {
-            return;
+            return out;
         }
         let factor = cur / target_rps;
-        let t0 = self.requests.first().map(|r| r.req.arrival_us).unwrap_or(0);
-        for tr in self.requests.iter_mut() {
+        let t0 = out.requests.first().map(|r| r.req.arrival_us).unwrap_or(0);
+        for tr in out.requests.iter_mut() {
             let rel = tr.req.arrival_us - t0;
             tr.req.arrival_us = (rel as f64 * factor) as u64;
         }
+        out
+    }
+
+    /// Rescale arrival times in place so the mean rate becomes
+    /// `target_rps`. Deprecated in favour of the non-mutating
+    /// [`Trace::with_rps`]; kept as a delegating shim for old callers.
+    pub fn scale_to_rps(&mut self, target_rps: f64) {
+        *self = self.with_rps(target_rps);
+    }
+
+    /// A copy holding only the first `n` requests (quick-mode benches).
+    /// Builder-style counterpart of [`Trace::truncate`].
+    pub fn take_n(&self, n: usize) -> Trace {
+        let mut out = self.clone();
+        out.requests.truncate(n);
+        out
     }
 
     /// Mean input/output token counts (Fig 5 style characterization).
@@ -122,9 +146,10 @@ impl Trace {
         }
     }
 
-    /// Truncate to the first `n` requests (quick-mode benches).
+    /// Truncate in place to the first `n` requests. Deprecated in favour
+    /// of the non-mutating [`Trace::take_n`]; kept as a delegating shim.
     pub fn truncate(&mut self, n: usize) {
-        self.requests.truncate(n);
+        *self = self.take_n(n);
     }
 }
 
@@ -165,6 +190,33 @@ mod tests {
             if *b > 1000.0 {
                 assert!((a / b - 0.5).abs() < 0.01);
             }
+        }
+    }
+
+    #[test]
+    fn builder_scaling_leaves_receiver_untouched_and_shims_delegate() {
+        let t = tiny_trace();
+        let before: Vec<u64> = t.requests.iter().map(|r| r.req.arrival_us).collect();
+        let scaled = t.with_rps(30.0);
+        assert!((scaled.mean_rps() - 30.0).abs() / 30.0 < 0.02);
+        let after: Vec<u64> = t.requests.iter().map(|r| r.req.arrival_us).collect();
+        assert_eq!(before, after, "with_rps must not mutate the receiver");
+        // The in-place shims produce exactly the builder results.
+        let mut shim = t.clone();
+        shim.scale_to_rps(30.0);
+        let shim_ts: Vec<u64> = shim.requests.iter().map(|r| r.req.arrival_us).collect();
+        let built_ts: Vec<u64> = scaled.requests.iter().map(|r| r.req.arrival_us).collect();
+        assert_eq!(shim_ts, built_ts);
+
+        let taken = t.take_n(50);
+        assert_eq!(taken.requests.len(), 50);
+        assert_eq!(t.requests.len(), 200, "take_n must not mutate the receiver");
+        let mut shim2 = t.clone();
+        shim2.truncate(50);
+        assert_eq!(shim2.requests.len(), 50);
+        for (a, b) in taken.requests.iter().zip(&shim2.requests) {
+            assert_eq!(a.req.id, b.req.id);
+            assert_eq!(a.req.arrival_us, b.req.arrival_us);
         }
     }
 

@@ -1,0 +1,607 @@
+//! Open-system traffic: Poisson session arrivals under *time-varying
+//! rate programs*, with heterogeneous archetype mixes in one trace.
+//!
+//! The closed-loop generator in [`super::sessions`] fixes the offered
+//! load implicitly: each archetype's `session_rate` is constant and the
+//! trace ends after `n_requests` turns. Production failure modes live in
+//! the *open* regime instead — arrivals keep coming whether or not the
+//! cluster keeps up, and the arrival rate itself moves (diurnal curves,
+//! ramps, flash crowds). This module generates that regime:
+//!
+//! * a [`RateProgram`] is a composable piecewise sequence of
+//!   [`RateSegment`]s (constant / ramp / diurnal / flash crowd), each
+//!   with a closed-form rate integral so tests can compare realized
+//!   arrival counts against `∫λ(t)dt` per segment;
+//! * arrivals are sampled by **Poisson thinning**: a homogeneous
+//!   process at the program's peak rate, keeping each candidate with
+//!   probability `λ(t)/λ_peak` (mirrored and fuzzed out-of-band by
+//!   `python/tests/test_rate_program.py`);
+//! * each arrival starts a *session* of a Zipf-popular class, drawn from
+//!   a weighted mix of the [`SessionKind`] archetypes, grown by the
+//!   exact same turn-chain machinery as the closed-loop generator —
+//!   later turns stay reactive (released at previous completion +
+//!   think), only the session *starts* are open-loop.
+//!
+//! Class-id spaces are offset per archetype so e.g. chat class 3 and
+//! API class 3 never alias to the same shared-prefix content.
+
+use crate::util::rng::Zipf;
+use crate::util::Rng;
+
+use super::sessions::{build_turn_chain, Session, SessionKind, SessionSpec, SessionTrace};
+
+/// One piece of a [`RateProgram`]: session-arrival rate λ(t) over a
+/// local time span `[0, dur_s)`, with a closed-form integral.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RateSegment {
+    /// λ(t) = rps.
+    Constant { rps: f64, dur_s: f64 },
+    /// Linear ramp: λ(t) = from + (to − from)·t/dur.
+    Ramp {
+        from_rps: f64,
+        to_rps: f64,
+        dur_s: f64,
+    },
+    /// Diurnal curve: λ(t) = base·(1 + A·sin(2πt/P)), A ∈ [0, 1].
+    Diurnal {
+        base_rps: f64,
+        amplitude: f64,
+        period_s: f64,
+        dur_s: f64,
+    },
+    /// Flash crowd: λ = base everywhere except ×`mult` on
+    /// `[at_s, at_s + burst_s)`.
+    Flash {
+        base_rps: f64,
+        mult: f64,
+        at_s: f64,
+        burst_s: f64,
+        dur_s: f64,
+    },
+}
+
+impl RateSegment {
+    pub fn dur_s(&self) -> f64 {
+        match *self {
+            RateSegment::Constant { dur_s, .. }
+            | RateSegment::Ramp { dur_s, .. }
+            | RateSegment::Diurnal { dur_s, .. }
+            | RateSegment::Flash { dur_s, .. } => dur_s,
+        }
+    }
+
+    /// λ at local time `t` ∈ [0, dur).
+    pub fn rate_at(&self, t: f64) -> f64 {
+        match *self {
+            RateSegment::Constant { rps, .. } => rps,
+            RateSegment::Ramp { from_rps, to_rps, dur_s } => {
+                from_rps + (to_rps - from_rps) * (t / dur_s)
+            }
+            RateSegment::Diurnal { base_rps, amplitude, period_s, .. } => {
+                let w = 2.0 * std::f64::consts::PI / period_s;
+                base_rps * (1.0 + amplitude * (w * t).sin())
+            }
+            RateSegment::Flash { base_rps, mult, at_s, burst_s, .. } => {
+                if t >= at_s && t < at_s + burst_s {
+                    base_rps * mult
+                } else {
+                    base_rps
+                }
+            }
+        }
+    }
+
+    /// ∫₀ᵗ λ(u) du in closed form, local `t` ∈ [0, dur].
+    pub fn integral_to(&self, t: f64) -> f64 {
+        match *self {
+            RateSegment::Constant { rps, .. } => rps * t,
+            RateSegment::Ramp { from_rps, to_rps, dur_s } => {
+                from_rps * t + (to_rps - from_rps) * t * t / (2.0 * dur_s)
+            }
+            RateSegment::Diurnal { base_rps, amplitude, period_s, .. } => {
+                let w = 2.0 * std::f64::consts::PI / period_s;
+                base_rps * (t + amplitude / w * (1.0 - (w * t).cos()))
+            }
+            RateSegment::Flash { base_rps, mult, at_s, burst_s, .. } => {
+                let overlap = (t.min(at_s + burst_s) - at_s).max(0.0);
+                base_rps * t + base_rps * (mult - 1.0) * overlap
+            }
+        }
+    }
+
+    /// An upper bound on λ over the segment (tight for all shapes).
+    pub fn peak(&self) -> f64 {
+        match *self {
+            RateSegment::Constant { rps, .. } => rps,
+            RateSegment::Ramp { from_rps, to_rps, .. } => from_rps.max(to_rps),
+            RateSegment::Diurnal { base_rps, amplitude, .. } => base_rps * (1.0 + amplitude),
+            RateSegment::Flash { base_rps, mult, .. } => base_rps * mult.max(1.0),
+        }
+    }
+
+    /// The same shape with every rate field multiplied by `f` (the
+    /// relative profile — ramp slope, diurnal amplitude ratio, flash
+    /// multiplier — is preserved).
+    pub fn scaled(&self, f: f64) -> RateSegment {
+        match *self {
+            RateSegment::Constant { rps, dur_s } => RateSegment::Constant {
+                rps: rps * f,
+                dur_s,
+            },
+            RateSegment::Ramp { from_rps, to_rps, dur_s } => RateSegment::Ramp {
+                from_rps: from_rps * f,
+                to_rps: to_rps * f,
+                dur_s,
+            },
+            RateSegment::Diurnal { base_rps, amplitude, period_s, dur_s } => RateSegment::Diurnal {
+                base_rps: base_rps * f,
+                amplitude,
+                period_s,
+                dur_s,
+            },
+            RateSegment::Flash { base_rps, mult, at_s, burst_s, dur_s } => RateSegment::Flash {
+                base_rps: base_rps * f,
+                mult,
+                at_s,
+                burst_s,
+                dur_s,
+            },
+        }
+    }
+
+    fn shape_name(&self) -> &'static str {
+        match self {
+            RateSegment::Constant { .. } => "constant",
+            RateSegment::Ramp { .. } => "ramp",
+            RateSegment::Diurnal { .. } => "diurnal",
+            RateSegment::Flash { .. } => "flash",
+        }
+    }
+}
+
+/// A piecewise rate program: segments played back to back. Time past the
+/// last segment has rate 0 (the trace simply ends).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RateProgram {
+    pub segments: Vec<RateSegment>,
+}
+
+impl RateProgram {
+    pub fn new(segments: Vec<RateSegment>) -> RateProgram {
+        RateProgram { segments }
+    }
+
+    pub fn constant(rps: f64, dur_s: f64) -> RateProgram {
+        RateProgram::new(vec![RateSegment::Constant { rps, dur_s }])
+    }
+
+    pub fn ramp(from_rps: f64, to_rps: f64, dur_s: f64) -> RateProgram {
+        RateProgram::new(vec![RateSegment::Ramp {
+            from_rps,
+            to_rps,
+            dur_s,
+        }])
+    }
+
+    pub fn diurnal(base_rps: f64, amplitude: f64, period_s: f64, dur_s: f64) -> RateProgram {
+        debug_assert!((0.0..=1.0).contains(&amplitude), "amplitude in [0,1]");
+        RateProgram::new(vec![RateSegment::Diurnal {
+            base_rps,
+            amplitude,
+            period_s,
+            dur_s,
+        }])
+    }
+
+    pub fn flash_crowd(
+        base_rps: f64,
+        mult: f64,
+        at_s: f64,
+        burst_s: f64,
+        dur_s: f64,
+    ) -> RateProgram {
+        RateProgram::new(vec![RateSegment::Flash {
+            base_rps,
+            mult,
+            at_s,
+            burst_s,
+            dur_s,
+        }])
+    }
+
+    /// Append another segment (builder-style composition).
+    pub fn then(mut self, seg: RateSegment) -> RateProgram {
+        self.segments.push(seg);
+        self
+    }
+
+    pub fn duration_s(&self) -> f64 {
+        self.segments.iter().map(|s| s.dur_s()).sum()
+    }
+
+    /// λ at global time `t` (0 outside the program).
+    pub fn rate_at(&self, t: f64) -> f64 {
+        let mut start = 0.0;
+        for seg in &self.segments {
+            let end = start + seg.dur_s();
+            if t >= start && t < end {
+                return seg.rate_at(t - start);
+            }
+            start = end;
+        }
+        0.0
+    }
+
+    /// ∫ λ(t) dt over `[t0, t1]`, in closed form per segment.
+    pub fn integral(&self, t0: f64, t1: f64) -> f64 {
+        let mut total = 0.0;
+        let mut start = 0.0;
+        for seg in &self.segments {
+            let end = start + seg.dur_s();
+            let lo = (t0.max(start) - start).clamp(0.0, seg.dur_s());
+            let hi = (t1.min(end) - start).clamp(0.0, seg.dur_s());
+            if hi > lo {
+                total += seg.integral_to(hi) - seg.integral_to(lo);
+            }
+            start = end;
+        }
+        total
+    }
+
+    /// Peak rate across all segments (the thinning envelope).
+    pub fn peak_rate(&self) -> f64 {
+        self.segments.iter().map(|s| s.peak()).fold(0.0, f64::max)
+    }
+
+    /// Mean rate over the whole program.
+    pub fn mean_rate(&self) -> f64 {
+        let d = self.duration_s();
+        if d > 0.0 {
+            self.integral(0.0, d) / d
+        } else {
+            0.0
+        }
+    }
+
+    /// The program with every segment's rates multiplied by `f`.
+    pub fn scaled(&self, f: f64) -> RateProgram {
+        RateProgram::new(self.segments.iter().map(|s| s.scaled(f)).collect())
+    }
+
+    /// A short shape label ("constant", "ramp+flash", ...) for trace names.
+    pub fn label(&self) -> String {
+        let names: Vec<&str> = self.segments.iter().map(|s| s.shape_name()).collect();
+        names.join("+")
+    }
+}
+
+/// Sample arrival times (seconds) of a non-homogeneous Poisson process
+/// following `program`, by thinning a homogeneous process at the peak
+/// rate. The draw order — one `exp` gap, then one `gen_bool` accept per
+/// candidate — is a compatibility contract with the Python mirror suite
+/// (`python/tests/test_rate_program.py`).
+pub fn sample_arrivals(program: &RateProgram, rng: &mut Rng) -> Vec<f64> {
+    let peak = program.peak_rate();
+    let end = program.duration_s();
+    let mut out = Vec::new();
+    if peak <= 0.0 || end <= 0.0 {
+        return out;
+    }
+    let mut t = 0.0;
+    loop {
+        t += rng.exp(1.0 / peak);
+        if t >= end {
+            break;
+        }
+        if rng.gen_bool(program.rate_at(t) / peak) {
+            out.push(t);
+        }
+    }
+    out
+}
+
+/// Spec for one open-arrival trace: a rate program driving session
+/// starts, a weighted archetype mix, and an optional global turn cap.
+#[derive(Debug, Clone)]
+pub struct OpenSpec {
+    /// Session-start arrival rate over time (sessions/s).
+    pub program: RateProgram,
+    /// Archetype mix: `(kind, weight)` pairs; weights need not sum to 1.
+    pub mix: Vec<(SessionKind, f64)>,
+    pub seed: u64,
+    /// Cap on total turns across the trace (0 = uncapped: the program's
+    /// duration alone bounds the trace).
+    pub max_requests: usize,
+}
+
+impl OpenSpec {
+    /// Default production-flavoured mix: half chat, a third API chains,
+    /// the rest coding agents.
+    pub fn new(program: RateProgram, seed: u64) -> OpenSpec {
+        OpenSpec {
+            program,
+            mix: vec![
+                (SessionKind::Chat, 0.5),
+                (SessionKind::ApiCall, 0.3),
+                (SessionKind::CodingAgent, 0.2),
+            ],
+            seed,
+            max_requests: 0,
+        }
+    }
+
+    pub fn with_mix(mut self, mix: Vec<(SessionKind, f64)>) -> OpenSpec {
+        self.mix = mix;
+        self
+    }
+
+    pub fn with_cap(mut self, max_requests: usize) -> OpenSpec {
+        self.max_requests = max_requests;
+        self
+    }
+
+    /// The disjoint class-id range each archetype's sessions draw from
+    /// (ranges are offset so archetypes never alias shared prefixes).
+    /// Matches [`generate_open`]'s assignment exactly.
+    pub fn class_ranges(&self) -> Vec<(SessionKind, std::ops::Range<u32>)> {
+        let mut out = Vec::with_capacity(self.mix.len());
+        let mut offset = 0u32;
+        for &(kind, _) in &self.mix {
+            let n = SessionSpec::preset(kind, 0, self.seed).n_classes as u32;
+            out.push((kind, offset..offset + n));
+            offset += n;
+        }
+        out
+    }
+}
+
+/// Generate an open-arrival session trace: session starts follow the
+/// rate program; each session's archetype is drawn from the mix and its
+/// turn chain grows through the same machinery (and with the same
+/// statistics) as [`super::generate_sessions`]. Later turns of a session
+/// stay reactive — only the *starts* are open-loop. Deterministic in
+/// `spec` (seed, program, mix, cap).
+pub fn generate_open(spec: &OpenSpec) -> SessionTrace {
+    assert!(!spec.mix.is_empty(), "open trace needs at least one archetype");
+    let mut root = Rng::new(spec.seed ^ 0x09e4_0000_0007);
+    let mut arrival_rng = root.fork(1);
+    let mut session_rng = root.fork(2);
+
+    // Per-kind presets, Zipf samplers, and disjoint class-id offsets.
+    let weights: Vec<f64> = spec.mix.iter().map(|&(_, w)| w).collect();
+    let mut kinds: Vec<(SessionSpec, Zipf, u32)> = Vec::with_capacity(spec.mix.len());
+    let mut offset = 0u32;
+    for &(kind, _) in &spec.mix {
+        let kspec = SessionSpec::preset(kind, 0, spec.seed);
+        let zipf = Zipf::new(kspec.n_classes, kspec.class_skew);
+        let n = kspec.n_classes as u32;
+        kinds.push((kspec, zipf, offset));
+        offset += n;
+    }
+
+    let starts = sample_arrivals(&spec.program, &mut arrival_rng);
+    let budget_total = if spec.max_requests == 0 {
+        usize::MAX
+    } else {
+        spec.max_requests
+    };
+    let mut total = 0usize;
+    let mut sessions: Vec<Session> = Vec::with_capacity(starts.len());
+    let mut sid: u64 = 0;
+    for t_s in starts {
+        if total >= budget_total {
+            break;
+        }
+        sid += 1;
+        let ki = session_rng.categorical(&weights);
+        let (kspec, zipf, class_offset) = &kinds[ki];
+        let class = zipf.sample(&mut session_rng) as u32 + class_offset;
+        let start_us = (t_s * 1e6) as u64;
+        let budget = budget_total - total;
+        let turns = build_turn_chain(kspec, &mut session_rng, class, sid, start_us, budget);
+        total += turns.len();
+        sessions.push(Session {
+            sid,
+            class_id: class,
+            start_us,
+            turns,
+        });
+    }
+
+    sessions.sort_by_key(|s| (s.start_us, s.sid));
+    let mut id = 0u64;
+    for s in sessions.iter_mut() {
+        for t in s.turns.iter_mut() {
+            t.req.id = id;
+            id += 1;
+        }
+    }
+    SessionTrace {
+        name: format!("open-{}", spec.program.label()),
+        sessions,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn numeric_integral(p: &RateProgram, t0: f64, t1: f64) -> f64 {
+        let n = 20_000;
+        let dt = (t1 - t0) / n as f64;
+        (0..n).map(|i| p.rate_at(t0 + (i as f64 + 0.5) * dt) * dt).sum()
+    }
+
+    #[test]
+    fn closed_form_integrals_match_quadrature() {
+        let programs = [
+            RateProgram::constant(4.0, 60.0),
+            RateProgram::ramp(1.0, 9.0, 120.0),
+            RateProgram::diurnal(5.0, 0.6, 40.0, 100.0),
+            RateProgram::flash_crowd(3.0, 6.0, 20.0, 10.0, 80.0),
+            RateProgram::constant(2.0, 30.0)
+                .then(RateSegment::Ramp {
+                    from_rps: 2.0,
+                    to_rps: 8.0,
+                    dur_s: 40.0,
+                })
+                .then(RateSegment::Flash {
+                    base_rps: 8.0,
+                    mult: 3.0,
+                    at_s: 5.0,
+                    burst_s: 10.0,
+                    dur_s: 30.0,
+                }),
+        ];
+        for p in &programs {
+            let d = p.duration_s();
+            for (t0, t1) in [(0.0, d), (0.1 * d, 0.7 * d), (0.5 * d, 0.9 * d)] {
+                let exact = p.integral(t0, t1);
+                let approx = numeric_integral(p, t0, t1);
+                assert!(
+                    (exact - approx).abs() < 1e-2 * approx.max(1.0),
+                    "{}: integral({t0},{t1}) exact {exact} vs quad {approx}",
+                    p.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn realized_counts_match_integral_per_segment() {
+        // ±(5σ + 5) with σ = √Λ keeps this seed-stable while still
+        // catching systematic thinning errors.
+        let p = RateProgram::constant(6.0, 200.0)
+            .then(RateSegment::Ramp {
+                from_rps: 6.0,
+                to_rps: 18.0,
+                dur_s: 200.0,
+            })
+            .then(RateSegment::Diurnal {
+                base_rps: 12.0,
+                amplitude: 0.5,
+                period_s: 60.0,
+                dur_s: 200.0,
+            });
+        let mut rng = Rng::new(77);
+        let arrivals = sample_arrivals(&p, &mut rng);
+        let mut start = 0.0;
+        for seg in &p.segments {
+            let end = start + seg.dur_s();
+            let expected = p.integral(start, end);
+            let got = arrivals.iter().filter(|&&t| t >= start && t < end).count() as f64;
+            let tol = 5.0 * expected.sqrt() + 5.0;
+            assert!(
+                (got - expected).abs() < tol,
+                "segment [{start},{end}): got {got}, expected {expected} ± {tol}"
+            );
+            start = end;
+        }
+        let total_expected = p.integral(0.0, p.duration_s());
+        let tol = 5.0 * total_expected.sqrt() + 5.0;
+        assert!((arrivals.len() as f64 - total_expected).abs() < tol);
+    }
+
+    #[test]
+    fn flash_crowd_burst_is_aligned_and_dense() {
+        let p = RateProgram::flash_crowd(2.0, 10.0, 100.0, 20.0, 300.0);
+        let mut rng = Rng::new(5);
+        let arrivals = sample_arrivals(&p, &mut rng);
+        let in_burst = arrivals.iter().filter(|&&t| (100.0..120.0).contains(&t)).count();
+        let before = arrivals.iter().filter(|&&t| (60.0..100.0).contains(&t)).count();
+        // Burst window: λ = 20 over 20 s (Λ = 400); the 40 s right before
+        // it: λ = 2 (Λ = 80). Densities must separate decisively.
+        let burst_density = in_burst as f64 / 20.0;
+        let base_density = before as f64 / 40.0;
+        assert!(
+            burst_density > 4.0 * base_density,
+            "burst {burst_density}/s vs base {base_density}/s"
+        );
+        assert!(arrivals.windows(2).all(|w| w[0] <= w[1]), "arrivals sorted");
+    }
+
+    #[test]
+    fn generate_open_is_deterministic_and_mixed() {
+        let spec = OpenSpec::new(RateProgram::constant(8.0, 120.0), 42);
+        let a = generate_open(&spec);
+        let b = generate_open(&spec);
+        assert_eq!(a.n_turns(), b.n_turns());
+        for (sa, sb) in a.sessions.iter().zip(&b.sessions) {
+            assert_eq!(sa.start_us, sb.start_us);
+            assert_eq!(sa.class_id, sb.class_id);
+            assert_eq!(sa.turns.len(), sb.turns.len());
+            for (ta, tb) in sa.turns.iter().zip(&sb.turns) {
+                assert_eq!(ta.req.tokens, tb.req.tokens);
+                assert_eq!(ta.think_us, tb.think_us);
+            }
+        }
+        // Every archetype of the default mix shows up, identified by its
+        // disjoint class range.
+        let ranges = spec.class_ranges();
+        assert_eq!(ranges.len(), 3);
+        for (kind, range) in &ranges {
+            let n = a.sessions.iter().filter(|s| range.contains(&s.class_id)).count();
+            assert!(n > 0, "archetype {} missing from the mix", kind.name());
+        }
+        // Ranges tile the class-id space with no overlap.
+        for w in ranges.windows(2) {
+            assert_eq!(w[0].1.end, w[1].1.start);
+        }
+        // Dense ids in (session, turn) order, session ids nonzero.
+        let mut expect = 0u64;
+        for s in &a.sessions {
+            assert!(s.sid != 0);
+            for t in &s.turns {
+                assert_eq!(t.req.id, expect);
+                expect += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn open_cap_bounds_turns() {
+        let spec = OpenSpec::new(RateProgram::constant(8.0, 600.0), 7).with_cap(250);
+        let t = generate_open(&spec);
+        assert_eq!(t.n_turns(), 250, "cap must bind on a long program");
+        let uncapped = generate_open(&OpenSpec::new(RateProgram::constant(8.0, 600.0), 7));
+        assert!(uncapped.n_turns() > 250);
+        // The capped trace is a prefix of the uncapped one (same seed →
+        // same draws until the cap bites).
+        for (sa, sb) in t.sessions.iter().zip(&uncapped.sessions) {
+            assert_eq!(sa.start_us, sb.start_us);
+            assert_eq!(sa.class_id, sb.class_id);
+        }
+    }
+
+    #[test]
+    fn scaled_program_scales_mean_rate_and_load() {
+        let p = RateProgram::ramp(2.0, 6.0, 100.0);
+        let p2 = p.scaled(2.0);
+        assert!((p2.mean_rate() - 2.0 * p.mean_rate()).abs() < 1e-9);
+        assert!((p2.peak_rate() - 12.0).abs() < 1e-9);
+        assert!((p2.duration_s() - p.duration_s()).abs() < 1e-12);
+        // More sessions arrive under the scaled program.
+        let lo = generate_open(&OpenSpec::new(p, 3));
+        let hi = generate_open(&OpenSpec::new(p2, 3));
+        assert!(hi.sessions.len() > lo.sessions.len());
+    }
+
+    #[test]
+    fn reactive_turns_carry_think_time() {
+        let spec = OpenSpec::new(RateProgram::constant(6.0, 120.0), 11);
+        let t = generate_open(&spec);
+        let mut multi = 0usize;
+        for s in &t.sessions {
+            for (ti, turn) in s.turns.iter().enumerate() {
+                if ti == 0 {
+                    assert_eq!(turn.req.arrival_us, s.start_us);
+                    assert_eq!(turn.think_us, 0);
+                } else {
+                    assert!(turn.think_us > 0);
+                    multi += 1;
+                }
+            }
+        }
+        assert!(multi > 20, "mix must contain multi-turn sessions");
+    }
+}

@@ -261,6 +261,89 @@ pub fn turn_growth(
         .collect()
 }
 
+/// Build one session's turn chain: exactly the per-session rng draws
+/// [`generate_sessions`] has always made, in the same order (system-prompt
+/// length → turn count → per-turn user/reply/think samples), extracted so
+/// the open-arrival engine ([`super::open`]) can grow archetype-mix
+/// sessions from the identical machinery. `budget` caps how many turns are
+/// materialized (the caller's global request budget); capped turns draw
+/// nothing, exactly like the old in-loop break, so every pre-existing
+/// trace replays byte-for-byte.
+pub(crate) fn build_turn_chain(
+    spec: &SessionSpec,
+    rng: &mut Rng,
+    class: u32,
+    sid: u64,
+    start_us: u64,
+    budget: usize,
+) -> Vec<SessionTurn> {
+    let sys_len = clamp_len(
+        rng.lognormal(spec.sys_prompt_median, 0.3),
+        32,
+        spec.max_input / 2,
+    );
+    let p_stop = 1.0 / spec.mean_turns.max(1.0);
+    let mut n_turns = 1usize;
+    while !rng.gen_bool(p_stop) && n_turns < spec.max_turns {
+        n_turns += 1;
+    }
+
+    let mut prompt: Vec<u32> = span(class, 0, sys_len, spec.vocab);
+    let mut turns: Vec<SessionTurn> = Vec::with_capacity(n_turns.min(budget));
+    for turn in 0..n_turns.min(budget) {
+        // Fresh user/tool span, unique to this (session, turn).
+        let user_len = clamp_len(
+            rng.lognormal(spec.user_span_median, 0.6),
+            4,
+            spec.max_input / 4,
+        );
+        prompt.extend(span(
+            class,
+            sid * 100_000 + turn as u64 * 2 + 1,
+            user_len,
+            spec.vocab,
+        ));
+        if prompt.len() > spec.max_input {
+            prompt.truncate(spec.max_input);
+        }
+        let output_len =
+            clamp_len(rng.lognormal(spec.output_median, spec.output_sigma), 1, 4096) as u32;
+
+        let tokens: Arc<[u32]> = prompt.as_slice().into();
+        let hashes = block_hashes(&tokens);
+        // Deterministic assistant reply: the next turn's prompt (and
+        // the completion-time cache chain) extend it.
+        let assistant = span(
+            class,
+            sid * 100_000 + turn as u64 * 2 + 2,
+            output_len as usize,
+            spec.vocab,
+        );
+        prompt.extend(&assistant);
+        let full_hashes = block_hashes(&prompt);
+
+        let think_us = if turn == 0 {
+            0
+        } else {
+            (rng.exp(spec.think_time_s) * 1e6) as u64
+        };
+        turns.push(SessionTurn {
+            req: Request {
+                id: 0, // dense ids assigned by the caller, in (session, turn) order
+                arrival_us: if turn == 0 { start_us } else { 0 },
+                class_id: class,
+                session_id: sid,
+                tokens,
+                output_len,
+                block_hashes: hashes.into(),
+            },
+            full_hashes: full_hashes.into(),
+            think_us,
+        });
+    }
+    turns
+}
+
 /// Generate a closed-loop session trace. Deterministic in
 /// `(spec.kind, spec.n_requests, spec.seed)`.
 ///
@@ -283,75 +366,9 @@ pub fn generate_sessions(spec: &SessionSpec) -> SessionTrace {
         sid += 1;
         let class = zipf.sample(&mut rng) as u32;
         let start_us = (clock_s * 1e6) as u64;
-
-        let sys_len = clamp_len(
-            rng.lognormal(spec.sys_prompt_median, 0.3),
-            32,
-            spec.max_input / 2,
-        );
-        let p_stop = 1.0 / spec.mean_turns.max(1.0);
-        let mut n_turns = 1usize;
-        while !rng.gen_bool(p_stop) && n_turns < spec.max_turns {
-            n_turns += 1;
-        }
-
-        let mut prompt: Vec<u32> = span(class, 0, sys_len, spec.vocab);
-        let mut turns: Vec<SessionTurn> = Vec::with_capacity(n_turns);
-        for turn in 0..n_turns {
-            if total >= spec.n_requests {
-                break;
-            }
-            // Fresh user/tool span, unique to this (session, turn).
-            let user_len = clamp_len(
-                rng.lognormal(spec.user_span_median, 0.6),
-                4,
-                spec.max_input / 4,
-            );
-            prompt.extend(span(
-                class,
-                sid * 100_000 + turn as u64 * 2 + 1,
-                user_len,
-                spec.vocab,
-            ));
-            if prompt.len() > spec.max_input {
-                prompt.truncate(spec.max_input);
-            }
-            let output_len =
-                clamp_len(rng.lognormal(spec.output_median, spec.output_sigma), 1, 4096) as u32;
-
-            let tokens: Arc<[u32]> = prompt.as_slice().into();
-            let hashes = block_hashes(&tokens);
-            // Deterministic assistant reply: the next turn's prompt (and
-            // the completion-time cache chain) extend it.
-            let assistant = span(
-                class,
-                sid * 100_000 + turn as u64 * 2 + 2,
-                output_len as usize,
-                spec.vocab,
-            );
-            prompt.extend(&assistant);
-            let full_hashes = block_hashes(&prompt);
-
-            let think_us = if turn == 0 {
-                0
-            } else {
-                (rng.exp(spec.think_time_s) * 1e6) as u64
-            };
-            turns.push(SessionTurn {
-                req: Request {
-                    id: 0, // dense ids assigned below, in (session, turn) order
-                    arrival_us: if turn == 0 { start_us } else { 0 },
-                    class_id: class,
-                    session_id: sid,
-                    tokens,
-                    output_len,
-                    block_hashes: hashes.into(),
-                },
-                full_hashes: full_hashes.into(),
-                think_us,
-            });
-            total += 1;
-        }
+        let budget = spec.n_requests - total;
+        let turns = build_turn_chain(spec, &mut rng, class, sid, start_us, budget);
+        total += turns.len();
         sessions.push(Session {
             sid,
             class_id: class,

@@ -1,0 +1,214 @@
+//! Contracts of the unified `RunSpec` entry point and the overload
+//! subsystem: the legacy wrappers replay byte-identically through
+//! `run`, a no-op admission policy is invisible to the trajectory,
+//! admission accounting is exact, and the orphan walk counts exactly
+//! the turns stranded behind a mid-session shed.
+
+use lmetric::cluster::{
+    run, run_des, run_session_des, AdmissionPolicy, AdmitAll, ClusterConfig, QueueDepthShed,
+    Release, RunSpec, SessionAwareShed,
+};
+use lmetric::core::RequestRecord;
+use lmetric::engine::{EngineConfig, ModelProfile};
+use lmetric::metrics::{OverloadCounters, SloSpec};
+use lmetric::policy;
+use lmetric::router::RouteCtx;
+use lmetric::trace::{generate, generate_sessions, SessionKind, SessionSpec, Workload, WorkloadSpec};
+
+fn cfg(n: usize) -> ClusterConfig {
+    ClusterConfig::new(n, EngineConfig::default())
+}
+
+fn lmetric_policy() -> Box<dyn lmetric::router::Policy> {
+    policy::build_default("lmetric", &ModelProfile::moe_30b(), 256).unwrap()
+}
+
+/// Every observable field of a record, for byte-identity comparisons.
+#[allow(clippy::type_complexity)]
+fn record_key(r: &RequestRecord) -> (u64, usize, u64, u64, u64, u32, u32, u32) {
+    (
+        r.id,
+        r.instance,
+        r.arrival_us,
+        r.first_token_us,
+        r.completion_us,
+        r.cached_tokens,
+        r.input_len,
+        r.output_len,
+    )
+}
+
+fn keys(records: &[RequestRecord]) -> Vec<(u64, usize, u64, u64, u64, u32, u32, u32)> {
+    records.iter().map(record_key).collect()
+}
+
+/// `run(RunSpec)` is the one entry point: both legacy wrappers and the
+/// explicit spec forms replay record-for-record identically, and a run
+/// without an admission policy reports no overload accounting at all.
+#[test]
+fn run_spec_pins_both_legacy_wrappers_byte_identically() {
+    let trace = generate(&WorkloadSpec::preset(Workload::ChatBot, 400, 11));
+    let c = cfg(4);
+    let m_wrap = run_des(&c, &trace, lmetric_policy().as_mut());
+    let m_spec = run(RunSpec::open_loop(&c, &trace), lmetric_policy().as_mut());
+    assert_eq!(m_wrap.records.len(), 400);
+    assert_eq!(keys(&m_wrap.records), keys(&m_spec.records));
+    assert_eq!(m_spec.admission_name, None);
+    assert_eq!(m_spec.slo, None);
+    assert_eq!(m_spec.overload, OverloadCounters::default());
+
+    // On a flat trace the release mode is vacuous: there are no
+    // follow-up chains to release reactively.
+    let spec = RunSpec::open_loop(&c, &trace).with_release(Release::Reactive);
+    let m_reactive = run(spec, lmetric_policy().as_mut());
+    assert_eq!(keys(&m_wrap.records), keys(&m_reactive.records));
+
+    let strace = generate_sessions(&SessionSpec::preset(SessionKind::Chat, 300, 7));
+    let m_swrap = run_session_des(&c, &strace, lmetric_policy().as_mut());
+    let m_sspec = run(RunSpec::sessions(&c, &strace), lmetric_policy().as_mut());
+    assert_eq!(m_swrap.records.len(), strace.n_turns());
+    assert_eq!(keys(&m_swrap.records), keys(&m_sspec.records));
+
+    // Open-loop release of a session trace == classic replay of its
+    // flattened form (pre-stamped arrivals, think times already baked).
+    let flat = strace.flatten();
+    let m_flat = run_des(&c, &flat, lmetric_policy().as_mut());
+    let spec = RunSpec::sessions(&c, &strace).with_release(Release::OpenLoop);
+    let m_open = run(spec, lmetric_policy().as_mut());
+    assert_eq!(keys(&m_flat.records), keys(&m_open.records));
+}
+
+/// An admission policy that never sheds must be invisible: the
+/// trajectory is byte-identical to the bare run, only the accounting
+/// (offered == admitted, goodput under an infinite SLO == 1.0) differs.
+#[test]
+fn admit_all_is_invisible_to_the_trajectory() {
+    let strace = generate_sessions(&SessionSpec::preset(SessionKind::Chat, 300, 7));
+    let c = cfg(4);
+    let m_bare = run(RunSpec::sessions(&c, &strace), lmetric_policy().as_mut());
+    let slo = SloSpec::new(f64::INFINITY, f64::INFINITY);
+    let spec = RunSpec::sessions(&c, &strace).with_admission(Box::new(AdmitAll)).with_slo(slo);
+    let m_adm = run(spec, lmetric_policy().as_mut());
+    assert_eq!(keys(&m_bare.records), keys(&m_adm.records));
+    assert_eq!(m_adm.admission_name.as_deref(), Some("admit_all"));
+    assert_eq!(m_adm.slo, Some(slo));
+    let o = m_adm.overload;
+    assert_eq!(o.offered, strace.n_turns() as u64);
+    assert_eq!(o.admitted, o.offered);
+    assert_eq!(o.shed, 0);
+    assert_eq!(m_adm.goodput_ratio(slo), 1.0);
+}
+
+/// Shedding on an open-loop (flat) trace: exact offered/admitted/shed
+/// accounting, and — because flat traces have no follow-up chains — the
+/// orphan counter stays zero no matter how hard the shedding bites.
+#[test]
+fn open_loop_shed_accounting_is_exact() {
+    let trace = generate(&WorkloadSpec::preset(Workload::ChatBot, 400, 3));
+    let c = cfg(1);
+    let spec = RunSpec::open_loop(&c, &trace).with_admission(Box::new(QueueDepthShed::new(1)));
+    let m = run(spec, lmetric_policy().as_mut());
+    let o = m.overload;
+    assert_eq!(o.offered, trace.requests.len() as u64);
+    assert_eq!(o.offered, o.admitted + o.shed);
+    assert_eq!(m.records.len() as u64, o.admitted);
+    assert!(o.admitted >= 1, "the first arrival lands on an empty cluster");
+    assert!(o.shed > 0, "depth-1 threshold on one instance must shed");
+    assert_eq!(o.orphaned_turns, 0, "flat traces have no chains to strand");
+}
+
+/// Admits exactly one turn of exactly one session; everything else is
+/// shed. Makes the orphan walk's expected counts computable from the
+/// trace alone.
+struct AdmitOneTurn {
+    sid: u64,
+    used: bool,
+}
+
+impl AdmissionPolicy for AdmitOneTurn {
+    fn name(&self) -> String {
+        "admit_one_turn".into()
+    }
+
+    fn admit(&mut self, ctx: &RouteCtx) -> bool {
+        if ctx.session_id == self.sid && !self.used {
+            self.used = true;
+            return true;
+        }
+        false
+    }
+}
+
+/// A mid-session shed strands the rest of the conversation: shedding
+/// turn 1 of an L-turn session must count one mid-session shed and
+/// exactly L-2 orphaned turns; sessions rejected at turn 0 count as
+/// shed sessions, not orphans.
+#[test]
+fn orphan_walk_counts_exactly_the_stranded_turns() {
+    let strace = generate_sessions(&SessionSpec::preset(SessionKind::Chat, 300, 11));
+    let target = strace
+        .sessions
+        .iter()
+        .max_by_key(|s| (s.turns.len(), s.sid))
+        .unwrap();
+    let turns = target.turns.len();
+    assert!(turns >= 2, "chat preset must produce a multi-turn session");
+
+    let c = cfg(2);
+    let adm = AdmitOneTurn {
+        sid: target.sid,
+        used: false,
+    };
+    let spec = RunSpec::sessions(&c, &strace).with_admission(Box::new(adm));
+    let m = run(spec, lmetric_policy().as_mut());
+
+    // Only the target's turn 0 runs; its turn 1 releases reactively,
+    // gets shed mid-session, and strands turns 2..L. Every other
+    // session is rejected at turn 0 and its chain never releases.
+    let n_sessions = strace.sessions.len() as u64;
+    assert_eq!(m.records.len(), 1);
+    assert_eq!(m.records[0].id, target.turns[0].req.id);
+    let o = m.overload;
+    assert_eq!(o.offered, n_sessions + 1);
+    assert_eq!(o.admitted, 1);
+    assert_eq!(o.shed, n_sessions);
+    assert_eq!(o.shed_sessions, n_sessions - 1);
+    assert_eq!(o.shed_mid_session, 1);
+    assert_eq!(o.orphaned_turns, turns as u64 - 2);
+    assert_eq!(m.admission_name.as_deref(), Some("admit_one_turn"));
+}
+
+/// The conversation-integrity wrapper end to end: under a flood that
+/// forces real shedding, admitted sessions complete every turn, refused
+/// sessions run zero turns, and no turn is ever orphaned.
+#[test]
+fn session_aware_shed_never_orphans_under_flood() {
+    let mut spec = SessionSpec::preset(SessionKind::Chat, 250, 13);
+    spec.session_rate = 200.0; // ~5ms between session starts: a flood
+    let strace = generate_sessions(&spec);
+    let c = cfg(1);
+    let adm = SessionAwareShed::new(Box::new(QueueDepthShed::new(1)));
+    let rs = RunSpec::sessions(&c, &strace).with_admission(Box::new(adm));
+    let m = run(rs, lmetric_policy().as_mut());
+    let o = m.overload;
+
+    assert_eq!(o.offered, o.admitted + o.shed);
+    assert_eq!(m.records.len() as u64, o.admitted);
+    assert!(o.shed > 0, "a 200/s flood on one instance must shed");
+    assert_eq!(o.shed_mid_session, 0, "admitted sessions are never shed");
+    assert_eq!(o.orphaned_turns, 0, "session-aware shedding cannot orphan");
+
+    // All-or-nothing per session: every session either completes every
+    // turn or runs none of them.
+    let done: std::collections::HashSet<u64> = m.records.iter().map(|r| r.id).collect();
+    for s in &strace.sessions {
+        let hits = s.turns.iter().filter(|t| done.contains(&t.req.id)).count();
+        assert!(
+            hits == 0 || hits == s.turns.len(),
+            "session {} ran {hits}/{} turns",
+            s.sid,
+            s.turns.len()
+        );
+    }
+    assert!(o.shed_sessions > 0, "the flood must refuse whole sessions");
+}

@@ -13,6 +13,8 @@ gate fails when any of these drops below 80% of its baseline:
   scale_smoke.req_per_s
   scale_smoke.steps_per_s
   sessions.req_per_s
+  overload.goodput_at_capacity
+  overload.goodput_overload_session_shed
 
 (Fields beyond des_end_to_end gate only when the seeded baseline carries
 non-null values for them — report-only otherwise, matching how
@@ -32,6 +34,15 @@ baselines that predate it never trip the gate; once a seeded baseline
 carries sessions.req_per_s, that one field gates and the affinity / hit
 fields stay report-only (affinity_sticky == 1.0 is asserted inside the
 bench itself).
+
+The `overload` section (open-arrival admission control) gates the two
+goodput ratios — at-capacity (0.8x, where shedding must be invisible and
+goodput reads ~1.0) and past capacity under session-aware shedding. Both
+are virtual-time quantities, deterministic run to run, so once a seeded
+baseline carries them they gate like the throughput fields (legacy
+baselines without the section stay report-only). The shed/orphan
+counters are report-only: orphaned_turns == 0 is asserted inside the
+bench itself.
 
 --emit-seeded OUT writes the *current* run's JSON with "seeded": true to
 OUT — but only after the checks ran AND passed, so a regressed or
@@ -80,6 +91,11 @@ FIELDS = [
     ("sessions", "affinity_sticky", False),
     ("sessions", "turn0_hit", False),
     ("sessions", "late_turn_hit", False),
+    ("overload", "goodput_at_capacity", True),
+    ("overload", "goodput_overload_session_shed", True),
+    ("overload", "goodput_overload_admit_all", False),
+    ("overload", "shed_overload", False),
+    ("overload", "orphaned_turns", False),
 ]
 
 
