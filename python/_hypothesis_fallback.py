@@ -1,7 +1,7 @@
 """Deterministic fallback for the tiny `hypothesis` subset the tests use.
 
 The property tests in python/tests use `@given` with `st.sampled_from`,
-`st.integers` and `st.floats`, plus `@settings(max_examples=..,
+`st.integers`, `st.floats` and `st.lists`, plus `@settings(max_examples=..,
 deadline=None)`. When the real hypothesis package is installed (CI path)
 this module is never imported. In bare environments (offline container
 with only jax+pytest), conftest installs this shim so the property tests
@@ -37,6 +37,12 @@ def integers(min_value, max_value):
 
 def floats(min_value, max_value):
     return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def lists(elements, min_size=0, max_size=10):
+    return _Strategy(
+        lambda rng: [elements.sample(rng) for _ in range(rng.randint(min_size, max_size))]
+    )
 
 
 def settings(*args, **kwargs):
@@ -88,6 +94,7 @@ def install():
     st.sampled_from = sampled_from
     st.integers = integers
     st.floats = floats
+    st.lists = lists
     hyp.strategies = st
     hyp.__fallback__ = True
     sys.modules["hypothesis"] = hyp

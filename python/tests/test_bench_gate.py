@@ -3,7 +3,8 @@
 scripts/check_bench_regression.py is the CI step that (once the baseline
 is seeded) fails the build on a >20% req/s or steps/s regression. Its
 tolerate-then-gate behaviour for newer JSON sections (guard, sessions,
-overload) must hold across baseline generations, so this suite runs the
+overload, router_scale) must hold across baseline generations, so this
+suite runs the
 actual script as a subprocess through the four paths that matter:
 
 1. unseeded baseline               -> report-only, exit 0
@@ -39,7 +40,13 @@ def run_gate(tmp_path, current, baseline, extra=()):
     return proc
 
 
-def bench_doc(req_per_s=1000.0, with_sessions=True, seeded=False, with_overload=True):
+def bench_doc(
+    req_per_s=1000.0,
+    with_sessions=True,
+    seeded=False,
+    with_overload=True,
+    with_router_scale=True,
+):
     doc = {
         "bench": "router_throughput",
         "seeded": seeded,
@@ -92,6 +99,16 @@ def bench_doc(req_per_s=1000.0, with_sessions=True, seeded=False, with_overload=
             "shed_overload": 350,
             "orphaned_turns": 0,
         }
+    if with_router_scale:
+        doc["router_scale"] = {
+            "instances": 256,
+            "probes": 1000,
+            "routers_max": 4,
+            "decisions_per_s_r1": req_per_s * 10,
+            "decisions_per_s_r2": req_per_s * 16,
+            "decisions_per_s_r4": req_per_s * 24,
+            "snapshot_age_p99": 12.0,
+        }
     return doc
 
 
@@ -102,13 +119,16 @@ def test_path1_unseeded_baseline_is_report_only(tmp_path):
 
 
 def test_path2_seeded_legacy_baseline_tolerates_missing_sessions(tmp_path):
-    # Baseline predates the sessions AND overload sections entirely;
-    # current carries both.
-    legacy = bench_doc(seeded=True, with_sessions=False, with_overload=False)
+    # Baseline predates the sessions, overload AND router_scale sections
+    # entirely; current carries all three.
+    legacy = bench_doc(
+        seeded=True, with_sessions=False, with_overload=False, with_router_scale=False
+    )
     proc = run_gate(tmp_path, bench_doc(req_per_s=990.0), legacy)
     assert proc.returncode == 0, proc.stdout + proc.stderr
     assert "sessions.req_per_s: baseline unseeded" in proc.stdout
     assert "overload.goodput_at_capacity: baseline unseeded" in proc.stdout
+    assert "router_scale.decisions_per_s_r1: baseline unseeded" in proc.stdout
     assert "OK: within regression budget" in proc.stdout
 
 
@@ -142,6 +162,20 @@ def test_overload_goodput_collapse_trips_gate(tmp_path):
     proc = run_gate(tmp_path, current, bench_doc(seeded=True))
     assert proc.returncode == 1, proc.stdout + proc.stderr
     assert "overload.goodput_at_capacity" in proc.stdout
+
+
+def test_router_scale_regression_trips_gate(tmp_path):
+    # Serial DES throughput fine, but the concurrent read path's R=1
+    # decision rate collapsed (e.g. the sharded walk grew a lock): the
+    # gate must catch it. The multi-router rates are report-only and may
+    # swing with runner core count without tripping anything.
+    current = bench_doc(req_per_s=1000.0)
+    current["router_scale"]["decisions_per_s_r1"] = 100.0
+    current["router_scale"]["decisions_per_s_r4"] = 50.0  # report-only
+    proc = run_gate(tmp_path, current, bench_doc(seeded=True))
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert "router_scale.decisions_per_s_r1" in proc.stdout
+    assert "decisions_per_s_r4 regressed" not in proc.stdout
 
 
 def test_quick_mode_mismatch_skips_gate(tmp_path):

@@ -1,0 +1,174 @@
+//! Fig 61: router-scale sweep over the sharded concurrent data plane.
+//!
+//! Two questions, two parts:
+//!
+//! **Part A — read-path scaling.** With the index sharded and the factory
+//! score path lock-free (`IndicatorFactory::fill_route_ctx` takes `&self`),
+//! R router workers can score decisions against one pinned factory view in
+//! parallel. We warm a factory at 256 / 1024 / 4096 instances with a
+//! chatbot prefix population, then measure raw decision throughput
+//! (context fill + policy scoring, no commits) at R ∈ {1, 2, 4, 8}.
+//! At ≥ 1024 instances a decision is dominated by the O(n_instances)
+//! indicator build, so throughput must rise essentially monotonically
+//! R = 1 → 4 whenever the host actually has ≥ 4 cores — asserted.
+//!
+//! **Part B — what staleness costs.** The full concurrent DES
+//! ([`run_concurrent`]) replays one chatbot trace on 16 instances at
+//! R ∈ {1, 4} under staleness budgets {0, 64, 512}. Budget 0 is asserted
+//! record-for-record identical to the serial [`run_des`] — the refactor's
+//! zero-cost anchor — and larger budgets chart TTFT / KV$-affinity
+//! degradation as decisions commit against increasingly stale views.
+
+use lmetric::benchlib::{decision_rate, figure_banner, scaled};
+use lmetric::cluster::{build_scaled_trace, cluster_config, run_concurrent, run_des, ConcurrentCfg};
+use lmetric::config::ExperimentConfig;
+use lmetric::engine::ModelProfile;
+use lmetric::metrics::{fmt_s, save_results, ResultRow};
+use lmetric::policy;
+use lmetric::router::IndicatorFactory;
+use lmetric::trace::{generate, Workload, WorkloadSpec};
+use lmetric::util::stats::Summary;
+
+const PART_A_INSTANCES: [usize; 3] = [256, 1024, 4096];
+const ROUTERS: [usize; 4] = [1, 2, 4, 8];
+const BUDGETS: [usize; 3] = [0, 64, 512];
+
+fn main() {
+    figure_banner(
+        "Fig 61",
+        "router scaling on the sharded data plane: decisions/s vs R, staleness vs quality",
+    );
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("host parallelism: {cores}");
+
+    // --- Part A: read-path decision throughput --------------------------
+    let mut rows: Vec<ResultRow> = Vec::new();
+    println!("\n## Part A: decision throughput (read-only scoring, no commits)");
+    println!(
+        "{:<12} {:>10} {:>14} {:>14} {:>14} {:>14}",
+        "instances", "probes", "R=1", "R=2", "R=4", "R=8"
+    );
+    for &n_inst in &PART_A_INSTANCES {
+        let spec = WorkloadSpec::preset(Workload::ChatBot, scaled(6000), 61);
+        let trace = generate(&spec);
+        let profile = ModelProfile::moe_30b();
+        // Warm: commit a prefix population through the serial path so
+        // probe walks traverse a realistic radix (hits + misses).
+        let mut factory = IndicatorFactory::new(n_inst, 8192);
+        let warm = trace.requests.len() / 2;
+        for (i, tr) in trace.requests.iter().take(warm).enumerate() {
+            factory.route_ctx(&tr.req, tr.req.arrival_us);
+            factory.on_route(i % n_inst, &tr.req, tr.req.arrival_us);
+        }
+        // Probe set shrinks with n_inst: one decision is O(n_inst), so
+        // this keeps each (n, R) cell at roughly constant wall time.
+        let n_probes = (512_000 / n_inst).clamp(50, trace.requests.len() - warm);
+        let probes = &trace.requests[warm..warm + n_probes];
+
+        let rates: Vec<f64> = ROUTERS
+            .iter()
+            .map(|&r| decision_rate(&factory, &profile, probes, r))
+            .collect();
+        println!(
+            "{:<12} {:>10} {:>12.0}/s {:>12.0}/s {:>12.0}/s {:>12.0}/s",
+            n_inst, n_probes, rates[0], rates[1], rates[2], rates[3]
+        );
+        for (&r, &rate) in ROUTERS.iter().zip(&rates) {
+            rows.push(ResultRow {
+                label: format!("throughput_n{n_inst}_r{r}"),
+                ttft: Summary::of(&[]),
+                tpot: Summary::of(&[]),
+                hit_ratio: f64::NAN,
+                extra: [("decisions_per_s".to_string(), rate)].into_iter().collect(),
+            });
+        }
+        // The refactor's headline claim: at ≥ 1024 instances the scoring
+        // loop dominates and extra routers buy real throughput. Gated on
+        // the host actually having the cores to show it.
+        if n_inst >= 1024 && cores >= 4 {
+            assert!(
+                rates[1] >= rates[0] * 0.9,
+                "R=2 must not regress vs R=1 at {n_inst} instances ({} vs {})",
+                rates[1],
+                rates[0]
+            );
+            assert!(
+                rates[2] >= rates[1] * 0.9,
+                "R=4 must not regress vs R=2 at {n_inst} instances ({} vs {})",
+                rates[2],
+                rates[1]
+            );
+            assert!(
+                rates[2] >= rates[0] * 1.25,
+                "R=4 must scale ≥1.25x over R=1 at {n_inst} instances ({} vs {})",
+                rates[2],
+                rates[0]
+            );
+        }
+    }
+
+    // --- Part B: staleness budget vs decision quality -------------------
+    println!("\n## Part B: staleness budget sweep (16 instances, chatbot, lmetric)");
+    let mut exp = ExperimentConfig::default();
+    exp.workload = "chatbot".into();
+    exp.instances = 16;
+    exp.requests = scaled(4000);
+    let cfg = cluster_config(&exp);
+    let profile = cfg.engine.profile.clone();
+    let trace = build_scaled_trace(&exp);
+
+    let mut serial_pol = policy::build_default("lmetric", &profile, exp.chunk_budget).unwrap();
+    let serial = run_des(&cfg, &trace, serial_pol.as_mut());
+    println!(
+        "serial        TTFT {:>8}  hit {:>5.1}%  ({} records)",
+        fmt_s(serial.ttft_summary().mean),
+        serial.mean_hit_ratio() * 100.0,
+        serial.records.len()
+    );
+
+    for &r in &[1usize, 4] {
+        for &budget in &BUDGETS {
+            let mut mk = || policy::build_default("lmetric", &profile, exp.chunk_budget).unwrap();
+            let m = run_concurrent(&cfg, &trace, &mut mk, &ConcurrentCfg::new(r, budget));
+            let age = m.snapshot_age_summary();
+            println!(
+                "R={r} budget={budget:<4} TTFT {:>8}  hit {:>5.1}%  age p99 {:>6.1}  \
+                 decisions/s {:>10.0}",
+                fmt_s(m.ttft_summary().mean),
+                m.mean_hit_ratio() * 100.0,
+                age.p99,
+                m.decision_throughput()
+            );
+            assert_eq!(
+                m.records.len(),
+                serial.records.len(),
+                "every request must complete at R={r} budget={budget}"
+            );
+            if budget == 0 {
+                // Zero staleness ⇒ the concurrent core IS the serial core.
+                for (a, b) in serial.records.iter().zip(&m.records) {
+                    assert_eq!(
+                        (a.id, a.instance, a.first_token_us, a.completion_us, a.cached_tokens),
+                        (b.id, b.instance, b.first_token_us, b.completion_us, b.cached_tokens),
+                        "budget-0 run must be byte-identical to run_des at R={r}"
+                    );
+                }
+            }
+            rows.push(
+                ResultRow::from_metrics(&format!("stale_r{r}_b{budget}"), &m)
+                    .with("routers", r as f64)
+                    .with("staleness_budget", budget as f64)
+                    .with("snapshot_age_mean", age.mean)
+                    .with("snapshot_age_p99", age.p99)
+                    .with("decisions_per_s", m.decision_throughput())
+                    .with(
+                        "ttft_delta_vs_serial",
+                        m.ttft_summary().mean - serial.ttft_summary().mean,
+                    ),
+            );
+        }
+    }
+
+    let path = save_results("fig61_router_scale", &rows, &[]).unwrap();
+    println!("\nsaved {}", path.display());
+}

@@ -4,7 +4,9 @@
 //! µs/decision per policy at 16 / 64 / 256 instances (one shared-index
 //! walk + borrowed scratch context per decision — the allocation-free hot
 //! path), the DES harness's end-to-end routed-requests/s, a 32-instance ×
-//! 50k-request DES scale smoke, and the parallel sweep harness's speedup
+//! 50k-request DES scale smoke, the concurrent data plane's decisions/s
+//! at R ∈ {1, 2, 4} routers (plus its budget-0 byte-identity check and
+//! budget-64 snapshot-age tail), and the parallel sweep harness's speedup
 //! over serial execution.
 //!
 //! The JSON this bench writes is the perf-trajectory record: CI compares
@@ -14,7 +16,10 @@
 //! `admit_radix_walks` counters prove the engine's fused admission: one
 //! radix walk per admitted request.
 
-use lmetric::benchlib::{bench, bench_threads, figure_banner, parallel_sweep, scaled};
+use lmetric::benchlib::{
+    bench, bench_threads, decision_rate, figure_banner, parallel_sweep, scaled,
+};
+use lmetric::cluster::{run_concurrent, ConcurrentCfg};
 use lmetric::engine::ModelProfile;
 use lmetric::policy;
 use lmetric::router::IndicatorFactory;
@@ -305,6 +310,54 @@ fn main() {
         speedup
     );
 
+    // Router scale: the sharded data plane's concurrent read path. R
+    // workers score a pinned 256-instance factory in parallel (decisions
+    // per second at R ∈ {1, 2, 4}), then the concurrent DES replays the
+    // end-to-end trace — budget 0 asserted byte-identical to the serial
+    // run above, budget 64 recording the snapshot-age tail the staleness
+    // bound promises.
+    println!("\n--- router scale (concurrent data plane) ---");
+    let mut rs_factory = IndicatorFactory::new(256, 8192);
+    let mut rs_warm_pol = policy::build_default("lmetric", &profile, 256).unwrap();
+    let rs_warm = trace.requests.len() / 2;
+    for tr in trace.requests.iter().take(rs_warm) {
+        let ctx = rs_factory.route_ctx(&tr.req, tr.req.arrival_us);
+        let d = rs_warm_pol.route(ctx);
+        rs_factory.on_route(d.instance, &tr.req, tr.req.arrival_us);
+    }
+    let rs_probes = &trace.requests[rs_warm..];
+    let rs_rates: Vec<f64> = [1usize, 2, 4]
+        .iter()
+        .map(|&r| decision_rate(&rs_factory, &profile, rs_probes, r))
+        .collect();
+    println!(
+        "256 instances, {} probes: R=1 {:.0}/s  R=2 {:.0}/s  R=4 {:.0}/s",
+        rs_probes.len(),
+        rs_rates[0],
+        rs_rates[1],
+        rs_rates[2]
+    );
+    let mut mk_rs = || policy::build_default("lmetric", &profile, 256).unwrap();
+    let m_b0 = run_concurrent(&cfg, &trace, &mut mk_rs, &ConcurrentCfg::new(2, 0));
+    assert_eq!(m_b0.records.len(), m.records.len());
+    for (a, b) in m.records.iter().zip(&m_b0.records) {
+        assert_eq!(
+            (a.id, a.instance, a.completion_us),
+            (b.id, b.instance, b.completion_us),
+            "budget-0 concurrent replay must be byte-identical to run_des"
+        );
+    }
+    let m_b64 = run_concurrent(&cfg, &trace, &mut mk_rs, &ConcurrentCfg::new(2, 64));
+    assert_eq!(m_b64.records.len(), m.records.len(), "budget-64 lost requests");
+    let rs_age = m_b64.snapshot_age_summary();
+    println!(
+        "concurrent DES R=2: budget 0 identical to serial; budget 64 snapshot age \
+         mean {:.2} p99 {:.1} ({:.0} decisions/s in-DES)",
+        rs_age.mean,
+        rs_age.p99,
+        m_b64.decision_throughput()
+    );
+
     // Machine-readable output: CI uploads this as the perf-trajectory
     // record and gates on it (BENCH_router_throughput.json is the
     // committed baseline; override the output path with
@@ -399,6 +452,18 @@ fn main() {
                     "orphaned_turns",
                     Json::Num(m_over_sess.overload.orphaned_turns as f64),
                 ),
+            ]),
+        ),
+        (
+            "router_scale",
+            Json::obj(vec![
+                ("instances", Json::Num(256.0)),
+                ("probes", Json::Num(rs_probes.len() as f64)),
+                ("routers_max", Json::Num(4.0)),
+                ("decisions_per_s_r1", Json::Num(rs_rates[0])),
+                ("decisions_per_s_r2", Json::Num(rs_rates[1])),
+                ("decisions_per_s_r4", Json::Num(rs_rates[2])),
+                ("snapshot_age_p99", Json::Num(rs_age.p99)),
             ]),
         ),
         (

@@ -168,10 +168,11 @@ pub fn scaled(n: usize) -> usize {
 
 use crate::cluster::{build_scaled_trace, cluster_config, run_des};
 use crate::config::ExperimentConfig;
+use crate::engine::ModelProfile;
 use crate::metrics::{ResultRow, RunMetrics};
 use crate::policy;
-use crate::router::Policy;
-use crate::trace::Trace;
+use crate::router::{IndicatorFactory, Policy, RouteCtx};
+use crate::trace::{Trace, TraceRequest};
 
 /// Fraction of the run discarded as cold-start warm-up.
 pub const WARMUP: f64 = 0.1;
@@ -228,6 +229,38 @@ pub fn trace_for(exp: &ExperimentConfig) -> Trace {
 /// Standard result row from a run.
 pub fn row(label: &str, m: &RunMetrics) -> ResultRow {
     ResultRow::from_metrics(label, m)
+}
+
+/// Score `probes` across `r` scoped workers against a frozen factory
+/// (read-only [`IndicatorFactory::fill_route_ctx`] + `lmetric` policy
+/// scoring, no commits), returning decisions/s. Mirrors the concurrent
+/// DES harness's scoring phase — worker-owned ctx + policy replica,
+/// `k % r` assignment — without the DES around it, so the number
+/// isolates pure read-path scaling. Shared by `fig61_router_scale` and
+/// the `router_throughput` perf-trajectory bench.
+pub fn decision_rate(
+    factory: &IndicatorFactory,
+    profile: &ModelProfile,
+    probes: &[TraceRequest],
+    r: usize,
+) -> f64 {
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for w in 0..r {
+            scope.spawn(move || {
+                let mut pol = policy::build_default("lmetric", profile, 256).unwrap();
+                let mut ctx = RouteCtx::default();
+                let mut live: Vec<u64> = Vec::new();
+                for (k, tr) in probes.iter().enumerate() {
+                    if k % r == w {
+                        factory.fill_route_ctx(&tr.req, tr.req.arrival_us, &mut ctx, &mut live);
+                        std::hint::black_box(pol.route(&ctx).instance);
+                    }
+                }
+            });
+        }
+    });
+    probes.len() as f64 / t0.elapsed().as_secs_f64()
 }
 
 #[cfg(test)]

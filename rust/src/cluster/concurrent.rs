@@ -1,0 +1,351 @@
+//! R-router concurrent scheduling over the sharded data plane.
+//!
+//! [`run_concurrent`] replays an open-loop trace through the same
+//! discrete-event core as [`super::run_des`], but fans route decisions
+//! across R worker threads scoring a PINNED factory view in parallel:
+//!
+//! 1. **Batch.** Consecutive `Arrival` events at the head of the event
+//!    queue are drained into a batch of at most `staleness_budget + 1`
+//!    requests (a `StepEnd` stops the drain, so batching never reorders
+//!    router-visible engine feedback).
+//! 2. **Score.** The factory epoch is pinned; `std::thread::scope`
+//!    workers fill worker-owned [`RouteCtx`]s through the read-only
+//!    [`IndicatorFactory::fill_route_ctx`] path (`&self`, no lock — the
+//!    sharded index's `match_with` is the reason this is sound) and run
+//!    their own policy replica. Request-to-worker assignment is a pure
+//!    function of the global decision counter, so a run's decision→worker
+//!    mapping is deterministic and independent of thread timing.
+//! 3. **Merge.** Decisions commit in arrival order through
+//!    [`IndicatorFactory::commit_route`], replaying exactly the serial
+//!    core's mutation sequence. The j-th decision of a batch scored a view
+//!    j commits stale — that j is recorded as the decision's snapshot age,
+//!    bounded by construction at `staleness_budget`.
+//!
+//! With `staleness_budget == 0` every batch has one request, each decision
+//! scores the fully-fresh state, and the run is byte-identical to
+//! [`super::run_des`] — `tests/concurrent.rs` pins this for R ∈ {1, 2}.
+//! With R > 1 the policy is replicated per worker, so runs are identical
+//! to serial for stateless policies (every registered indicator policy;
+//! stateful ones like `sticky` shard their affinity state per worker and
+//! may diverge — by design, that's what per-router state costs).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::des::{begin_step, ClusterConfig};
+use crate::engine::{EngineEvent, Instance, StepOutcome};
+use crate::metrics::RunMetrics;
+use crate::router::{GuardCounters, IndicatorFactory, Policy, RouteCtx};
+use crate::trace::{Trace, TraceRequest};
+
+/// Knobs of the concurrent harness.
+#[derive(Debug, Clone, Copy)]
+pub struct ConcurrentCfg {
+    /// Router workers scoring in parallel (≥ 1).
+    pub routers: usize,
+    /// Max commits a decision's pinned view may be stale by. 0 = every
+    /// decision scores fresh state (byte-identical to the serial core);
+    /// larger budgets admit bigger scoring batches.
+    pub staleness_budget: usize,
+}
+
+impl ConcurrentCfg {
+    pub fn new(routers: usize, staleness_budget: usize) -> Self {
+        assert!(routers >= 1, "need at least one router");
+        ConcurrentCfg {
+            routers,
+            staleness_budget,
+        }
+    }
+}
+
+// `cluster::des`'s Event is private to its core; the concurrent loop
+// keeps its own copy with identical ordering semantics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum Event {
+    Arrival(usize),
+    StepEnd(usize),
+}
+
+/// One router worker: an owned policy replica plus the scratch buffers
+/// its read-only context fills live in. Workers never touch the factory
+/// mutably — all commits happen at the merge step on the coordinator.
+struct RouterWorker {
+    policy: Box<dyn Policy>,
+    ctx: RouteCtx,
+    live: Vec<u64>,
+    /// Guard counters at worker creation, so the run reports deltas even
+    /// though policy replicas accumulate over their lifetime.
+    guard_start: GuardCounters,
+}
+
+/// A worker's routing output, merged on the coordinator in arrival order.
+#[derive(Debug, Clone, Copy, Default)]
+struct RoutedOut {
+    instance: usize,
+    predicted_ttft_us: Option<f64>,
+    /// `ctx.new_tokens(instance)` at decision time — the worker's view
+    /// priced this, so the commit must apply this (not a recomputed one).
+    new_tokens: usize,
+    /// Raw hit-block sum of the walk, recorded at merge.
+    hit_blocks: usize,
+    /// Policy scoring time (the decision-throughput numerator excludes
+    /// context fills on purpose: serial `sched_overhead_us` times only
+    /// `policy.route` too).
+    decision_ns: u64,
+}
+
+impl RouterWorker {
+    fn route_one(&mut self, factory: &IndicatorFactory, tr: &TraceRequest) -> RoutedOut {
+        let hit_blocks =
+            factory.fill_route_ctx(&tr.req, tr.req.arrival_us, &mut self.ctx, &mut self.live);
+        let t0 = Instant::now();
+        let decision = self.policy.route(&self.ctx);
+        let decision_ns = t0.elapsed().as_nanos() as u64;
+        RoutedOut {
+            instance: decision.instance,
+            predicted_ttft_us: decision.predicted_ttft_us,
+            new_tokens: self.ctx.new_tokens(decision.instance),
+            hit_blocks,
+            decision_ns,
+        }
+    }
+}
+
+/// Replay `trace` open-loop with `ccfg.routers` concurrent router workers
+/// under a bounded staleness budget. `make_policy` builds one policy
+/// replica per worker (they must be built identically — same name, same
+/// parameters — for the determinism contract to hold).
+///
+/// Returns the same [`RunMetrics`] as [`super::run_des`], plus the
+/// concurrency extras: `snapshot_age` (commits of staleness per
+/// decision), `route_wall_s` (wall time of the scoring phase, the
+/// decisions/s denominator) and `routers`.
+pub fn run_concurrent(
+    cfg: &ClusterConfig,
+    trace: &Trace,
+    make_policy: &mut dyn FnMut() -> Box<dyn Policy>,
+    ccfg: &ConcurrentCfg,
+) -> RunMetrics {
+    let n = cfg.n_instances;
+    let r = ccfg.routers;
+    let reqs: Vec<TraceRequest> = trace.requests.to_vec();
+    let mut workers: Vec<RouterWorker> = (0..r)
+        .map(|_| {
+            let policy = make_policy();
+            let guard_start = policy.guard_counters().unwrap_or_default();
+            RouterWorker {
+                policy,
+                ctx: RouteCtx::default(),
+                live: Vec::new(),
+                guard_start,
+            }
+        })
+        .collect();
+
+    let mut instances: Vec<Instance> = (0..n)
+        .map(|i| Instance::new(i, cfg.engine.clone()))
+        .collect();
+    let mut factory = IndicatorFactory::new(n, cfg.engine.kv_capacity_blocks);
+    let mut metrics = RunMetrics::new(n);
+    let mut stepping = vec![false; n];
+    let mut pending: Vec<Option<StepOutcome>> = (0..n).map(|_| None).collect();
+    let mut full_hashes: HashMap<u64, Arc<[u64]>> = HashMap::new();
+    let mut predicted: HashMap<u64, f64> = HashMap::new();
+    let mut arrivals: HashMap<u64, u64> = HashMap::new();
+
+    let mut queue: BinaryHeap<(Reverse<u64>, Reverse<u64>, Event)> = BinaryHeap::new();
+    let mut tiebreak: u64 = 0;
+    let push = |q: &mut BinaryHeap<(Reverse<u64>, Reverse<u64>, Event)>,
+                    tb: &mut u64,
+                    t: u64,
+                    e: Event| {
+        *tb += 1;
+        q.push((Reverse(t), Reverse(*tb), e));
+    };
+    for (i, tr) in reqs.iter().enumerate() {
+        push(&mut queue, &mut tiebreak, tr.req.arrival_us, Event::Arrival(i));
+    }
+
+    // Deterministic request→worker assignment: the k-th decision of the
+    // run goes to worker k % R, independent of batch boundaries.
+    let mut decision_counter: usize = 0;
+    let mut route_wall = std::time::Duration::ZERO;
+    let mut batch: Vec<usize> = Vec::new();
+    let mut routed: Vec<RoutedOut> = Vec::new();
+
+    let mut last_time = 0u64;
+    while let Some((Reverse(now), _, event)) = queue.pop() {
+        last_time = last_time.max(now);
+        match event {
+            Event::Arrival(idx) => {
+                // Drain consecutive arrivals into one scoring batch. A
+                // StepEnd at the queue head stops the drain: engine
+                // feedback is never reordered past a decision.
+                batch.clear();
+                batch.push(idx);
+                while batch.len() < ccfg.staleness_budget + 1 {
+                    match queue.peek() {
+                        Some(&(Reverse(t), _, Event::Arrival(_))) => {
+                            let Some((_, _, Event::Arrival(j))) = queue.pop() else {
+                                unreachable!("peeked arrival");
+                            };
+                            last_time = last_time.max(t);
+                            batch.push(j);
+                        }
+                        _ => break,
+                    }
+                }
+
+                // Score the whole batch from the pinned factory state.
+                let pin_epoch = factory.epoch();
+                routed.clear();
+                routed.resize(batch.len(), RoutedOut::default());
+                let t0 = Instant::now();
+                if r == 1 || batch.len() == 1 {
+                    // Degenerate fan-out: score inline on the owning
+                    // worker (identical assignment, no thread overhead).
+                    for (j, &bidx) in batch.iter().enumerate() {
+                        let w = (decision_counter + j) % r;
+                        routed[j] = workers[w].route_one(&factory, &reqs[bidx]);
+                    }
+                } else {
+                    let factory_ref = &factory;
+                    let reqs_ref = &reqs;
+                    let batch_ref = &batch;
+                    let dc = decision_counter;
+                    let outs: Vec<Vec<(usize, RoutedOut)>> = std::thread::scope(|scope| {
+                        let handles: Vec<_> = workers
+                            .iter_mut()
+                            .enumerate()
+                            .map(|(w, worker)| {
+                                scope.spawn(move || {
+                                    let mut outs = Vec::new();
+                                    for (j, &bidx) in batch_ref.iter().enumerate() {
+                                        if (dc + j) % r == w {
+                                            outs.push((
+                                                j,
+                                                worker.route_one(factory_ref, &reqs_ref[bidx]),
+                                            ));
+                                        }
+                                    }
+                                    outs
+                                })
+                            })
+                            .collect();
+                        handles.into_iter().map(|h| h.join().unwrap()).collect()
+                    });
+                    for outs in outs {
+                        for (j, out) in outs {
+                            routed[j] = out;
+                        }
+                    }
+                }
+                route_wall += t0.elapsed();
+                debug_assert_eq!(
+                    factory.epoch(),
+                    pin_epoch,
+                    "torn snapshot: factory mutated during the scoring phase"
+                );
+
+                // Merge: commit every decision in arrival order, exactly
+                // the serial core's per-arrival sequence.
+                for (j, &bidx) in batch.iter().enumerate() {
+                    let tr = &reqs[bidx];
+                    let out = routed[j];
+                    let now_j = tr.req.arrival_us;
+                    metrics
+                        .sched_overhead_us
+                        .push(out.decision_ns as f64 / 1000.0);
+                    // Commits since pin == j: the age this decision's
+                    // view had accumulated when it merged.
+                    metrics.snapshot_age.push((factory.epoch() - pin_epoch) as f64);
+                    let d = out.instance;
+                    debug_assert!(d < n, "policy routed out of range");
+                    factory.kv.record_lookup(tr.req.block_hashes.len(), out.hit_blocks);
+                    factory.commit_route(d, &tr.req, out.new_tokens, now_j);
+                    if let Some(p) = out.predicted_ttft_us {
+                        predicted.insert(tr.req.id, p);
+                    }
+                    arrivals.insert(tr.req.id, tr.req.arrival_us);
+                    full_hashes.insert(tr.req.id, tr.full_hashes.clone());
+                    instances[d].enqueue(tr.req.clone(), tr.full_hashes.clone(), now_j);
+                    if !stepping[d] {
+                        if let Some(out2) = begin_step(&mut instances[d], now_j, &mut metrics, d) {
+                            let end = now_j + out2.duration_us;
+                            pending[d] = Some(out2);
+                            stepping[d] = true;
+                            push(&mut queue, &mut tiebreak, end, Event::StepEnd(d));
+                        }
+                    }
+                    decision_counter += 1;
+                }
+            }
+            Event::StepEnd(d) => {
+                let out = pending[d].take().expect("StepEnd without outcome");
+                for ev in &out.events {
+                    match ev {
+                        EngineEvent::FirstToken { req_id, at_us } => {
+                            let pred = predicted.remove(req_id);
+                            let arr = arrivals.remove(req_id);
+                            if let (Some(pred), Some(arr)) = (pred, arr) {
+                                let actual = (*at_us - arr) as f64;
+                                if actual > 0.0 {
+                                    metrics
+                                        .sim_error_ratio
+                                        .push((pred - actual).abs() / actual);
+                                }
+                            }
+                        }
+                        EngineEvent::Completed { record } => {
+                            metrics.records.push(*record);
+                            if let Some(fh) = full_hashes.remove(&record.id) {
+                                factory.on_completion(d, &fh, now);
+                            }
+                            predicted.remove(&record.id);
+                            arrivals.remove(&record.id);
+                        }
+                    }
+                }
+                factory.on_snapshot(d, out.snapshot);
+                instances[d].recycle_events(out.events);
+                if instances[d].has_work() {
+                    if let Some(out2) = begin_step(&mut instances[d], now, &mut metrics, d) {
+                        let end = now + out2.duration_us;
+                        pending[d] = Some(out2);
+                        push(&mut queue, &mut tiebreak, end, Event::StepEnd(d));
+                    } else {
+                        stepping[d] = false;
+                    }
+                } else {
+                    stepping[d] = false;
+                }
+            }
+        }
+    }
+
+    metrics.duration_us = last_time;
+    for inst in &instances {
+        metrics.total_steps += inst.steps;
+        metrics.admit_radix_walks += inst.kv().admit_radix_walks;
+    }
+    // Guard counters: sum each worker replica's delta since creation.
+    let mut guard = GuardCounters::default();
+    for w in &workers {
+        let d = w
+            .policy
+            .guard_counters()
+            .unwrap_or_default()
+            .since(w.guard_start);
+        guard.checks += d.checks;
+        guard.degenerate += d.degenerate;
+        guard.inversion += d.inversion;
+        guard.mitigated += d.mitigated;
+    }
+    metrics.guard = guard;
+    metrics.routers = r;
+    metrics.route_wall_s = route_wall.as_secs_f64();
+    metrics
+}

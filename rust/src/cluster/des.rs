@@ -426,7 +426,9 @@ fn run_des_core(
     metrics
 }
 
-fn begin_step(
+// Shared with `cluster::concurrent`, whose event loop must account
+// steps identically to the serial core.
+pub(crate) fn begin_step(
     inst: &mut Instance,
     now: u64,
     metrics: &mut RunMetrics,

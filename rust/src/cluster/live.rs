@@ -67,6 +67,11 @@ enum Ev {
 /// unique to the whole prefix. LRU-bounded by stored plane count.
 struct PrefixStore {
     cap: usize,
+    /// Block-unit capacity bound: `cap` planes × the most blocks one
+    /// plane's prompt chain can index (max_seq / BLOCK_TOKENS). The
+    /// snapshot reports this so live and DES instances agree on the
+    /// `kv_capacity_blocks` indicator's unit.
+    capacity_blocks: usize,
     /// block-hash -> (hit_tokens at this depth, plane id)
     index: HashMap<u64, (usize, u64)>,
     /// plane id -> (shared k/v, last_use, index keys)
@@ -76,14 +81,20 @@ struct PrefixStore {
 }
 
 impl PrefixStore {
-    fn new(cap: usize) -> Self {
+    fn new(cap: usize, blocks_per_plane: usize) -> Self {
         PrefixStore {
             cap,
+            capacity_blocks: cap * blocks_per_plane,
             index: HashMap::new(),
             planes: HashMap::new(),
             next_id: 0,
             clock: 0,
         }
+    }
+
+    /// Upper bound on [`Self::indexed_blocks`], in the same BLOCK unit.
+    fn capacity_blocks(&self) -> usize {
+        self.capacity_blocks
     }
 
     /// Distinct prompt *blocks* currently indexed — the same unit as the
@@ -165,12 +176,16 @@ impl LiveEngine {
     fn new(rt: ModelRuntime, store_cap: usize) -> Self {
         let kv = rt.zero_kv();
         let slots = (0..rt.cfg.slots).map(|_| None).collect();
+        // A stored plane indexes at most one block per BLOCK_TOKENS of
+        // the model's max sequence — the per-instance block budget the
+        // snapshot advertises to the router.
+        let blocks_per_plane = rt.cfg.max_seq.div_ceil(BLOCK_TOKENS);
         LiveEngine {
             rt,
             kv,
             slots,
             waiting: VecDeque::new(),
-            store: PrefixStore::new(store_cap),
+            store: PrefixStore::new(store_cap, blocks_per_plane),
         }
     }
 
@@ -194,12 +209,12 @@ impl LiveEngine {
                 .sum(),
             // BLOCK units, matching the DES engine's snapshot (the store
             // used to report its plane/entry count here, which silently
-            // changed the indicator's unit across backends). The store is
-            // bounded in planes, not blocks, so a block-unit capacity does
-            // not exist: report 0 (= "unbounded" in radix-tree semantics)
-            // rather than a number in the wrong unit.
+            // changed the indicator's unit across backends). The capacity
+            // is the plane bound converted to blocks — the most blocks
+            // `cap` planes can index — so memory-pressure policies see a
+            // real, same-unit budget on both backends.
             kv_used_blocks: self.store.indexed_blocks(),
-            kv_capacity_blocks: 0,
+            kv_capacity_blocks: self.store.capacity_blocks(),
         }
     }
 
@@ -420,6 +435,11 @@ pub fn run_live(
     }
     drop(ev_tx);
 
+    // Router-side index stays unbounded (capacity 0): the per-instance
+    // block budget reaches policies through the snapshot piggyback
+    // (`kv_capacity_blocks` above), while the router's optimistic view
+    // tracks presence only — mirroring production, where the router
+    // cannot evict instance memory.
     let mut factory = IndicatorFactory::new(n, 0);
     let mut metrics = RunMetrics::new(n);
     let mut full_hashes: HashMap<u64, Arc<[u64]>> = HashMap::new();
@@ -496,4 +516,54 @@ pub fn run_live(
     metrics.records.sort_by_key(|r| r.id);
     metrics.guard = policy.guard_counters().unwrap_or_default().since(guard_start);
     Ok(metrics)
+}
+
+// Sim-backend only: the tests construct `SimTensor` planes directly and
+// load the runtime without artifacts.
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::*;
+
+    /// The PR 2 follow-up: live snapshots must advertise a REAL block
+    /// budget (plane bound × blocks per plane), not the placeholder 0,
+    /// and the store can never index past it.
+    #[test]
+    fn prefix_store_reports_block_capacity_and_stays_within_it() {
+        let blocks_per_plane = 512usize.div_ceil(BLOCK_TOKENS); // sim max_seq
+        let mut store = PrefixStore::new(3, blocks_per_plane);
+        assert_eq!(store.capacity_blocks(), 3 * 32);
+        assert!(store.capacity_blocks() > 0, "budget must be real, not 0");
+        // Churn more prompts than the plane bound through the store; LRU
+        // eviction keeps the indexed block count within the budget.
+        for p in 0..10u64 {
+            let hashes: Vec<u64> = (0..blocks_per_plane as u64).map(|b| p * 1000 + b).collect();
+            store.insert(&hashes, Tensor::Plane(Vec::new()), Tensor::Plane(Vec::new()));
+            assert!(
+                store.indexed_blocks() <= store.capacity_blocks(),
+                "indexed {} blocks over budget {}",
+                store.indexed_blocks(),
+                store.capacity_blocks()
+            );
+        }
+        assert_eq!(store.planes.len(), 3, "LRU bound in planes");
+        assert_eq!(store.indexed_blocks(), 3 * blocks_per_plane);
+    }
+
+    /// The engine derives the same budget from the model config that the
+    /// store enforces, so `snapshot().kv_capacity_blocks` is consistent
+    /// with DES semantics (used ≤ capacity, same BLOCK unit).
+    #[test]
+    fn live_engine_snapshot_capacity_matches_model_config() {
+        // No manifest at this path -> the sim backend's default geometry.
+        let rt = ModelRuntime::load(std::path::Path::new("/nonexistent_lmetric_artifacts"))
+            .expect("sim runtime needs no artifacts");
+        let max_seq = rt.config().max_seq;
+        let eng = LiveEngine::new(rt, 64);
+        let snap = eng.snapshot();
+        assert_eq!(
+            snap.kv_capacity_blocks,
+            64 * max_seq.div_ceil(BLOCK_TOKENS)
+        );
+        assert!(snap.kv_used_blocks <= snap.kv_capacity_blocks);
+    }
 }

@@ -1,13 +1,16 @@
 //! Cluster harnesses: the discrete-event simulation driver (virtual time —
-//! every figure bench runs on this), the [`overload`] admission-control
-//! subsystem it consults under open-system load, and the live threaded
-//! cluster (wall-clock time + real PJRT transformer compute — the
-//! end-to-end validation path).
+//! every figure bench runs on this), the R-router [`concurrent`] harness
+//! scoring batched decisions in parallel from the sharded index, the
+//! [`overload`] admission-control subsystem the DES consults under
+//! open-system load, and the live threaded cluster (wall-clock time +
+//! real PJRT transformer compute — the end-to-end validation path).
 
+mod concurrent;
 mod des;
 pub mod live;
 pub mod overload;
 
+pub use concurrent::{run_concurrent, ConcurrentCfg};
 pub use des::{
     build_scaled_open, build_scaled_sessions, build_scaled_trace, cluster_config,
     profile_capacity_rps, run, run_des, run_experiment, run_session_des, ClusterConfig, Release,

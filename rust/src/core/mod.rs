@@ -93,6 +93,29 @@ impl InstanceMask {
         }
     }
 
+    /// Re-size the mask for a fleet of `n` instances, PRESERVING the bits
+    /// of instances that survive — the add/remove-instance primitive for
+    /// fleet dynamics (scale-up/down, drain, crash). Growing zero-fills
+    /// the new instances; shrinking drops every bit at index ≥ `n`, so a
+    /// removed instance can never resurrect as a stale presence bit after
+    /// a later grow re-uses its index.
+    pub fn resize_instances(&mut self, n: usize) {
+        let words = n.div_ceil(64);
+        if words < self.words.len() {
+            self.words.truncate(words);
+        } else {
+            self.words.resize(words, 0);
+        }
+        // Mask off the partial tail word: bits past `n` are gone NOW,
+        // not whenever the word next gets rewritten.
+        if let Some(last) = self.words.last_mut() {
+            let rem = n % 64;
+            if rem != 0 {
+                *last &= (1u64 << rem) - 1;
+            }
+        }
+    }
+
     /// Raw word access (used by the shared prefix index walk).
     pub fn words(&self) -> &[u64] {
         &self.words
@@ -282,5 +305,44 @@ mod tests {
     fn mask_out_of_range_get_is_false() {
         let m = InstanceMask::with_capacity(4);
         assert!(!m.get(1000));
+    }
+
+    #[test]
+    fn mask_resize_instances_churn() {
+        let mut m = InstanceMask::with_capacity(200);
+        m.set(3);
+        m.set(70);
+        m.set(130);
+
+        // Shrink to 100: instance 130 removed, survivors keep their bits.
+        m.resize_instances(100);
+        assert!(m.get(3) && m.get(70));
+        assert!(!m.get(130));
+        assert_eq!(m.words().len(), 2);
+
+        // Shrink to exactly one word: 70 removed too.
+        m.resize_instances(64);
+        assert_eq!(m.words().len(), 1);
+        assert_eq!(m.iter_ones().collect::<Vec<_>>(), vec![3]);
+
+        // Grow back: removed instances must NOT resurrect.
+        m.resize_instances(200);
+        assert!(!m.get(70) && !m.get(130));
+        assert_eq!(m.count(), 1);
+        // New capacity is immediately usable.
+        m.set(199);
+        assert!(m.get(199));
+        assert_eq!(m.iter_ones().collect::<Vec<_>>(), vec![3, 199]);
+
+        // Shrink to a partial word: in-word tail bits past `n` are cleared
+        // right away, not lazily on the next write.
+        let mut p = InstanceMask::with_capacity(64);
+        p.set(2);
+        p.set(60);
+        p.resize_instances(5);
+        assert!(p.get(2));
+        assert!(!p.get(60));
+        assert_eq!(p.words(), &[0b100]);
+        assert_eq!(p.count(), 1);
     }
 }

@@ -15,35 +15,46 @@
 //!   identical to the N-mirror design — `MirrorKvView` keeps the old
 //!   implementation alive as the reference model the equivalence tests
 //!   (here and in `tests/policy_semantics.rs`) replay against.
+//! * [`ShardedRadixIndex`] — the monolithic index split into S first-hash
+//!   shards behind epoch-stamped snapshot reads, so R router workers can
+//!   score concurrently through `&self` while writes serialize at a merge
+//!   point (see `kvcache::sharded` and `cluster::run_concurrent`). Its
+//!   per-instance LRU state is global across shards, keeping decisions
+//!   byte-identical to `SharedRadixIndex` — pinned by the three-way churn
+//!   test below, which replays identical traffic through the sharded
+//!   index, the monolithic index AND the per-instance mirrors.
 //!
 //! [`RouterKvView`] is the thin facade the indicator factory uses: it
-//! wraps the shared index, is updated optimistically when the router
+//! wraps the sharded index, is updated optimistically when the router
 //! routes a request and authoritatively when a response arrives
-//! (piggybacked, §3), and exposes the allocation-free `match_into` walk.
+//! (piggybacked, §3), and exposes the allocation-free `match_into` walk
+//! plus the lock-free read path (`match_with`).
 
 mod radix;
 mod shared;
+mod sharded;
 
 pub use radix::{AdmitOutcome, RadixTree};
 pub use shared::SharedRadixIndex;
+pub use sharded::{shard_of, IndexSnapshot, ShardedRadixIndex, DEFAULT_SHARDS};
 
 use crate::core::InstanceMask;
 
 /// Router-side KV$ view over all instances (the `KV` symbolic indicator
-/// of the paper's indicator factory), backed by the shared presence-mask
+/// of the paper's indicator factory), backed by the sharded presence-mask
 /// prefix index. The router cannot see instance memory; it updates the
 /// view when it routes a request (optimistic insert of the prompt) and
 /// when a response arrives (authoritative insert of prompt+output, §3).
 #[derive(Debug)]
 pub struct RouterKvView {
-    index: SharedRadixIndex,
+    index: ShardedRadixIndex,
 }
 
 impl RouterKvView {
     /// `capacity_blocks` is per instance; 0 means unbounded.
     pub fn new(n_instances: usize, capacity_blocks: usize) -> Self {
         RouterKvView {
-            index: SharedRadixIndex::new(n_instances, capacity_blocks),
+            index: ShardedRadixIndex::new(n_instances, capacity_blocks),
         }
     }
 
@@ -62,6 +73,28 @@ impl RouterKvView {
         matched: &mut InstanceMask,
     ) {
         self.index.match_into(hashes, hit_blocks, matched);
+    }
+
+    /// The concurrent read path: identical fill semantics to
+    /// [`Self::match_into`] but through `&self` with caller-owned live-set
+    /// scratch and NO counter updates — R router workers call this in
+    /// parallel from a pinned view, and the merge step records the
+    /// returned hit-block sum via [`Self::record_lookup`] so the lifetime
+    /// counters stay identical to a serial run.
+    pub fn match_with(
+        &self,
+        hashes: &[u64],
+        hit_blocks: &mut Vec<usize>,
+        matched: &mut InstanceMask,
+        live: &mut Vec<u64>,
+    ) -> usize {
+        self.index.match_with(hashes, hit_blocks, matched, live)
+    }
+
+    /// Record the accounting of a walk done earlier through
+    /// [`Self::match_with`] (at the serialized merge point).
+    pub fn record_lookup(&mut self, lookup_blocks: usize, hit_blocks: usize) {
+        self.index.record_lookup(lookup_blocks, hit_blocks);
     }
 
     /// Allocating convenience wrapper over [`Self::match_into`] (tests
@@ -84,8 +117,8 @@ impl RouterKvView {
         self.index.insert(inst, full_hashes, now_us);
     }
 
-    /// The underlying shared index (stats, invariant checks).
-    pub fn index(&self) -> &SharedRadixIndex {
+    /// The underlying sharded index (stats, snapshots, invariant checks).
+    pub fn index(&self) -> &ShardedRadixIndex {
         &self.index
     }
 }
@@ -167,18 +200,22 @@ mod tests {
 
     /// The load-bearing contract of this module: under arbitrary mixed
     /// traffic — optimistic and authoritative inserts on random instances,
-    /// bounded capacities forcing per-instance LRU eviction — the shared
-    /// presence-mask index and N dedicated per-instance mirrors report
-    /// IDENTICAL hit vectors on every lookup. Eviction order, timestamp
-    /// refresh and free-list reuse are replicated exactly, so any
-    /// divergence (which would change routing decisions) fails here.
+    /// bounded capacities forcing per-instance LRU eviction — the sharded
+    /// router view, the monolithic `SharedRadixIndex` and N dedicated
+    /// per-instance mirrors report IDENTICAL hit vectors on every lookup.
+    /// Eviction order, timestamp refresh and free-list reuse are
+    /// replicated exactly across all three, so any divergence (which
+    /// would change routing decisions) fails here.
     #[test]
     fn shared_index_equals_per_instance_mirrors_under_churn() {
         for seed in 0..6u64 {
             for cap in [0usize, 8, 32] {
                 let n = 5usize;
-                let mut shared = RouterKvView::new(n, cap);
+                let mut sharded = RouterKvView::new(n, cap);
+                let mut mono = SharedRadixIndex::new(n, cap);
                 let mut mirror = MirrorKvView::new(n, cap);
+                let mut mono_hits = Vec::new();
+                let mut mono_mask = InstanceMask::default();
                 let mut rng = Rng::new(seed.wrapping_mul(0x9e37_79b9) ^ 0x5eed);
                 for step in 0..1500u64 {
                     let base = rng.gen_range(0, 6);
@@ -188,36 +225,50 @@ mod tests {
                     match rng.gen_range(0, 4) {
                         0 => {
                             let i = rng.gen_range(0, n as u64) as usize;
-                            shared.on_route(i, &chain, step);
+                            sharded.on_route(i, &chain, step);
+                            mono.insert(i, &chain, step);
                             mirror.on_route(i, &chain, step);
                         }
                         1 => {
                             let i = rng.gen_range(0, n as u64) as usize;
-                            shared.on_response(i, &chain, step);
+                            sharded.on_response(i, &chain, step);
+                            mono.insert(i, &chain, step);
                             mirror.on_response(i, &chain, step);
                         }
                         _ => {
+                            let hits = sharded.match_all(&chain, step);
+                            mono.match_into(&chain, &mut mono_hits, &mut mono_mask);
                             assert_eq!(
-                                shared.match_all(&chain, step),
+                                hits, mono_hits,
+                                "sharded vs monolithic diverged: seed {seed} cap {cap} step {step} chain {chain:?}"
+                            );
+                            assert_eq!(
+                                hits,
                                 mirror.match_all(&chain, step),
-                                "diverged: seed {seed} cap {cap} step {step} chain {chain:?}"
+                                "sharded vs mirrors diverged: seed {seed} cap {cap} step {step} chain {chain:?}"
                             );
                         }
                     }
                     if step % 251 == 0 {
-                        shared.index().check_invariants().unwrap();
+                        sharded.index().check_invariants().unwrap();
                     }
                 }
                 // Full-state probe: every possible chain agrees at the end.
                 for base in 0..6u64 {
                     let chain: Vec<u64> = (0..10).map(|i| base * 1000 + i).collect();
+                    let hits = sharded.match_all(&chain, 10_000);
+                    mono.match_into(&chain, &mut mono_hits, &mut mono_mask);
                     assert_eq!(
-                        shared.match_all(&chain, 10_000),
+                        hits, mono_hits,
+                        "final state diverged (monolithic): seed {seed} cap {cap} base {base}"
+                    );
+                    assert_eq!(
+                        hits,
                         mirror.match_all(&chain, 10_000),
-                        "final state diverged: seed {seed} cap {cap} base {base}"
+                        "final state diverged (mirrors): seed {seed} cap {cap} base {base}"
                     );
                 }
-                shared.index().check_invariants().unwrap();
+                sharded.index().check_invariants().unwrap();
             }
         }
     }

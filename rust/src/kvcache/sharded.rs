@@ -1,0 +1,1021 @@
+//! The sharded, concurrently-readable router prefix index.
+//!
+//! [`super::SharedRadixIndex`] already collapsed N per-instance mirrors
+//! into one presence-mask radix tree, but every router decision still
+//! reads the *same* monolithic structure a writer mutates — one thread,
+//! one lock domain. This module splits that structure into S shards so R
+//! router workers can score concurrently from `&self` reads while commits
+//! stay serialized at a merge point:
+//!
+//! * **Shard partition.** In a radix tree over block-hash *chains*, two
+//!   chains share nodes only below a common first block, so sharding by
+//!   the first block's hash ([`shard_of`]) partitions the node set
+//!   exactly: every request walks exactly ONE shard, and no node is
+//!   reachable from two shards.
+//! * **Global per-instance LRU.** Capacity, slot allocation, the lazy
+//!   eviction heap and timestamps stay per-*instance* and global across
+//!   shards (an instance's LRU block may live in any shard, and eviction
+//!   must pick the globally oldest). Node references in the per-instance
+//!   state are packed `(shard, node)` ids. Because the per-instance
+//!   machinery is a verbatim transplant of `SharedRadixIndex`'s, insert
+//!   order, eviction order and slot tie-breaks are byte-identical to the
+//!   monolithic index — the churn test in `kvcache/mod.rs` and the
+//!   all-policies replay in `tests/policy_semantics.rs` pin this.
+//! * **Epochs.** Every shard carries an epoch bumped on each mutation of
+//!   its nodes/masks, and the index carries a global `version` bumped per
+//!   write call. A reader pins a [`IndexSnapshot`] (a `&self` borrow plus
+//!   the stamps): in safe code the borrow itself freezes the index for
+//!   the snapshot's lifetime, and under an `RwLock` the read guard does —
+//!   [`IndexSnapshot::is_consistent`] asserts the discipline held. Note
+//!   that *eviction can cross shards* (global LRU), which is exactly why
+//!   consistency is pinned at whole-index granularity rather than by
+//!   locking one shard at a time.
+//!
+//! The read path ([`ShardedRadixIndex::match_with`]) takes `&self` and
+//! caller-owned scratch, so any number of workers may walk concurrently;
+//! the serial wrapper [`ShardedRadixIndex::match_into`] keeps the old
+//! `&mut self` counter-bumping contract for drop-in compatibility.
+
+use std::collections::{BinaryHeap, HashMap};
+
+use crate::core::InstanceMask;
+use crate::util::FastHash;
+
+const ROOT: usize = 0;
+/// Packed `(shard, node)` reference: shard in the high 24 bits, node
+/// index in the low 40 (a shard arena of 2^40 nodes is unreachable).
+const NODE_BITS: u32 = 40;
+const NONE_REF: u64 = u64::MAX;
+
+/// Shards a chain by its FIRST block hash — the pure function the whole
+/// partition rests on (and the one `python/tests/test_shard_assignment.py`
+/// mirrors line-for-line with pinned vectors). SplitMix64's finalizer
+/// over `hash ^ golden-ratio`, then a modulo: cheap, stateless, and
+/// avalanching enough that consecutive class hashes spread evenly.
+#[inline]
+pub fn shard_of(first_hash: u64, n_shards: usize) -> usize {
+    let mut z = first_hash ^ 0x9e37_79b9_7f4a_7c15;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^= z >> 31;
+    (z % n_shards as u64) as usize
+}
+
+#[inline]
+fn pack(shard: usize, node: usize) -> u64 {
+    debug_assert!(node < (1usize << NODE_BITS));
+    ((shard as u64) << NODE_BITS) | node as u64
+}
+
+#[inline]
+fn unpack(r: u64) -> (usize, usize) {
+    ((r >> NODE_BITS) as usize, (r & ((1u64 << NODE_BITS) - 1)) as usize)
+}
+
+#[derive(Debug)]
+struct ShardNode {
+    hash: u64,
+    parent: usize,
+    children: HashMap<u64, usize, FastHash>,
+    alive: bool,
+}
+
+/// One shard: a self-contained radix arena (own root at index 0, own
+/// free-list) plus the epoch stamp readers pin against.
+#[derive(Debug)]
+struct Shard {
+    nodes: Vec<ShardNode>,
+    /// Flat node masks: `masks[node*words .. (node+1)*words]`.
+    masks: Vec<u64>,
+    free_nodes: Vec<usize>,
+    /// Bumped on every mutation of this shard's nodes or masks.
+    epoch: u64,
+}
+
+impl Shard {
+    fn new(words: usize) -> Self {
+        Shard {
+            nodes: vec![ShardNode {
+                hash: 0,
+                parent: ROOT,
+                children: HashMap::default(),
+                alive: true,
+            }],
+            masks: vec![0; words],
+            free_nodes: Vec::new(),
+            epoch: 0,
+        }
+    }
+}
+
+/// Max-heap entry ordered by *oldest* access first; ties break on the
+/// smaller per-instance slot — identical to `SharedRadixIndex`'s.
+#[derive(Debug, PartialEq, Eq)]
+struct EvictCandidate {
+    last_access: u64,
+    slot: usize,
+}
+
+impl Ord for EvictCandidate {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other
+            .last_access
+            .cmp(&self.last_access)
+            .then(other.slot.cmp(&self.slot))
+    }
+}
+impl PartialOrd for EvictCandidate {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Per-(node, instance) LRU metadata, keyed by packed node refs.
+#[derive(Debug)]
+struct InstMeta {
+    last_access: u64,
+    /// Children of this node present on this instance (0 = instance-leaf).
+    children: u32,
+    /// Instance-local slot id (monotone counter + LIFO free-list reuse),
+    /// replicating the dedicated-mirror node ids so eviction tie-breaks
+    /// match the mirror — and `SharedRadixIndex` — exactly.
+    slot: usize,
+}
+
+/// Per-instance eviction state — global across shards, because an
+/// instance's capacity and LRU order are properties of the instance, not
+/// of any shard. This is what keeps sharded decisions byte-identical to
+/// the monolithic index: the slot/heap/timestamp machinery below is a
+/// verbatim transplant with node ids widened to packed refs.
+#[derive(Debug)]
+struct InstanceState {
+    used: usize,
+    meta: HashMap<u64, InstMeta, FastHash>,
+    heap: BinaryHeap<EvictCandidate>,
+    free_slots: Vec<usize>,
+    next_slot: usize,
+    /// slot -> packed node ref currently occupying it (NONE_REF = free).
+    slot_node: Vec<u64>,
+}
+
+impl InstanceState {
+    fn new() -> Self {
+        InstanceState {
+            used: 0,
+            meta: HashMap::default(),
+            heap: BinaryHeap::new(),
+            free_slots: Vec::new(),
+            // Slot 0 is the root sentinel (mirrors index their root at 0
+            // and never push it), so real slots start at 1.
+            next_slot: 1,
+            slot_node: vec![NONE_REF],
+        }
+    }
+}
+
+/// Default shard count: enough that 8–16 router workers rarely contend
+/// on a hot shard under Zipf-skewed first blocks, small enough that the
+/// per-shard arenas stay cache-friendly at bench scale.
+pub const DEFAULT_SHARDS: usize = 16;
+
+/// The sharded presence-mask prefix index. Drop-in for
+/// [`super::SharedRadixIndex`] (same `capacity` semantics: per instance,
+/// in blocks, 0 = unbounded) plus the concurrent read path.
+#[derive(Debug)]
+pub struct ShardedRadixIndex {
+    n_instances: usize,
+    /// Mask words per node: ceil(n_instances / 64) — growable past 64.
+    words: usize,
+    capacity: usize,
+    shards: Vec<Shard>,
+    inst: Vec<InstanceState>,
+    /// Bumped once per write call (`insert`) — the publish event readers
+    /// measure staleness against.
+    version: u64,
+    /// Scratch live-set for the serial `match_into` walk.
+    live: Vec<u64>,
+    /// Cumulative lookup accounting, aggregated over instances.
+    pub total_lookup_blocks: u64,
+    pub total_hit_blocks: u64,
+    pub total_evicted_blocks: u64,
+}
+
+impl ShardedRadixIndex {
+    /// `capacity_blocks` is per instance; 0 means unbounded.
+    pub fn new(n_instances: usize, capacity_blocks: usize) -> Self {
+        Self::with_shards(n_instances, capacity_blocks, DEFAULT_SHARDS)
+    }
+
+    pub fn with_shards(n_instances: usize, capacity_blocks: usize, n_shards: usize) -> Self {
+        assert!(n_shards >= 1, "need at least one shard");
+        let words = n_instances.div_ceil(64);
+        ShardedRadixIndex {
+            n_instances,
+            words,
+            capacity: capacity_blocks,
+            shards: (0..n_shards).map(|_| Shard::new(words)).collect(),
+            inst: (0..n_instances).map(|_| InstanceState::new()).collect(),
+            version: 0,
+            live: vec![0; words],
+            total_lookup_blocks: 0,
+            total_hit_blocks: 0,
+            total_evicted_blocks: 0,
+        }
+    }
+
+    pub fn n_instances(&self) -> usize {
+        self.n_instances
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn capacity_blocks(&self) -> usize {
+        self.capacity
+    }
+
+    /// Blocks instance `inst` currently holds.
+    pub fn used_blocks(&self, inst: usize) -> usize {
+        self.inst[inst].used
+    }
+
+    /// Global write version: bumped once per `insert` call. Readers age
+    /// their pinned view in "writes since pin".
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// A shard's mutation epoch (every node/mask change bumps it — note
+    /// that cross-shard eviction means a write keyed to shard A may bump
+    /// shard B's epoch too).
+    pub fn shard_epoch(&self, shard: usize) -> u64 {
+        self.shards[shard].epoch
+    }
+
+    fn epoch_sum(&self) -> u64 {
+        self.shards.iter().map(|s| s.epoch).sum()
+    }
+
+    /// Pin an epoch-stamped read view. The borrow freezes the index for
+    /// the snapshot's lifetime (or the `RwLock` read guard does, in the
+    /// concurrent harness), so every walk through the snapshot sees one
+    /// consistent state across all shards.
+    pub fn snapshot(&self) -> IndexSnapshot<'_> {
+        IndexSnapshot {
+            index: self,
+            version: self.version,
+            epoch_sum: self.epoch_sum(),
+        }
+    }
+
+    #[inline]
+    fn mask_get(&self, shard: usize, node: usize, i: usize) -> bool {
+        self.shards[shard].masks[node * self.words + i / 64] & (1u64 << (i % 64)) != 0
+    }
+
+    #[inline]
+    fn mask_set(&mut self, shard: usize, node: usize, i: usize) {
+        self.shards[shard].masks[node * self.words + i / 64] |= 1u64 << (i % 64);
+    }
+
+    #[inline]
+    fn mask_clear(&mut self, shard: usize, node: usize, i: usize) {
+        self.shards[shard].masks[node * self.words + i / 64] &= !(1u64 << (i % 64));
+    }
+
+    fn mask_is_empty(&self, shard: usize, node: usize) -> bool {
+        self.shards[shard].masks[node * self.words..(node + 1) * self.words]
+            .iter()
+            .all(|&w| w == 0)
+    }
+
+    /// The concurrent read path: one walk of the chain's shard answers
+    /// every instance at once, through `&self` and caller-owned scratch
+    /// (`live` is the shrinking live-set buffer), so R workers can score
+    /// in parallel without any lock. Returns the summed hit blocks (the
+    /// accounting a merge step later records via [`Self::record_lookup`]).
+    /// Identical fill semantics to `SharedRadixIndex::match_into`.
+    pub fn match_with(
+        &self,
+        hashes: &[u64],
+        hit_blocks: &mut Vec<usize>,
+        matched: &mut InstanceMask,
+        live: &mut Vec<u64>,
+    ) -> usize {
+        let n = self.n_instances;
+        let words = self.words;
+        hit_blocks.clear();
+        hit_blocks.resize(n, 0);
+        matched.reset(n);
+        live.clear();
+        live.resize(words, 0);
+        for (w, lw) in live.iter_mut().enumerate() {
+            let rem = n - w * 64;
+            *lw = if rem >= 64 { u64::MAX } else { (1u64 << rem) - 1 };
+        }
+        let mut depth = 0usize;
+        if let Some(&first) = hashes.first() {
+            let shard = &self.shards[shard_of(first, self.shards.len())];
+            let mut cur = ROOT;
+            for h in hashes {
+                let Some(&next) = shard.nodes[cur].children.get(h) else {
+                    break;
+                };
+                let mask = &shard.masks[next * words..(next + 1) * words];
+                let mut any = false;
+                for w in 0..words {
+                    let dropped = live[w] & !mask[w];
+                    if dropped != 0 {
+                        // Instances leaving the live-set matched exactly
+                        // the blocks BEFORE this node.
+                        let mut bits = dropped;
+                        while bits != 0 {
+                            let b = bits.trailing_zeros() as usize;
+                            hit_blocks[w * 64 + b] = depth;
+                            bits &= bits - 1;
+                        }
+                        live[w] &= mask[w];
+                    }
+                    if live[w] != 0 {
+                        any = true;
+                    }
+                }
+                if !any {
+                    break; // no instance holds this block
+                }
+                depth += 1;
+                if depth == 1 {
+                    // Survivors of the first block are exactly the
+                    // instances holding ≥ 1 block of this prompt.
+                    matched.copy_from_words(live);
+                }
+                cur = next;
+            }
+        }
+        // Instances that survived the whole walk matched `depth` blocks.
+        for (w, &lw) in live.iter().enumerate() {
+            let mut bits = lw;
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                hit_blocks[w * 64 + b] = depth;
+                bits &= bits - 1;
+            }
+        }
+        hit_blocks.iter().sum()
+    }
+
+    /// Serial wrapper keeping `SharedRadixIndex::match_into`'s exact
+    /// contract (including the counter bumps), via internal scratch.
+    pub fn match_into(
+        &mut self,
+        hashes: &[u64],
+        hit_blocks: &mut Vec<usize>,
+        matched: &mut InstanceMask,
+    ) {
+        let mut live = std::mem::take(&mut self.live);
+        let hit = self.match_with(hashes, hit_blocks, matched, &mut live);
+        self.live = live;
+        self.record_lookup(hashes.len(), hit);
+    }
+
+    /// Record lookup accounting decoupled from the walk — the concurrent
+    /// harness walks read-only on workers and records at the serialized
+    /// merge, keeping the counters identical to a serial run.
+    pub fn record_lookup(&mut self, lookup_blocks: usize, hit_blocks: usize) {
+        self.total_lookup_blocks += (lookup_blocks * self.n_instances) as u64;
+        self.total_hit_blocks += hit_blocks as u64;
+    }
+
+    /// Insert the chain for one instance, evicting that instance's LRU
+    /// blocks as needed — the same per-instance semantics as
+    /// `SharedRadixIndex::insert` (which itself replicates the dedicated
+    /// per-instance mirror byte-for-byte), with the walk confined to the
+    /// chain's shard. Returns new blocks added for this instance.
+    pub fn insert(&mut self, inst_id: usize, hashes: &[u64], now: u64) -> usize {
+        self.version += 1;
+        let Some(&first) = hashes.first() else {
+            return 0;
+        };
+        let sid = shard_of(first, self.shards.len());
+        self.shards[sid].epoch += 1;
+        let mut cur = ROOT;
+        let mut cur_slot = 0usize; // root sentinel; never a candidate slot
+        let mut created = 0usize;
+        for h in hashes {
+            let child = self.shards[sid].nodes[cur].children.get(h).copied();
+            if let Some(c) = child {
+                if self.mask_get(sid, c, inst_id) {
+                    // Already present: refresh LRU state; free leaves are
+                    // re-pushed so they stay evictable.
+                    let state = &mut self.inst[inst_id];
+                    let m = state
+                        .meta
+                        .get_mut(&pack(sid, c))
+                        .expect("present bit without meta");
+                    m.last_access = now;
+                    let slot = m.slot;
+                    let is_leaf = m.children == 0;
+                    if self.capacity != 0 && is_leaf {
+                        state.heap.push(EvictCandidate {
+                            last_access: now,
+                            slot,
+                        });
+                    }
+                    cur = c;
+                    cur_slot = slot;
+                    continue;
+                }
+            }
+            // The instance doesn't hold this block: make room, then add
+            // its presence (reusing the shared node when one exists).
+            if self.capacity != 0
+                && self.inst[inst_id].used >= self.capacity
+                && !self.evict_one(inst_id, cur_slot)
+            {
+                break; // full and nothing evictable
+            }
+            let idx = match child {
+                Some(c) => c,
+                None => self.alloc_node(sid, *h, cur),
+            };
+            self.mask_set(sid, idx, inst_id);
+            let push_candidate = self.capacity != 0;
+            let state = &mut self.inst[inst_id];
+            let slot = match state.free_slots.pop() {
+                Some(s) => s,
+                None => {
+                    let s = state.next_slot;
+                    state.next_slot += 1;
+                    s
+                }
+            };
+            if slot >= state.slot_node.len() {
+                state.slot_node.resize(slot + 1, NONE_REF);
+            }
+            state.slot_node[slot] = pack(sid, idx);
+            state.meta.insert(
+                pack(sid, idx),
+                InstMeta {
+                    last_access: now,
+                    children: 0,
+                    slot,
+                },
+            );
+            if push_candidate {
+                state.heap.push(EvictCandidate {
+                    last_access: now,
+                    slot,
+                });
+            }
+            state.used += 1;
+            if cur != ROOT {
+                state
+                    .meta
+                    .get_mut(&pack(sid, cur))
+                    .expect("parent missing instance meta")
+                    .children += 1;
+            }
+            created += 1;
+            cur = idx;
+            cur_slot = slot;
+        }
+        self.maybe_compact_heap(inst_id);
+        created
+    }
+
+    /// Compact an instance's lazy heap when stale entries dominate —
+    /// same trigger and validity predicate as `SharedRadixIndex`.
+    fn maybe_compact_heap(&mut self, inst_id: usize) {
+        let state = &mut self.inst[inst_id];
+        if state.heap.len() <= 4 * state.used.max(16) {
+            return;
+        }
+        let old = std::mem::take(&mut state.heap);
+        let meta = &state.meta;
+        let slot_node = &state.slot_node;
+        state.heap = old
+            .into_iter()
+            .filter(|c| {
+                let node = slot_node.get(c.slot).copied().unwrap_or(NONE_REF);
+                if node == NONE_REF {
+                    return false;
+                }
+                match meta.get(&node) {
+                    Some(m) => {
+                        m.slot == c.slot && m.children == 0 && m.last_access == c.last_access
+                    }
+                    None => false,
+                }
+            })
+            .collect();
+    }
+
+    /// Evict one LRU block of `inst_id`. Candidates are GLOBAL across
+    /// shards (the instance's oldest block wins wherever it lives), with
+    /// the same deferred-candidate discipline as `SharedRadixIndex`:
+    /// a valid-but-protected entry is parked and restored on exit.
+    fn evict_one(&mut self, inst_id: usize, protect_slot: usize) -> bool {
+        let mut deferred: Option<EvictCandidate> = None;
+        let mut evicted = false;
+        while let Some(cand) = self.inst[inst_id].heap.pop() {
+            let nref = self.inst[inst_id]
+                .slot_node
+                .get(cand.slot)
+                .copied()
+                .unwrap_or(NONE_REF);
+            if nref == NONE_REF {
+                continue;
+            }
+            // Lazy validation: the entry must still describe reality
+            // (instance-leaf, timestamp unchanged since push).
+            let valid = match self.inst[inst_id].meta.get(&nref) {
+                Some(m) => {
+                    m.slot == cand.slot && m.children == 0 && m.last_access == cand.last_access
+                }
+                None => false,
+            };
+            if !valid {
+                continue;
+            }
+            if cand.slot == protect_slot {
+                deferred = Some(cand);
+                continue;
+            }
+            let (sid, node) = unpack(nref);
+            self.mask_clear(sid, node, inst_id);
+            let parent = self.shards[sid].nodes[node].parent;
+            {
+                let state = &mut self.inst[inst_id];
+                state.meta.remove(&nref);
+                state.slot_node[cand.slot] = NONE_REF;
+                state.free_slots.push(cand.slot);
+                state.used -= 1;
+                if parent != ROOT {
+                    if let Some(pm) = state.meta.get_mut(&pack(sid, parent)) {
+                        pm.children -= 1;
+                        if pm.children == 0 {
+                            // Parent became this instance's leaf.
+                            let (la, slot) = (pm.last_access, pm.slot);
+                            state.heap.push(EvictCandidate {
+                                last_access: la,
+                                slot,
+                            });
+                        }
+                    }
+                }
+            }
+            self.total_evicted_blocks += 1;
+            // Shared-structure GC: unlink nodes no instance holds. By the
+            // closure invariant such a node has no live children.
+            if self.mask_is_empty(sid, node) {
+                debug_assert!(
+                    self.shards[sid].nodes[node].children.is_empty(),
+                    "presence closure violated"
+                );
+                let hash = self.shards[sid].nodes[node].hash;
+                self.shards[sid].nodes[parent].children.remove(&hash);
+                self.shards[sid].nodes[node].alive = false;
+                self.shards[sid].free_nodes.push(node);
+            }
+            // The mutated shard may differ from the insert's shard —
+            // cross-shard eviction publishes on the shard it touched.
+            self.shards[sid].epoch += 1;
+            evicted = true;
+            break;
+        }
+        if let Some(c) = deferred {
+            self.inst[inst_id].heap.push(c);
+        }
+        evicted
+    }
+
+    fn alloc_node(&mut self, sid: usize, hash: u64, parent: usize) -> usize {
+        let words = self.words;
+        let shard = &mut self.shards[sid];
+        let idx = if let Some(idx) = shard.free_nodes.pop() {
+            debug_assert!(
+                shard.masks[idx * words..(idx + 1) * words]
+                    .iter()
+                    .all(|&w| w == 0),
+                "recycled node with live presence bits"
+            );
+            let n = &mut shard.nodes[idx];
+            debug_assert!(n.children.is_empty());
+            n.hash = hash;
+            n.parent = parent;
+            n.alive = true;
+            idx
+        } else {
+            shard.nodes.push(ShardNode {
+                hash,
+                parent,
+                children: HashMap::default(),
+                alive: true,
+            });
+            shard.masks.resize(shard.nodes.len() * words, 0);
+            shard.nodes.len() - 1
+        };
+        shard.nodes[parent].children.insert(hash, idx);
+        idx
+    }
+
+    /// Lifetime block hit rate across all instances.
+    pub fn hit_rate(&self) -> f64 {
+        if self.total_lookup_blocks == 0 {
+            0.0
+        } else {
+            self.total_hit_blocks as f64 / self.total_lookup_blocks as f64
+        }
+    }
+
+    /// Alive non-root nodes across all shards (arena-bound assertions).
+    pub fn alive_nodes(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.nodes.iter().skip(1).filter(|n| n.alive).count())
+            .sum()
+    }
+
+    /// Invariant checker used by the property/equivalence tests: per-shard
+    /// structural invariants (links, presence closure, no orphan nodes)
+    /// plus cross-shard per-instance accounting (used counts, slot maps,
+    /// children counters).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let words = self.words;
+        let mut per_inst_live = vec![0usize; self.n_instances];
+        for (sid, shard) in self.shards.iter().enumerate() {
+            for (i, n) in shard.nodes.iter().enumerate() {
+                if !n.alive {
+                    continue;
+                }
+                if i != ROOT {
+                    let p = &shard.nodes[n.parent];
+                    if !p.alive {
+                        return Err(format!("shard {sid} node {i} has dead parent {}", n.parent));
+                    }
+                    if p.children.get(&n.hash) != Some(&i) {
+                        return Err(format!("shard {sid} node {i} not linked from parent"));
+                    }
+                    let mut empty = true;
+                    for w in 0..words {
+                        let nm = shard.masks[i * words + w];
+                        // The root implicitly holds everything.
+                        let pm = if n.parent == ROOT {
+                            u64::MAX
+                        } else {
+                            shard.masks[n.parent * words + w]
+                        };
+                        if nm & !pm != 0 {
+                            return Err(format!(
+                                "presence closure violated at shard {sid} node {i}"
+                            ));
+                        }
+                        if nm != 0 {
+                            empty = false;
+                        }
+                    }
+                    if empty {
+                        return Err(format!("alive shard {sid} node {i} held by no instance"));
+                    }
+                    for (inst, cnt) in per_inst_live.iter_mut().enumerate() {
+                        if self.mask_get(sid, i, inst) {
+                            *cnt += 1;
+                        }
+                    }
+                }
+                for (&h, &c) in &n.children {
+                    let ch = &shard.nodes[c];
+                    if !ch.alive || ch.parent != i || ch.hash != h {
+                        return Err(format!("bad child link {i}->{c} in shard {sid}"));
+                    }
+                }
+            }
+        }
+        for (inst, state) in self.inst.iter().enumerate() {
+            if state.used != per_inst_live[inst] {
+                return Err(format!(
+                    "instance {inst}: used={} but mask bits={}",
+                    state.used, per_inst_live[inst]
+                ));
+            }
+            if self.capacity != 0 && state.used > self.capacity {
+                return Err(format!(
+                    "instance {inst} over capacity: {}>{}",
+                    state.used, self.capacity
+                ));
+            }
+            if state.meta.len() != state.used {
+                return Err(format!(
+                    "instance {inst}: meta {} entries vs used {}",
+                    state.meta.len(),
+                    state.used
+                ));
+            }
+            for (&nref, m) in &state.meta {
+                let (sid, node) = unpack(nref);
+                if !self.shards[sid].nodes[node].alive || !self.mask_get(sid, node, inst) {
+                    return Err(format!(
+                        "instance {inst}: meta for absent shard {sid} node {node}"
+                    ));
+                }
+                if state.slot_node.get(m.slot).copied().unwrap_or(NONE_REF) != nref {
+                    return Err(format!(
+                        "instance {inst}: slot map broken at shard {sid} node {node}"
+                    ));
+                }
+                let cnt = self.shards[sid].nodes[node]
+                    .children
+                    .values()
+                    .filter(|&&c| self.mask_get(sid, c, inst))
+                    .count() as u32;
+                if cnt != m.children {
+                    return Err(format!(
+                        "instance {inst}: shard {sid} node {node} children {} vs counted {cnt}",
+                        m.children
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// An epoch-stamped pinned read view over the whole index. While this
+/// exists, the `&` borrow (or the `RwLock` read guard holding it) keeps
+/// every shard frozen, so all walks observe one consistent state — the
+/// "(index_snapshot, instance_snapshot)" pinning contract the concurrent
+/// DES harness relies on.
+#[derive(Debug, Clone, Copy)]
+pub struct IndexSnapshot<'a> {
+    index: &'a ShardedRadixIndex,
+    version: u64,
+    epoch_sum: u64,
+}
+
+impl IndexSnapshot<'_> {
+    /// The write version this view was pinned at.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Whether the underlying index is still exactly as pinned: no write
+    /// version bump AND no shard epoch movement (epochs only grow, so
+    /// their sum detects any torn shard even if the version were somehow
+    /// unchanged). Always true under the borrow/lock discipline; the
+    /// writer/reader churn test asserts it from reader threads.
+    pub fn is_consistent(&self) -> bool {
+        self.version == self.index.version && self.epoch_sum == self.index.epoch_sum()
+    }
+
+    /// Read-only walk through the pinned view — see
+    /// [`ShardedRadixIndex::match_with`].
+    pub fn match_with(
+        &self,
+        hashes: &[u64],
+        hit_blocks: &mut Vec<usize>,
+        matched: &mut InstanceMask,
+        live: &mut Vec<u64>,
+    ) -> usize {
+        self.index.match_with(hashes, hit_blocks, matched, live)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::SharedRadixIndex;
+    use crate::util::Rng;
+
+    fn hits(ix: &mut ShardedRadixIndex, hashes: &[u64]) -> Vec<usize> {
+        let mut h = Vec::new();
+        let mut m = InstanceMask::default();
+        ix.match_into(hashes, &mut h, &mut m);
+        h
+    }
+
+    /// Pinned against python/tests/test_shard_assignment.py — both sides
+    /// were generated from the same reference program, so a silent edit
+    /// to either implementation breaks one of the two suites.
+    #[test]
+    fn shard_of_pinned_vectors() {
+        let hashes: [u64; 10] = [
+            0,
+            1,
+            2,
+            0xDEAD_BEEF,
+            0x0123_4567_89AB_CDEF,
+            u64::MAX,
+            42,
+            1000,
+            123_456_789,
+            0x9e37_79b9_7f4a_7c15,
+        ];
+        let expect_2: [usize; 10] = [1, 0, 0, 1, 1, 0, 1, 0, 0, 0];
+        let expect_8: [usize; 10] = [7, 0, 6, 1, 1, 4, 5, 0, 6, 0];
+        let expect_16: [usize; 10] = [15, 0, 14, 1, 9, 4, 5, 8, 14, 0];
+        let expect_64: [usize; 10] = [47, 32, 14, 1, 57, 4, 21, 8, 46, 0];
+        for (i, &h) in hashes.iter().enumerate() {
+            assert_eq!(shard_of(h, 1), 0);
+            assert_eq!(shard_of(h, 2), expect_2[i], "hash {h:#x} % 2");
+            assert_eq!(shard_of(h, 8), expect_8[i], "hash {h:#x} % 8");
+            assert_eq!(shard_of(h, 16), expect_16[i], "hash {h:#x} % 16");
+            assert_eq!(shard_of(h, 64), expect_64[i], "hash {h:#x} % 64");
+        }
+    }
+
+    #[test]
+    fn one_walk_matches_all_instances() {
+        let mut ix = ShardedRadixIndex::new(3, 0);
+        ix.insert(1, &[1, 2], 10);
+        ix.insert(2, &[1, 2, 3, 4], 20);
+        assert_eq!(hits(&mut ix, &[1, 2, 3, 4, 5]), vec![0, 2, 4]);
+        assert_eq!(hits(&mut ix, &[9]), vec![0, 0, 0]);
+        ix.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn read_only_match_with_needs_no_mut() {
+        let mut ix = ShardedRadixIndex::new(2, 0);
+        ix.insert(0, &[1, 2, 3], 0);
+        let snap = ix.snapshot();
+        let (mut h, mut m, mut live) = (Vec::new(), InstanceMask::default(), Vec::new());
+        let sum = snap.match_with(&[1, 2, 3, 4], &mut h, &mut m, &mut live);
+        assert_eq!(h, vec![3, 0]);
+        assert_eq!(sum, 3);
+        assert!(snap.is_consistent());
+        // Read-only: no counters moved.
+        assert_eq!(ix.total_lookup_blocks, 0);
+        assert_eq!(ix.total_hit_blocks, 0);
+    }
+
+    #[test]
+    fn version_and_epochs_advance_on_writes() {
+        let mut ix = ShardedRadixIndex::with_shards(2, 0, 4);
+        let v0 = ix.version();
+        let e0: Vec<u64> = (0..4).map(|s| ix.shard_epoch(s)).collect();
+        ix.insert(0, &[1, 2], 0);
+        assert_eq!(ix.version(), v0 + 1);
+        let moved: usize = (0..4).filter(|&s| ix.shard_epoch(s) != e0[s]).count();
+        assert_eq!(moved, 1, "one insert publishes exactly one shard");
+        // A stale snapshot notices the write.
+        let snap = ix.snapshot();
+        assert!(snap.is_consistent());
+        drop(snap);
+        let pinned_version = ix.version();
+        ix.insert(1, &[1, 2], 1);
+        assert_eq!(ix.version(), pinned_version + 1);
+    }
+
+    #[test]
+    fn per_instance_capacity_and_eviction() {
+        let mut ix = ShardedRadixIndex::new(2, 4);
+        ix.insert(0, &[1, 2], 0);
+        ix.insert(0, &[10, 20], 100);
+        // Instance 0 is at capacity; instance 1 untouched.
+        ix.insert(0, &[30], 200); // evicts instance-0 LRU leaf (2)
+        assert_eq!(ix.used_blocks(0), 4);
+        assert_eq!(ix.used_blocks(1), 0);
+        assert_eq!(hits(&mut ix, &[1, 2]), vec![1, 0]);
+        assert_eq!(hits(&mut ix, &[10, 20]), vec![2, 0]);
+        assert_eq!(hits(&mut ix, &[30]), vec![1, 0]);
+        // Instance 1 has its own budget: same chains fit fresh.
+        ix.insert(1, &[1, 2], 300);
+        assert_eq!(ix.used_blocks(1), 2);
+        ix.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cross_shard_gc_bounds_arena() {
+        let mut ix = ShardedRadixIndex::new(2, 2);
+        ix.insert(0, &[1, 2], 0);
+        // Churn fresh single-block chains through: their first hashes land
+        // on DIFFERENT shards, yet global LRU eviction + per-shard GC keep
+        // the total alive node count at the capacity bound.
+        ix.insert(0, &[7], 10);
+        ix.insert(0, &[8], 20);
+        ix.insert(0, &[9], 30);
+        ix.check_invariants().unwrap();
+        assert!(ix.total_evicted_blocks >= 2);
+        assert_eq!(ix.alive_nodes(), ix.used_blocks(0) + ix.used_blocks(1));
+    }
+
+    #[test]
+    fn refreshed_leaves_stay_evictable_per_instance() {
+        let mut ix = ShardedRadixIndex::new(1, 2);
+        ix.insert(0, &[1, 2], 0);
+        assert_eq!(ix.insert(0, &[1, 2], 5), 0); // pure refresh
+        assert_eq!(ix.insert(0, &[9], 10), 1, "eviction starved");
+        assert_eq!(hits(&mut ix, &[9]), vec![1]);
+        ix.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn truncated_insert_keeps_tail_evictable() {
+        let mut ix = ShardedRadixIndex::new(1, 2);
+        assert_eq!(ix.insert(0, &[1, 2, 3], 10), 2);
+        assert_eq!(ix.insert(0, &[9], 20), 1, "protected candidate was discarded");
+        assert_eq!(hits(&mut ix, &[9]), vec![1]);
+        ix.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn truncates_when_everything_unevictable() {
+        let mut ix = ShardedRadixIndex::new(1, 1);
+        assert_eq!(ix.insert(0, &[1, 2, 3], 0), 1);
+        assert_eq!(ix.used_blocks(0), 1);
+        assert_eq!(hits(&mut ix, &[1, 2, 3]), vec![1]);
+        ix.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn supports_more_than_64_instances() {
+        let n = 70;
+        let mut ix = ShardedRadixIndex::new(n, 8);
+        ix.insert(68, &[1, 2, 3], 0);
+        ix.insert(1, &[1, 2], 1);
+        let mut h = Vec::new();
+        let mut m = InstanceMask::default();
+        ix.match_into(&[1, 2, 3], &mut h, &mut m);
+        assert_eq!(h.len(), n);
+        assert_eq!(h[68], 3);
+        assert_eq!(h[1], 2);
+        assert_eq!(h[0], 0);
+        assert_eq!(m.iter_ones().collect::<Vec<_>>(), vec![1, 68]);
+        ix.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn refresh_heap_stays_bounded_below_capacity() {
+        let mut ix = ShardedRadixIndex::new(2, 1024);
+        ix.insert(0, &[1, 2, 3], 0);
+        for now in 1..5000u64 {
+            ix.insert(0, &[1, 2, 3], now); // pure refresh, one push each
+        }
+        assert!(
+            ix.inst[0].heap.len() <= 4 * ix.used_blocks(0).max(16),
+            "heap leaked: {} entries for {} blocks",
+            ix.inst[0].heap.len(),
+            ix.used_blocks(0)
+        );
+        ix.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn hit_accounting_aggregates_instances() {
+        let mut ix = ShardedRadixIndex::new(2, 0);
+        ix.insert(0, &[1, 2], 0);
+        hits(&mut ix, &[1, 2]); // inst0: 2/2, inst1: 0/2
+        assert!((ix.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    /// Direct sharded-vs-monolithic pin at the index layer: identical
+    /// mixed traffic through `ShardedRadixIndex` (several shard counts)
+    /// and `SharedRadixIndex` must produce identical hit vectors AND
+    /// identical counters. The heavier three-way churn (vs the dedicated
+    /// per-instance mirrors) lives in `kvcache/mod.rs`; the all-policies
+    /// decision replay in `tests/policy_semantics.rs` closes the loop.
+    #[test]
+    fn sharded_equals_monolithic_under_churn() {
+        for &n_shards in &[1usize, 3, 16] {
+            for seed in 0..3u64 {
+                for cap in [0usize, 8, 32] {
+                    let n = 5usize;
+                    let mut sharded = ShardedRadixIndex::with_shards(n, cap, n_shards);
+                    let mut mono = SharedRadixIndex::new(n, cap);
+                    let mut rng = Rng::new(seed.wrapping_mul(0x517c_c1b7) ^ 0x5eed);
+                    for step in 0..800u64 {
+                        let base = rng.gen_range(0, 6);
+                        let len = rng.gen_range(1, 10) as usize;
+                        let chain: Vec<u64> = (0..len as u64).map(|i| base * 1000 + i).collect();
+                        match rng.gen_range(0, 3) {
+                            0 | 1 => {
+                                let i = rng.gen_range(0, n as u64) as usize;
+                                sharded.insert(i, &chain, step);
+                                mono.insert(i, &chain, step);
+                            }
+                            _ => {
+                                let (mut hs, mut ms) = (Vec::new(), InstanceMask::default());
+                                let (mut hm, mut mm) = (Vec::new(), InstanceMask::default());
+                                sharded.match_into(&chain, &mut hs, &mut ms);
+                                mono.match_into(&chain, &mut hm, &mut mm);
+                                assert_eq!(
+                                    hs, hm,
+                                    "diverged: shards {n_shards} seed {seed} cap {cap} step {step}"
+                                );
+                                assert_eq!(ms, mm);
+                            }
+                        }
+                        if step % 211 == 0 {
+                            sharded.check_invariants().unwrap();
+                        }
+                    }
+                    assert_eq!(sharded.total_lookup_blocks, mono.total_lookup_blocks);
+                    assert_eq!(sharded.total_hit_blocks, mono.total_hit_blocks);
+                    assert_eq!(sharded.total_evicted_blocks, mono.total_evicted_blocks);
+                    sharded.check_invariants().unwrap();
+                }
+            }
+        }
+    }
+}

@@ -86,6 +86,17 @@ pub struct RunMetrics {
     pub guard: GuardCounters,
     /// Admission-control counters (all-zero when no admission policy ran).
     pub overload: OverloadCounters,
+    /// Snapshot age per decision, in factory commits the router's pinned
+    /// view was stale by when the decision merged (0 for every decision in
+    /// a serial run; bounded by the staleness budget in
+    /// `cluster::run_concurrent`). Empty for serial runs.
+    pub snapshot_age: Vec<f64>,
+    /// Wall seconds spent in the concurrent routing phase (fills + policy
+    /// scoring across all workers); 0 for serial runs. Decision throughput
+    /// = decisions / this.
+    pub route_wall_s: f64,
+    /// Router workers that scored decisions (1 for serial runs).
+    pub routers: usize,
     /// Name of the admission policy that ran, if any.
     pub admission_name: Option<String>,
     /// The SLO this run was evaluated against, if any (set by
@@ -107,9 +118,28 @@ impl RunMetrics {
             admit_radix_walks: 0,
             guard: GuardCounters::default(),
             overload: OverloadCounters::default(),
+            snapshot_age: Vec::new(),
+            route_wall_s: 0.0,
+            routers: 1,
             admission_name: None,
             slo: None,
         }
+    }
+
+    /// Distribution of snapshot ages (commits of staleness per decision);
+    /// `n == 0` for serial runs.
+    pub fn snapshot_age_summary(&self) -> Summary {
+        Summary::of(&self.snapshot_age)
+    }
+
+    /// Routing decisions per wall second of the routing phase (the
+    /// router-scale figure's y-axis). 0 when the run didn't measure a
+    /// routing phase (serial runs leave `route_wall_s` at 0).
+    pub fn decision_throughput(&self) -> f64 {
+        if self.route_wall_s <= 0.0 {
+            return 0.0;
+        }
+        self.sched_overhead_us.len() as f64 / self.route_wall_s
     }
 
     /// Completed requests that met `slo`.

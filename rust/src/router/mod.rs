@@ -145,6 +145,15 @@ impl RouteDecision {
 }
 
 /// A scheduling policy (one per baseline; see [`crate::policy`]).
+///
+/// **Read-only score path.** `route` receives the context by shared
+/// reference and has no channel back into the factory or the KV index —
+/// a policy can only mutate its OWN state (guard counters, per-session
+/// affinity maps). This is audited across `crate::policy` and is what
+/// lets `cluster::run_concurrent` score the same pinned snapshot from R
+/// workers in parallel: each worker owns a policy replica, and all
+/// factory/index mutation happens at the serialized merge step via
+/// [`IndicatorFactory::commit_route`].
 pub trait Policy: Send {
     fn name(&self) -> String;
     fn route(&mut self, ctx: &RouteCtx) -> RouteDecision;
@@ -309,6 +318,12 @@ pub struct IndicatorFactory {
     pub kv: RouterKvView,
     /// Reusable decision context — the allocation-free hot path.
     scratch: RouteCtx,
+    /// Reusable live-set scratch for the serial walk.
+    walk_live: Vec<u64>,
+    /// Factory-state epoch: bumped on every mutation (route commit,
+    /// snapshot absorb, completion). Concurrent readers pin this to
+    /// measure how many commits their view is stale by.
+    epoch: u64,
 }
 
 impl IndicatorFactory {
@@ -329,6 +344,8 @@ impl IndicatorFactory {
                 matched_mask: InstanceMask::with_capacity(n_instances),
                 inds: Vec::with_capacity(n_instances),
             },
+            walk_live: Vec::new(),
+            epoch: 0,
         }
     }
 
@@ -336,26 +353,42 @@ impl IndicatorFactory {
         self.snapshots.len()
     }
 
-    /// Build the per-instance indicator view for a request into the
-    /// factory's scratch buffers and lend it out. ONE shared-index walk
-    /// answers `hit_tokens` for all instances (and the matched mask);
-    /// no heap allocation in steady state. Call [`Self::on_route`] with
-    /// the same request right after the policy decides.
-    pub fn route_ctx(&mut self, req: &Request, now_us: u64) -> &RouteCtx {
+    /// Mutation epoch of the whole factory state (indicators + KV index):
+    /// bumped once per commit/snapshot/completion. A concurrent router
+    /// pins it before scoring and measures snapshot age as "commits since
+    /// pin" at its own merge time.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Build the per-instance indicator view for a request into CALLER-
+    /// owned buffers, through `&self` — the concurrent read path. Any
+    /// number of router workers can fill contexts from the same pinned
+    /// factory in parallel (no lock, no counter writes). Returns the raw
+    /// hit-block sum of the index walk; the serialized merge step must
+    /// pass it to `kv.record_lookup` so lifetime stats match a serial run.
+    pub fn fill_route_ctx(
+        &self,
+        req: &Request,
+        now_us: u64,
+        ctx: &mut RouteCtx,
+        live: &mut Vec<u64>,
+    ) -> usize {
         let input_len = req.input_len();
-        self.kv.match_into(
+        let hit = self.kv.match_with(
             &req.block_hashes,
-            &mut self.scratch.hit_tokens,
-            &mut self.scratch.matched_mask,
+            &mut ctx.hit_tokens,
+            &mut ctx.matched_mask,
+            live,
         );
         // The walk wrote matched *blocks*; convert to hit tokens in place.
-        for h in self.scratch.hit_tokens.iter_mut() {
+        for h in ctx.hit_tokens.iter_mut() {
             *h = (*h * crate::core::BLOCK_TOKENS).min(input_len);
         }
-        self.scratch.inds.clear();
+        ctx.inds.clear();
         for i in 0..self.snapshots.len() {
             let s = &self.snapshots[i];
-            self.scratch.inds.push(Indicators {
+            ctx.inds.push(Indicators {
                 r_bs: s.r_bs,
                 q_bs: s.q_bs + self.opt_q_bs[i],
                 queued_prefill_tokens: s.queued_prefill_tokens + self.opt_prefill_tokens[i],
@@ -364,11 +397,26 @@ impl IndicatorFactory {
                 kv_capacity_blocks: s.kv_capacity_blocks,
             });
         }
-        self.scratch.now_us = now_us;
-        self.scratch.req_id = req.id;
-        self.scratch.class_id = req.class_id;
-        self.scratch.session_id = req.session_id;
-        self.scratch.input_len = input_len;
+        ctx.now_us = now_us;
+        ctx.req_id = req.id;
+        ctx.class_id = req.class_id;
+        ctx.session_id = req.session_id;
+        ctx.input_len = input_len;
+        hit
+    }
+
+    /// Build the per-instance indicator view for a request into the
+    /// factory's scratch buffers and lend it out. ONE shared-index walk
+    /// answers `hit_tokens` for all instances (and the matched mask);
+    /// no heap allocation in steady state. Call [`Self::on_route`] with
+    /// the same request right after the policy decides.
+    pub fn route_ctx(&mut self, req: &Request, now_us: u64) -> &RouteCtx {
+        let mut ctx = std::mem::take(&mut self.scratch);
+        let mut live = std::mem::take(&mut self.walk_live);
+        let hit = self.fill_route_ctx(req, now_us, &mut ctx, &mut live);
+        self.scratch = ctx;
+        self.walk_live = live;
+        self.kv.record_lookup(req.block_hashes.len(), hit);
         &self.scratch
     }
 
@@ -380,10 +428,22 @@ impl IndicatorFactory {
             self.scratch.req_id, req.id,
             "on_route must follow route_ctx for the same request"
         );
+        let new_tokens = self.scratch.new_tokens(inst);
+        self.commit_route(inst, req, new_tokens, now_us);
+    }
+
+    /// Commit a routing decision whose context was built OUT of the
+    /// factory's scratch (the concurrent harness builds contexts on
+    /// worker-owned buffers, then commits them here in arrival order).
+    /// `new_tokens` is the context's `new_tokens(inst)` at decision time
+    /// — passed in, because the worker's view (not the factory's current
+    /// state) is what the decision priced.
+    pub fn commit_route(&mut self, inst: usize, req: &Request, new_tokens: usize, now_us: u64) {
         self.opt_q_bs[inst] += 1;
-        self.opt_prefill_tokens[inst] += self.scratch.new_tokens(inst);
+        self.opt_prefill_tokens[inst] += new_tokens;
         self.opt_ctx_tokens[inst] += req.input_len();
         self.kv.on_route(inst, &req.block_hashes, now_us);
+        self.epoch += 1;
     }
 
     /// Absorb a response piggyback: authoritative snapshot replaces the
@@ -393,12 +453,14 @@ impl IndicatorFactory {
         self.opt_q_bs[inst] = 0;
         self.opt_prefill_tokens[inst] = 0;
         self.opt_ctx_tokens[inst] = 0;
+        self.epoch += 1;
     }
 
     /// Completion piggyback: cache the full (prompt+output) chain in the
     /// shared KV$ index (the next conversation turn will hit it).
     pub fn on_completion(&mut self, inst: usize, full_hashes: &[u64], now_us: u64) {
         self.kv.on_response(inst, full_hashes, now_us);
+        self.epoch += 1;
     }
 }
 
@@ -560,6 +622,69 @@ mod tests {
         assert!(si.all_idle);
         assert_eq!(si.kv_spread(), 1.0);
         assert_eq!(si.load_spread(), 1.0);
+    }
+
+    #[test]
+    fn fill_route_ctx_matches_serial_path_and_is_read_only() {
+        let mut f = IndicatorFactory::new(2, 0);
+        let req = mk_req(7, 160);
+        f.kv.on_response(1, &req.block_hashes[..5], 0); // 80 tokens cached
+        let e0 = f.epoch();
+        let lookups0 = f.kv.index().total_lookup_blocks;
+        // Concurrent read path: caller-owned buffers, `&self` only.
+        let mut ctx = RouteCtx::default();
+        let mut live = Vec::new();
+        let hit = f.fill_route_ctx(&req, 3, &mut ctx, &mut live);
+        assert_eq!(hit, 5, "raw hit-block sum of the walk");
+        assert_eq!(f.epoch(), e0, "read path must not bump the epoch");
+        assert_eq!(
+            f.kv.index().total_lookup_blocks,
+            lookups0,
+            "read path must not touch counters"
+        );
+        // Field-for-field identical to the serial scratch path.
+        let serial = f.route_ctx(&req, 3).clone();
+        assert_eq!(ctx.hit_tokens, serial.hit_tokens);
+        assert_eq!(ctx.matched_mask, serial.matched_mask);
+        assert_eq!(ctx.req_id, serial.req_id);
+        assert_eq!(ctx.input_len, serial.input_len);
+        assert_eq!(ctx.inds.len(), serial.inds.len());
+        for i in 0..ctx.inds.len() {
+            assert_eq!(ctx.p_token(i), serial.p_token(i));
+            assert_eq!(ctx.inds[i].bs(), serial.inds[i].bs());
+        }
+    }
+
+    #[test]
+    fn commit_route_equals_on_route_and_bumps_epoch() {
+        let mut a = IndicatorFactory::new(2, 0);
+        let mut b = IndicatorFactory::new(2, 0);
+        let req = mk_req(8, 320);
+        // Serial path on `a`.
+        a.route_ctx(&req, 1);
+        a.on_route(0, &req, 1);
+        // Concurrent path on `b`: worker-owned ctx, explicit commit.
+        let mut ctx = RouteCtx::default();
+        let mut live = Vec::new();
+        let hit = b.fill_route_ctx(&req, 1, &mut ctx, &mut live);
+        let e_pin = b.epoch();
+        b.kv.record_lookup(req.block_hashes.len(), hit);
+        b.commit_route(0, &req, ctx.new_tokens(0), 1);
+        assert_eq!(b.epoch(), e_pin + 1, "commit publishes one epoch");
+        // Both factories now price the next request identically.
+        let next = mk_req(9, 320);
+        let ca = a.route_ctx(&next, 2).clone();
+        let cb = b.route_ctx(&next, 2).clone();
+        assert_eq!(ca.hit_tokens, cb.hit_tokens);
+        for i in 0..2 {
+            assert_eq!(ca.p_token(i), cb.p_token(i));
+            assert_eq!(ca.inds[i].bs(), cb.inds[i].bs());
+        }
+        assert_eq!(
+            a.kv.index().total_lookup_blocks,
+            b.kv.index().total_lookup_blocks
+        );
+        assert_eq!(a.kv.index().total_hit_blocks, b.kv.index().total_hit_blocks);
     }
 
     #[test]

@@ -1,0 +1,172 @@
+//! Integration tests of the concurrent router data plane: snapshot
+//! consistency under real writer/reader thread churn, shard-assignment
+//! purity (mirrored by `python/tests/test_shard_assignment.py`), and the
+//! R-router harness's byte-identity contract at zero staleness.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::RwLock;
+
+use lmetric::cluster::{cluster_config, run_concurrent, run_des, ConcurrentCfg};
+use lmetric::config::ExperimentConfig;
+use lmetric::core::InstanceMask;
+use lmetric::kvcache::{shard_of, ShardedRadixIndex};
+use lmetric::policy;
+use lmetric::util::Rng;
+
+/// Run `case` for `n` seeds; panic with the seed on failure (same
+/// in-repo property idiom as `tests/proptests.rs`).
+fn prop(name: &str, n: u64, case: impl Fn(&mut Rng)) {
+    for seed in 0..n {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9e37_79b9) ^ 0xc0c0);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            case(&mut rng);
+        }));
+        if let Err(e) = result {
+            panic!("property '{name}' failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+fn chain(rng: &mut Rng) -> Vec<u64> {
+    let base = rng.gen_range(0, 12);
+    let len = rng.gen_range(1, 10) as usize;
+    (0..len as u64).map(|i| base * 1000 + i).collect()
+}
+
+// ------------------------------------------------- snapshot consistency --
+
+/// The pinning contract under real thread churn: while a reader holds a
+/// read guard, the snapshot it pinned stays consistent (no torn shard
+/// views), repeated walks of the same chain agree, and the write version
+/// it observes across successive pins never goes backwards.
+#[test]
+fn writer_reader_churn_no_torn_views() {
+    let ix = RwLock::new(ShardedRadixIndex::new(8, 64));
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        // Writer: interleave inserts across instances and shards; check
+        // structural invariants periodically under the write guard.
+        scope.spawn(|| {
+            let mut rng = Rng::new(0x517c_c1b7);
+            for step in 0..4000u64 {
+                let c = chain(&mut rng);
+                let inst = rng.gen_range(0, 8) as usize;
+                let mut guard = ix.write().unwrap();
+                guard.insert(inst, &c, step);
+                if step % 251 == 0 {
+                    guard.check_invariants().unwrap();
+                }
+            }
+            stop.store(true, Ordering::Release);
+        });
+        for t in 0..3u64 {
+            let stop = &stop;
+            let ix = &ix;
+            scope.spawn(move || {
+                let mut rng = Rng::new(0xbeef ^ t);
+                let (mut h1, mut h2) = (Vec::new(), Vec::new());
+                let (mut m1, mut m2) = (InstanceMask::default(), InstanceMask::default());
+                let mut live = Vec::new();
+                let mut last_version = 0u64;
+                let mut iters = 0u64;
+                while !stop.load(Ordering::Acquire) && iters < 200_000 {
+                    iters += 1;
+                    let c = chain(&mut rng);
+                    let guard = ix.read().unwrap();
+                    let snap = guard.snapshot();
+                    assert!(snap.version() >= last_version, "version went backwards");
+                    last_version = snap.version();
+                    let s1 = snap.match_with(&c, &mut h1, &mut m1, &mut live);
+                    // The guard is still held: the second walk must see
+                    // the exact same world (torn shards would diverge).
+                    let s2 = snap.match_with(&c, &mut h2, &mut m2, &mut live);
+                    assert!(snap.is_consistent(), "snapshot torn under read guard");
+                    assert_eq!(s1, s2);
+                    assert_eq!(h1, h2);
+                    assert_eq!(m1, m2);
+                }
+            });
+        }
+    });
+    let ix = ix.into_inner().unwrap();
+    ix.check_invariants().unwrap();
+    assert!(ix.version() >= 4000, "writer must have published every insert");
+}
+
+// ---------------------------------------------------- shard assignment --
+
+/// Shard assignment is a pure total function of the FIRST block hash:
+/// deterministic across calls, always in range, invariant to everything
+/// that isn't the first hash. The pinned vectors live in
+/// `kvcache::sharded`'s unit tests and `python/tests/test_shard_assignment.py`.
+#[test]
+fn prop_shard_assignment_pure_function_of_first_hash() {
+    prop("shard_of pure+in-range", 200, |rng| {
+        let h = rng.next_u64();
+        let s = rng.gen_range(1, 65) as usize;
+        let a = shard_of(h, s);
+        assert!(a < s, "shard_of({h:#x}, {s}) = {a} out of range");
+        assert_eq!(a, shard_of(h, s), "shard_of must be deterministic");
+        assert_eq!(shard_of(h, 1), 0, "single shard owns everything");
+        // Chains sharing a first hash land in one shard regardless of
+        // their tails: a two-chain index with a common first block keeps
+        // every node in that one shard (all other shard epochs untouched).
+        let mut ix = ShardedRadixIndex::with_shards(2, 0, s);
+        let tail_a = rng.next_u64();
+        let tail_b = rng.next_u64();
+        ix.insert(0, &[h, tail_a], 0);
+        ix.insert(1, &[h, tail_b], 1);
+        let moved: Vec<usize> =
+            (0..s).filter(|&sh| ix.shard_epoch(sh) != 0).collect();
+        assert_eq!(moved, vec![a], "tails must not change the owning shard");
+    });
+}
+
+// ------------------------------------------------- harness byte-identity --
+
+fn record_key(m: &lmetric::metrics::RunMetrics) -> Vec<(u64, usize, u64, u64, u32)> {
+    m.records
+        .iter()
+        .map(|r| (r.id, r.instance, r.first_token_us, r.completion_us, r.cached_tokens))
+        .collect()
+}
+
+/// Budget 0 ⇒ every decision scores fully-fresh state ⇒ `run_concurrent`
+/// is the serial DES, byte for byte, at any router count. A positive
+/// budget may reorder placements but must still complete every request.
+#[test]
+fn run_concurrent_budget_zero_matches_run_des() {
+    let mut exp = ExperimentConfig::default();
+    exp.workload = "chatbot".into();
+    exp.instances = 4;
+    exp.requests = 400;
+    exp.seed = 11;
+    let cfg = cluster_config(&exp);
+    let profile = cfg.engine.profile.clone();
+    let trace = lmetric::cluster::build_scaled_trace(&exp);
+
+    let mut pol = policy::build_default("lmetric", &profile, exp.chunk_budget).unwrap();
+    let serial = run_des(&cfg, &trace, pol.as_mut());
+    assert!(!serial.records.is_empty());
+
+    for routers in [1usize, 2] {
+        let mut mk = || policy::build_default("lmetric", &profile, exp.chunk_budget).unwrap();
+        let m = run_concurrent(&cfg, &trace, &mut mk, &ConcurrentCfg::new(routers, 0));
+        assert_eq!(
+            record_key(&serial),
+            record_key(&m),
+            "budget-0 R={routers} must replay the serial trajectory"
+        );
+        assert_eq!(m.routers, routers);
+        // Fresh views only: every recorded snapshot age is zero.
+        assert!(m.snapshot_age.iter().all(|&a| a == 0.0));
+        assert_eq!(m.guard, serial.guard, "guard deltas must match serial");
+    }
+
+    // Positive budget: decisions may commit against stale views, but the
+    // run still serves the whole trace and ages stay within the budget.
+    let mut mk = || policy::build_default("lmetric", &profile, exp.chunk_budget).unwrap();
+    let m = run_concurrent(&cfg, &trace, &mut mk, &ConcurrentCfg::new(2, 64));
+    assert_eq!(m.records.len(), serial.records.len());
+    assert!(m.snapshot_age.iter().all(|&a| a <= 64.0));
+}

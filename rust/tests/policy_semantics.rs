@@ -249,16 +249,19 @@ fn all_idle_tie_guard_prefers_max_hit_instance() {
 /// The tentpole contract of the shared presence-mask prefix index: for
 /// every workload family and every (deterministic) policy, routing
 /// decisions computed from the shared index are IDENTICAL to decisions
-/// computed from the old one-radix-mirror-per-instance design. Two
-/// policy instances replay the same trace — one fed by the real
-/// `IndicatorFactory` (shared index), one fed contexts whose hit vector
-/// comes from `MirrorKvView` — with bounded per-instance KV$ so LRU
-/// eviction is exercised, and must agree on every single decision.
+/// computed from the old one-radix-mirror-per-instance design. Three
+/// legs replay the same trace — the real `IndicatorFactory` (now backed
+/// by the *sharded* index), a `MirrorKvView` reference, and a bare
+/// `SharedRadixIndex` (the pre-sharding monolith) fed the identical
+/// insert sequence — with bounded per-instance KV$ so LRU eviction is
+/// exercised. All three must agree on every hit vector, and the two
+/// policy instances on every single decision: the sharding refactor is
+/// pinned decision-identical to both ancestral designs.
 #[test]
 fn shared_index_reproduces_mirror_decisions_all_workloads_all_policies() {
-    use lmetric::core::BLOCK_TOKENS;
+    use lmetric::core::{InstanceMask, BLOCK_TOKENS};
     use lmetric::engine::ModelProfile;
-    use lmetric::kvcache::MirrorKvView;
+    use lmetric::kvcache::{MirrorKvView, SharedRadixIndex};
     use lmetric::router::IndicatorFactory;
     use lmetric::trace::{generate, Workload, WorkloadSpec};
 
@@ -276,6 +279,9 @@ fn shared_index_reproduces_mirror_decisions_all_workloads_all_policies() {
             let mut p_mirror = policy::build_default(name, &profile, 256).unwrap();
             let mut factory = IndicatorFactory::new(n, cap_blocks);
             let mut mirror = MirrorKvView::new(n, cap_blocks);
+            let mut monolith = SharedRadixIndex::new(n, cap_blocks);
+            let mut mono_blocks: Vec<usize> = Vec::new();
+            let mut mono_mask = InstanceMask::default();
             for (k, tr) in trace.requests.iter().enumerate() {
                 let now = tr.req.arrival_us;
                 let input_len = tr.req.input_len();
@@ -284,10 +290,20 @@ fn shared_index_reproduces_mirror_decisions_all_workloads_all_policies() {
                     .iter()
                     .map(|b| (b * BLOCK_TOKENS).min(input_len))
                     .collect();
+                monolith.match_into(&tr.req.block_hashes, &mut mono_blocks, &mut mono_mask);
+                let mono_hits: Vec<usize> = mono_blocks
+                    .iter()
+                    .map(|b| (b * BLOCK_TOKENS).min(input_len))
+                    .collect();
                 let ctx = factory.route_ctx(&tr.req, now);
                 assert_eq!(
                     ctx.hit_tokens, mirror_hits,
                     "{workload}/{name}: hit vector diverged at request {k}"
+                );
+                assert_eq!(
+                    ctx.hit_tokens, mono_hits,
+                    "{workload}/{name}: sharded index diverged from the \
+                     pre-sharding SharedRadixIndex at request {k}"
                 );
                 let mirror_ctx = RouteCtx::new(
                     now,
@@ -306,14 +322,26 @@ fn shared_index_reproduces_mirror_decisions_all_workloads_all_policies() {
                 );
                 factory.on_route(d, &tr.req, now);
                 mirror.on_route(d_mirror, &tr.req.block_hashes, now);
+                monolith.insert(d, &tr.req.block_hashes, now);
                 // Periodic completion piggybacks (prompt+output chains),
                 // like the DES's response path.
                 if k % 3 == 0 {
                     factory.on_completion(d, &tr.full_hashes, now);
                     mirror.on_response(d_mirror, &tr.full_hashes, now);
+                    monolith.insert(d, &tr.full_hashes, now);
                 }
             }
             factory.kv.index().check_invariants().unwrap();
+            monolith.check_invariants().unwrap();
+            // The sharded refactor preserves per-instance occupancy too,
+            // not just walk results.
+            for i in 0..n {
+                assert_eq!(
+                    factory.kv.index().used_blocks(i),
+                    monolith.used_blocks(i),
+                    "{workload}/{name}: instance {i} occupancy diverged"
+                );
+            }
         }
     }
 }

@@ -44,6 +44,15 @@ baselines without the section stay report-only). The shed/orphan
 counters are report-only: orphaned_turns == 0 is asserted inside the
 bench itself.
 
+The `router_scale` section (sharded concurrent data plane) gates the
+single-router decision rate — the read path every run exercises — with
+the same tolerate-then-gate shape: legacy baselines without the section,
+or with it null-seeded, stay report-only. The R=2/R=4 rates and the
+budget-64 snapshot-age p99 are report-only: multi-router speedup is too
+runner-core-count-dependent to gate, and the staleness bound itself
+(age ≤ budget) plus the budget-0 byte-identity are asserted inside the
+bench binary.
+
 --emit-seeded OUT writes the *current* run's JSON with "seeded": true to
 OUT — but only after the checks ran AND passed, so a regressed or
 corrupt run can never become the armed baseline (OUT may safely be the
@@ -96,6 +105,10 @@ FIELDS = [
     ("overload", "goodput_overload_admit_all", False),
     ("overload", "shed_overload", False),
     ("overload", "orphaned_turns", False),
+    ("router_scale", "decisions_per_s_r1", True),
+    ("router_scale", "decisions_per_s_r2", False),
+    ("router_scale", "decisions_per_s_r4", False),
+    ("router_scale", "snapshot_age_p99", False),
 ]
 
 
