@@ -3,8 +3,8 @@
 scripts/check_bench_regression.py is the CI step that (once the baseline
 is seeded) fails the build on a >20% req/s or steps/s regression. Its
 tolerate-then-gate behaviour for newer JSON sections (guard, sessions,
-overload, router_scale) must hold across baseline generations, so this
-suite runs the
+overload, router_scale, fleet) must hold across baseline generations, so
+this suite runs the
 actual script as a subprocess through the four paths that matter:
 
 1. unseeded baseline               -> report-only, exit 0
@@ -46,6 +46,7 @@ def bench_doc(
     seeded=False,
     with_overload=True,
     with_router_scale=True,
+    with_fleet=True,
 ):
     doc = {
         "bench": "router_throughput",
@@ -109,6 +110,16 @@ def bench_doc(
             "decisions_per_s_r4": req_per_s * 24,
             "snapshot_age_p99": 12.0,
         }
+    if with_fleet:
+        doc["fleet"] = {
+            "crashes": 1,
+            "requeued": 40,
+            "requeue_rate": 0.02,
+            "recovery_ttft_p99": 0.8,
+            "goodput_static": 0.55,
+            "goodput_autoscaler": 0.85,
+            "scale_ups": 3,
+        }
     return doc
 
 
@@ -119,16 +130,21 @@ def test_path1_unseeded_baseline_is_report_only(tmp_path):
 
 
 def test_path2_seeded_legacy_baseline_tolerates_missing_sessions(tmp_path):
-    # Baseline predates the sessions, overload AND router_scale sections
-    # entirely; current carries all three.
+    # Baseline predates the sessions, overload, router_scale AND fleet
+    # sections entirely; current carries all four.
     legacy = bench_doc(
-        seeded=True, with_sessions=False, with_overload=False, with_router_scale=False
+        seeded=True,
+        with_sessions=False,
+        with_overload=False,
+        with_router_scale=False,
+        with_fleet=False,
     )
     proc = run_gate(tmp_path, bench_doc(req_per_s=990.0), legacy)
     assert proc.returncode == 0, proc.stdout + proc.stderr
     assert "sessions.req_per_s: baseline unseeded" in proc.stdout
     assert "overload.goodput_at_capacity: baseline unseeded" in proc.stdout
     assert "router_scale.decisions_per_s_r1: baseline unseeded" in proc.stdout
+    assert "fleet.goodput_autoscaler: baseline unseeded" in proc.stdout
     assert "OK: within regression budget" in proc.stdout
 
 
@@ -176,6 +192,20 @@ def test_router_scale_regression_trips_gate(tmp_path):
     assert proc.returncode == 1, proc.stdout + proc.stderr
     assert "router_scale.decisions_per_s_r1" in proc.stdout
     assert "decisions_per_s_r4 regressed" not in proc.stdout
+
+
+def test_fleet_goodput_collapse_trips_gate(tmp_path):
+    # Throughput fine, but the autoscaled overload goodput collapsed
+    # (the reactive scaler stopped firing, or lifecycle requeue got
+    # slow): the gate must catch it. The static-fleet goodput and the
+    # recovery tail are report-only and may swing without tripping.
+    current = bench_doc(req_per_s=1000.0)
+    current["fleet"]["goodput_autoscaler"] = 0.3
+    current["fleet"]["recovery_ttft_p99"] = 50.0  # report-only
+    proc = run_gate(tmp_path, current, bench_doc(seeded=True))
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert "fleet.goodput_autoscaler" in proc.stdout
+    assert "recovery_ttft_p99 regressed" not in proc.stdout
 
 
 def test_quick_mode_mismatch_skips_gate(tmp_path):

@@ -6,8 +6,10 @@
 //! path), the DES harness's end-to-end routed-requests/s, a 32-instance ×
 //! 50k-request DES scale smoke, the concurrent data plane's decisions/s
 //! at R ∈ {1, 2, 4} routers (plus its budget-0 byte-identity check and
-//! budget-64 snapshot-age tail), and the parallel sweep harness's speedup
-//! over serial execution.
+//! budget-64 snapshot-age tail), the fleet-lifecycle stage (a crash /
+//! recover replay's requeue conservation and recovery tail, and the
+//! overload trace on a static fleet vs the reactive autoscaler), and
+//! the parallel sweep harness's speedup over serial execution.
 //!
 //! The JSON this bench writes is the perf-trajectory record: CI compares
 //! `des_end_to_end.req_per_s` (and, once seeded, the scale-smoke req/s
@@ -358,6 +360,83 @@ fn main() {
         m_b64.decision_throughput()
     );
 
+    // Fleet lifecycle: one crash/recover replay on the closed-loop
+    // session trace (recovery-window TTFT tail + requeue rate), then
+    // the 1.2x overload trace on a static fleet vs the reactive
+    // queue-depth autoscaler (goodput under the probe-derived SLO
+    // above). All virtual-time quantities — deterministic run to run —
+    // so goodput_autoscaler gates once seeded. fig71_fleet_dynamics is
+    // the full-size version with the cross-policy degradation asserts.
+    println!("\n--- fleet lifecycle (crash recovery + autoscaler) ---");
+    let fl_crash_at = ses_m.duration_us / 4;
+    let fl_recover_at = ses_m.duration_us / 2;
+    let fl_plan = lmetric::cluster::FaultPlan::new()
+        .crash_at(fl_crash_at, 1)
+        .recover_at(fl_recover_at, 1);
+    let mut fl_pol = policy::build_default("lmetric", &profile, 256).unwrap();
+    let fl_m = lmetric::cluster::run(
+        lmetric::cluster::RunSpec::sessions(&cfg, &ses_trace).with_faults(fl_plan),
+        fl_pol.as_mut(),
+    );
+    assert_eq!(fl_m.fault.crashes, 1, "crash must fire");
+    assert_eq!(fl_m.fault.lost, 0, "fault injection must not lose requests");
+    assert_eq!(
+        fl_m.records.len(),
+        ses_trace.n_turns(),
+        "requeue conservation: every displaced turn completes"
+    );
+    let mut fl_window: Vec<f64> = fl_m
+        .records
+        .iter()
+        .filter(|r| r.arrival_us >= fl_crash_at && r.arrival_us < fl_recover_at)
+        .map(|r| r.ttft_s())
+        .collect();
+    fl_window.sort_by(|a, b| a.total_cmp(b));
+    let recovery_ttft_p99 = if fl_window.is_empty() {
+        f64::NAN
+    } else {
+        fl_window[(fl_window.len() * 99 / 100).min(fl_window.len() - 1)]
+    };
+    let requeue_rate = fl_m.fault.requeued as f64 / fl_m.records.len() as f64;
+    let mut fs_pol = policy::build_default("lmetric", &profile, 256).unwrap();
+    let fl_static = lmetric::cluster::run(
+        lmetric::cluster::RunSpec::sessions(&cfg, &over).with_slo(slo),
+        fs_pol.as_mut(),
+    );
+    let mut fa_pol = policy::build_default("lmetric", &profile, 256).unwrap();
+    let fl_auto = lmetric::cluster::run(
+        lmetric::cluster::RunSpec::sessions(&cfg, &over)
+            .with_slo(slo)
+            .with_autoscaler(
+                Box::new(
+                    lmetric::cluster::QueueDepthAutoscaler::new(
+                        4.0,
+                        1.0,
+                        exp.instances,
+                        exp.instances * 2,
+                    )
+                    .with_cooldown(2_000_000),
+                ),
+                1_000_000,
+            ),
+        fa_pol.as_mut(),
+    );
+    assert_eq!(
+        fl_static.fault.lost + fl_auto.fault.lost,
+        0,
+        "overload lifecycle must not lose requests"
+    );
+    let goodput_static = fl_static.goodput_ratio(slo);
+    let goodput_auto = fl_auto.goodput_ratio(slo);
+    println!(
+        "crash-window TTFT p99 {recovery_ttft_p99:.3}s, requeue rate {requeue_rate:.4}; \
+         1.2x goodput static {:.1}% vs autoscaled {:.1}% ({} scale-ups, {} drains)",
+        goodput_static * 100.0,
+        goodput_auto * 100.0,
+        fl_auto.fault.scale_ups,
+        fl_auto.fault.drains
+    );
+
     // Machine-readable output: CI uploads this as the perf-trajectory
     // record and gates on it (BENCH_router_throughput.json is the
     // committed baseline; override the output path with
@@ -464,6 +543,18 @@ fn main() {
                 ("decisions_per_s_r2", Json::Num(rs_rates[1])),
                 ("decisions_per_s_r4", Json::Num(rs_rates[2])),
                 ("snapshot_age_p99", Json::Num(rs_age.p99)),
+            ]),
+        ),
+        (
+            "fleet",
+            Json::obj(vec![
+                ("crashes", Json::Num(fl_m.fault.crashes as f64)),
+                ("requeued", Json::Num(fl_m.fault.requeued as f64)),
+                ("requeue_rate", Json::Num(requeue_rate)),
+                ("recovery_ttft_p99", Json::Num(recovery_ttft_p99)),
+                ("goodput_static", Json::Num(goodput_static)),
+                ("goodput_autoscaler", Json::Num(goodput_auto)),
+                ("scale_ups", Json::Num(fl_auto.fault.scale_ups as f64)),
             ]),
         ),
         (

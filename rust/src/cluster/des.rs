@@ -22,6 +22,7 @@ use std::collections::{BinaryHeap, HashMap, HashSet};
 use std::sync::Arc;
 use std::time::Instant;
 
+use super::lifecycle::{Autoscaler, FaultEvent, FaultPlan, FleetObs, PlannedFault, ScaleAction};
 use super::overload::AdmissionPolicy;
 use crate::config::ExperimentConfig;
 use crate::engine::{EngineConfig, EngineEvent, Instance, ModelProfile, StepOutcome};
@@ -31,6 +32,7 @@ use crate::trace::{
     generate, generate_open, generate_sessions, OpenSpec, SessionSpec, SessionTrace, Trace,
     Workload, WorkloadSpec,
 };
+use crate::util::stats::Windowed;
 
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
@@ -51,6 +53,17 @@ impl ClusterConfig {
 enum Event {
     Arrival(usize),
     StepEnd(usize),
+    /// Re-present a displaced request (crash/drain eviction) to the
+    /// router at the event's time; its `arrival_us` stays the original,
+    /// so TTFT keeps charging the whole displacement.
+    Requeue(usize),
+    /// Fire `schedule[k]` of the run's fault plan.
+    Fault(usize),
+    /// Forced end of a drain: if the instance is still draining, its
+    /// leftover batch is killed, requeued, and counted as a violation.
+    DrainDeadline(usize),
+    /// Periodic autoscaler observation.
+    AutoscaleTick,
 }
 
 /// Reactive follow-up edge: when the request at the owning index
@@ -92,6 +105,13 @@ pub struct RunSpec<'a> {
     /// the probe's peak counters back after the run.
     pub admission: Option<Box<dyn AdmissionPolicy + 'a>>,
     pub slo: Option<SloSpec>,
+    /// Lifecycle fault schedule. An empty plan injects nothing and the
+    /// run is byte-identical to one without it (asserted in tests).
+    pub faults: FaultPlan,
+    /// Reactive autoscaler, observing the fleet every `.1` µs of virtual
+    /// time. Non-`'static` for the same lend-and-inspect reason as
+    /// `admission`.
+    pub autoscaler: Option<(Box<dyn Autoscaler + 'a>, u64)>,
 }
 
 impl<'a> RunSpec<'a> {
@@ -103,6 +123,8 @@ impl<'a> RunSpec<'a> {
             release: Release::OpenLoop,
             admission: None,
             slo: None,
+            faults: FaultPlan::new(),
+            autoscaler: None,
         }
     }
 
@@ -115,6 +137,8 @@ impl<'a> RunSpec<'a> {
             release: Release::Reactive,
             admission: None,
             slo: None,
+            faults: FaultPlan::new(),
+            autoscaler: None,
         }
     }
 
@@ -132,6 +156,24 @@ impl<'a> RunSpec<'a> {
         self.slo = Some(slo);
         self
     }
+
+    /// Inject a lifecycle fault schedule into the run.
+    pub fn with_faults(mut self, faults: FaultPlan) -> RunSpec<'a> {
+        self.faults = faults;
+        self
+    }
+
+    /// Close the loop: observe the fleet every `interval_us` of virtual
+    /// time and apply the autoscaler's scale/drain decisions as lifecycle
+    /// events.
+    pub fn with_autoscaler(
+        mut self,
+        autoscaler: Box<dyn Autoscaler + 'a>,
+        interval_us: u64,
+    ) -> RunSpec<'a> {
+        self.autoscaler = Some((autoscaler, interval_us));
+        self
+    }
 }
 
 /// Run a [`RunSpec`] under `policy` — the single entry point the CLI,
@@ -147,8 +189,14 @@ pub fn run(spec: RunSpec<'_>, policy: &mut dyn Policy) -> RunMetrics {
         release,
         mut admission,
         slo,
+        faults,
+        mut autoscaler,
     } = spec;
     let adm = admission.as_deref_mut();
+    let schedule = faults.schedule();
+    let auto = autoscaler
+        .as_mut()
+        .map(|(a, iv)| (a.as_mut() as &mut dyn Autoscaler, *iv));
     let mut m = match (source, release) {
         (Source::Trace(trace), _) => {
             // Cloning the request vector is refcount bumps (token/hash
@@ -157,16 +205,16 @@ pub fn run(spec: RunSpec<'_>, policy: &mut dyn Policy) -> RunMetrics {
             // stamp release times in place.
             let reqs = trace.requests.to_vec();
             let initial: Vec<usize> = (0..reqs.len()).collect();
-            run_des_core(cluster, reqs, &initial, &[], policy, adm)
+            run_des_core(cluster, reqs, &initial, &[], policy, adm, &schedule, auto)
         }
         (Source::Sessions(strace), Release::OpenLoop) => {
             let flat = strace.flatten();
             let initial: Vec<usize> = (0..flat.requests.len()).collect();
-            run_des_core(cluster, flat.requests, &initial, &[], policy, adm)
+            run_des_core(cluster, flat.requests, &initial, &[], policy, adm, &schedule, auto)
         }
         (Source::Sessions(strace), Release::Reactive) => {
             let (reqs, initial, followups) = session_schedule(strace);
-            run_des_core(cluster, reqs, &initial, &followups, policy, adm)
+            run_des_core(cluster, reqs, &initial, &followups, policy, adm, &schedule, auto)
         }
     };
     m.admission_name = admission.map(|a| a.name());
@@ -235,6 +283,14 @@ fn session_schedule(
     (reqs, initial, followups)
 }
 
+/// Completions sampled into the cold-start hit curve per (re)joined
+/// instance — enough to see the warm-up knee without letting one noisy
+/// recovery dominate [`RunMetrics::cold_hit_samples`].
+const COLD_HIT_WINDOW: u32 = 32;
+
+/// Recently completed prefix chains retained for warm scale-up seeding.
+const WARM_RING_CAP: usize = 64;
+
 /// The shared event core. `initial` lists the indices released at their
 /// pre-stamped `arrival_us` (in push order — ties break FIFO); `followups`
 /// (empty for open-loop runs, else one slot per request) encodes the
@@ -243,6 +299,15 @@ fn session_schedule(
 /// never reaches the router, and the overload counters in the returned
 /// metrics account for it. With `admission == None` the trajectory is
 /// byte-identical to the pre-overload core.
+///
+/// `faults` (a [`FaultPlan::schedule`], sorted by time) and `autoscaler`
+/// form the lifecycle layer: crash/drain/recover/scale events, displaced
+/// requests requeued through the router (re-entering admission control),
+/// and periodic fleet observations feeding scale decisions back in. With
+/// an empty schedule and no autoscaler, no lifecycle event is ever
+/// pushed, so the trajectory — heap tiebreaks included — is
+/// byte-identical to the pre-lifecycle core (asserted in tests).
+#[allow(clippy::too_many_arguments)]
 fn run_des_core(
     cfg: &ClusterConfig,
     mut reqs: Vec<crate::trace::TraceRequest>,
@@ -250,12 +315,16 @@ fn run_des_core(
     followups: &[Option<Followup>],
     policy: &mut dyn Policy,
     mut admission: Option<&mut dyn AdmissionPolicy>,
+    faults: &[PlannedFault],
+    mut autoscaler: Option<(&mut dyn Autoscaler, u64)>,
 ) -> RunMetrics {
     let n = cfg.n_instances;
     let reactive = followups.iter().any(Option::is_some);
-    // Completion → follow-up lookup; only needed (and only built) when
-    // the trace has reactive edges, so open-loop runs pay nothing.
-    let idx_of: HashMap<u64, usize> = if reactive {
+    let lifecycle_active = !faults.is_empty() || autoscaler.is_some();
+    // Completion → follow-up lookup; also the requeue path's id → index
+    // map. Only built when reactive edges or lifecycle events can occur,
+    // so plain open-loop runs pay nothing.
+    let idx_of: HashMap<u64, usize> = if reactive || lifecycle_active {
         reqs.iter().enumerate().map(|(i, tr)| (tr.req.id, i)).collect()
     } else {
         HashMap::new()
@@ -283,6 +352,23 @@ fn run_des_core(
     // admission control is active; `HashSet::new` does not allocate.
     let mut admitted_sessions: HashSet<u64> = HashSet::new();
 
+    // ---- lifecycle state ------------------------------------------------
+    // `alive` / `draining` shadow the factory's routable mask with the
+    // extra distinction the factory doesn't need: a draining instance is
+    // unroutable but still running its batch down. `step_end_at` stamps
+    // the scheduled end of the in-flight step so a StepEnd popped after a
+    // crash cancelled (or a recovery replaced) that step is recognized as
+    // stale and skipped. `parked` holds requests routed while zero
+    // instances were routable; they re-enter on the next recover/scale-up
+    // or count as lost at run end.
+    let mut alive = vec![true; n];
+    let mut draining = vec![false; n];
+    let mut drain_deadline_at = vec![0u64; n];
+    let mut step_end_at = vec![0u64; n];
+    let mut cold_left = vec![0u32; n];
+    let mut parked: Vec<usize> = Vec::new();
+    let mut warm_ring: std::collections::VecDeque<Arc<[u64]>> = std::collections::VecDeque::new();
+
     // (Reverse(time), Reverse(tiebreak), event)
     let mut queue: BinaryHeap<(Reverse<u64>, Reverse<u64>, Event)> = BinaryHeap::new();
     let mut tiebreak: u64 = 0;
@@ -294,23 +380,148 @@ fn run_des_core(
         q.push((Reverse(t), Reverse(*tb), e));
     };
 
+    // Displace one request out of an instance (crash kill or drain
+    // eviction): drop its in-flight bookkeeping and re-present it to the
+    // router at `$now`. Its original `arrival_us` is kept, so TTFT keeps
+    // charging the full displacement — recovery cost is visible, not
+    // laundered.
+    macro_rules! requeue_displaced {
+        ($now:expr, $id:expr, $killed:expr) => {{
+            let id: u64 = $id;
+            predicted.remove(&id);
+            arrivals.remove(&id);
+            full_hashes.remove(&id);
+            metrics.fault.requeued += 1;
+            if $killed {
+                metrics.fault.killed += 1;
+            }
+            let ridx = *idx_of.get(&id).expect("displaced request missing from index");
+            push(&mut queue, &mut tiebreak, $now, Event::Requeue(ridx));
+        }};
+    }
+
+    // A drain that has run its batch down: the slot goes dark and every
+    // trace of it leaves the router's index (presence bits, snapshot,
+    // occupancy) — proven equivalent to a mirror rebuild in the kvcache
+    // tests.
+    macro_rules! finalize_drain {
+        ($i:expr) => {{
+            let i = $i;
+            draining[i] = false;
+            alive[i] = false;
+            let leftovers = instances[i].extract_all();
+            debug_assert!(leftovers.is_empty(), "finalized drain had live work");
+            drop(leftovers);
+            factory.purge_instance(i);
+        }};
+    }
+
+    // Capacity came back: re-present everything that was parked while the
+    // fleet had zero routable instances.
+    macro_rules! release_parked {
+        ($now:expr) => {{
+            for idx in parked.drain(..) {
+                push(&mut queue, &mut tiebreak, $now, Event::Requeue(idx));
+            }
+        }};
+    }
+
+    macro_rules! drain_instance {
+        ($now:expr, $i:expr, $deadline:expr) => {{
+            let i = $i;
+            metrics.fault.drains += 1;
+            draining[i] = true;
+            factory.set_routable(i, false);
+            // Waiting requests never started; they re-route immediately.
+            // The running batch is allowed to finish (or hit the deadline).
+            for r in instances[i].extract_waiting() {
+                requeue_displaced!($now, r.id, false);
+            }
+            if stepping[i] {
+                drain_deadline_at[i] = $now + $deadline;
+                push(&mut queue, &mut tiebreak, $now + $deadline, Event::DrainDeadline(i));
+            } else {
+                finalize_drain!(i);
+            }
+        }};
+    }
+
+    // Bring capacity up: reuse the lowest dead slot if one exists (a
+    // recovered machine), otherwise grow every per-instance structure —
+    // harness state, router index, metrics windows. `cold` controls
+    // whether the new slot starts with an empty KV$ or is seeded from
+    // recently completed prefix chains (modeling state transfer).
+    macro_rules! scale_up {
+        ($now:expr, $cold:expr) => {{
+            let slot = (0..instances.len()).find(|&i| !alive[i] && !draining[i]);
+            let i = match slot {
+                Some(i) => {
+                    alive[i] = true;
+                    factory.set_routable(i, true);
+                    i
+                }
+                None => {
+                    let i = instances.len();
+                    instances.push(Instance::new(i, cfg.engine.clone()));
+                    factory.resize_instances(i + 1);
+                    metrics.prefill_time.push(Windowed::new(10_000_000));
+                    metrics.batch_size.push(Windowed::new(1_000_000));
+                    stepping.push(false);
+                    pending.push(None);
+                    alive.push(true);
+                    draining.push(false);
+                    drain_deadline_at.push(0);
+                    step_end_at.push(0);
+                    cold_left.push(0);
+                    i
+                }
+            };
+            metrics.fault.scale_ups += 1;
+            cold_left[i] = COLD_HIT_WINDOW;
+            if !$cold {
+                for chain in warm_ring.iter() {
+                    instances[i].kv_mut().insert(chain, $now);
+                    factory.on_completion(i, chain, $now);
+                }
+            }
+            release_parked!($now);
+        }};
+    }
+
     for &i in initial {
         push(&mut queue, &mut tiebreak, reqs[i].req.arrival_us, Event::Arrival(i));
+    }
+    for (k, f) in faults.iter().enumerate() {
+        push(&mut queue, &mut tiebreak, f.at_us, Event::Fault(k));
+    }
+    if let Some((_, interval)) = autoscaler.as_ref() {
+        push(&mut queue, &mut tiebreak, *interval, Event::AutoscaleTick);
     }
 
     let mut last_time = 0u64;
     while let Some((Reverse(now), _, event)) = queue.pop() {
         last_time = last_time.max(now);
         match event {
-            Event::Arrival(idx) => {
+            Event::Arrival(idx) | Event::Requeue(idx) => {
+                let is_requeue = matches!(event, Event::Requeue(_));
                 let tr = &reqs[idx];
                 // Borrowed scratch context: the whole route decision is
                 // allocation-free on the router side.
                 let ctx = factory.route_ctx(&tr.req, now);
                 if let Some(adm) = admission.as_deref_mut() {
-                    metrics.overload.offered += 1;
+                    if !is_requeue {
+                        metrics.overload.offered += 1;
+                    }
                     let sid = tr.req.session_id;
                     if !adm.admit(ctx) {
+                        if is_requeue {
+                            // A displaced request re-enters admission
+                            // control like any other work; a rejection
+                            // here is a loss (it was already admitted
+                            // once), not a second shed.
+                            metrics.fault.lost += 1;
+                            continue;
+                        }
                         metrics.overload.shed += 1;
                         if sid != 0 && admitted_sessions.contains(&sid) {
                             metrics.overload.shed_mid_session += 1;
@@ -327,9 +538,11 @@ fn run_des_core(
                         }
                         continue;
                     }
-                    metrics.overload.admitted += 1;
-                    if sid != 0 {
-                        admitted_sessions.insert(sid);
+                    if !is_requeue {
+                        metrics.overload.admitted += 1;
+                        if sid != 0 {
+                            admitted_sessions.insert(sid);
+                        }
                     }
                 }
                 let t0 = Instant::now();
@@ -337,8 +550,34 @@ fn run_des_core(
                 metrics
                     .sched_overhead_us
                     .push(t0.elapsed().as_nanos() as f64 / 1000.0);
-                let d = decision.instance;
-                debug_assert!(d < n, "policy routed out of range");
+                let mut d = decision.instance;
+                if lifecycle_active && (d >= instances.len() || !alive[d] || draining[d]) {
+                    // The policy routed into a dead or draining slot (its
+                    // view can lag a just-fired fault, and `select_min`
+                    // falls back to 0 when nothing is routable). Redirect
+                    // to the least-loaded routable instance, or park the
+                    // request until capacity returns.
+                    let mut best: Option<(usize, usize)> = None;
+                    for i in 0..instances.len() {
+                        if alive[i] && !draining[i] {
+                            let key = (ctx.inds[i].bs(), i);
+                            if best.map_or(true, |b| key < b) {
+                                best = Some(key);
+                            }
+                        }
+                    }
+                    match best {
+                        Some((_, i)) => d = i,
+                        None => {
+                            parked.push(idx);
+                            continue;
+                        }
+                    }
+                }
+                if is_requeue {
+                    metrics.fault.re_admitted += 1;
+                }
+                debug_assert!(d < instances.len(), "policy routed out of range");
                 factory.on_route(d, &tr.req, now);
                 if let Some(p) = decision.predicted_ttft_us {
                     predicted.insert(tr.req.id, p);
@@ -351,11 +590,20 @@ fn run_des_core(
                         let end = now + out.duration_us;
                         pending[d] = Some(out);
                         stepping[d] = true;
+                        step_end_at[d] = end;
                         push(&mut queue, &mut tiebreak, end, Event::StepEnd(d));
                     }
                 }
             }
             Event::StepEnd(d) => {
+                // Stale-step guard: a crash (or deadline kill) cancelled
+                // the step this event announced, and a later restart may
+                // have stamped a new one. Only the StepEnd matching the
+                // currently pending outcome's scheduled end is real. In
+                // fault-free runs the guard never fires.
+                if pending[d].is_none() || step_end_at[d] != now {
+                    continue;
+                }
                 let out = pending[d].take().expect("StepEnd without outcome");
                 for ev in &out.events {
                     match ev {
@@ -376,8 +624,22 @@ fn run_des_core(
                         }
                         EngineEvent::Completed { record } => {
                             metrics.records.push(*record);
+                            if lifecycle_active && cold_left[d] > 0 {
+                                // Warm-up visibility: the first completions
+                                // after a slot (re)joins trace the cache
+                                // hit curve from cold (or seeded) state.
+                                cold_left[d] -= 1;
+                                metrics.fault.cold_samples += 1;
+                                metrics.cold_hit_samples.push(record.hit_ratio());
+                            }
                             if let Some(fh) = full_hashes.remove(&record.id) {
                                 factory.on_completion(d, &fh, now);
+                                if lifecycle_active {
+                                    warm_ring.push_back(fh);
+                                    if warm_ring.len() > WARM_RING_CAP {
+                                        warm_ring.pop_front();
+                                    }
+                                }
                             }
                             // Defensive: FirstToken always precedes
                             // Completed, so these are normally no-ops.
@@ -402,10 +664,15 @@ fn run_des_core(
                 // ping-pongs one Vec per instance instead of allocating a
                 // fresh one every step.
                 instances[d].recycle_events(out.events);
-                if instances[d].has_work() {
+                if draining[d] && !instances[d].has_work() {
+                    // Batch ran down before the deadline: clean drain.
+                    stepping[d] = false;
+                    finalize_drain!(d);
+                } else if instances[d].has_work() {
                     if let Some(out2) = begin_step(&mut instances[d], now, &mut metrics, d) {
                         let end = now + out2.duration_us;
                         pending[d] = Some(out2);
+                        step_end_at[d] = end;
                         push(&mut queue, &mut tiebreak, end, Event::StepEnd(d));
                     } else {
                         stepping[d] = false;
@@ -414,8 +681,137 @@ fn run_des_core(
                     stepping[d] = false;
                 }
             }
+            Event::Fault(k) => match faults[k].event {
+                FaultEvent::Crash { instance: i } if i < instances.len() && alive[i] => {
+                    metrics.fault.crashes += 1;
+                    alive[i] = false;
+                    draining[i] = false; // a crash preempts an in-progress drain
+                    factory.set_routable(i, false);
+                    if let Some(out) = pending[i].take() {
+                        stepping[i] = false;
+                        // The cancelled step never happened: requests it
+                        // would have completed were already moved out of
+                        // the engine's running set, so requeue them from
+                        // the outcome's own event list. Their records are
+                        // NOT pushed — the tokens are gone with the node.
+                        for ev in &out.events {
+                            if let EngineEvent::Completed { record } = ev {
+                                requeue_displaced!(now, record.id, true);
+                            }
+                        }
+                    }
+                    for r in instances[i].extract_all() {
+                        requeue_displaced!(now, r.id, true);
+                    }
+                    factory.purge_instance(i);
+                }
+                FaultEvent::Recover { instance: i }
+                    if i < instances.len() && !alive[i] && !draining[i] =>
+                {
+                    metrics.fault.recovers += 1;
+                    alive[i] = true;
+                    factory.set_routable(i, true);
+                    // The machine is back but its KV$ is not: sample the
+                    // cold-start hit curve as it refills.
+                    cold_left[i] = COLD_HIT_WINDOW;
+                    release_parked!(now);
+                }
+                FaultEvent::Drain {
+                    instance: i,
+                    deadline_us,
+                } if i < instances.len() && alive[i] && !draining[i] => {
+                    drain_instance!(now, i, deadline_us);
+                }
+                FaultEvent::ScaleUp { cold_kv } => {
+                    scale_up!(now, cold_kv);
+                }
+                // Crash of a dead slot, recover of a live one, drain of a
+                // drained one: plans may race their own events; ignore.
+                _ => {}
+            },
+            Event::DrainDeadline(d) => {
+                // Stale if the drain already finished cleanly (or a crash
+                // superseded it).
+                if !draining[d] || drain_deadline_at[d] != now {
+                    continue;
+                }
+                metrics.fault.drain_violations += 1;
+                if let Some(out) = pending[d].take() {
+                    stepping[d] = false;
+                    for ev in &out.events {
+                        if let EngineEvent::Completed { record } = ev {
+                            requeue_displaced!(now, record.id, true);
+                        }
+                    }
+                }
+                for r in instances[d].extract_all() {
+                    requeue_displaced!(now, r.id, true);
+                }
+                draining[d] = false;
+                alive[d] = false;
+                factory.purge_instance(d);
+            }
+            Event::AutoscaleTick => {
+                if let Some((scaler, interval)) = autoscaler.as_mut() {
+                    let interval = *interval;
+                    let mut obs = FleetObs {
+                        now_us: now,
+                        alive: 0,
+                        slots: instances.len(),
+                        total_queue_depth: 0,
+                        max_queue_depth: 0,
+                        min_p_token: 0,
+                    };
+                    let mut min_p: Option<u64> = None;
+                    for i in 0..instances.len() {
+                        if alive[i] && !draining[i] {
+                            obs.alive += 1;
+                            let s = instances[i].snapshot();
+                            let depth = (s.r_bs + s.q_bs) as u64;
+                            obs.total_queue_depth += depth;
+                            obs.max_queue_depth = obs.max_queue_depth.max(depth);
+                            let p = s.queued_prefill_tokens as u64;
+                            min_p = Some(min_p.map_or(p, |m| m.min(p)));
+                        }
+                    }
+                    obs.min_p_token = min_p.unwrap_or(0);
+                    match scaler.tick(&obs) {
+                        Some(ScaleAction::Up { cold_kv }) => scale_up!(now, cold_kv),
+                        Some(ScaleAction::Down) => {
+                            // Drain the shallowest routable instance; the
+                            // deadline is two observation intervals, after
+                            // which the leftover batch is requeued.
+                            let mut best: Option<(u64, usize)> = None;
+                            for i in 0..instances.len() {
+                                if alive[i] && !draining[i] {
+                                    let s = instances[i].snapshot();
+                                    let key = ((s.r_bs + s.q_bs) as u64, i);
+                                    if best.map_or(true, |b| key < b) {
+                                        best = Some(key);
+                                    }
+                                }
+                            }
+                            if let Some((_, i)) = best {
+                                drain_instance!(now, i, interval * 2);
+                            }
+                        }
+                        None => {}
+                    }
+                    // Keep observing only while the simulation still has
+                    // events — otherwise the tick chain would run forever.
+                    if !queue.is_empty() {
+                        push(&mut queue, &mut tiebreak, now + interval, Event::AutoscaleTick);
+                    }
+                }
+            }
         }
     }
+
+    // Requests still parked when the event heap drained had nowhere to
+    // run: the fleet ended with zero routable instances. They are the
+    // only way a routed request can fail to complete without an explicit
+    // shed, and they are counted, never silently dropped.
+    metrics.fault.lost += parked.len() as u64;
 
     metrics.duration_us = last_time;
     for inst in &instances {
@@ -710,5 +1106,200 @@ mod tests {
             let m = run_experiment(&exp, p.as_mut());
             assert_eq!(m.records.len(), 120, "{name} lost requests");
         }
+    }
+
+    // ---- lifecycle / fault injection ------------------------------------
+
+    use crate::cluster::lifecycle::{FaultCounters, QueueDepthAutoscaler};
+
+    fn assert_same_records(a: &RunMetrics, b: &RunMetrics) {
+        assert_eq!(a.records.len(), b.records.len());
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(
+                (x.id, x.instance, x.arrival_us, x.first_token_us, x.completion_us),
+                (y.id, y.instance, y.arrival_us, y.first_token_us, y.completion_us)
+            );
+        }
+        assert_eq!(a.duration_us, b.duration_us);
+        assert_eq!(a.total_steps, b.total_steps);
+    }
+
+    /// Every id in the trace completes exactly once, regardless of how
+    /// many times faults displaced it — the zero-silent-drops contract.
+    fn assert_conserved(m: &RunMetrics, expect: usize) {
+        assert_eq!(m.fault.lost, 0, "lost requests: {:?}", m.fault);
+        assert_eq!(m.records.len(), expect, "completions: {:?}", m.fault);
+        let mut ids: Vec<u64> = m.records.iter().map(|r| r.id).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), expect, "duplicate completions");
+    }
+
+    /// An empty plan pushes no events and touches no tiebreaks: the run
+    /// must be indistinguishable from one without the lifecycle layer.
+    #[test]
+    fn empty_fault_plan_is_byte_identical() {
+        let (exp, mut p1) = small_exp("lmetric");
+        let (_, mut p2) = small_exp("lmetric");
+        let trace = build_scaled_trace(&exp);
+        let cfg = cluster_config(&exp);
+        let base = run_des(&cfg, &trace, p1.as_mut());
+        let spec = RunSpec::open_loop(&cfg, &trace).with_faults(FaultPlan::new());
+        let faulted = run(spec, p2.as_mut());
+        assert_same_records(&base, &faulted);
+        assert_eq!(faulted.fault, FaultCounters::default());
+        assert!(faulted.cold_hit_samples.is_empty());
+    }
+
+    /// Acceptance: a crash during load replays to completion with zero
+    /// lost requests, every displaced request completing exactly once.
+    #[test]
+    fn crash_during_load_conserves_every_request() {
+        let (exp, mut probe) = small_exp("lmetric");
+        let trace = build_scaled_trace(&exp);
+        let cfg = cluster_config(&exp);
+        let dur = run_des(&cfg, &trace, probe.as_mut()).duration_us;
+        let plan = FaultPlan::new()
+            .crash_at(dur / 4, 1)
+            .recover_at(dur / 2, 1);
+        let (_, mut p) = small_exp("lmetric");
+        let m = run(
+            RunSpec::open_loop(&cfg, &trace).with_faults(plan),
+            p.as_mut(),
+        );
+        assert_conserved(&m, 300);
+        assert_eq!(m.fault.crashes, 1);
+        assert_eq!(m.fault.recovers, 1);
+        assert!(m.fault.killed > 0, "crash at {} displaced nothing", dur / 4);
+        // Crash-only displacement: everything killed was requeued, and
+        // with no admission control every requeue was re-admitted.
+        assert_eq!(m.fault.requeued, m.fault.killed);
+        assert_eq!(m.fault.re_admitted, m.fault.requeued);
+    }
+
+    /// Same seed, same plan — identical trajectory and counters.
+    #[test]
+    fn lifecycle_replay_is_deterministic() {
+        let (exp, mut probe) = small_exp("lmetric");
+        let trace = build_scaled_trace(&exp);
+        let cfg = cluster_config(&exp);
+        let dur = run_des(&cfg, &trace, probe.as_mut()).duration_us;
+        let plan = FaultPlan::new()
+            .crash_at(dur / 4, 0)
+            .drain_at(dur / 3, 2, 2_000_000)
+            .recover_at(dur / 2, 0)
+            .scale_up_at(2 * dur / 3, true);
+        let mut runs = (0..2).map(|_| {
+            let (_, mut p) = small_exp("lmetric");
+            run(
+                RunSpec::open_loop(&cfg, &trace).with_faults(plan.clone()),
+                p.as_mut(),
+            )
+        });
+        let (a, b) = (runs.next().unwrap(), runs.next().unwrap());
+        assert_same_records(&a, &b);
+        assert_eq!(a.fault, b.fault);
+        assert_eq!(a.cold_hit_samples, b.cold_hit_samples);
+    }
+
+    /// A drained instance finishes its batch (or hits the deadline), its
+    /// waiting queue re-routes, and nothing is dropped.
+    #[test]
+    fn drain_requeues_waiting_and_conserves() {
+        let (exp, mut probe) = small_exp("lmetric");
+        let trace = build_scaled_trace(&exp);
+        let cfg = cluster_config(&exp);
+        let dur = run_des(&cfg, &trace, probe.as_mut()).duration_us;
+        let plan = FaultPlan::new().drain_at(dur / 4, 1, 5_000_000);
+        let (_, mut p) = small_exp("lmetric");
+        let m = run(
+            RunSpec::open_loop(&cfg, &trace).with_faults(plan),
+            p.as_mut(),
+        );
+        assert_conserved(&m, 300);
+        assert_eq!(m.fault.drains, 1);
+        // After the drain no record may land on the drained slot's later
+        // completions... it can still complete its own batch, but every
+        // completion after the drain deadline must come from elsewhere.
+        let cutoff = dur / 4 + 5_000_000;
+        for r in &m.records {
+            assert!(
+                r.instance != 1 || r.completion_us <= cutoff,
+                "instance 1 completed id {} after its drain deadline",
+                r.id
+            );
+        }
+    }
+
+    /// Scale-up mid-run: the fleet widens, the new slot takes work, and
+    /// its first completions are sampled into the cold-start hit curve.
+    #[test]
+    fn scale_up_widens_fleet_and_samples_cold_curve() {
+        let (exp, mut probe) = small_exp("lmetric");
+        let trace = build_scaled_trace(&exp);
+        let cfg = cluster_config(&exp);
+        let dur = run_des(&cfg, &trace, probe.as_mut()).duration_us;
+        let plan = FaultPlan::new().scale_up_at(dur / 4, true);
+        let (_, mut p) = small_exp("lmetric");
+        let m = run(
+            RunSpec::open_loop(&cfg, &trace).with_faults(plan),
+            p.as_mut(),
+        );
+        assert_conserved(&m, 300);
+        assert_eq!(m.fault.scale_ups, 1);
+        assert!(
+            m.records.iter().any(|r| r.instance == 4),
+            "the new slot never completed anything"
+        );
+        assert!(m.fault.cold_samples > 0);
+        assert_eq!(m.cold_hit_samples.len() as u64, m.fault.cold_samples);
+    }
+
+    /// The reactive loop closes: under a heavy trace the queue-depth
+    /// autoscaler grows the fleet, and the run still conserves requests.
+    #[test]
+    fn autoscaler_scales_up_under_pressure() {
+        let (mut exp, _) = small_exp("lmetric");
+        exp.rate_scale = 3.0; // overloaded at the starting fleet size
+        let trace = build_scaled_trace(&exp);
+        let cfg = cluster_config(&exp);
+        let scaler = QueueDepthAutoscaler::new(4.0, 1.0, exp.instances, exp.instances * 2)
+            .with_cooldown(1_000_000);
+        let (_, mut p) = small_exp("lmetric");
+        let m = run(
+            RunSpec::open_loop(&cfg, &trace)
+                .with_autoscaler(Box::new(scaler), 500_000),
+            p.as_mut(),
+        );
+        assert_conserved(&m, 300);
+        assert!(m.fault.scale_ups > 0, "autoscaler never reacted: {:?}", m.fault);
+    }
+
+    /// Stochastic plans are a pure function of their seed (the Python
+    /// mirror pins the draw contract); the DES replay of one is too.
+    #[test]
+    fn stochastic_plan_replays_deterministically() {
+        let (exp, mut probe) = small_exp("lmetric");
+        let trace = build_scaled_trace(&exp);
+        let cfg = cluster_config(&exp);
+        let dur = run_des(&cfg, &trace, probe.as_mut()).duration_us;
+        let spec = crate::cluster::StochasticFaults {
+            seed: 11,
+            crash_rate_per_s: 2e6 / dur as f64, // ~2 crashes over the run
+            mttr_s: dur as f64 / 4e6,
+            horizon_s: dur as f64 / 1e6,
+        };
+        let plan = FaultPlan::new().stochastic(&spec, exp.instances);
+        let mut runs = (0..2).map(|_| {
+            let (_, mut p) = small_exp("lmetric");
+            run(
+                RunSpec::open_loop(&cfg, &trace).with_faults(plan.clone()),
+                p.as_mut(),
+            )
+        });
+        let (a, b) = (runs.next().unwrap(), runs.next().unwrap());
+        assert_same_records(&a, &b);
+        assert_eq!(a.fault, b.fault);
+        assert_eq!(a.fault.lost, 0);
     }
 }

@@ -1,0 +1,456 @@
+//! Fleet lifecycle & fault injection: deterministic, seed-driven schedules
+//! of instance crash / drain / scale events, the counters that account for
+//! every request they displace, and a reactive autoscaler closing the loop
+//! from fleet observations back into lifecycle events.
+//!
+//! The DES ([`crate::cluster::RunSpec::with_faults`]) and the live
+//! threaded cluster both consume a [`FaultPlan`]; recovery semantics are:
+//!
+//! * [`FaultEvent::Crash`] — the instance dies mid-step: its running
+//!   batch and queue are killed, every killed request is *requeued*
+//!   through the router (re-entering admission control, where a rejection
+//!   counts as [`FaultCounters::lost`], never a silent drop), its
+//!   engine-local KV$ is wiped, and the shared prefix index purges its
+//!   presence bits and per-instance occupancy so a later recover or
+//!   scale-up into the slot starts cold.
+//! * [`FaultEvent::Drain`] — the instance stops accepting new work but
+//!   finishes its in-flight batch; queued-but-unstarted requests requeue
+//!   immediately. If the batch outlives the deadline the drain is forced
+//!   (a [`FaultCounters::drain_violations`]) and the remainder requeues.
+//! * [`FaultEvent::Recover`] — a dead slot rejoins the routable set,
+//!   cold (its KV$ died with it).
+//! * [`FaultEvent::ScaleUp`] — a new instance joins, reusing the lowest
+//!   dead slot if one exists, else widening the fleet (mask-width resize
+//!   via `resize_instances` on the shared index). With `cold_kv: false`
+//!   it is pre-seeded with recently completed prefix chains (warm start).
+//!
+//! Determinism: scripted events fire at fixed virtual times; stochastic
+//! schedules materialize up front from a SplitMix64 stream whose draw
+//! order (inter-fault gap, victim, downtime — exactly three draws per
+//! fault) is mirrored by `python/tests/test_fault_schedule.py` with
+//! pinned vectors, the same cross-language contract `trace::open` and
+//! `shard_of` already carry.
+
+use crate::util::Rng;
+
+/// Salt xor-ed into the user seed so the fault stream never collides with
+/// the trace-generator streams derived from the same seed (mirrored in
+/// `python/tests/test_fault_schedule.py`).
+pub const FAULT_STREAM_SALT: u64 = 0xFA17_0000_0001;
+
+/// One lifecycle event. Instance indices refer to fleet slots: slots stay
+/// addressable after death so a `Recover` can target them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultEvent {
+    /// Kill `instance` now: running + queued requests requeue through the
+    /// router, engine KV$ and shared-index presence are wiped.
+    Crash { instance: usize },
+    /// Stop routing to `instance`; it finishes its in-flight batch, then
+    /// leaves the fleet. Queued-but-unstarted work requeues immediately;
+    /// a batch still running `deadline_us` after the drain started is
+    /// forcibly killed (counted as a drain-deadline violation).
+    Drain { instance: usize, deadline_us: u64 },
+    /// Bring a dead slot back into the routable set (cold KV$).
+    Recover { instance: usize },
+    /// Add an instance to the fleet: the lowest dead slot is reused,
+    /// else the fleet widens by one. `cold_kv: false` pre-seeds the new
+    /// instance's KV$ (and its shared-index presence) with recently
+    /// completed prefix chains.
+    ScaleUp { cold_kv: bool },
+}
+
+/// A [`FaultEvent`] pinned to a virtual time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlannedFault {
+    pub at_us: u64,
+    pub event: FaultEvent,
+}
+
+/// Parameters of a stochastic crash/recover schedule. Faults arrive as a
+/// Poisson process at `crash_rate_per_s` over `[0, horizon_s]`; each picks
+/// a uniform victim slot and an exponential downtime with mean `mttr_s`,
+/// after which the victim recovers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StochasticFaults {
+    pub seed: u64,
+    /// Fleet-wide crash arrival rate, crashes per virtual second.
+    pub crash_rate_per_s: f64,
+    /// Mean time to recover, seconds (exponential downtime).
+    pub mttr_s: f64,
+    /// No crash is scheduled past this virtual time.
+    pub horizon_s: f64,
+}
+
+/// A deterministic schedule of lifecycle events. Construct scripted plans
+/// with the builder methods, stochastic ones with [`FaultPlan::stochastic`]
+/// (or combine both — `schedule()` merges them stably by time).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    events: Vec<PlannedFault>,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// An empty plan injects nothing: the DES run is byte-identical to a
+    /// plain `run_des` (asserted by `empty_fault_plan_is_byte_identical`).
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn at(mut self, at_us: u64, event: FaultEvent) -> Self {
+        self.events.push(PlannedFault { at_us, event });
+        self
+    }
+
+    pub fn crash_at(self, at_us: u64, instance: usize) -> Self {
+        self.at(at_us, FaultEvent::Crash { instance })
+    }
+
+    pub fn recover_at(self, at_us: u64, instance: usize) -> Self {
+        self.at(at_us, FaultEvent::Recover { instance })
+    }
+
+    pub fn drain_at(self, at_us: u64, instance: usize, deadline_us: u64) -> Self {
+        self.at(at_us, FaultEvent::Drain { instance, deadline_us })
+    }
+
+    pub fn scale_up_at(self, at_us: u64, cold_kv: bool) -> Self {
+        self.at(at_us, FaultEvent::ScaleUp { cold_kv })
+    }
+
+    /// Materialize a stochastic crash/recover schedule over an `n`-slot
+    /// fleet and append it to this plan. Draw order per fault — gap,
+    /// victim, downtime — is the cross-language contract; see the module
+    /// docs.
+    pub fn stochastic(mut self, spec: &StochasticFaults, n_instances: usize) -> Self {
+        assert!(n_instances > 0, "stochastic faults need a non-empty fleet");
+        assert!(spec.crash_rate_per_s > 0.0, "crash rate must be positive");
+        let mut rng = Rng::new(spec.seed ^ FAULT_STREAM_SALT);
+        let mut t_s = 0.0f64;
+        loop {
+            t_s += rng.exp(1.0 / spec.crash_rate_per_s);
+            if t_s > spec.horizon_s {
+                break;
+            }
+            let victim = (rng.next_u64() % n_instances as u64) as usize;
+            let down_s = rng.exp(spec.mttr_s);
+            let at_us = (t_s * 1e6) as u64;
+            let up_us = ((t_s + down_s) * 1e6) as u64;
+            self.events.push(PlannedFault {
+                at_us,
+                event: FaultEvent::Crash { instance: victim },
+            });
+            self.events.push(PlannedFault {
+                at_us: up_us,
+                event: FaultEvent::Recover { instance: victim },
+            });
+        }
+        self
+    }
+
+    /// The plan's events, stably sorted by time (ties keep insertion
+    /// order, so scripted sequences at the same instant fire as written).
+    pub fn schedule(&self) -> Vec<PlannedFault> {
+        let mut evs = self.events.clone();
+        evs.sort_by_key(|e| e.at_us);
+        evs
+    }
+}
+
+/// Accounting for everything a fault plan displaced. Carried on
+/// `RunMetrics::fault`; all-zero when no plan ran. The conservation
+/// contract — offered == completed + shed + lost, zero silent drops — is
+/// asserted over these in `cluster::des` tests.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    pub crashes: u64,
+    pub drains: u64,
+    pub recovers: u64,
+    pub scale_ups: u64,
+    /// Requests killed on a crashed (or force-drained) instance — both
+    /// the running batch and the local queue.
+    pub killed: u64,
+    /// Killed or drain-displaced requests pushed back through the router.
+    pub requeued: u64,
+    /// Requeued requests that passed admission control again (equals
+    /// `requeued` when no admission policy runs).
+    pub re_admitted: u64,
+    /// Requeued requests rejected by admission on re-entry, plus
+    /// requests still parked at run end because the fleet finished with
+    /// zero routable instances — the only ways fault injection may lose
+    /// work, and both are *counted*, never silent.
+    pub lost: u64,
+    /// Drains whose batch outlived the deadline and was forcibly killed.
+    pub drain_violations: u64,
+    /// Completions sampled into the cold-start hit curve (first
+    /// completions on a freshly recovered / scaled-up instance).
+    pub cold_samples: u64,
+}
+
+/// What an [`Autoscaler`] sees each tick: the routable fleet and its
+/// queue pressure, straight from the router's indicator snapshots.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FleetObs {
+    pub now_us: u64,
+    /// Routable (alive, not draining) instances.
+    pub alive: usize,
+    /// Total fleet slots, including dead and draining ones.
+    pub slots: usize,
+    /// Sum of batch sizes (running + waiting) over routable instances.
+    pub total_queue_depth: u64,
+    /// Deepest routable queue.
+    pub max_queue_depth: u64,
+    /// Smallest predicted prefill backlog (P-token) over routable
+    /// instances — the same quantity `ttft_shed` thresholds on, so a
+    /// TTFT-driven autoscaler and TTFT-driven shedding see one signal.
+    pub min_p_token: u64,
+}
+
+impl FleetObs {
+    /// Mean routable queue depth (0 on an empty fleet).
+    pub fn mean_queue_depth(&self) -> f64 {
+        if self.alive == 0 {
+            0.0
+        } else {
+            self.total_queue_depth as f64 / self.alive as f64
+        }
+    }
+}
+
+/// One lifecycle action an autoscaler may request per tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleAction {
+    Up { cold_kv: bool },
+    /// Drain the least-loaded routable instance (deadline chosen by the
+    /// harness).
+    Down,
+}
+
+/// A reactive autoscaler: observes the fleet each tick and may emit one
+/// lifecycle action. Implementations must bound themselves (min/max
+/// fleet, hysteresis, cooldown) — the harness applies whatever they ask.
+pub trait Autoscaler {
+    fn name(&self) -> String;
+    fn tick(&mut self, obs: &FleetObs) -> Option<ScaleAction>;
+}
+
+impl<T: Autoscaler + ?Sized> Autoscaler for &mut T {
+    fn name(&self) -> String {
+        (**self).name()
+    }
+    fn tick(&mut self, obs: &FleetObs) -> Option<ScaleAction> {
+        (**self).tick(obs)
+    }
+}
+
+/// Queue-depth-driven autoscaler with hysteresis: scale up when the mean
+/// routable queue depth exceeds `up_depth`, down when it falls below
+/// `down_depth` (strictly smaller — the gap is the hysteresis band), at
+/// most one action per `cooldown_us`, holding the fleet in
+/// `[min_instances, max_instances]`.
+#[derive(Debug, Clone)]
+pub struct QueueDepthAutoscaler {
+    pub up_depth: f64,
+    pub down_depth: f64,
+    pub min_instances: usize,
+    pub max_instances: usize,
+    pub cooldown_us: u64,
+    /// Scale-ups join warm (pre-seeded) when false.
+    pub cold_kv: bool,
+    last_action_us: Option<u64>,
+}
+
+impl QueueDepthAutoscaler {
+    pub fn new(up_depth: f64, down_depth: f64, min_instances: usize, max_instances: usize) -> Self {
+        assert!(
+            down_depth < up_depth,
+            "hysteresis requires down_depth < up_depth ({down_depth} >= {up_depth})"
+        );
+        assert!(min_instances >= 1 && min_instances <= max_instances);
+        QueueDepthAutoscaler {
+            up_depth,
+            down_depth,
+            min_instances,
+            max_instances,
+            cooldown_us: 5_000_000,
+            cold_kv: true,
+            last_action_us: None,
+        }
+    }
+
+    pub fn with_cooldown(mut self, cooldown_us: u64) -> Self {
+        self.cooldown_us = cooldown_us;
+        self
+    }
+
+    pub fn with_cold_kv(mut self, cold_kv: bool) -> Self {
+        self.cold_kv = cold_kv;
+        self
+    }
+}
+
+impl Autoscaler for QueueDepthAutoscaler {
+    fn name(&self) -> String {
+        "queue_depth_autoscaler".into()
+    }
+
+    fn tick(&mut self, obs: &FleetObs) -> Option<ScaleAction> {
+        if let Some(last) = self.last_action_us {
+            if obs.now_us.saturating_sub(last) < self.cooldown_us {
+                return None;
+            }
+        }
+        let mean = obs.mean_queue_depth();
+        let action = if mean > self.up_depth && obs.alive < self.max_instances {
+            Some(ScaleAction::Up { cold_kv: self.cold_kv })
+        } else if mean < self.down_depth && obs.alive > self.min_instances {
+            Some(ScaleAction::Down)
+        } else {
+            None
+        };
+        if action.is_some() {
+            self.last_action_us = Some(obs.now_us);
+        }
+        action
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scripted_plan_schedules_stably_by_time() {
+        let plan = FaultPlan::new()
+            .crash_at(2_000_000, 1)
+            .recover_at(5_000_000, 1)
+            .drain_at(2_000_000, 0, 1_000_000)
+            .scale_up_at(1_000_000, true);
+        let sched = plan.schedule();
+        assert_eq!(sched.len(), 4);
+        assert_eq!(sched[0].event, FaultEvent::ScaleUp { cold_kv: true });
+        // Equal times keep insertion order: crash(1) before drain(0).
+        assert_eq!(sched[1].event, FaultEvent::Crash { instance: 1 });
+        assert_eq!(
+            sched[2].event,
+            FaultEvent::Drain { instance: 0, deadline_us: 1_000_000 }
+        );
+        assert_eq!(sched[3].event, FaultEvent::Recover { instance: 1 });
+        assert!(!plan.is_empty());
+        assert!(FaultPlan::new().is_empty());
+    }
+
+    #[test]
+    fn stochastic_schedule_is_deterministic_and_paired() {
+        let spec = StochasticFaults {
+            seed: 42,
+            crash_rate_per_s: 0.5,
+            mttr_s: 2.0,
+            horizon_s: 60.0,
+        };
+        let a = FaultPlan::new().stochastic(&spec, 8);
+        let b = FaultPlan::new().stochastic(&spec, 8);
+        assert_eq!(a, b, "same seed + spec must materialize identically");
+        assert!(!a.is_empty(), "60 s at 0.5 crashes/s should draw faults");
+        assert_eq!(a.len() % 2, 0, "every crash pairs with a recover");
+        let sched = a.schedule();
+        // Each crash precedes its recover, and victims stay in range.
+        let mut crashes = 0usize;
+        for ev in &sched {
+            match ev.event {
+                FaultEvent::Crash { instance } | FaultEvent::Recover { instance } => {
+                    assert!(instance < 8);
+                    if matches!(ev.event, FaultEvent::Crash { .. }) {
+                        crashes += 1;
+                    }
+                }
+                other => panic!("stochastic plan emitted {other:?}"),
+            }
+        }
+        assert_eq!(crashes * 2, sched.len());
+    }
+
+    /// Pinned draw-order vectors, mirrored bit-for-bit (victims) and to
+    /// microsecond precision (times) by python/tests/test_fault_schedule.py.
+    /// Regenerate there if the draw order ever changes — both sides must
+    /// move together.
+    #[test]
+    fn stochastic_schedule_pinned_vectors() {
+        let spec = StochasticFaults {
+            seed: 7,
+            crash_rate_per_s: 0.5,
+            mttr_s: 2.0,
+            horizon_s: 20.0,
+        };
+        let plan = FaultPlan::new().stochastic(&spec, 4);
+        let got: Vec<(u64, FaultEvent)> =
+            plan.events.iter().map(|e| (e.at_us, e.event)).collect();
+        let expect: Vec<(u64, FaultEvent)> = vec![
+            (3_442_216, FaultEvent::Crash { instance: 0 }),
+            (4_400_384, FaultEvent::Recover { instance: 0 }),
+            (7_711_887, FaultEvent::Crash { instance: 0 }),
+            (12_539_258, FaultEvent::Recover { instance: 0 }),
+            (12_344_711, FaultEvent::Crash { instance: 1 }),
+            (14_690_203, FaultEvent::Recover { instance: 1 }),
+            (13_327_903, FaultEvent::Crash { instance: 1 }),
+            (19_559_700, FaultEvent::Recover { instance: 1 }),
+            (13_750_216, FaultEvent::Crash { instance: 2 }),
+            (14_427_176, FaultEvent::Recover { instance: 2 }),
+            (18_130_748, FaultEvent::Crash { instance: 2 }),
+            (19_110_199, FaultEvent::Recover { instance: 2 }),
+            (18_570_346, FaultEvent::Crash { instance: 0 }),
+            (20_814_182, FaultEvent::Recover { instance: 0 }),
+            (19_028_795, FaultEvent::Crash { instance: 1 }),
+            (19_287_625, FaultEvent::Recover { instance: 1 }),
+            (19_029_345, FaultEvent::Crash { instance: 3 }),
+            (22_406_048, FaultEvent::Recover { instance: 3 }),
+            (19_760_284, FaultEvent::Crash { instance: 2 }),
+            (28_459_929, FaultEvent::Recover { instance: 2 }),
+        ];
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn autoscaler_hysteresis_bounds_and_cooldown() {
+        let mut a = QueueDepthAutoscaler::new(8.0, 2.0, 1, 4).with_cooldown(1_000_000);
+        let obs = |now_us, alive, total| FleetObs {
+            now_us,
+            alive,
+            slots: alive,
+            total_queue_depth: total,
+            max_queue_depth: total,
+            min_p_token: 0,
+        };
+        // Deep queues: scale up.
+        assert_eq!(
+            a.tick(&obs(0, 2, 40)),
+            Some(ScaleAction::Up { cold_kv: true })
+        );
+        // Cooldown swallows the immediate follow-up.
+        assert_eq!(a.tick(&obs(500_000, 2, 40)), None);
+        // After cooldown, still deep: up again — until the max bound.
+        assert_eq!(
+            a.tick(&obs(1_500_000, 3, 60)),
+            Some(ScaleAction::Up { cold_kv: true })
+        );
+        assert_eq!(a.tick(&obs(3_000_000, 4, 80)), None, "max bound holds");
+        // Inside the hysteresis band (2 < mean < 8): no action.
+        assert_eq!(a.tick(&obs(4_500_000, 4, 20)), None);
+        // Idle fleet: scale down — until the min bound.
+        assert_eq!(a.tick(&obs(6_000_000, 4, 0)), Some(ScaleAction::Down));
+        assert_eq!(a.tick(&obs(8_000_000, 1, 0)), None, "min bound holds");
+    }
+
+    #[test]
+    #[should_panic(expected = "hysteresis")]
+    fn autoscaler_rejects_inverted_thresholds() {
+        QueueDepthAutoscaler::new(2.0, 8.0, 1, 4);
+    }
+}

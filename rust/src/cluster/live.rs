@@ -14,6 +14,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use super::lifecycle::{FaultEvent, FaultPlan};
 use crate::core::{Request, RequestRecord, BLOCK_TOKENS};
 use crate::engine::InstanceSnapshot;
 use crate::metrics::RunMetrics;
@@ -29,6 +30,14 @@ pub struct LiveClusterConfig {
     pub prefix_store_entries: usize,
     /// Wall-clock speedup of trace arrival times (2.0 = replay 2× faster).
     pub time_scale: f64,
+    /// Scripted lifecycle events, fired at `at_us / time_scale` of wall
+    /// clock. The live harness implements the DES-first subset: Crash
+    /// wipes an engine and requeues its work, Drain stops routing and
+    /// requeues the waiting queue (no deadline enforcement), Recover
+    /// re-opens the slot. ScaleUp is DES-only — the live fleet is fixed
+    /// at `n_instances` threads. Plans must leave at least one routable
+    /// instance or displaced requests can never complete.
+    pub faults: FaultPlan,
 }
 
 impl Default for LiveClusterConfig {
@@ -38,12 +47,20 @@ impl Default for LiveClusterConfig {
             artifacts_dir: crate::runtime::artifacts_dir(),
             prefix_store_entries: 64,
             time_scale: 1.0,
+            faults: FaultPlan::new(),
         }
     }
 }
 
 enum Cmd {
     Serve(Box<Request>),
+    /// Wipe the engine — slots, waiting queue, prefix store. Every
+    /// displaced request comes back as [`Ev::Displaced`] with
+    /// `killed: true`.
+    Crash,
+    /// Stop starting new work: the waiting queue comes back displaced
+    /// (`killed: false`), the running batch finishes normally.
+    Drain,
     Shutdown,
 }
 
@@ -55,6 +72,8 @@ enum Ev {
         at_us: u64,
     },
     Completed { record: RequestRecord },
+    /// A request a crash or drain threw back at the router.
+    Displaced { req: Box<Request>, killed: bool },
     Snapshot(InstanceSnapshot),
     Fatal(String),
 }
@@ -191,6 +210,26 @@ impl LiveEngine {
 
     fn has_work(&self) -> bool {
         !self.waiting.is_empty() || self.slots.iter().any(|s| s.is_some())
+    }
+
+    /// Drain eviction: hand back everything not yet admitted to a slot.
+    fn extract_waiting(&mut self) -> Vec<Request> {
+        self.waiting.drain(..).collect()
+    }
+
+    /// Crash: hand back ALL work (waiting + running) and wipe the KV
+    /// buffer and prefix store — the machine's memory is gone.
+    fn crash(&mut self) -> Vec<Request> {
+        let mut out = self.extract_waiting();
+        for s in self.slots.iter_mut() {
+            if let Some(seq) = s.take() {
+                out.push(seq.req);
+            }
+        }
+        self.kv = self.rt.zero_kv();
+        let blocks_per_plane = self.rt.cfg.max_seq.div_ceil(BLOCK_TOKENS);
+        self.store = PrefixStore::new(self.store.cap, blocks_per_plane);
+        out
     }
 
     fn snapshot(&self) -> InstanceSnapshot {
@@ -386,6 +425,18 @@ fn instance_thread(
                 rx.recv_timeout(Duration::from_millis(2)).map_err(|_| ())
             } {
                 Ok(Cmd::Serve(req)) => eng.waiting.push_back(*req),
+                Ok(Cmd::Crash) => {
+                    for r in eng.crash() {
+                        let _ = tx.send((idx, Ev::Displaced { req: Box::new(r), killed: true }));
+                    }
+                    let _ = tx.send((idx, Ev::Snapshot(eng.snapshot())));
+                }
+                Ok(Cmd::Drain) => {
+                    for r in eng.extract_waiting() {
+                        let _ = tx.send((idx, Ev::Displaced { req: Box::new(r), killed: false }));
+                    }
+                    let _ = tx.send((idx, Ev::Snapshot(eng.snapshot())));
+                }
                 Ok(Cmd::Shutdown) => shutdown = true,
                 Err(()) => break,
             }
@@ -445,12 +496,20 @@ pub fn run_live(
     let mut full_hashes: HashMap<u64, Arc<[u64]>> = HashMap::new();
     let mut completed = 0usize;
     let total = trace.requests.len();
+    // Scripted lifecycle events, fired by wall clock (scaled like
+    // arrivals); displaced requests buffer here until re-routed, parked
+    // while zero instances are routable.
+    let schedule = cfg.faults.schedule();
+    let mut next_fault = 0usize;
+    let mut displaced: Vec<Request> = Vec::new();
+    let mut parked: Vec<Request> = Vec::new();
 
     let absorb = |ev: (usize, Ev),
                       factory: &mut IndicatorFactory,
                       metrics: &mut RunMetrics,
                       full_hashes: &mut HashMap<u64, Arc<[u64]>>,
-                      completed: &mut usize|
+                      completed: &mut usize,
+                      displaced: &mut Vec<Request>|
      -> Result<()> {
         let (i, ev) = ev;
         match ev {
@@ -464,21 +523,102 @@ pub fn run_live(
                 metrics.records.push(record);
                 *completed += 1;
             }
+            Ev::Displaced { req, killed } => {
+                metrics.fault.requeued += 1;
+                if killed {
+                    metrics.fault.killed += 1;
+                }
+                displaced.push(*req);
+            }
             Ev::Fatal(msg) => return Err(anyhow!(msg)),
         }
         Ok(())
     };
 
+    // Fire every fault whose (scaled) time has passed. Mirrors the DES
+    // handlers; see `LiveClusterConfig::faults` for the supported subset.
+    macro_rules! fire_due_faults {
+        () => {{
+            let now = epoch.elapsed().as_micros() as u64;
+            while next_fault < schedule.len()
+                && (schedule[next_fault].at_us as f64 / cfg.time_scale) as u64 <= now
+            {
+                match schedule[next_fault].event {
+                    FaultEvent::Crash { instance }
+                        if instance < n && factory.is_routable(instance) =>
+                    {
+                        metrics.fault.crashes += 1;
+                        factory.set_routable(instance, false);
+                        factory.purge_instance(instance);
+                        cmd_txs[instance].send(Cmd::Crash).map_err(|e| anyhow!("send: {e}"))?;
+                    }
+                    FaultEvent::Drain { instance, .. }
+                        if instance < n && factory.is_routable(instance) =>
+                    {
+                        metrics.fault.drains += 1;
+                        factory.set_routable(instance, false);
+                        cmd_txs[instance].send(Cmd::Drain).map_err(|e| anyhow!("send: {e}"))?;
+                    }
+                    FaultEvent::Recover { instance }
+                        if instance < n && !factory.is_routable(instance) =>
+                    {
+                        metrics.fault.recovers += 1;
+                        factory.set_routable(instance, true);
+                        displaced.append(&mut parked);
+                    }
+                    // ScaleUp (and same-state races) are DES-only.
+                    _ => {}
+                }
+                next_fault += 1;
+            }
+        }};
+    }
+
+    // Re-route everything a fault displaced. Original `arrival_us` is
+    // kept, so TTFT charges the whole displacement.
+    macro_rules! reroute_displaced {
+        () => {{
+            for req in displaced.drain(..) {
+                let now = epoch.elapsed().as_micros() as u64;
+                let ctx = factory.route_ctx(&req, now);
+                let mut d = policy.route(ctx).instance;
+                if d >= n || !factory.is_routable(d) {
+                    match (0..n).find(|&i| factory.is_routable(i)) {
+                        Some(i) => d = i,
+                        None => {
+                            parked.push(req);
+                            continue;
+                        }
+                    }
+                }
+                metrics.fault.re_admitted += 1;
+                factory.on_route(d, &req, now);
+                cmd_txs[d]
+                    .send(Cmd::Serve(Box::new(req)))
+                    .map_err(|e| anyhow!("send: {e}"))?;
+            }
+        }};
+    }
+
     // Paced arrival loop.
     for tr in &trace.requests {
         let due_us = (tr.req.arrival_us as f64 / cfg.time_scale) as u64;
         loop {
+            fire_due_faults!();
+            reroute_displaced!();
             let now = epoch.elapsed().as_micros() as u64;
             if now >= due_us {
                 break;
             }
             match ev_rx.recv_timeout(Duration::from_micros((due_us - now).min(2000))) {
-                Ok(ev) => absorb(ev, &mut factory, &mut metrics, &mut full_hashes, &mut completed)?,
+                Ok(ev) => absorb(
+                    ev,
+                    &mut factory,
+                    &mut metrics,
+                    &mut full_hashes,
+                    &mut completed,
+                    &mut displaced,
+                )?,
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
                 Err(e) => return Err(anyhow!("event channel: {e}")),
             }
@@ -488,10 +628,17 @@ pub fn run_live(
         req.arrival_us = now; // wall-clock arrival
         let ctx = factory.route_ctx(&req, now);
         let t0 = Instant::now();
-        let d = policy.route(ctx).instance;
+        let mut d = policy.route(ctx).instance;
         metrics
             .sched_overhead_us
             .push(t0.elapsed().as_nanos() as f64 / 1000.0);
+        if d >= n || !factory.is_routable(d) {
+            // The policy routed into a dead slot; fall back to any
+            // routable instance (plans must leave one — see config docs).
+            d = (0..n)
+                .find(|&i| factory.is_routable(i))
+                .ok_or_else(|| anyhow!("no routable instance for arrival {}", req.id))?;
+        }
         factory.on_route(d, &req, now);
         full_hashes.insert(req.id, tr.full_hashes.clone());
         cmd_txs[d]
@@ -499,10 +646,26 @@ pub fn run_live(
             .map_err(|e| anyhow!("send: {e}"))?;
     }
 
-    // Drain completions.
+    // Drain completions. While faults are still pending, poll on a short
+    // timeout so a scheduled Recover fires even when no events flow.
     while completed < total {
-        match ev_rx.recv_timeout(Duration::from_secs(120)) {
-            Ok(ev) => absorb(ev, &mut factory, &mut metrics, &mut full_hashes, &mut completed)?,
+        fire_due_faults!();
+        reroute_displaced!();
+        let wait = if next_fault < schedule.len() {
+            Duration::from_millis(2)
+        } else {
+            Duration::from_secs(120)
+        };
+        match ev_rx.recv_timeout(wait) {
+            Ok(ev) => absorb(
+                ev,
+                &mut factory,
+                &mut metrics,
+                &mut full_hashes,
+                &mut completed,
+                &mut displaced,
+            )?,
+            Err(mpsc::RecvTimeoutError::Timeout) if next_fault < schedule.len() => {}
             Err(e) => return Err(anyhow!("timed out waiting for completions: {e}")),
         }
     }
@@ -547,6 +710,36 @@ mod tests {
         }
         assert_eq!(store.planes.len(), 3, "LRU bound in planes");
         assert_eq!(store.indexed_blocks(), 3 * blocks_per_plane);
+    }
+
+    /// Crash semantics on the live engine: every queued request comes
+    /// back (nothing silently dropped), and the machine's cache state —
+    /// prefix store and KV buffer — is wiped like a real reboot.
+    #[test]
+    fn live_engine_crash_returns_all_work_and_wipes_cache() {
+        let rt = ModelRuntime::load(std::path::Path::new("/nonexistent_lmetric_artifacts"))
+            .expect("sim runtime needs no artifacts");
+        let mut eng = LiveEngine::new(rt, 8);
+        for id in 0..3u64 {
+            eng.waiting.push_back(Request {
+                id,
+                arrival_us: 0,
+                class_id: 0,
+                session_id: 0,
+                tokens: Arc::from(vec![1u32; 32].into_boxed_slice()),
+                output_len: 4,
+                block_hashes: Arc::from(vec![id + 1].into_boxed_slice()),
+            });
+        }
+        eng.store
+            .insert(&[99], Tensor::Plane(Vec::new()), Tensor::Plane(Vec::new()));
+        assert!(eng.store.indexed_blocks() > 0);
+        let out = eng.crash();
+        let mut ids: Vec<u64> = out.iter().map(|r| r.id).collect();
+        ids.sort();
+        assert_eq!(ids, vec![0, 1, 2], "crash must hand back every request");
+        assert!(!eng.has_work());
+        assert_eq!(eng.store.indexed_blocks(), 0, "prefix store survives a crash");
     }
 
     /// The engine derives the same budget from the model config that the

@@ -2,11 +2,14 @@
 //! every figure bench runs on this), the R-router [`concurrent`] harness
 //! scoring batched decisions in parallel from the sharded index, the
 //! [`overload`] admission-control subsystem the DES consults under
-//! open-system load, and the live threaded cluster (wall-clock time +
-//! real PJRT transformer compute — the end-to-end validation path).
+//! open-system load, the [`lifecycle`] fault-injection layer
+//! (crash/drain/recover/scale events, requeue recovery, reactive
+//! autoscaling), and the live threaded cluster (wall-clock time + real
+//! PJRT transformer compute — the end-to-end validation path).
 
 mod concurrent;
 mod des;
+pub mod lifecycle;
 pub mod live;
 pub mod overload;
 
@@ -15,6 +18,10 @@ pub use des::{
     build_scaled_open, build_scaled_sessions, build_scaled_trace, cluster_config,
     profile_capacity_rps, run, run_des, run_experiment, run_session_des, ClusterConfig, Release,
     RunSpec, Source,
+};
+pub use lifecycle::{
+    Autoscaler, FaultCounters, FaultEvent, FaultPlan, FleetObs, PlannedFault,
+    QueueDepthAutoscaler, ScaleAction, StochasticFaults,
 };
 pub use overload::{
     all_admission_names, build_admission, default_admission_param, AdmissionPolicy, AdmitAll,

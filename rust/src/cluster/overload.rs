@@ -91,7 +91,15 @@ impl AdmissionPolicy for QueueDepthShed {
     }
 
     fn admit(&mut self, ctx: &RouteCtx) -> bool {
-        let min_depth = (0..ctx.n()).map(|i| ctx.inds[i].bs()).min().unwrap_or(0);
+        // Only routable instances can take the request — a crashed or
+        // draining replica's (empty) queue must not make the cluster look
+        // uncongested. With no routable instance at all the request is
+        // admitted and parked by the DES until one recovers.
+        let min_depth = (0..ctx.n())
+            .filter(|&i| ctx.inds[i].routable)
+            .map(|i| ctx.inds[i].bs())
+            .min()
+            .unwrap_or(0);
         self.peak_min_depth = self.peak_min_depth.max(min_depth);
         min_depth < self.max_depth
     }
@@ -121,7 +129,12 @@ impl TtftShed {
     }
 
     fn estimate_us(&self, ctx: &RouteCtx) -> f64 {
-        let best = (0..ctx.n()).map(|i| ctx.p_token(i)).min().unwrap_or(0);
+        // Best *routable* placement only — see QueueDepthShed::admit.
+        let best = (0..ctx.n())
+            .filter(|&i| ctx.inds[i].routable)
+            .map(|i| ctx.p_token(i))
+            .min()
+            .unwrap_or(0);
         self.step_fixed_us + best as f64 * self.prefill_us_per_token
     }
 }
@@ -243,6 +256,7 @@ mod tests {
                 total_context_tokens: 0,
                 kv_used_blocks: 0,
                 kv_capacity_blocks: 1000,
+                routable: true,
             })
             .collect()
     }
@@ -270,6 +284,24 @@ mod tests {
         let mut lavish = TtftShed::new(1e9, &profile);
         assert!(lavish.admit(&ctx(&loaded, 0)));
         assert!(lavish.peak_est_us > 0.0);
+    }
+
+    #[test]
+    fn shed_policies_ignore_unroutable_instances() {
+        // The idle instance is dead: its empty queue must not admit.
+        let mut i = inds(&[9, 9, 0]);
+        i[2].routable = false;
+        let mut q = QueueDepthShed::new(4);
+        assert!(!q.admit(&ctx(&i, 0)), "dead idle replica cannot admit");
+        let profile = ModelProfile::moe_30b();
+        let mut t = TtftShed::new(profile.step_fixed_us + 1.0, &profile);
+        assert!(!t.admit(&ctx(&i, 0)), "dead replica cannot price TTFT");
+        // No routable instance at all: admit and let the DES park it.
+        let mut all_dead = inds(&[9, 9]);
+        all_dead[0].routable = false;
+        all_dead[1].routable = false;
+        assert!(q.admit(&ctx(&all_dead, 0)));
+        assert!(t.admit(&ctx(&all_dead, 0)));
     }
 
     #[test]

@@ -216,6 +216,41 @@ impl Instance {
         }
     }
 
+    // --- lifecycle (crash / drain) ----------------------------------
+
+    /// Drain the *waiting* queue for requeue elsewhere (the drain path:
+    /// the instance stops accepting work but finishes its running
+    /// batch). Running sequences, their KV$ pins, and the cache itself
+    /// are untouched; the queued-prefill account is settled per seq.
+    /// Returns the extracted requests in queue order.
+    pub fn extract_waiting(&mut self) -> Vec<Request> {
+        let mut out = Vec::with_capacity(self.waiting.len());
+        while let Some(seq) = self.waiting.pop_front() {
+            self.queued_prefill_tokens -= seq.prefill_remaining();
+            out.push(seq.req);
+        }
+        debug_assert_eq!(self.snapshot(), self.recompute_snapshot());
+        out
+    }
+
+    /// Crash semantics: every queued AND in-flight request is extracted
+    /// for requeue (prefill progress and generated tokens are lost —
+    /// the requeued request restarts from scratch, keeping its original
+    /// arrival time so TTFT stays honest), indicator counters reset,
+    /// and the KV$ is wiped to a fresh tree (a dead replica's cache
+    /// does not survive). Returns waiting-then-running requests.
+    pub fn extract_all(&mut self) -> Vec<Request> {
+        let mut out = self.extract_waiting();
+        for seq in self.running.drain(..) {
+            out.push(seq.req);
+        }
+        self.queued_prefill_tokens = 0;
+        self.total_context_tokens = 0;
+        self.kv = RadixTree::new(self.cfg.kv_capacity_blocks);
+        debug_assert_eq!(self.snapshot(), self.recompute_snapshot());
+        out
+    }
+
     fn admit(&mut self, now_us: u64) {
         while self.running.len() < self.cfg.max_batch {
             let Some(mut seq) = self.waiting.pop_front() else {
@@ -624,6 +659,59 @@ mod tests {
             assert_eq!(end.total_context_tokens, 0);
             assert_eq!((end.r_bs, end.q_bs), (0, 0));
         }
+    }
+
+    #[test]
+    fn extract_waiting_settles_accounts_and_keeps_batch() {
+        let mut cfg = EngineConfig::default();
+        cfg.max_batch = 1;
+        let mut inst = Instance::new(0, cfg);
+        let (r1, f1) = mk_req(1, 600, 5, 0);
+        let (r2, f2) = mk_req(2, 400, 5, 1);
+        let (r3, f3) = mk_req(3, 300, 5, 2);
+        inst.enqueue(r1, f1, 0);
+        inst.enqueue(r2, f2, 0);
+        inst.enqueue(r3, f3, 0);
+        let out = inst.step(0).unwrap(); // admits r1 only (max_batch 1)
+        let evicted = inst.extract_waiting();
+        assert_eq!(evicted.iter().map(|r| r.id).collect::<Vec<_>>(), [2, 3]);
+        let snap = inst.snapshot();
+        assert_eq!((snap.r_bs, snap.q_bs), (1, 0), "running batch survives");
+        // Only r1's own remaining debt stays on the account.
+        assert_eq!(snap.queued_prefill_tokens, 600 - 256);
+        assert!(snap.kv_used_blocks > 0, "drain keeps the cache");
+        inst.recycle_events(out.events);
+        let (recs, _) = drain(&mut inst, out.duration_us);
+        assert_eq!(recs.len(), 1, "running seq finishes normally");
+    }
+
+    #[test]
+    fn extract_all_requeues_everything_and_wipes_state() {
+        let mut cfg = EngineConfig::default();
+        cfg.max_batch = 2;
+        let mut inst = Instance::new(0, cfg);
+        for i in 0..4 {
+            let (r, f) = mk_req(i, 300, 20, i as u32);
+            inst.enqueue(r, f, 0);
+        }
+        let out = inst.step(0).unwrap(); // 2 running, 2 waiting
+        assert_eq!((out.snapshot.r_bs, out.snapshot.q_bs), (2, 2));
+        let evicted = inst.extract_all();
+        let mut ids: Vec<u64> = evicted.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, [0, 1, 2, 3], "nothing is silently dropped");
+        let snap = inst.snapshot();
+        assert_eq!((snap.r_bs, snap.q_bs), (0, 0));
+        assert_eq!(snap.queued_prefill_tokens, 0);
+        assert_eq!(snap.total_context_tokens, 0);
+        assert_eq!(snap.kv_used_blocks, 0, "crash loses the replica cache");
+        assert!(!inst.has_work());
+        assert!(inst.step(1).is_none());
+        // The instance is reusable after recovery.
+        let (r, f) = mk_req(9, 256, 3, 0);
+        inst.enqueue(r, f, 10);
+        let (recs, _) = drain(&mut inst, 10);
+        assert_eq!(recs.len(), 1);
     }
 
     #[test]

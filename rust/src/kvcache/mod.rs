@@ -117,6 +117,20 @@ impl RouterKvView {
         self.index.insert(inst, full_hashes, now_us);
     }
 
+    /// Lifecycle: wipe a dead instance's presence everywhere (crash /
+    /// drain-complete). Equivalent to replacing that slot of a
+    /// `MirrorKvView` with a fresh `RadixTree` — pinned by the purge
+    /// churn test below.
+    pub fn purge_instance(&mut self, inst: usize) {
+        self.index.purge_instance(inst);
+    }
+
+    /// Lifecycle: change the fleet width (scale-up past the current slot
+    /// count). Shrinking requires the dropped tail slots purged first.
+    pub fn resize_instances(&mut self, new_n: usize) {
+        self.index.resize_instances(new_n);
+    }
+
     /// The underlying sharded index (stats, snapshots, invariant checks).
     pub fn index(&self) -> &ShardedRadixIndex {
         &self.index
@@ -164,6 +178,25 @@ impl MirrorKvView {
 
     pub fn view(&self, inst: usize) -> &RadixTree {
         &self.views[inst]
+    }
+
+    /// Reference-model instance removal: the slot simply becomes a fresh
+    /// tree (per-instance state is physically separate here, which is
+    /// exactly why this is the specification the shared/sharded purge is
+    /// proven against).
+    pub fn purge_instance(&mut self, inst: usize) {
+        let cap = self.views[inst].capacity_blocks();
+        self.views[inst] = RadixTree::new(cap);
+    }
+
+    /// Reference-model fleet resize: truncate or extend the mirror list
+    /// (new slots start empty, dropped tail slots must be purgeable by
+    /// construction — they are independent trees).
+    pub fn resize_instances(&mut self, new_n: usize, capacity_blocks: usize) {
+        self.views.truncate(new_n);
+        while self.views.len() < new_n {
+            self.views.push(RadixTree::new(capacity_blocks));
+        }
     }
 }
 
@@ -268,6 +301,116 @@ mod tests {
                         "final state diverged (mirrors): seed {seed} cap {cap} base {base}"
                     );
                 }
+                sharded.index().check_invariants().unwrap();
+            }
+        }
+    }
+
+    /// Satellite regression for instance removal: purging an instance
+    /// from the sharded router view (and from the monolithic index) must
+    /// be indistinguishable from replacing that slot of the mirror model
+    /// with a fresh tree — including under CONTINUED churn afterwards, so
+    /// stale occupancy (slots, free-lists, heaps) leaking across a purge
+    /// shows up as a hit-vector divergence or an invariant failure.
+    #[test]
+    fn purge_instance_equals_fresh_mirror_slot_under_churn() {
+        for seed in 0..4u64 {
+            for cap in [0usize, 8, 32] {
+                let n = 5usize;
+                let mut sharded = RouterKvView::new(n, cap);
+                let mut mono = SharedRadixIndex::new(n, cap);
+                let mut mirror = MirrorKvView::new(n, cap);
+                let mut mono_hits = Vec::new();
+                let mut mono_mask = InstanceMask::default();
+                let mut rng = Rng::new(seed.wrapping_mul(0xfa17) ^ 0x9e37_79b9);
+                for step in 0..1500u64 {
+                    let base = rng.gen_range(0, 6);
+                    let len = rng.gen_range(1, 10) as usize;
+                    let chain: Vec<u64> = (0..len as u64).map(|i| base * 1000 + i).collect();
+                    match rng.gen_range(0, 5) {
+                        0 | 1 => {
+                            let i = rng.gen_range(0, n as u64) as usize;
+                            sharded.on_route(i, &chain, step);
+                            mono.insert(i, &chain, step);
+                            mirror.on_route(i, &chain, step);
+                        }
+                        2 => {
+                            // The fault path under test: kill an instance
+                            // in all three models.
+                            let i = rng.gen_range(0, n as u64) as usize;
+                            sharded.purge_instance(i);
+                            mono.purge_instance(i);
+                            mirror.purge_instance(i);
+                        }
+                        _ => {
+                            let hits = sharded.match_all(&chain, step);
+                            mono.match_into(&chain, &mut mono_hits, &mut mono_mask);
+                            assert_eq!(
+                                hits, mono_hits,
+                                "purge diverged (monolithic): seed {seed} cap {cap} step {step}"
+                            );
+                            assert_eq!(
+                                hits,
+                                mirror.match_all(&chain, step),
+                                "purge diverged (mirrors): seed {seed} cap {cap} step {step}"
+                            );
+                        }
+                    }
+                    if step % 251 == 0 {
+                        sharded.index().check_invariants().unwrap();
+                        mono.check_invariants().unwrap();
+                    }
+                }
+                sharded.index().check_invariants().unwrap();
+                mono.check_invariants().unwrap();
+            }
+        }
+    }
+
+    /// Fleet-width equivalence: growing all three models mid-churn (and
+    /// shrinking back after purging the tail) keeps hit vectors aligned.
+    #[test]
+    fn resize_equals_mirror_resize_under_churn() {
+        let cap = 16usize;
+        let mut n = 3usize;
+        let mut sharded = RouterKvView::new(n, cap);
+        let mut mirror = MirrorKvView::new(n, cap);
+        let mut rng = Rng::new(0x5ca1_e5);
+        for step in 0..1200u64 {
+            let base = rng.gen_range(0, 6);
+            let len = rng.gen_range(1, 8) as usize;
+            let chain: Vec<u64> = (0..len as u64).map(|i| base * 1000 + i).collect();
+            match step {
+                300 => {
+                    // Scale up past the old width.
+                    n = 70;
+                    sharded.resize_instances(n);
+                    mirror.resize_instances(n, cap);
+                }
+                900 => {
+                    // Scale back down: purge the tail slots first.
+                    for i in 4..n {
+                        sharded.purge_instance(i);
+                        mirror.purge_instance(i);
+                    }
+                    n = 4;
+                    sharded.resize_instances(n);
+                    mirror.resize_instances(n, cap);
+                }
+                _ => {}
+            }
+            if rng.gen_bool(0.5) {
+                let i = rng.gen_range(0, n as u64) as usize;
+                sharded.on_route(i, &chain, step);
+                mirror.on_route(i, &chain, step);
+            } else {
+                assert_eq!(
+                    sharded.match_all(&chain, step),
+                    mirror.match_all(&chain, step),
+                    "resize diverged at step {step}"
+                );
+            }
+            if step % 199 == 0 {
                 sharded.index().check_invariants().unwrap();
             }
         }

@@ -620,6 +620,85 @@ impl ShardedRadixIndex {
         idx
     }
 
+    /// Remove every trace of `inst_id` from the index: presence bits in
+    /// every shard, LRU metadata, slot allocator, heap and free-lists —
+    /// the instance slot comes back as if freshly constructed, so a later
+    /// scale-up reusing it inherits no stale occupancy. Per-shard GC
+    /// follows the same closure argument as
+    /// `SharedRadixIndex::purge_instance`: a node the purge empties had
+    /// mask == {inst_id}, so its whole subtree is in this instance's meta
+    /// set and dies in the same pass. Bumps the global version and each
+    /// touched shard's epoch (readers pinned before a crash must notice).
+    pub fn purge_instance(&mut self, inst_id: usize) {
+        self.version += 1;
+        let state = std::mem::replace(&mut self.inst[inst_id], InstanceState::new());
+        // meta is a hash map: sort the packed refs so mask clearing, GC
+        // free-list order and epoch bumps are deterministic.
+        let mut touched: Vec<u64> = state.meta.keys().copied().collect();
+        touched.sort_unstable();
+        let mut last_sid = usize::MAX;
+        for &nref in &touched {
+            let (sid, node) = unpack(nref);
+            self.mask_clear(sid, node, inst_id);
+            if sid != last_sid {
+                self.shards[sid].epoch += 1;
+                last_sid = sid;
+            }
+        }
+        for &nref in &touched {
+            let (sid, node) = unpack(nref);
+            if self.shards[sid].nodes[node].alive && self.mask_is_empty(sid, node) {
+                let parent = self.shards[sid].nodes[node].parent;
+                let hash = self.shards[sid].nodes[node].hash;
+                self.shards[sid].nodes[parent].children.remove(&hash);
+                self.shards[sid].nodes[node].alive = false;
+                // Remaining child links point at nodes this same pass
+                // kills (their masks were ⊆ ours); clear them so the
+                // recycled node satisfies `alloc_node`'s empty-children
+                // contract regardless of processing order.
+                self.shards[sid].nodes[node].children.clear();
+                self.shards[sid].free_nodes.push(node);
+            }
+        }
+    }
+
+    /// Change the fleet width (the mask-width refactor behind
+    /// scale-up/scale-down). Growth appends fresh, empty instance slots
+    /// and widens every shard's mask rows when a new 64-bit word is
+    /// needed; shrink requires the dropped tail slots to have been purged
+    /// first (asserted). Bumps the version — a resize is a write.
+    pub fn resize_instances(&mut self, new_n: usize) {
+        assert!(new_n > 0, "fleet cannot resize to zero instances");
+        if new_n < self.n_instances {
+            for i in new_n..self.n_instances {
+                assert_eq!(
+                    self.inst[i].used, 0,
+                    "resize_instances shrink requires purged tail slot {i}"
+                );
+            }
+        }
+        self.version += 1;
+        let new_words = new_n.div_ceil(64);
+        if new_words != self.words {
+            let copy = self.words.min(new_words);
+            for shard in &mut self.shards {
+                let n_nodes = shard.nodes.len();
+                let mut masks = vec![0u64; n_nodes * new_words];
+                for node in 0..n_nodes {
+                    masks[node * new_words..node * new_words + copy].copy_from_slice(
+                        &shard.masks[node * self.words..node * self.words + copy],
+                    );
+                }
+                shard.masks = masks;
+                shard.epoch += 1;
+            }
+            self.words = new_words;
+            self.live = vec![0; new_words];
+        }
+        self.inst.resize_with(new_n, InstanceState::new);
+        self.n_instances = new_n;
+    }
+
     /// Lifetime block hit rate across all instances.
     pub fn hit_rate(&self) -> f64 {
         if self.total_lookup_blocks == 0 {
@@ -967,6 +1046,70 @@ mod tests {
         ix.insert(0, &[1, 2], 0);
         hits(&mut ix, &[1, 2]); // inst0: 2/2, inst1: 0/2
         assert!((ix.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn purge_instance_clears_every_shard_and_bumps_epochs() {
+        let mut ix = ShardedRadixIndex::with_shards(2, 0, 4);
+        // Chains with different first hashes spread over shards.
+        ix.insert(0, &[1, 2, 3], 0);
+        ix.insert(0, &[7, 8], 1);
+        ix.insert(0, &[9], 2);
+        ix.insert(1, &[1, 2], 3);
+        let v0 = ix.version();
+        let snap_sum = ix.epoch_sum();
+        ix.purge_instance(0);
+        assert_eq!(ix.used_blocks(0), 0);
+        assert!(ix.version() > v0, "purge is a write");
+        assert!(ix.epoch_sum() > snap_sum, "touched shards must publish");
+        // Instance 1's presence survives; instance 0 is gone everywhere.
+        assert_eq!(hits(&mut ix, &[1, 2, 3]), vec![0, 2]);
+        assert_eq!(hits(&mut ix, &[7, 8]), vec![0, 0]);
+        assert_eq!(hits(&mut ix, &[9]), vec![0, 0]);
+        assert_eq!(ix.alive_nodes(), 2);
+        ix.check_invariants().unwrap();
+        // The purged slot restarts pristine.
+        ix.insert(0, &[50, 51], 10);
+        assert_eq!(ix.used_blocks(0), 2);
+        assert_eq!(hits(&mut ix, &[50, 51]), vec![2, 0]);
+        ix.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn purge_then_refill_never_inherits_stale_occupancy() {
+        let mut ix = ShardedRadixIndex::with_shards(1, 2, 4);
+        ix.insert(0, &[1, 2], 0);
+        ix.purge_instance(0);
+        assert_eq!(ix.insert(0, &[5, 6], 10), 2, "stale occupancy leaked");
+        assert_eq!(ix.used_blocks(0), 2);
+        ix.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn resize_grows_and_shrinks_across_word_boundaries() {
+        let mut ix = ShardedRadixIndex::with_shards(2, 0, 4);
+        ix.insert(0, &[1, 2], 0);
+        ix.resize_instances(70);
+        ix.insert(69, &[1, 2, 3], 1);
+        let mut h = Vec::new();
+        let mut m = InstanceMask::default();
+        ix.match_into(&[1, 2, 3], &mut h, &mut m);
+        assert_eq!(h.len(), 70);
+        assert_eq!(h[0], 2);
+        assert_eq!(h[69], 3);
+        ix.check_invariants().unwrap();
+        ix.purge_instance(69);
+        ix.resize_instances(2);
+        assert_eq!(hits(&mut ix, &[1, 2]), vec![2, 0]);
+        ix.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "purged tail")]
+    fn resize_shrink_rejects_occupied_tail() {
+        let mut ix = ShardedRadixIndex::new(3, 0);
+        ix.insert(2, &[1], 0);
+        ix.resize_instances(2);
     }
 
     /// Direct sharded-vs-monolithic pin at the index layer: identical

@@ -481,6 +481,73 @@ impl SharedRadixIndex {
         idx
     }
 
+    /// Remove every trace of `inst_id` from the index: presence bits, LRU
+    /// metadata, slot allocator, heap and free-lists — the instance slot
+    /// comes back as if freshly constructed, so a later scale-up reusing
+    /// it inherits no stale occupancy. Shared nodes no remaining instance
+    /// holds are GC'd: by the presence-closure invariant a node the purge
+    /// empties had mask == {inst_id}, so its children's masks were
+    /// subsets of {inst_id} — also emptied, and also in this instance's
+    /// meta set — meaning the single pass below unlinks the whole dead
+    /// subtree with no dangling child links. Purged blocks are not
+    /// counted as evictions (the instance died; it didn't run its LRU).
+    pub fn purge_instance(&mut self, inst_id: usize) {
+        let state = std::mem::replace(&mut self.inst[inst_id], InstanceState::new());
+        // meta is a hash map: sort the touched set so free-list order
+        // (and therefore later node reuse) is deterministic.
+        let mut touched: Vec<usize> = state.meta.keys().copied().collect();
+        touched.sort_unstable();
+        for &node in &touched {
+            self.mask_clear(node, inst_id);
+        }
+        for &node in &touched {
+            if self.nodes[node].alive && self.mask_is_empty(node) {
+                let parent = self.nodes[node].parent;
+                let hash = self.nodes[node].hash;
+                self.nodes[parent].children.remove(&hash);
+                self.nodes[node].alive = false;
+                // Any remaining child links point at nodes this same pass
+                // kills (their masks were ⊆ ours); clear them so the
+                // recycled node satisfies `alloc_node`'s empty-children
+                // contract regardless of processing order.
+                self.nodes[node].children.clear();
+                self.free_nodes.push(node);
+            }
+        }
+    }
+
+    /// Change the fleet width (the mask-width refactor behind
+    /// scale-up/scale-down). Growth appends fresh, empty instance slots
+    /// and widens every node's mask row when a new 64-bit word is needed;
+    /// shrink requires the dropped tail slots to have been purged first
+    /// (asserted) and narrows the rows back.
+    pub fn resize_instances(&mut self, new_n: usize) {
+        assert!(new_n > 0, "fleet cannot resize to zero instances");
+        if new_n < self.n_instances {
+            for i in new_n..self.n_instances {
+                assert_eq!(
+                    self.inst[i].used, 0,
+                    "resize_instances shrink requires purged tail slot {i}"
+                );
+            }
+        }
+        let new_words = (new_n + 63) / 64;
+        if new_words != self.words {
+            let n_nodes = self.nodes.len();
+            let copy = self.words.min(new_words);
+            let mut masks = vec![0u64; n_nodes * new_words];
+            for node in 0..n_nodes {
+                masks[node * new_words..node * new_words + copy]
+                    .copy_from_slice(&self.masks[node * self.words..node * self.words + copy]);
+            }
+            self.masks = masks;
+            self.words = new_words;
+            self.live = vec![0; new_words];
+        }
+        self.inst.resize_with(new_n, InstanceState::new);
+        self.n_instances = new_n;
+    }
+
     /// Lifetime block hit rate across all instances.
     pub fn hit_rate(&self) -> f64 {
         if self.total_lookup_blocks == 0 {
@@ -718,6 +785,81 @@ mod tests {
             ix.used_blocks(0)
         );
         ix.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn purge_instance_clears_occupancy_and_gcs() {
+        let mut ix = SharedRadixIndex::new(2, 4);
+        ix.insert(0, &[1, 2, 3], 0);
+        ix.insert(1, &[1, 2], 5);
+        ix.purge_instance(0);
+        assert_eq!(ix.used_blocks(0), 0);
+        // Instance 1's presence survives; the [3] tail (held only by the
+        // purged instance) is gone from the shared structure.
+        assert_eq!(hits(&mut ix, &[1, 2, 3]), vec![0, 2]);
+        ix.check_invariants().unwrap();
+        // The purged slot restarts pristine: inserting again must not
+        // inherit stale occupancy (used, slots, heap, free-list).
+        ix.insert(0, &[7, 8], 10);
+        assert_eq!(ix.used_blocks(0), 2);
+        assert_eq!(hits(&mut ix, &[7, 8]), vec![2, 0]);
+        ix.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn purge_then_refill_never_inherits_stale_occupancy() {
+        // Fill instance 0 to capacity, purge, refill: leaked `used` or a
+        // stale eviction heap would evict prematurely or starve.
+        let mut ix = SharedRadixIndex::new(1, 2);
+        ix.insert(0, &[1, 2], 0);
+        ix.purge_instance(0);
+        assert_eq!(ix.insert(0, &[5, 6], 10), 2, "stale occupancy leaked");
+        assert_eq!(ix.used_blocks(0), 2);
+        ix.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn purge_gcs_whole_dead_subtree() {
+        // A purged instance holding a deep exclusive chain must release
+        // every node; the arena reuses them for the next insert.
+        let mut ix = SharedRadixIndex::new(2, 0);
+        ix.insert(0, &[1, 2, 3, 4, 5], 0);
+        let before = ix.nodes.len();
+        ix.purge_instance(0);
+        ix.check_invariants().unwrap();
+        assert_eq!(ix.free_nodes.len(), 5);
+        ix.insert(1, &[7, 8, 9, 10, 11], 1);
+        assert_eq!(ix.nodes.len(), before, "GC'd nodes were not reused");
+        ix.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn resize_grows_and_shrinks_across_word_boundaries() {
+        let mut ix = SharedRadixIndex::new(2, 0);
+        ix.insert(0, &[1, 2], 0);
+        ix.resize_instances(70);
+        ix.insert(69, &[1, 2, 3], 1);
+        let mut h = Vec::new();
+        let mut m = InstanceMask::default();
+        ix.match_into(&[1, 2, 3], &mut h, &mut m);
+        assert_eq!(h.len(), 70);
+        assert_eq!(h[0], 2);
+        assert_eq!(h[69], 3);
+        assert_eq!(m.iter_ones().collect::<Vec<_>>(), vec![0, 69]);
+        ix.check_invariants().unwrap();
+        // Shrink back below the word boundary: purge the tail first.
+        ix.purge_instance(69);
+        ix.resize_instances(2);
+        assert_eq!(hits(&mut ix, &[1, 2]), vec![2, 0]);
+        ix.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "purged tail")]
+    fn resize_shrink_rejects_occupied_tail() {
+        let mut ix = SharedRadixIndex::new(3, 0);
+        ix.insert(2, &[1], 0);
+        ix.resize_instances(2);
     }
 
     #[test]

@@ -4,6 +4,8 @@
 //!   replay       run one policy on one workload through the DES cluster
 //!   sessions     closed-loop session replay (reactive turn release)
 //!   open         open-arrival replay: rate programs, admission, goodput
+//!   faults       replay under a lifecycle fault plan (crash/drain/scale)
+//!                with optional reactive autoscaling
 //!   compare      run every policy on one workload, print the table
 //!   serve        live cluster: real PJRT transformer, wall-clock latencies
 //!   gen-trace    write a synthetic workload as jsonl
@@ -294,6 +296,124 @@ fn cmd_sessions(flags: &HashMap<String, String>) {
     }
 }
 
+/// Parse `--plan "crash@12:0,recover@30:0,drain@20:2:5,scaleup@40,scaleup@55:warm"`
+/// — comma-separated events at virtual *seconds* — plus an optional
+/// stochastic layer (`--crash-rate R --mttr S [--horizon S --fault-seed N]`).
+fn plan_from_flags(
+    flags: &HashMap<String, String>,
+    n_instances: usize,
+) -> lmetric::cluster::FaultPlan {
+    use lmetric::cluster::{FaultPlan, StochasticFaults};
+    fn bail(ev: &str) -> ! {
+        eprintln!(
+            "bad plan event {ev:?} (try: crash@T:I recover@T:I drain@T:I:DEADLINE scaleup@T[:warm])"
+        );
+        std::process::exit(2);
+    }
+    let mut plan = FaultPlan::new();
+    if let Some(spec) = flags.get("plan") {
+        for ev in spec.split(',').filter(|s| !s.is_empty()) {
+            let Some((kind, rest)) = ev.split_once('@') else { bail(ev) };
+            let parts: Vec<&str> = rest.split(':').collect();
+            let Ok(at_s) = parts[0].parse::<f64>() else { bail(ev) };
+            let at_us = (at_s * 1e6) as u64;
+            let inst = |k: usize| -> usize {
+                parts.get(k).and_then(|v| v.parse().ok()).unwrap_or_else(|| bail(ev))
+            };
+            plan = match kind {
+                "crash" => plan.crash_at(at_us, inst(1)),
+                "recover" => plan.recover_at(at_us, inst(1)),
+                "drain" => {
+                    let Some(Ok(dl_s)) = parts.get(2).map(|v| v.parse::<f64>()) else { bail(ev) };
+                    plan.drain_at(at_us, inst(1), (dl_s * 1e6) as u64)
+                }
+                "scaleup" => plan.scale_up_at(at_us, parts.get(1) != Some(&"warm")),
+                _ => bail(ev),
+            };
+        }
+    }
+    if let Some(rate) = flags.get("crash-rate") {
+        let spec = StochasticFaults {
+            seed: flags.get("fault-seed").map(|v| v.parse().expect("--fault-seed")).unwrap_or(7),
+            crash_rate_per_s: rate.parse().expect("--crash-rate"),
+            mttr_s: flags.get("mttr").map(|v| v.parse().expect("--mttr")).unwrap_or(10.0),
+            horizon_s: flags.get("horizon").map(|v| v.parse().expect("--horizon")).unwrap_or(120.0),
+        };
+        plan = plan.stochastic(&spec, n_instances);
+    }
+    plan
+}
+
+/// Replay under lifecycle faults: `replay` plus a fault plan and an
+/// optional reactive autoscaler closing the loop.
+fn cmd_faults(flags: &HashMap<String, String>) {
+    use lmetric::cluster::QueueDepthAutoscaler;
+
+    let exp = exp_from_flags(flags);
+    let profile = ModelProfile::by_name(&exp.profile).expect("profile");
+    let mut pol =
+        policy::build(&exp.policy, exp.param, &profile, exp.chunk_budget).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        });
+    let trace = cluster::build_scaled_trace(&exp);
+    let cfg = cluster::cluster_config(&exp);
+    let plan = plan_from_flags(flags, exp.instances);
+    println!(
+        "replaying {} ({} reqs) on {}×{} under {} with {} lifecycle events ...",
+        exp.workload,
+        exp.requests,
+        exp.instances,
+        exp.profile,
+        pol.name(),
+        plan.len()
+    );
+    let mut spec = RunSpec::open_loop(&cfg, &trace).with_faults(plan);
+    if let Some(adm) = admission_from_flags(flags, &profile) {
+        spec = spec.with_admission(adm);
+    }
+    if let Some(slo) = slo_from_flags(flags) {
+        spec = spec.with_slo(slo);
+    }
+    if let Some(a) = flags.get("autoscale") {
+        let p: Vec<f64> = a
+            .split(':')
+            .map(|v| v.parse().expect("--autoscale UP:DOWN:MIN:MAX"))
+            .collect();
+        if p.len() != 4 {
+            eprintln!("--autoscale wants UP:DOWN:MIN:MAX (e.g. 8:2:2:16)");
+            std::process::exit(2);
+        }
+        let tick_s: f64 = flags.get("tick").map(|v| v.parse().expect("--tick")).unwrap_or(1.0);
+        let scaler = QueueDepthAutoscaler::new(p[0], p[1], p[2] as usize, p[3] as usize);
+        spec = spec.with_autoscaler(Box::new(scaler), (tick_s * 1e6) as u64);
+    }
+    let m = cluster::run(spec, pol.as_mut());
+    let row = ResultRow::from_metrics(&pol.name(), &m)
+        .with("throughput_tok_s", m.output_throughput())
+        .with("imbalance_s", m.imbalance_score());
+    println!("{}", render_table(&format!("{} / faults", exp.workload), &[row]));
+    let f = m.fault;
+    println!(
+        "lifecycle: {} crashes, {} drains ({} deadline violations), {} recovers, {} scale-ups",
+        f.crashes, f.drains, f.drain_violations, f.recovers, f.scale_ups
+    );
+    println!(
+        "displaced: {} killed, {} requeued, {} re-admitted, {} lost",
+        f.killed, f.requeued, f.re_admitted, f.lost
+    );
+    if !m.cold_hit_samples.is_empty() {
+        let mean = m.cold_hit_samples.iter().sum::<f64>() / m.cold_hit_samples.len() as f64;
+        println!(
+            "cold-start: {} samples, mean hit {:.1}% (run steady-state {:.1}%)",
+            m.cold_hit_samples.len(),
+            mean * 100.0,
+            m.mean_hit_ratio() * 100.0
+        );
+    }
+    print_overload_summary(&m);
+}
+
 fn cmd_compare(flags: &HashMap<String, String>) {
     let exp = exp_from_flags(flags);
     let profile = ModelProfile::by_name(&exp.profile).expect("profile");
@@ -490,6 +610,9 @@ commands:
   sessions     --kind chat|api|coding [--policy P --instances N --requests N --rate-scale F --seed S]
   open         --shape constant|ramp|diurnal|flash [--duration S --rate-scale F --instances N
                --requests N --seed S --policy P --admission A --admission-param F --slo-ttft S --slo-tpot S]
+  faults       --workload W --policy P [--plan \"crash@T:I,recover@T:I,drain@T:I:D,scaleup@T[:warm]\"]
+               [--crash-rate R --mttr S --horizon S --fault-seed N] [--autoscale UP:DOWN:MIN:MAX --tick S]
+               [replay flags: --instances --requests --rate-scale --admission --slo-ttft ...]
   compare      --workload W [--instances N --requests N ...]
   serve        [--instances N --requests N --policy P --time-scale F]
   gen-trace    --workload W --requests N --out FILE
@@ -513,6 +636,7 @@ fn main() {
         "replay" => cmd_replay(&flags),
         "sessions" => cmd_sessions(&flags),
         "open" => cmd_open(&flags),
+        "faults" => cmd_faults(&flags),
         "compare" => cmd_compare(&flags),
         "serve" => cmd_serve(&flags),
         "gen-trace" => cmd_gen_trace(&flags),

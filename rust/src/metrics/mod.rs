@@ -86,6 +86,13 @@ pub struct RunMetrics {
     pub guard: GuardCounters,
     /// Admission-control counters (all-zero when no admission policy ran).
     pub overload: OverloadCounters,
+    /// Fleet-lifecycle counters (all-zero when the run had no
+    /// [`FaultPlan`](crate::cluster::FaultPlan) and no autoscaler).
+    pub fault: crate::cluster::FaultCounters,
+    /// Prompt KV$ hit ratios of the first completions on an instance
+    /// after it (re)joined cold — the cache-warmup hit curve a scale-up
+    /// pays (sampled while `fault.cold_samples` counts them).
+    pub cold_hit_samples: Vec<f64>,
     /// Snapshot age per decision, in factory commits the router's pinned
     /// view was stale by when the decision merged (0 for every decision in
     /// a serial run; bounded by the staleness budget in
@@ -118,6 +125,8 @@ impl RunMetrics {
             admit_radix_walks: 0,
             guard: GuardCounters::default(),
             overload: OverloadCounters::default(),
+            fault: crate::cluster::FaultCounters::default(),
+            cold_hit_samples: Vec::new(),
             snapshot_age: Vec::new(),
             route_wall_s: 0.0,
             routers: 1,

@@ -51,7 +51,11 @@ impl Policy for StickySession {
     fn route(&mut self, ctx: &RouteCtx) -> RouteDecision {
         if ctx.session_id != 0 {
             if let Some(&i) = self.pins.get(&ctx.session_id) {
-                if i < ctx.n() {
+                // A pin only holds while its instance is alive and
+                // accepting work; a crashed or draining home falls
+                // through to fresh placement and re-pins below, instead
+                // of routing the session into the void.
+                if i < ctx.n() && ctx.inds[i].routable {
                     return RouteDecision::to(i);
                 }
             }
@@ -160,7 +164,13 @@ impl Policy for SessionBalance {
                     // Lazy per-pin TTL check: a returning-but-expired
                     // session re-places below instead of resuming.
                     stale = true;
-                } else if p.inst < ctx.n() {
+                } else if p.inst >= ctx.n() || !ctx.inds[p.inst].routable {
+                    // Pinned home crashed, is draining, or left the
+                    // fleet: drain its account like an expired pin and
+                    // re-place — never route a live session into the
+                    // void.
+                    stale = true;
+                } else {
                     // Returning turn: refresh the footprint (the prompt
                     // now contains the whole history) and the liveness.
                     self.load[p.inst] += ctx.input_len.saturating_sub(p.ctx_tokens) as u64;
@@ -274,5 +284,54 @@ mod tests {
         // The expired session's next turn re-places instead of pinning.
         let d = p.route(&ctx(2, 1, 6_000, 2_000_001)).instance;
         assert_eq!(d, 1, "expired session re-balances onto the lighter instance");
+    }
+
+    #[test]
+    fn sticky_re_pins_when_home_instance_dies() {
+        let mut p = StickySession::new();
+        let home = p.route(&ctx(3, 7, 100, 0)).instance;
+        assert_eq!(home, 0);
+        // Home crashes: the next turn must NOT route into the void.
+        let mut dead = ctx(3, 7, 200, 10);
+        dead.inds[home].routable = false;
+        dead.inds[2].r_bs = 1; // instance 1 is the least-loaded live one
+        let new_home = p.route(&dead).instance;
+        assert_eq!(new_home, 1, "fresh placement skips the dead instance");
+        // The fallback re-pinned: once the old home recovers, the
+        // session stays where it re-homed (its KV now lives there).
+        let back = ctx(3, 7, 300, 20);
+        assert_eq!(p.route(&back).instance, new_home);
+    }
+
+    #[test]
+    fn sticky_survives_drain_then_repin_is_stable() {
+        let mut p = StickySession::new();
+        let home = p.route(&ctx(2, 5, 100, 0)).instance;
+        let mut draining = ctx(2, 5, 150, 5);
+        draining.inds[home].routable = false;
+        let re = p.route(&draining).instance;
+        assert_ne!(re, home);
+        // Repeat turns while draining keep landing on the re-pin.
+        let mut again = ctx(2, 5, 160, 6);
+        again.inds[home].routable = false;
+        assert_eq!(p.route(&again).instance, re);
+    }
+
+    #[test]
+    fn smetric_drains_dead_pin_account_and_re_places() {
+        let mut p = SessionBalance::new();
+        assert_eq!(p.route(&ctx(2, 1, 8_000, 0)).instance, 0);
+        assert_eq!(p.live_load(0), 8_000);
+        // Instance 0 crashes; the returning turn re-places on a live
+        // instance AND the dead pin's 8 000-token account drains — a
+        // leaked account would poison placement long after recovery.
+        let mut dead = ctx(2, 1, 9_000, 10);
+        dead.inds[0].routable = false;
+        assert_eq!(p.route(&dead).instance, 1);
+        assert_eq!(p.live_load(0), 0, "dead pin's account drained");
+        assert_eq!(p.live_load(1), 9_000, "re-pinned with fresh footprint");
+        // After recovery the session stays at its new home.
+        assert_eq!(p.route(&ctx(2, 1, 10_000, 20)).instance, 1);
+        assert_eq!(p.live_load(1), 10_000);
     }
 }

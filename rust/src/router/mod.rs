@@ -27,7 +27,7 @@ use crate::kvcache::RouterKvView;
 
 /// Effective per-instance indicator values at decision time:
 /// last snapshot + optimistic deltas since.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy)]
 pub struct Indicators {
     pub r_bs: usize,
     pub q_bs: usize,
@@ -35,6 +35,28 @@ pub struct Indicators {
     pub total_context_tokens: usize,
     pub kv_used_blocks: usize,
     pub kv_capacity_blocks: usize,
+    /// Whether the instance accepts new work. Crashed and draining
+    /// instances (see [`crate::cluster::lifecycle`]) are kept in the
+    /// indicator vector so indices stay stable, but `select_min` /
+    /// `select_max` and the session policies skip them.
+    pub routable: bool,
+}
+
+impl Default for Indicators {
+    fn default() -> Self {
+        Indicators {
+            r_bs: 0,
+            q_bs: 0,
+            queued_prefill_tokens: 0,
+            total_context_tokens: 0,
+            kv_used_blocks: 0,
+            kv_capacity_blocks: 0,
+            // A default-constructed instance is a healthy one: every
+            // pre-lifecycle call site (tests, offline tools) builds
+            // contexts this way and must keep routing to all instances.
+            routable: true,
+        }
+    }
 }
 
 impl Indicators {
@@ -288,10 +310,19 @@ fn spread_ratio(min: f64, max: f64) -> f64 {
 /// `instances.select_min(score)` from the paper's programming model:
 /// minimal score wins; ties break on smaller BS, then lower index
 /// (deterministic, so every figure is reproducible).
+///
+/// Unroutable instances (crashed / draining; see
+/// [`crate::cluster::lifecycle`]) are skipped — when every instance is
+/// routable the scan is bit-for-bit the pre-lifecycle one. If *no*
+/// instance is routable the fallback is index 0; harnesses must not
+/// dispatch in that state (the DES requeues instead).
 pub fn select_min(ctx: &RouteCtx, score: impl Fn(usize) -> f64) -> usize {
     let mut best = 0usize;
     let mut best_key = (f64::INFINITY, usize::MAX);
     for i in 0..ctx.n() {
+        if !ctx.inds[i].routable {
+            continue;
+        }
         let key = (score(i), ctx.inds[i].bs());
         if key.0 < best_key.0 || (key.0 == best_key.0 && key.1 < best_key.1) {
             best_key = key;
@@ -315,6 +346,10 @@ pub struct IndicatorFactory {
     opt_q_bs: Vec<usize>,
     opt_prefill_tokens: Vec<usize>,
     opt_ctx_tokens: Vec<usize>,
+    /// Router-side routability flags (lifecycle layer): `false` for
+    /// crashed or draining instances. Copied into every context's
+    /// [`Indicators`] so policies see liveness with zero extra plumbing.
+    routable: Vec<bool>,
     pub kv: RouterKvView,
     /// Reusable decision context — the allocation-free hot path.
     scratch: RouteCtx,
@@ -333,6 +368,7 @@ impl IndicatorFactory {
             opt_q_bs: vec![0; n_instances],
             opt_prefill_tokens: vec![0; n_instances],
             opt_ctx_tokens: vec![0; n_instances],
+            routable: vec![true; n_instances],
             kv: RouterKvView::new(n_instances, kv_capacity_blocks),
             scratch: RouteCtx {
                 now_us: 0,
@@ -395,6 +431,7 @@ impl IndicatorFactory {
                 total_context_tokens: s.total_context_tokens + self.opt_ctx_tokens[i],
                 kv_used_blocks: s.kv_used_blocks,
                 kv_capacity_blocks: s.kv_capacity_blocks,
+                routable: self.routable[i],
             });
         }
         ctx.now_us = now_us;
@@ -460,6 +497,50 @@ impl IndicatorFactory {
     /// shared KV$ index (the next conversation turn will hit it).
     pub fn on_completion(&mut self, inst: usize, full_hashes: &[u64], now_us: u64) {
         self.kv.on_response(inst, full_hashes, now_us);
+        self.epoch += 1;
+    }
+
+    // --- lifecycle layer (crash / drain / recover / scale) --------------
+
+    /// Whether the router may dispatch new work to `inst`.
+    pub fn is_routable(&self, inst: usize) -> bool {
+        self.routable[inst]
+    }
+
+    /// Flip the routability of `inst` (crash/drain clears it, recover and
+    /// scale-up set it). A mutation like any other: bumps the epoch so
+    /// concurrent readers observe the liveness change as staleness.
+    pub fn set_routable(&mut self, inst: usize, routable: bool) {
+        self.routable[inst] = routable;
+        self.epoch += 1;
+    }
+
+    /// Forget everything the router believes about a crashed instance:
+    /// its presence bits and occupancy in the shared KV$ index, its last
+    /// snapshot, and any optimistic deltas. The instance's *slot*
+    /// survives (indices stay stable for recovery); routability is
+    /// governed separately by [`Self::set_routable`].
+    pub fn purge_instance(&mut self, inst: usize) {
+        self.kv.purge_instance(inst);
+        self.snapshots[inst] = InstanceSnapshot::default();
+        self.opt_q_bs[inst] = 0;
+        self.opt_prefill_tokens[inst] = 0;
+        self.opt_ctx_tokens[inst] = 0;
+        self.epoch += 1;
+    }
+
+    /// Grow (or shrink) the indicator fleet to `new_n` instances. New
+    /// slots start routable with empty snapshots and a cold KV$ presence;
+    /// shrinking requires the dropped tail to have been purged first
+    /// (asserted by the KV index). Scratch buffers self-size on the next
+    /// `route_ctx` call.
+    pub fn resize_instances(&mut self, new_n: usize) {
+        self.kv.resize_instances(new_n);
+        self.snapshots.resize_with(new_n, InstanceSnapshot::default);
+        self.opt_q_bs.resize(new_n, 0);
+        self.opt_prefill_tokens.resize(new_n, 0);
+        self.opt_ctx_tokens.resize(new_n, 0);
+        self.routable.resize(new_n, true);
         self.epoch += 1;
     }
 }
@@ -694,5 +775,91 @@ mod tests {
         ctx.hit_tokens = vec![100, 0];
         ctx.recompute_matched_mask();
         assert!(ctx.matched_mask.get(0) && !ctx.matched_mask.get(1));
+    }
+
+    #[test]
+    fn select_min_skips_unroutable_instances() {
+        let mut inds = vec![Indicators::default(); 3];
+        inds[0].routable = false; // best score, but down
+        let ctx = RouteCtx::new(0, 0, 0, 0, vec![0, 0, 0], inds);
+        assert_eq!(select_min(&ctx, |i| [0.0, 2.0, 1.0][i]), 2);
+        assert_eq!(select_max(&ctx, |i| [9.0, 2.0, 1.0][i]), 1);
+        // No routable instance at all: documented fallback to index 0
+        // (the DES never dispatches in this state — it requeues).
+        let all_down = RouteCtx::new(
+            0,
+            0,
+            0,
+            0,
+            vec![0, 0],
+            vec![
+                Indicators {
+                    routable: false,
+                    ..Default::default()
+                };
+                2
+            ],
+        );
+        assert_eq!(select_min(&all_down, |i| i as f64), 0);
+    }
+
+    #[test]
+    fn set_routable_flows_into_ctx_and_bumps_epoch() {
+        let mut f = IndicatorFactory::new(3, 0);
+        assert!(f.is_routable(1));
+        let e0 = f.epoch();
+        f.set_routable(1, false);
+        assert_eq!(f.epoch(), e0 + 1);
+        assert!(!f.is_routable(1));
+        let req = mk_req(11, 160);
+        let ctx = f.route_ctx(&req, 0);
+        assert!(ctx.inds[0].routable && !ctx.inds[1].routable && ctx.inds[2].routable);
+        f.set_routable(1, true);
+        let ctx2 = f.route_ctx(&req, 1);
+        assert!(ctx2.inds[1].routable);
+    }
+
+    #[test]
+    fn purge_instance_forgets_snapshot_deltas_and_kv_presence() {
+        let mut f = IndicatorFactory::new(2, 0);
+        let req = mk_req(12, 320);
+        let mut snap = crate::engine::InstanceSnapshot::default();
+        snap.r_bs = 3;
+        snap.queued_prefill_tokens = 777;
+        f.on_snapshot(0, snap);
+        f.route_ctx(&req, 0);
+        f.on_route(0, &req, 0);
+        let e0 = f.epoch();
+        f.purge_instance(0);
+        assert_eq!(f.epoch(), e0 + 1);
+        let ctx = f.route_ctx(&req, 1);
+        assert_eq!(ctx.hit_tokens[0], 0, "presence bits gone");
+        assert_eq!(ctx.inds[0].bs(), 0, "snapshot and deltas gone");
+        assert_eq!(ctx.inds[0].queued_prefill_tokens, 0);
+        assert!(ctx.inds[0].routable, "purge does not govern routability");
+    }
+
+    #[test]
+    fn resize_instances_grows_fleet_with_cold_routable_slots() {
+        let mut f = IndicatorFactory::new(2, 0);
+        let req = mk_req(13, 160);
+        f.route_ctx(&req, 0);
+        f.on_route(1, &req, 0);
+        f.resize_instances(4);
+        assert_eq!(f.n_instances(), 4);
+        let ctx = f.route_ctx(&req, 1);
+        assert_eq!(ctx.inds.len(), 4);
+        assert_eq!(ctx.hit_tokens.len(), 4);
+        assert_eq!(ctx.hit_tokens[1], 160, "existing presence survives");
+        assert_eq!(ctx.hit_tokens[2], 0);
+        assert!(ctx.inds[2].routable && ctx.inds[3].routable);
+        // Shrink back after purging the dropped tail.
+        f.purge_instance(2);
+        f.purge_instance(3);
+        f.resize_instances(2);
+        assert_eq!(f.n_instances(), 2);
+        let ctx2 = f.route_ctx(&req, 2);
+        assert_eq!(ctx2.inds.len(), 2);
+        assert_eq!(ctx2.hit_tokens[1], 160);
     }
 }

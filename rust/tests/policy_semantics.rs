@@ -18,6 +18,7 @@ fn ind(r_bs: usize, q_bs: usize, queued_tok: usize, ctx_tok: usize) -> Indicator
         total_context_tokens: ctx_tok,
         kv_used_blocks: 0,
         kv_capacity_blocks: 0,
+        routable: true,
     }
 }
 

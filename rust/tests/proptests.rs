@@ -299,6 +299,7 @@ fn random_ctx(rng: &mut Rng, n: usize) -> RouteCtx {
             total_context_tokens: rng.gen_range(0, 200_000) as usize,
             kv_used_blocks: 0,
             kv_capacity_blocks: 0,
+            routable: true,
         })
         .collect();
     RouteCtx::new(

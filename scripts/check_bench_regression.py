@@ -44,6 +44,15 @@ baselines without the section stay report-only). The shed/orphan
 counters are report-only: orphaned_turns == 0 is asserted inside the
 bench itself.
 
+The `fleet` section (lifecycle fault injection) gates
+goodput_autoscaler — the overload trace replayed under the reactive
+queue-depth autoscaler, a virtual-time ratio deterministic run to run —
+with the usual tolerate-then-gate shape. goodput_static,
+recovery_ttft_p99 (TTFT tail of requests arriving during the crash
+outage window), requeue_rate and scale_ups are report-only: requeue
+conservation (zero lost requests) is asserted inside the bench binary
+itself.
+
 The `router_scale` section (sharded concurrent data plane) gates the
 single-router decision rate — the read path every run exercises — with
 the same tolerate-then-gate shape: legacy baselines without the section,
@@ -109,6 +118,11 @@ FIELDS = [
     ("router_scale", "decisions_per_s_r2", False),
     ("router_scale", "decisions_per_s_r4", False),
     ("router_scale", "snapshot_age_p99", False),
+    ("fleet", "goodput_autoscaler", True),
+    ("fleet", "goodput_static", False),
+    ("fleet", "recovery_ttft_p99", False),
+    ("fleet", "requeue_rate", False),
+    ("fleet", "scale_ups", False),
 ]
 
 
