@@ -3,8 +3,8 @@
 scripts/check_bench_regression.py is the CI step that (once the baseline
 is seeded) fails the build on a >20% req/s or steps/s regression. Its
 tolerate-then-gate behaviour for newer JSON sections (guard, sessions,
-overload, router_scale, fleet) must hold across baseline generations, so
-this suite runs the
+overload, router_scale, fleet, engine_queue) must hold across baseline
+generations, so this suite runs the
 actual script as a subprocess through the four paths that matter:
 
 1. unseeded baseline               -> report-only, exit 0
@@ -47,6 +47,7 @@ def bench_doc(
     with_overload=True,
     with_router_scale=True,
     with_fleet=True,
+    with_engine_queue=True,
 ):
     doc = {
         "bench": "router_throughput",
@@ -120,6 +121,14 @@ def bench_doc(
             "goodput_autoscaler": 0.85,
             "scale_ups": 3,
         }
+    if with_engine_queue:
+        doc["engine_queue"] = {
+            "ttft_p99_fcfs": 2.4,
+            "ttft_p99_srpt": 1.5,
+            "ttft_p99_ltr": 1.7,
+            "ttft_p99_ratio_srpt": 1.6,
+            "promotions_ltr": 120,
+        }
     return doc
 
 
@@ -130,14 +139,15 @@ def test_path1_unseeded_baseline_is_report_only(tmp_path):
 
 
 def test_path2_seeded_legacy_baseline_tolerates_missing_sessions(tmp_path):
-    # Baseline predates the sessions, overload, router_scale AND fleet
-    # sections entirely; current carries all four.
+    # Baseline predates the sessions, overload, router_scale, fleet AND
+    # engine_queue sections entirely; current carries all five.
     legacy = bench_doc(
         seeded=True,
         with_sessions=False,
         with_overload=False,
         with_router_scale=False,
         with_fleet=False,
+        with_engine_queue=False,
     )
     proc = run_gate(tmp_path, bench_doc(req_per_s=990.0), legacy)
     assert proc.returncode == 0, proc.stdout + proc.stderr
@@ -145,6 +155,7 @@ def test_path2_seeded_legacy_baseline_tolerates_missing_sessions(tmp_path):
     assert "overload.goodput_at_capacity: baseline unseeded" in proc.stdout
     assert "router_scale.decisions_per_s_r1: baseline unseeded" in proc.stdout
     assert "fleet.goodput_autoscaler: baseline unseeded" in proc.stdout
+    assert "engine_queue.ttft_p99_ratio_srpt: baseline unseeded" in proc.stdout
     assert "OK: within regression budget" in proc.stdout
 
 
@@ -206,6 +217,21 @@ def test_fleet_goodput_collapse_trips_gate(tmp_path):
     assert proc.returncode == 1, proc.stdout + proc.stderr
     assert "fleet.goodput_autoscaler" in proc.stdout
     assert "recovery_ttft_p99 regressed" not in proc.stdout
+
+
+def test_engine_queue_regression_trips_gate(tmp_path):
+    # Throughput fine, but srpt lost its TTFT-tail win over fcfs (the
+    # predictor or the ordering regressed, pushing the ratio toward 1):
+    # the gate must catch it. The raw p99s and the ltr promotion count
+    # are report-only and may swing without tripping.
+    current = bench_doc(req_per_s=1000.0)
+    current["engine_queue"]["ttft_p99_ratio_srpt"] = 1.0
+    current["engine_queue"]["ttft_p99_ltr"] = 9.0  # report-only
+    current["engine_queue"]["promotions_ltr"] = 0  # report-only
+    proc = run_gate(tmp_path, current, bench_doc(seeded=True))
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert "engine_queue.ttft_p99_ratio_srpt" in proc.stdout
+    assert "ttft_p99_ltr regressed" not in proc.stdout
 
 
 def test_quick_mode_mismatch_skips_gate(tmp_path):

@@ -1,0 +1,101 @@
+"""Out-of-band mirror of the engine queue's decode-length predictor
+(rust/src/engine/queue.rs::predict_decode).
+
+This container has no Rust toolchain (same pattern as
+test_shard_assignment.py), so this suite re-implements, line for line,
+the salted splitmix64 predictor the srpt/ltr queue policies score with,
+and pins it two ways:
+
+* fixed reference vectors, byte-identical to the
+  `predictor_matches_pinned_vectors` unit test in queue.rs — both sides
+  were generated from the same reference program, so a silent edit to
+  either implementation breaks one of the two suites;
+* fuzzed contracts: determinism, positivity, the [0.5, 1.5) noise band
+  around the true output length, and salt sensitivity (the predictor
+  must not collapse to the raw splitmix finalizer the KV shard hash
+  uses — the two live in different domains).
+
+The predictor is the one piece of the queue layer whose exact arithmetic
+crosses the Rust/live boundary (`cluster/live.rs` stamps the identical
+value), so drift here silently changes every srpt/ltr admission order.
+"""
+
+from hypothesis import given, settings, strategies as st
+
+MASK = (1 << 64) - 1
+
+# b"QPRED137" — the queue predictor's salt, verbatim from queue.rs.
+PREDICT_SALT = 0x5150524544313337
+
+
+def mix(h, x):
+    """Line-for-line port of engine/queue.rs::mix (the splitmix64
+    finalizer over `h ^ x * golden`, masked to 64 bits)."""
+    z = (h ^ ((x * 0x9E3779B97F4A7C15) & MASK)) & MASK
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return (z ^ (z >> 31)) & MASK
+
+
+def predict_decode(req_id, output_len):
+    """Line-for-line port of engine/queue.rs::predict_decode: the true
+    output length scaled by a per-request factor in [0.5, 1.5) drawn
+    from the top 16 bits of the salted mix. Rust's `as u64` cast
+    truncates toward zero; `int()` matches for the non-negative range."""
+    z = mix(PREDICT_SALT, req_id)
+    factor = 0.5 + (z >> 48) / 65536.0
+    return max(int(max(output_len, 1) * factor), 1)
+
+
+# --- pinned reference vectors (== queue.rs::predictor_matches_pinned_vectors)
+
+VECTORS = [
+    (0, 1, 1),
+    (1, 64, 92),
+    (2, 256, 193),
+    (7, 100, 87),
+    (42, 32, 34),
+    (123456789, 1000, 1139),
+    (1 << 63, 500, 618),
+    ((1 << 64) - 1, 77, 67),
+]
+
+
+def test_pinned_vectors_match_rust():
+    for req_id, output_len, expected in VECTORS:
+        got = predict_decode(req_id, output_len)
+        assert got == expected, (req_id, output_len, got, expected)
+
+
+# --- fuzzed contracts ---------------------------------------------------
+
+
+@settings(max_examples=200, deadline=None)
+@given(req_id=st.integers(0, MASK), output_len=st.integers(0, (1 << 32) - 1))
+def test_deterministic_positive_and_banded(req_id, output_len):
+    p = predict_decode(req_id, output_len)
+    assert p == predict_decode(req_id, output_len)
+    assert p >= 1
+    # The [0.5, 1.5) noise band around the (floored-at-1) true length.
+    true_len = max(output_len, 1)
+    assert 0.5 * true_len - 1 <= p < 1.5 * true_len + 1
+
+
+@settings(max_examples=100, deadline=None)
+@given(req_id=st.integers(0, MASK))
+def test_salt_separates_domains(req_id):
+    # The predictor's stream must not be the unsalted finalizer stream
+    # (mix(0, x) is what a naive port would produce); pinning the salted
+    # values above would miss a salt dropped on BOTH sides only if the
+    # two streams coincided — they must not.
+    assert mix(PREDICT_SALT, req_id) != mix(0, req_id)
+
+
+def test_factor_band_is_exhaustive_at_the_extremes():
+    # factor = 0.5 + top16/65536: the cast truncates, so output_len 1
+    # always predicts 1 (factor < 2 => int(1 * factor) <= 1, floored to
+    # >= 1) — the minimum-work request can never be predicted heavier
+    # than a 2-token one.
+    for req_id in range(256):
+        assert predict_decode(req_id, 1) == 1
+        assert predict_decode(req_id, 2) >= 1

@@ -16,8 +16,8 @@
 //!
 //! B. **Scale-up warm-up.** The same open-loop trace scaled up mid-run
 //!    with a cold KV cache vs a warm-seeded one (the DES seeds the new
-//!    instance from the router's ring of recently completed prefix
-//!    chains). The cold-start hit curve — hit ratio of the first
+//!    instance from the router's frequency-ranked warm set of completed
+//!    prefix chains). The cold-start hit curve — hit ratio of the first
 //!    completions on the new instance — is the record: warm joins skip
 //!    the cache-miss trough.
 //!

@@ -8,8 +8,11 @@
 //! at R ∈ {1, 2, 4} routers (plus its budget-0 byte-identity check and
 //! budget-64 snapshot-age tail), the fleet-lifecycle stage (a crash /
 //! recover replay's requeue conservation and recovery tail, and the
-//! overload trace on a static fleet vs the reactive autoscaler), and
-//! the parallel sweep harness's speedup over serial execution.
+//! overload trace on a static fleet vs the reactive autoscaler), the
+//! engine-queue stage (the coder trace at 0.95x capacity under fcfs /
+//! srpt / ltr within-instance scheduling — the TTFT-tail record the
+//! fcfs/srpt ratio gate holds), and the parallel sweep harness's
+//! speedup over serial execution.
 //!
 //! The JSON this bench writes is the perf-trajectory record: CI compares
 //! `des_end_to_end.req_per_s` (and, once seeded, the scale-smoke req/s
@@ -437,6 +440,52 @@ fn main() {
         fl_auto.fault.drains
     );
 
+    // Engine queue: within-instance scheduling under the lmetric router
+    // on the long-tail coder trace at 0.95x capacity with small batches
+    // (the deep-queue regime). Records the TTFT tail under fcfs / srpt /
+    // ltr; the gated field is the p99 ratio fcfs/srpt — a virtual-time
+    // quantity, deterministic run to run, that drops if the predictor or
+    // the srpt ordering regresses. fig81_engine_queue is the full-size
+    // router x engine-queue grid with the mean-TTFT asserts.
+    println!("\n--- engine queue (within-instance scheduling) ---");
+    let mut qexp = lmetric::config::ExperimentConfig::default();
+    qexp.instances = 4;
+    qexp.requests = scaled(1200);
+    qexp.workload = "coder".into();
+    qexp.rate_scale = 0.95;
+    qexp.max_batch = 8;
+    let qtrace = lmetric::cluster::build_scaled_trace(&qexp);
+    let qcfg = lmetric::cluster::cluster_config(&qexp);
+    let qnames: [&str; 3] = ["fcfs", "srpt", "ltr"];
+    let q_runs = parallel_sweep(&qnames, |_, qp| {
+        let mut p = policy::build_default("lmetric", &profile, 256).unwrap();
+        lmetric::cluster::run(
+            lmetric::cluster::RunSpec::open_loop(&qcfg, &qtrace).with_queue_policy(qp),
+            p.as_mut(),
+        )
+    });
+    for (qp, qm) in qnames.iter().zip(&q_runs) {
+        assert_eq!(qm.records.len(), qtrace.requests.len(), "{qp}: reordering lost requests");
+        assert_eq!(qm.total_stalled_steps(), 0, "{qp}: stalled steps");
+        let samples: u64 = qm.queue.iter().map(|q| q.wait_samples).sum();
+        assert_eq!(
+            samples,
+            qtrace.requests.len() as u64,
+            "{qp}: every admission wait-sampled exactly once"
+        );
+    }
+    let q_p99: Vec<f64> = q_runs.iter().map(|qm| qm.ttft_summary().p99).collect();
+    let q_ratio_srpt = q_p99[0] / q_p99[1].max(1e-9);
+    println!(
+        "coder 0.95x under lmetric: TTFT p99 fcfs {:.4}s srpt {:.4}s ltr {:.4}s \
+         (fcfs/srpt {:.3}); ltr promotions {}",
+        q_p99[0],
+        q_p99[1],
+        q_p99[2],
+        q_ratio_srpt,
+        q_runs[2].total_promotions()
+    );
+
     // Machine-readable output: CI uploads this as the perf-trajectory
     // record and gates on it (BENCH_router_throughput.json is the
     // committed baseline; override the output path with
@@ -555,6 +604,19 @@ fn main() {
                 ("goodput_static", Json::Num(goodput_static)),
                 ("goodput_autoscaler", Json::Num(goodput_auto)),
                 ("scale_ups", Json::Num(fl_auto.fault.scale_ups as f64)),
+            ]),
+        ),
+        (
+            "engine_queue",
+            Json::obj(vec![
+                ("ttft_p99_fcfs", Json::Num(q_p99[0])),
+                ("ttft_p99_srpt", Json::Num(q_p99[1])),
+                ("ttft_p99_ltr", Json::Num(q_p99[2])),
+                ("ttft_p99_ratio_srpt", Json::Num(q_ratio_srpt)),
+                (
+                    "promotions_ltr",
+                    Json::Num(q_runs[2].total_promotions() as f64),
+                ),
             ]),
         ),
         (

@@ -26,7 +26,7 @@ use super::lifecycle::{Autoscaler, FaultEvent, FaultPlan, FleetObs, PlannedFault
 use super::overload::AdmissionPolicy;
 use crate::config::ExperimentConfig;
 use crate::engine::{EngineConfig, EngineEvent, Instance, ModelProfile, StepOutcome};
-use crate::metrics::{RunMetrics, SloSpec};
+use crate::metrics::{QueueCounters, RunMetrics, SloSpec};
 use crate::router::{IndicatorFactory, Policy};
 use crate::trace::{
     generate, generate_open, generate_sessions, OpenSpec, SessionSpec, SessionTrace, Trace,
@@ -112,6 +112,11 @@ pub struct RunSpec<'a> {
     /// time. Non-`'static` for the same lend-and-inspect reason as
     /// `admission`.
     pub autoscaler: Option<(Box<dyn Autoscaler + 'a>, u64)>,
+    /// Within-instance queue-policy override (`engine::queue` name). When
+    /// set, every instance is built with this ordering instead of the
+    /// cluster config's; `None` leaves the config untouched, so existing
+    /// specs replay byte-identically.
+    pub queue_policy: Option<String>,
 }
 
 impl<'a> RunSpec<'a> {
@@ -125,6 +130,7 @@ impl<'a> RunSpec<'a> {
             slo: None,
             faults: FaultPlan::new(),
             autoscaler: None,
+            queue_policy: None,
         }
     }
 
@@ -139,6 +145,7 @@ impl<'a> RunSpec<'a> {
             slo: None,
             faults: FaultPlan::new(),
             autoscaler: None,
+            queue_policy: None,
         }
     }
 
@@ -174,6 +181,15 @@ impl<'a> RunSpec<'a> {
         self.autoscaler = Some((autoscaler, interval_us));
         self
     }
+
+    /// Override the within-instance queue ordering for this run
+    /// (`engine::queue` name: fcfs / srpt / ltr). Unknown names panic at
+    /// instance construction — validate early with
+    /// [`crate::engine::queue::build`] where the name is user input.
+    pub fn with_queue_policy(mut self, name: &str) -> RunSpec<'a> {
+        self.queue_policy = Some(name.to_string());
+        self
+    }
 }
 
 /// Run a [`RunSpec`] under `policy` — the single entry point the CLI,
@@ -191,7 +207,20 @@ pub fn run(spec: RunSpec<'_>, policy: &mut dyn Policy) -> RunMetrics {
         slo,
         faults,
         mut autoscaler,
+        queue_policy,
     } = spec;
+    // A queue-policy override rebuilds the cluster config once up front;
+    // without one the borrowed config is used as-is (no clone, no drift).
+    let owned_cluster: ClusterConfig;
+    let cluster = match queue_policy {
+        Some(name) => {
+            let mut c = cluster.clone();
+            c.engine.queue_policy = name;
+            owned_cluster = c;
+            &owned_cluster
+        }
+        None => cluster,
+    };
     let adm = admission.as_deref_mut();
     let schedule = faults.schedule();
     let auto = autoscaler
@@ -288,8 +317,82 @@ fn session_schedule(
 /// recovery dominate [`RunMetrics::cold_hit_samples`].
 const COLD_HIT_WINDOW: u32 = 32;
 
-/// Recently completed prefix chains retained for warm scale-up seeding.
-const WARM_RING_CAP: usize = 64;
+/// Distinct prefix chains the warm set tracks frequencies for.
+const WARM_SET_CAP: usize = 512;
+
+/// Chains actually seeded into a warm scale-up (the hottest `K` of the
+/// tracked set — the same budget the old recency ring seeded).
+const WARM_SEED_TOP_K: usize = 64;
+
+/// Frequency-tracked completed prefix chains for warm scale-up seeding.
+///
+/// Replaces the pure-recency ring of the first lifecycle layer: under a
+/// Zipf-skewed workload the ring's last-64-completions view is mostly
+/// one-off tail chains, which evict each other without ever being hit
+/// again, while the head prefixes that *would* be hit are crowded out.
+/// Counting completions per chain — the hotspot detector's view of the
+/// working set — seeds the new instance with the chains most likely to
+/// be asked for next (asserted strictly better in
+/// `warm_set_seeds_beat_recency_ring_on_zipf`).
+struct WarmSet {
+    /// Keyed by the chain's last block hash (identifies the full chain).
+    map: HashMap<u64, WarmEntry>,
+}
+
+struct WarmEntry {
+    count: u64,
+    last_us: u64,
+    chain: Arc<[u64]>,
+}
+
+impl WarmSet {
+    fn new() -> WarmSet {
+        WarmSet { map: HashMap::new() }
+    }
+
+    /// Record one completion of `chain` at `now`. Capped: when full, the
+    /// coldest entry (fewest completions, oldest, then highest key) is
+    /// evicted to admit a first-time chain.
+    fn observe(&mut self, chain: Arc<[u64]>, now: u64) {
+        let Some(&key) = chain.last() else { return };
+        if let Some(e) = self.map.get_mut(&key) {
+            e.count += 1;
+            e.last_us = now;
+            return;
+        }
+        if self.map.len() >= WARM_SET_CAP {
+            let coldest = self
+                .map
+                .iter()
+                .map(|(&k, e)| (e.count, e.last_us, std::cmp::Reverse(k)))
+                .min()
+                .map(|(_, _, std::cmp::Reverse(k))| k);
+            if let Some(k) = coldest {
+                self.map.remove(&k);
+            }
+        }
+        self.map.insert(
+            key,
+            WarmEntry {
+                count: 1,
+                last_us: now,
+                chain,
+            },
+        );
+    }
+
+    /// The hottest `k` chains, by (count desc, recency desc, key asc) —
+    /// a total order, so seeding is deterministic.
+    fn top_chains(&self, k: usize) -> Vec<Arc<[u64]>> {
+        let mut ranked: Vec<(&u64, &WarmEntry)> = self.map.iter().collect();
+        ranked.sort_by_key(|(&key, e)| (Reverse(e.count), Reverse(e.last_us), key));
+        ranked
+            .into_iter()
+            .take(k)
+            .map(|(_, e)| e.chain.clone())
+            .collect()
+    }
+}
 
 /// The shared event core. `initial` lists the indices released at their
 /// pre-stamped `arrival_us` (in push order — ties break FIFO); `followups`
@@ -367,7 +470,7 @@ fn run_des_core(
     let mut step_end_at = vec![0u64; n];
     let mut cold_left = vec![0u32; n];
     let mut parked: Vec<usize> = Vec::new();
-    let mut warm_ring: std::collections::VecDeque<Arc<[u64]>> = std::collections::VecDeque::new();
+    let mut warm_set = WarmSet::new();
 
     // (Reverse(time), Reverse(tiebreak), event)
     let mut queue: BinaryHeap<(Reverse<u64>, Reverse<u64>, Event)> = BinaryHeap::new();
@@ -479,9 +582,9 @@ fn run_des_core(
             metrics.fault.scale_ups += 1;
             cold_left[i] = COLD_HIT_WINDOW;
             if !$cold {
-                for chain in warm_ring.iter() {
-                    instances[i].kv_mut().insert(chain, $now);
-                    factory.on_completion(i, chain, $now);
+                for chain in warm_set.top_chains(WARM_SEED_TOP_K) {
+                    instances[i].kv_mut().insert(&chain, $now);
+                    factory.on_completion(i, &chain, $now);
                 }
             }
             release_parked!($now);
@@ -635,10 +738,7 @@ fn run_des_core(
                             if let Some(fh) = full_hashes.remove(&record.id) {
                                 factory.on_completion(d, &fh, now);
                                 if lifecycle_active {
-                                    warm_ring.push_back(fh);
-                                    if warm_ring.len() > WARM_RING_CAP {
-                                        warm_ring.pop_front();
-                                    }
+                                    warm_set.observe(fh, now);
                                 }
                             }
                             // Defensive: FirstToken always precedes
@@ -817,6 +917,13 @@ fn run_des_core(
     for inst in &instances {
         metrics.total_steps += inst.steps;
         metrics.admit_radix_walks += inst.kv().admit_radix_walks;
+        metrics.queue.push(QueueCounters {
+            promotions: inst.queue_promotions(),
+            stalled_steps: inst.stalled_steps,
+            wait_us_sum: inst.queue_wait_us_sum,
+            wait_samples: inst.queue_wait_samples,
+            wait_us_max: inst.queue_wait_us_max,
+        });
     }
     metrics.guard = policy.guard_counters().unwrap_or_default().since(guard_start);
     metrics
@@ -997,6 +1104,7 @@ pub fn cluster_config(exp: &ExperimentConfig) -> ClusterConfig {
             chunk_budget: exp.chunk_budget,
             max_batch: exp.max_batch,
             kv_capacity_blocks: exp.kv_capacity_blocks,
+            queue_policy: exp.queue_policy.clone(),
         },
     )
 }
@@ -1301,5 +1409,121 @@ mod tests {
         assert_same_records(&a, &b);
         assert_eq!(a.fault, b.fault);
         assert_eq!(a.fault.lost, 0);
+    }
+
+    /// Draw a chain index from a Zipf-ish distribution over `n` chains
+    /// (weight 1/(rank+1)^1.2) — the skew the hotspot workloads model.
+    fn zipf_draw(rng: &mut crate::util::Rng, cdf: &[f64]) -> usize {
+        let u = rng.gen_f64(0.0, 1.0);
+        cdf.iter().position(|&c| u <= c).unwrap_or(cdf.len() - 1)
+    }
+
+    /// Satellite of the PR-8 lifecycle layer: warm scale-up seeding from
+    /// the frequency-tracked hot set must beat the old last-64-completions
+    /// recency ring on a Zipf-skewed completion stream — strictly more
+    /// prefix blocks hit by the traffic the new instance then serves.
+    #[test]
+    fn warm_set_seeds_beat_recency_ring_on_zipf() {
+        use crate::kvcache::RadixTree;
+        use std::collections::VecDeque;
+        let n_chains = 300usize;
+        let weights: Vec<f64> = (0..n_chains).map(|i| 1.0 / (i as f64 + 1.0).powf(1.2)).collect();
+        let total: f64 = weights.iter().sum();
+        let mut acc = 0.0;
+        let cdf: Vec<f64> = weights
+            .iter()
+            .map(|w| {
+                acc += w / total;
+                acc
+            })
+            .collect();
+        let chains: Vec<Arc<[u64]>> = (0..n_chains)
+            .map(|i| (0..4).map(|b| (i as u64 + 1) * 1000 + b).collect::<Vec<u64>>().into())
+            .collect();
+        let mut rng = crate::util::Rng::new(0xc01d);
+        let mut warm = WarmSet::new();
+        let mut ring: VecDeque<Arc<[u64]>> = VecDeque::new();
+        for t in 0..2000u64 {
+            let c = &chains[zipf_draw(&mut rng, &cdf)];
+            warm.observe(c.clone(), t);
+            ring.push_back(c.clone());
+            if ring.len() > WARM_SEED_TOP_K {
+                ring.pop_front();
+            }
+        }
+        // Seed one fresh KV$ from each strategy (same 64-chain budget) and
+        // replay held-out future draws from the same distribution.
+        let mut kv_warm = RadixTree::new(0);
+        let mut kv_ring = RadixTree::new(0);
+        for c in warm.top_chains(WARM_SEED_TOP_K) {
+            kv_warm.insert(&c, 0);
+        }
+        for c in &ring {
+            kv_ring.insert(c, 0);
+        }
+        let (mut hits_warm, mut hits_ring) = (0usize, 0usize);
+        for t in 0..500u64 {
+            let c = &chains[zipf_draw(&mut rng, &cdf)];
+            hits_warm += kv_warm.match_prefix(c, t, false);
+            hits_ring += kv_ring.match_prefix(c, t, false);
+        }
+        assert!(
+            hits_warm > hits_ring,
+            "hot-set seeding ({hits_warm} blocks hit) must beat the recency ring ({hits_ring})"
+        );
+    }
+
+    /// The warm set's cap holds, eviction prefers the coldest entry, and
+    /// the top-K ranking is by completion count.
+    #[test]
+    fn warm_set_caps_and_ranks_by_frequency() {
+        let mut w = WarmSet::new();
+        let chain = |i: u64| -> Arc<[u64]> { vec![i * 10 + 1, i * 10 + 2].into() };
+        // Entry 1 observed thrice, entry 2 twice, the rest once.
+        for i in 1..=(WARM_SET_CAP as u64) {
+            w.observe(chain(i), i);
+        }
+        w.observe(chain(1), 9_000);
+        w.observe(chain(1), 9_001);
+        w.observe(chain(2), 9_002);
+        assert_eq!(w.map.len(), WARM_SET_CAP);
+        // A new chain evicts the coldest (count-1) entry, not the hot ones.
+        w.observe(chain(WARM_SET_CAP as u64 + 1), 9_003);
+        assert_eq!(w.map.len(), WARM_SET_CAP);
+        assert!(w.map.contains_key(&12), "hottest entry evicted");
+        let top = w.top_chains(2);
+        assert_eq!(top[0].as_ref(), chain(1).as_ref());
+        assert_eq!(top[1].as_ref(), chain(2).as_ref());
+    }
+
+    /// Warm scale-up end-to-end: the seeded slot joins, conserves
+    /// requests, and its cold-start samples see a non-trivial hit curve
+    /// on a Zipf-skewed workload (the seeding visibly pre-warms).
+    #[test]
+    fn warm_scale_up_seeds_from_hot_set() {
+        let (mut exp, mut probe) = small_exp("lmetric");
+        exp.workload = "hotspot".to_string();
+        let trace = build_scaled_trace(&exp);
+        let cfg = cluster_config(&exp);
+        let dur = run_des(&cfg, &trace, probe.as_mut()).duration_us;
+        let run_with = |cold: bool| {
+            let plan = FaultPlan::new().scale_up_at(dur / 3, cold);
+            let (_, mut p) = small_exp("lmetric");
+            run(
+                RunSpec::open_loop(&cfg, &trace).with_faults(plan),
+                p.as_mut(),
+            )
+        };
+        let warm = run_with(false);
+        let cold = run_with(true);
+        assert_conserved(&warm, 300);
+        assert_eq!(warm.fault.scale_ups, 1);
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+        assert!(
+            mean(&warm.cold_hit_samples) >= mean(&cold.cold_hit_samples),
+            "warm seeding ({:?}) must not start colder than a cold join ({:?})",
+            mean(&warm.cold_hit_samples),
+            mean(&cold.cold_hit_samples)
+        );
     }
 }

@@ -16,6 +16,7 @@ use anyhow::{anyhow, Result};
 
 use super::lifecycle::{FaultEvent, FaultPlan};
 use crate::core::{Request, RequestRecord, BLOCK_TOKENS};
+use crate::engine::queue::{self, QueueEntry, QueuePolicy};
 use crate::engine::InstanceSnapshot;
 use crate::metrics::RunMetrics;
 use crate::router::{IndicatorFactory, Policy};
@@ -38,6 +39,10 @@ pub struct LiveClusterConfig {
     /// at `n_instances` threads. Plans must leave at least one routable
     /// instance or displaced requests can never complete.
     pub faults: FaultPlan,
+    /// Within-instance queue ordering (`engine::queue` name: fcfs /
+    /// srpt / ltr) — the same registry the DES engine uses, so a policy
+    /// validated there behaves identically on the live path.
+    pub queue_policy: String,
 }
 
 impl Default for LiveClusterConfig {
@@ -48,6 +53,7 @@ impl Default for LiveClusterConfig {
             prefix_store_entries: 64,
             time_scale: 1.0,
             faults: FaultPlan::new(),
+            queue_policy: "fcfs".to_string(),
         }
     }
 }
@@ -182,29 +188,48 @@ struct LiveSeq {
     first_token_us: Option<u64>,
 }
 
+/// A waiting request plus the ordering facts the queue policy scores —
+/// the live mirror of the DES engine's per-`Seq` queue fields.
+struct LiveQueued {
+    req: Request,
+    predicted_work: u64,
+    enqueued_progress: u64,
+    promote_level: u32,
+}
+
 /// One instance thread's engine.
 struct LiveEngine {
     rt: ModelRuntime,
     kv: Tensor,
     slots: Vec<Option<LiveSeq>>,
-    waiting: VecDeque<Request>,
+    waiting: VecDeque<LiveQueued>,
     store: PrefixStore,
+    /// Within-instance admission ordering (same registry as the DES).
+    queue: Box<dyn QueuePolicy>,
+    /// Monotone progress clock for starvation accounting: total tokens
+    /// this engine has processed (prefilled + decoded).
+    progress: u64,
+    entries_scratch: Vec<QueueEntry>,
 }
 
 impl LiveEngine {
-    fn new(rt: ModelRuntime, store_cap: usize) -> Self {
+    fn new(rt: ModelRuntime, store_cap: usize, queue_policy: &str) -> Self {
         let kv = rt.zero_kv();
         let slots = (0..rt.cfg.slots).map(|_| None).collect();
         // A stored plane indexes at most one block per BLOCK_TOKENS of
         // the model's max sequence — the per-instance block budget the
         // snapshot advertises to the router.
         let blocks_per_plane = rt.cfg.max_seq.div_ceil(BLOCK_TOKENS);
+        let queue = queue::build(queue_policy).unwrap_or_else(|e| panic!("{e}"));
         LiveEngine {
             rt,
             kv,
             slots,
             waiting: VecDeque::new(),
             store: PrefixStore::new(store_cap, blocks_per_plane),
+            queue,
+            progress: 0,
+            entries_scratch: Vec::new(),
         }
     }
 
@@ -212,9 +237,22 @@ impl LiveEngine {
         !self.waiting.is_empty() || self.slots.iter().any(|s| s.is_some())
     }
 
+    /// Queue a request with its policy-scoring facts stamped, exactly as
+    /// the DES engine's `enqueue` computes them.
+    fn enqueue(&mut self, req: Request) {
+        let predicted_work =
+            req.input_len() as u64 + queue::predict_decode(req.id, req.output_len);
+        self.waiting.push_back(LiveQueued {
+            req,
+            predicted_work,
+            enqueued_progress: self.progress,
+            promote_level: 0,
+        });
+    }
+
     /// Drain eviction: hand back everything not yet admitted to a slot.
     fn extract_waiting(&mut self) -> Vec<Request> {
-        self.waiting.drain(..).collect()
+        self.waiting.drain(..).map(|q| q.req).collect()
     }
 
     /// Crash: hand back ALL work (waiting + running) and wipe the KV
@@ -237,7 +275,7 @@ impl LiveEngine {
         InstanceSnapshot {
             r_bs: running.len(),
             q_bs: self.waiting.len(),
-            queued_prefill_tokens: self.waiting.iter().map(|r| r.input_len()).sum::<usize>()
+            queued_prefill_tokens: self.waiting.iter().map(|q| q.req.input_len()).sum::<usize>()
                 + running
                     .iter()
                     .map(|s| s.req.input_len().saturating_sub(s.pos))
@@ -259,9 +297,32 @@ impl LiveEngine {
 
     fn admit(&mut self) -> Result<()> {
         while let Some(free) = self.slots.iter().position(|s| s.is_none()) {
-            let Some(req) = self.waiting.pop_front() else {
+            if self.waiting.is_empty() {
                 break;
-            };
+            }
+            // Delegate the pick to the queue policy (fcfs selects index
+            // 0, preserving the old pop_front path bit-for-bit); write
+            // promotion levels back so LTR's credit persists across
+            // admission rounds.
+            self.entries_scratch.clear();
+            self.entries_scratch.extend(self.waiting.iter().map(|q| QueueEntry {
+                req_id: q.req.id,
+                predicted_work: q.predicted_work,
+                enqueued_progress: q.enqueued_progress,
+                promote_level: q.promote_level,
+            }));
+            let mut entries = std::mem::take(&mut self.entries_scratch);
+            let picked = self.queue.select(&mut entries, self.progress);
+            for (q, e) in self.waiting.iter_mut().zip(&entries) {
+                q.promote_level = e.promote_level;
+            }
+            self.entries_scratch = entries;
+            let Some(idx) = picked else { break };
+            let req = self
+                .waiting
+                .remove(idx)
+                .map(|q| q.req)
+                .expect("selected index in range");
             let mut pos = 0usize;
             let mut cached = 0usize;
             if let Some((len, planes)) = self.store.lookup(&req.block_hashes) {
@@ -318,6 +379,7 @@ impl LiveEngine {
             self.kv = kv_new;
             let seq = self.slots[si].as_mut().unwrap();
             seq.pos += chunk_len;
+            self.progress += chunk_len as u64;
             if seq.pos >= seq.req.input_len() {
                 // Prefill complete: first token now.
                 seq.last_token = ModelRuntime::argmax(&logits);
@@ -363,6 +425,7 @@ impl LiveEngine {
                 s.last_token = ModelRuntime::argmax(&logits[i * vocab..(i + 1) * vocab]);
                 s.generated += 1;
             }
+            self.progress += decoding.len() as u64;
         }
 
         // --- completions ------------------------------------------------
@@ -413,7 +476,7 @@ fn instance_thread(
             return;
         }
     };
-    let mut eng = LiveEngine::new(rt, cfg.prefix_store_entries);
+    let mut eng = LiveEngine::new(rt, cfg.prefix_store_entries, &cfg.queue_policy);
     let now_us = move || epoch.elapsed().as_micros() as u64;
     let mut shutdown = false;
     loop {
@@ -424,7 +487,7 @@ fn instance_thread(
             } else {
                 rx.recv_timeout(Duration::from_millis(2)).map_err(|_| ())
             } {
-                Ok(Cmd::Serve(req)) => eng.waiting.push_back(*req),
+                Ok(Cmd::Serve(req)) => eng.enqueue(*req),
                 Ok(Cmd::Crash) => {
                     for r in eng.crash() {
                         let _ = tx.send((idx, Ev::Displaced { req: Box::new(r), killed: true }));
@@ -719,9 +782,9 @@ mod tests {
     fn live_engine_crash_returns_all_work_and_wipes_cache() {
         let rt = ModelRuntime::load(std::path::Path::new("/nonexistent_lmetric_artifacts"))
             .expect("sim runtime needs no artifacts");
-        let mut eng = LiveEngine::new(rt, 8);
+        let mut eng = LiveEngine::new(rt, 8, "fcfs");
         for id in 0..3u64 {
-            eng.waiting.push_back(Request {
+            eng.enqueue(Request {
                 id,
                 arrival_us: 0,
                 class_id: 0,
@@ -742,6 +805,31 @@ mod tests {
         assert_eq!(eng.store.indexed_blocks(), 0, "prefix store survives a crash");
     }
 
+    /// Live and DES engines must score waiting requests identically:
+    /// the stamped `predicted_work` is input length plus the shared
+    /// deterministic decode predictor (pinned vector: id 42, output 32
+    /// → 34 predicted decode tokens).
+    #[test]
+    fn live_enqueue_stamps_the_shared_predictor() {
+        let rt = ModelRuntime::load(std::path::Path::new("/nonexistent_lmetric_artifacts"))
+            .expect("sim runtime needs no artifacts");
+        let mut eng = LiveEngine::new(rt, 8, "srpt");
+        eng.enqueue(Request {
+            id: 42,
+            arrival_us: 0,
+            class_id: 0,
+            session_id: 0,
+            tokens: Arc::from(vec![1u32; 32].into_boxed_slice()),
+            output_len: 32,
+            block_hashes: Arc::from(vec![7u64].into_boxed_slice()),
+        });
+        let q = eng.waiting.front().unwrap();
+        assert_eq!(q.predicted_work, 32 + queue::predict_decode(42, 32));
+        assert_eq!(queue::predict_decode(42, 32), 34, "pinned predictor vector");
+        assert_eq!(q.enqueued_progress, 0);
+        assert_eq!(eng.queue.name(), "srpt");
+    }
+
     /// The engine derives the same budget from the model config that the
     /// store enforces, so `snapshot().kv_capacity_blocks` is consistent
     /// with DES semantics (used ≤ capacity, same BLOCK unit).
@@ -751,7 +839,7 @@ mod tests {
         let rt = ModelRuntime::load(std::path::Path::new("/nonexistent_lmetric_artifacts"))
             .expect("sim runtime needs no artifacts");
         let max_seq = rt.config().max_seq;
-        let eng = LiveEngine::new(rt, 64);
+        let eng = LiveEngine::new(rt, 64, "fcfs");
         let snap = eng.snapshot();
         assert_eq!(
             snap.kv_capacity_blocks,

@@ -87,6 +87,9 @@ pub struct ExperimentConfig {
     /// Policy hyperparameter (λ for linear, Range for filter, T for
     /// Preble, τ-SLO for PolyServe...).
     pub param: f64,
+    /// Within-instance queue ordering (`engine::queue` name:
+    /// fcfs / srpt / ltr).
+    pub queue_policy: String,
 }
 
 impl Default for ExperimentConfig {
@@ -103,12 +106,18 @@ impl Default for ExperimentConfig {
             rate_scale: 0.5,
             policy: "lmetric".into(),
             param: 0.7,
+            queue_policy: "fcfs".into(),
         }
     }
 }
 
 impl ExperimentConfig {
-    pub fn from_doc(doc: &ConfigDoc) -> ExperimentConfig {
+    /// Build from a parsed document, validating the invariants the
+    /// engine cannot express: `chunk_budget == 0` livelocks a busy
+    /// instance (the engine debug-asserts; here it is a proper error),
+    /// and queue-policy names must exist in the `engine::queue` registry
+    /// so typos surface as the name-listing error, not a panic.
+    pub fn from_doc(doc: &ConfigDoc) -> Result<ExperimentConfig, String> {
         let mut c = ExperimentConfig::default();
         if let Some(v) = doc.get_usize("cluster", "instances") {
             c.instances = v;
@@ -124,6 +133,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_usize("cluster", "max_batch") {
             c.max_batch = v;
+        }
+        if let Some(v) = doc.get("cluster", "queue_policy") {
+            c.queue_policy = v.to_string();
         }
         if let Some(v) = doc.get("trace", "workload") {
             c.workload = v.to_string();
@@ -143,7 +155,17 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_f64("policy", "param") {
             c.param = v;
         }
-        c
+        if c.chunk_budget == 0 {
+            return Err(
+                "cluster.chunk_budget must be >= 1 (a zero budget livelocks a busy \
+                 instance: running sequences can never be stepped)"
+                    .to_string(),
+            );
+        }
+        // Surface unknown queue-policy names here with the registry's
+        // name-listing error rather than panicking at Instance::new.
+        crate::engine::queue::build(&c.queue_policy)?;
+        Ok(c)
     }
 }
 
@@ -180,13 +202,41 @@ param = 0.55
     #[test]
     fn experiment_from_doc_overrides_defaults() {
         let doc = ConfigDoc::parse(SAMPLE).unwrap();
-        let c = ExperimentConfig::from_doc(&doc);
+        let c = ExperimentConfig::from_doc(&doc).unwrap();
         assert_eq!(c.instances, 8);
         assert_eq!(c.workload, "coder");
         assert_eq!(c.policy, "linear");
         assert_eq!(c.param, 0.55);
-        // untouched default:
+        // untouched defaults:
         assert_eq!(c.chunk_budget, 256);
+        assert_eq!(c.queue_policy, "fcfs");
+    }
+
+    #[test]
+    fn experiment_from_doc_reads_queue_policy() {
+        let doc = ConfigDoc::parse("[cluster]\nqueue_policy = \"srpt\"").unwrap();
+        let c = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.queue_policy, "srpt");
+    }
+
+    /// Regression (livelock bugfix): the pre-fix config accepted
+    /// `chunk_budget = 0` and handed the DES an engine that could never
+    /// step a busy instance. It must now be a build-time error.
+    #[test]
+    fn experiment_from_doc_rejects_zero_chunk_budget() {
+        let doc = ConfigDoc::parse("[cluster]\nchunk_budget = 0").unwrap();
+        let err = ExperimentConfig::from_doc(&doc).err().unwrap();
+        assert!(err.contains("chunk_budget"), "error names the field: {err}");
+    }
+
+    #[test]
+    fn experiment_from_doc_rejects_unknown_queue_policy_with_listing() {
+        let doc = ConfigDoc::parse("[cluster]\nqueue_policy = \"sjf\"").unwrap();
+        let err = ExperimentConfig::from_doc(&doc).err().unwrap();
+        assert!(err.contains("sjf"), "error names the input: {err}");
+        for name in crate::engine::queue::all_names() {
+            assert!(err.contains(name), "error lists '{name}': {err}");
+        }
     }
 
     #[test]

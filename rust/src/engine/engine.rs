@@ -15,17 +15,23 @@ use crate::core::{Request, RequestRecord, BLOCK_TOKENS};
 use crate::kvcache::RadixTree;
 
 use super::cost::ModelProfile;
+use super::queue::{self, QueueEntry, QueuePolicy};
 use super::InstanceSnapshot;
 
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
     pub profile: ModelProfile,
     /// Max new prefill tokens co-scheduled per step (chunked prefill).
+    /// Must be >= 1: a zero budget livelocks a busy instance (rejected at
+    /// config build and debug-asserted at construction).
     pub chunk_budget: usize,
     /// Max admitted (running) sequences.
     pub max_batch: usize,
     /// KV$ capacity in blocks (0 = unbounded).
     pub kv_capacity_blocks: usize,
+    /// Within-instance queue ordering (`engine::queue::build` name:
+    /// fcfs / srpt / ltr).
+    pub queue_policy: String,
 }
 
 impl Default for EngineConfig {
@@ -35,6 +41,7 @@ impl Default for EngineConfig {
             chunk_budget: 256,
             max_batch: 64,
             kv_capacity_blocks: 8192,
+            queue_policy: "fcfs".to_string(),
         }
     }
 }
@@ -78,6 +85,17 @@ struct Seq {
     /// (multi-turn reuse: the next turn's prompt extends this chain).
     /// Shared with the trace — enqueue costs a refcount bump, not a copy.
     full_hashes: Arc<[u64]>,
+    /// Virtual time the request entered the waiting queue (queue-wait
+    /// metrics measure admission minus this).
+    enqueued_us: u64,
+    /// Progress-clock reading at enqueue (the ltr starvation clock).
+    enqueued_progress: u64,
+    /// Predicted total remaining work at enqueue: estimated prefill debt
+    /// + hash-predicted decode length (frozen — it is a prediction).
+    predicted_work: u64,
+    /// Starvation promotions granted so far (ltr persists levels here
+    /// between admission rounds).
+    promote_level: u32,
 }
 
 impl Seq {
@@ -108,16 +126,42 @@ pub struct Instance {
     /// [`Self::recycle_events`] so the steady state allocates no fresh
     /// events Vec per step.
     events_scratch: Vec<EngineEvent>,
+    /// Within-instance queue ordering (built from
+    /// `cfg.queue_policy` — `fcfs` reproduces the seed engine's
+    /// pop-front byte-for-byte).
+    queue: Box<dyn QueuePolicy>,
+    /// Reusable entry buffer handed to the queue policy at admission
+    /// (no per-admission allocation in steady state).
+    entries_scratch: Vec<QueueEntry>,
     /// Lifetime counters.
     pub steps: u64,
     pub busy_us: u64,
     pub total_prefill_tokens: u64,
     pub total_decode_tokens: u64,
+    /// Steps where a non-empty running batch had nothing runnable —
+    /// the release-mode escape hatch for the livelock invariant (always
+    /// 0 with `chunk_budget >= 1`; debug builds assert instead).
+    pub stalled_steps: u64,
+    /// Queue-wait accounting (enqueue -> admission), harvested into
+    /// `RunMetrics.queue` at end of run.
+    pub queue_wait_us_sum: u64,
+    pub queue_wait_samples: u64,
+    pub queue_wait_us_max: u64,
 }
 
 impl Instance {
+    /// Panics (debug) on `chunk_budget == 0` — a zero budget makes a
+    /// busy instance unsteppable and livelocks the DES; the config layer
+    /// rejects it with a proper error before construction. Panics on an
+    /// unknown `queue_policy` name for the same reason (the CLI/config
+    /// layers validate names first and surface the listing error).
     pub fn new(id: usize, cfg: EngineConfig) -> Self {
+        debug_assert!(
+            cfg.chunk_budget > 0,
+            "chunk_budget must be >= 1 (a zero budget livelocks a busy instance)"
+        );
         let kv = RadixTree::new(cfg.kv_capacity_blocks);
+        let queue = queue::build(&cfg.queue_policy).unwrap_or_else(|e| panic!("{e}"));
         Instance {
             id,
             cfg,
@@ -127,17 +171,41 @@ impl Instance {
             queued_prefill_tokens: 0,
             total_context_tokens: 0,
             events_scratch: Vec::new(),
+            queue,
+            entries_scratch: Vec::new(),
             steps: 0,
             busy_us: 0,
             total_prefill_tokens: 0,
             total_decode_tokens: 0,
+            stalled_steps: 0,
+            queue_wait_us_sum: 0,
+            queue_wait_samples: 0,
+            queue_wait_us_max: 0,
         }
+    }
+
+    /// Engine token-progress clock: every prefill + decode token computed
+    /// so far. This is the `ltr` starvation clock — waiting requests are
+    /// promoted by tokens of progress they sat through, not wall time.
+    pub fn progress_tokens(&self) -> u64 {
+        self.total_prefill_tokens + self.total_decode_tokens
+    }
+
+    /// Cumulative starvation promotions granted by the queue policy
+    /// (`ltr`; 0 for fcfs/srpt).
+    pub fn queue_promotions(&self) -> u64 {
+        self.queue.promotions()
+    }
+
+    /// The active within-instance queue policy name.
+    pub fn queue_policy_name(&self) -> &'static str {
+        self.queue.name()
     }
 
     /// Route a request to this instance (enters the waiting queue).
     /// `full_hashes` covers prompt+output blocks for completion-time
     /// cache insertion (what the next conversation turn will hit).
-    pub fn enqueue(&mut self, req: Request, full_hashes: Arc<[u64]>, _now_us: u64) {
+    pub fn enqueue(&mut self, req: Request, full_hashes: Arc<[u64]>, now_us: u64) {
         // Estimate the KV$ hit now so the queued-prefill-token indicator
         // is hit-aware ("new prefill tokens considering KV$ hits", §5.1).
         // A read-only peek: the estimate must not touch LRU state — the
@@ -146,6 +214,7 @@ impl Instance {
         let est_cached = (est_hit * BLOCK_TOKENS).min(req.input_len());
         let new_total = (req.input_len() - est_cached).max(1);
         self.queued_prefill_tokens += new_total;
+        let predicted_work = new_total as u64 + queue::predict_decode(req.id, req.output_len);
         self.waiting.push_back(Seq {
             cached_tokens: 0,
             pinned_blocks: 0,
@@ -154,6 +223,10 @@ impl Instance {
             generated: 0,
             first_token_us: None,
             full_hashes,
+            enqueued_us: now_us,
+            enqueued_progress: self.progress_tokens(),
+            predicted_work,
+            promote_level: 0,
             req,
         });
     }
@@ -252,14 +325,39 @@ impl Instance {
     }
 
     fn admit(&mut self, now_us: u64) {
-        while self.running.len() < self.cfg.max_batch {
-            let Some(mut seq) = self.waiting.pop_front() else {
-                break;
-            };
+        while self.running.len() < self.cfg.max_batch && !self.waiting.is_empty() {
+            // Let the queue policy pick the next admission. `fcfs`
+            // always selects index 0 (== the seed engine's pop_front);
+            // `srpt`/`ltr` reorder by predicted work. Promotion levels
+            // the policy writes into the scratch entries are persisted
+            // back onto the queued sequences before the pick is removed.
+            self.entries_scratch.clear();
+            self.entries_scratch.extend(self.waiting.iter().map(|s| QueueEntry {
+                req_id: s.req.id,
+                predicted_work: s.predicted_work,
+                enqueued_progress: s.enqueued_progress,
+                promote_level: s.promote_level,
+            }));
+            let progress = self.progress_tokens();
+            let mut entries = std::mem::take(&mut self.entries_scratch);
+            let picked = self.queue.select(&mut entries, progress);
+            for (seq, e) in self.waiting.iter_mut().zip(&entries) {
+                seq.promote_level = e.promote_level;
+            }
+            self.entries_scratch = entries;
+            let Some(idx) = picked else { break };
+            let mut seq = self.waiting.remove(idx).expect("selected index in range");
+            let wait_us = now_us.saturating_sub(seq.enqueued_us);
+            self.queue_wait_us_sum += wait_us;
+            self.queue_wait_samples += 1;
+            self.queue_wait_us_max = self.queue_wait_us_max.max(wait_us);
             // ONE fused KV$ walk: match the cached prefix (LRU-refreshed),
             // make the rest of the prompt chain resident, and pin it all
             // for the sequence lifetime (truncated under pinned-full
             // pressure — pin covers exactly what is resident).
+            // The estimate is settled PER SEQUENCE: `est_remaining` is
+            // read off the *selected* seq (not the queue front), so the
+            // account stays exact under any admission order.
             let est_remaining = seq.prefill_remaining();
             let out = self.kv.admit_chain(&seq.req.block_hashes, now_us);
             seq.pinned_blocks = out.resident;
@@ -311,8 +409,19 @@ impl Instance {
         }
 
         if prefill_tokens == 0 && decode_seqs == 0 {
-            // Nothing runnable (shouldn't happen: running seqs always have
-            // prefill or decode work). Defensive: drop a completed seq.
+            // Invariant violation: a running sequence always carries
+            // prefill or decode work when chunk_budget >= 1 (enforced at
+            // config build and construction). Returning None here with a
+            // non-empty running batch would livelock the DES (the
+            // instance is permanently "busy" yet never steps), so debug
+            // builds fail loudly; release builds count the stall so the
+            // harvested `RunMetrics.queue` counters expose it.
+            debug_assert!(
+                false,
+                "unsteppable running batch ({} seqs) — chunk_budget misconfigured?",
+                self.running.len()
+            );
+            self.stalled_steps += 1;
             return None;
         }
 
@@ -606,35 +715,43 @@ mod tests {
     }
 
     /// Satellite: randomized churn over mixed enqueue/step/complete
-    /// cycles, asserting the incremental snapshot counters equal a
-    /// from-scratch recompute after EVERY step (also exercised by the
-    /// debug_assert inside step(), but this holds in release too and
-    /// drives adversarial interleavings deliberately).
+    /// cycles PLUS drain/crash requeue interleavings, across all three
+    /// queue policies, asserting the incremental snapshot counters equal
+    /// a from-scratch recompute after EVERY operation. Under srpt/ltr the
+    /// admission order is arbitrary, so this pins the per-sequence
+    /// estimate settling (the pre-fix code settled against the queue
+    /// front and would diverge on any reorder).
     #[test]
     fn incremental_snapshot_matches_recompute_under_churn() {
-        for seed in 0..8u64 {
+        use std::collections::HashMap;
+        for seed in 0..9u64 {
             let mut rng = crate::util::Rng::new(0x5eed ^ seed);
             let cfg = EngineConfig {
                 profile: ModelProfile::moe_30b(),
                 chunk_budget: [64, 256][seed as usize % 2],
                 max_batch: 1 + (seed as usize % 7),
-                kv_capacity_blocks: [0, 96, 1024][seed as usize % 3],
+                kv_capacity_blocks: [0, 96, 1024][(seed as usize / 3) % 3],
+                queue_policy: ["fcfs", "srpt", "ltr"][seed as usize % 3].to_string(),
             };
             let mut inst = Instance::new(0, cfg);
             let mut now = 0u64;
             let mut next_id = 0u64;
-            for _ in 0..120 {
-                match rng.gen_range(0, 3) {
-                    0 | 1 => {
+            // Requeue needs the full-chain hashes back, like the DES
+            // cluster's own displaced-request map.
+            let mut full_by_id: HashMap<u64, Arc<[u64]>> = HashMap::new();
+            for _ in 0..140 {
+                match rng.gen_range(0, 8) {
+                    0..=2 => {
                         let input = rng.gen_range(8, 900) as usize;
                         let output = rng.gen_range(1, 40) as u32;
                         let class = rng.gen_range(0, 5) as u32;
                         let (r, f) = mk_req(next_id, input, output, class);
+                        full_by_id.insert(next_id, f.clone());
                         next_id += 1;
                         inst.enqueue(r, f, now);
                         assert_eq!(inst.snapshot(), inst.recompute_snapshot());
                     }
-                    _ => {
+                    3..=5 => {
                         if let Some(out) = inst.step(now) {
                             now += out.duration_us;
                             inst.recycle_events(out.events);
@@ -644,6 +761,28 @@ mod tests {
                             inst.recompute_snapshot(),
                             "diverged at seed {seed}, t={now}"
                         );
+                    }
+                    6 => {
+                        // Drain: evict the waiting queue mid-reorder,
+                        // then requeue (what the lifecycle layer does).
+                        let evicted = inst.extract_waiting();
+                        assert_eq!(inst.snapshot(), inst.recompute_snapshot());
+                        for r in evicted {
+                            let f = full_by_id[&r.id].clone();
+                            inst.enqueue(r, f, now);
+                        }
+                        assert_eq!(inst.snapshot(), inst.recompute_snapshot());
+                    }
+                    _ => {
+                        // Crash: everything (waiting + running) is
+                        // displaced and requeued from scratch.
+                        let evicted = inst.extract_all();
+                        assert_eq!(inst.snapshot(), inst.recompute_snapshot());
+                        for r in evicted {
+                            let f = full_by_id[&r.id].clone();
+                            inst.enqueue(r, f, now);
+                        }
+                        assert_eq!(inst.snapshot(), inst.recompute_snapshot());
                     }
                 }
             }
@@ -658,7 +797,62 @@ mod tests {
             assert_eq!(end.queued_prefill_tokens, 0);
             assert_eq!(end.total_context_tokens, 0);
             assert_eq!((end.r_bs, end.q_bs), (0, 0));
+            assert_eq!(inst.stalled_steps, 0, "no stalls under a legal config");
         }
+    }
+
+    /// Regression (livelock bugfix): a zero chunk budget must fail fast
+    /// at construction instead of yielding an engine whose `has_work()`
+    /// stays true while `step()` returns None forever. The pre-fix
+    /// engine accepted the config silently and livelocked the DES on the
+    /// first busy instance.
+    #[test]
+    #[should_panic(expected = "chunk_budget")]
+    fn zero_chunk_budget_is_rejected_at_construction() {
+        let cfg = EngineConfig {
+            chunk_budget: 0,
+            ..Default::default()
+        };
+        let _ = Instance::new(0, cfg);
+    }
+
+    #[test]
+    fn srpt_admits_shortest_predicted_work_first() {
+        // A long job arrives ahead of a short one; max_batch 1 makes the
+        // admission order observable as the completion order.
+        let run_order = |policy: &str| -> Vec<u64> {
+            let mut cfg = EngineConfig::default();
+            cfg.max_batch = 1;
+            cfg.queue_policy = policy.to_string();
+            let mut inst = Instance::new(0, cfg);
+            let (r1, f1) = mk_req(1, 900, 200, 0);
+            let (r2, f2) = mk_req(2, 64, 1, 1);
+            inst.enqueue(r1, f1, 0);
+            inst.enqueue(r2, f2, 0);
+            let (recs, _) = drain(&mut inst, 0);
+            recs.iter().map(|r| r.id).collect()
+        };
+        assert_eq!(run_order("fcfs"), [1, 2], "fcfs keeps arrival order");
+        assert_eq!(run_order("srpt"), [2, 1], "srpt runs the short job first");
+    }
+
+    #[test]
+    fn ltr_promotes_and_finishes_everything_under_a_deep_queue() {
+        let mut cfg = EngineConfig::default();
+        cfg.max_batch = 1;
+        cfg.queue_policy = "ltr".to_string();
+        let mut inst = Instance::new(0, cfg);
+        for i in 0..12u64 {
+            let (r, f) = mk_req(i, 512, 20, i as u32);
+            inst.enqueue(r, f, 0);
+        }
+        let (recs, _) = drain(&mut inst, 0);
+        assert_eq!(recs.len(), 12, "starvation-free: every request completes");
+        assert!(
+            inst.queue_promotions() > 0,
+            "a deep queue must trip starvation promotions"
+        );
+        assert_eq!(inst.queue_policy_name(), "ltr");
     }
 
     #[test]

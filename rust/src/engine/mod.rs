@@ -6,9 +6,11 @@
 
 mod cost;
 mod engine;
+pub mod queue;
 
 pub use cost::ModelProfile;
 pub use engine::{EngineConfig, EngineEvent, Instance, StepOutcome};
+pub use queue::{QueueEntry, QueuePolicy};
 
 /// Per-instance indicators, as exported to the router piggybacked on
 /// responses (the paper's Fig. 2 "direct system indicators"). All fields

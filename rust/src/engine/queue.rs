@@ -1,0 +1,315 @@
+//! Pluggable within-instance queue scheduling: the ordering of
+//! `Instance.waiting` behind the router's placement decision.
+//!
+//! The paper's BS×P-token score decides *which instance* gets a request;
+//! this module decides *which waiting request that instance admits next*.
+//! Three policies, registry-built like `policy::build`:
+//!
+//! | name   | ordering | reference |
+//! |--------|----------|-----------|
+//! | `fcfs` | arrival order (the seed engine, byte-identical) | vLLM default |
+//! | `srpt` | predicted total remaining work, shortest first  | Intelligent Router (PAPERS.md) |
+//! | `ltr`  | `srpt` + starvation-quantum promotion           | vLLM LTR scheduler (SNIPPETS.md #1–2) |
+//!
+//! `srpt`/`ltr` rank by *predicted* work: the prefill debt is known at
+//! enqueue time, the decode length is estimated by a deterministic
+//! salted-SplitMix64 predictor (same mix as `runtime/sim.rs`, draw order
+//! Python-mirrored in `python/tests/test_queue_predictor.py`) that
+//! multiplies the true output length by a per-request factor in
+//! [0.5, 1.5) — a stand-in for an imperfect learned length predictor.
+//!
+//! `ltr` replicates the vLLM LTR scheduler's anti-starvation scheme: a
+//! request that has waited [`LTR_STARVATION_THRESHOLD`] tokens of engine
+//! progress gains one promotion level, and each level subtracts
+//! [`LTR_PRIORITY_QUANTUM`] from its effective work. Levels only grow, so
+//! every waiting request's effective priority is strictly decreasing in
+//! engine progress and nothing waits forever (the starvation-freedom
+//! proptest in `rust/tests/engine_queue.rs` pins this).
+
+/// One waiting request, as the queue policy sees it. The engine builds
+/// these into a reusable scratch buffer (no per-step allocation) and
+/// writes any `promote_level` updates back to its own queue state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueueEntry {
+    /// The request id (stable across requeues).
+    pub req_id: u64,
+    /// Predicted total remaining work at enqueue time: prefill debt
+    /// (estimated new tokens) + predicted decode length.
+    pub predicted_work: u64,
+    /// Engine progress-clock reading (total prefill + decode tokens
+    /// computed) when the request entered the queue.
+    pub enqueued_progress: u64,
+    /// Starvation promotions already granted (`ltr` only; 0 elsewhere).
+    pub promote_level: u32,
+}
+
+/// The within-instance scheduling contract: given the waiting queue in
+/// arrival order and the instance's token-progress clock, pick the index
+/// to admit next. Implementations may update `promote_level` in place
+/// (the engine persists it); they must not reorder the slice.
+pub trait QueuePolicy: Send {
+    fn name(&self) -> &'static str;
+    /// Index of the next entry to admit, or `None` on an empty queue.
+    fn select(&mut self, entries: &mut [QueueEntry], progress: u64) -> Option<usize>;
+    /// Cumulative starvation promotions granted (`ltr`; 0 elsewhere).
+    fn promotions(&self) -> u64 {
+        0
+    }
+}
+
+/// Arrival order — the seed engine's `VecDeque::pop_front`, pinned
+/// byte-identical by always selecting index 0.
+pub struct Fcfs;
+
+impl QueuePolicy for Fcfs {
+    fn name(&self) -> &'static str {
+        "fcfs"
+    }
+
+    fn select(&mut self, entries: &mut [QueueEntry], _progress: u64) -> Option<usize> {
+        if entries.is_empty() {
+            None
+        } else {
+            Some(0)
+        }
+    }
+}
+
+/// Shortest predicted remaining processing time first (ties broken by
+/// arrival order, so equal-work requests stay FCFS).
+pub struct Srpt;
+
+impl QueuePolicy for Srpt {
+    fn name(&self) -> &'static str {
+        "srpt"
+    }
+
+    fn select(&mut self, entries: &mut [QueueEntry], _progress: u64) -> Option<usize> {
+        let mut best: Option<(u64, usize)> = None;
+        for (i, e) in entries.iter().enumerate() {
+            if best.map_or(true, |(w, _)| e.predicted_work < w) {
+                best = Some((e.predicted_work, i));
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+}
+
+/// Tokens of engine progress a request must wait before gaining one
+/// promotion level (the vLLM LTR scheduler's
+/// `VLLM_LTR_STARVATION_THRESHOLD` waited-tokens default).
+pub const LTR_STARVATION_THRESHOLD: u64 = 256;
+
+/// Effective-work discount per promotion level (the LTR scheduler's
+/// `VLLM_LTR_PRIORITY_QUANTUM` default).
+pub const LTR_PRIORITY_QUANTUM: u64 = 32;
+
+/// The vLLM LTR scheduler's score-priority queue: SRPT by predicted work,
+/// but every [`LTR_STARVATION_THRESHOLD`] waited tokens promote a request
+/// by one level, and each level subtracts [`LTR_PRIORITY_QUANTUM`] from
+/// its effective work (which may go negative — a starved request
+/// eventually outranks everything, so the queue is starvation-free).
+pub struct Ltr {
+    promotions: u64,
+}
+
+impl Ltr {
+    pub fn new() -> Self {
+        Ltr { promotions: 0 }
+    }
+}
+
+impl Default for Ltr {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl QueuePolicy for Ltr {
+    fn name(&self) -> &'static str {
+        "ltr"
+    }
+
+    fn select(&mut self, entries: &mut [QueueEntry], progress: u64) -> Option<usize> {
+        let mut best: Option<(i64, usize)> = None;
+        for (i, e) in entries.iter_mut().enumerate() {
+            let waited = progress.saturating_sub(e.enqueued_progress);
+            let target = (waited / LTR_STARVATION_THRESHOLD) as u32;
+            if target > e.promote_level {
+                self.promotions += u64::from(target - e.promote_level);
+                e.promote_level = target;
+            }
+            let effective = e.predicted_work as i64
+                - (u64::from(e.promote_level) * LTR_PRIORITY_QUANTUM) as i64;
+            if best.map_or(true, |(w, _)| effective < w) {
+                best = Some((effective, i));
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+
+    fn promotions(&self) -> u64 {
+        self.promotions
+    }
+}
+
+/// The rejection every entry point shares: unknown names fail with an
+/// error that lists every valid name (CLI / config / benches surface it
+/// verbatim, mirroring `policy::build`).
+fn unknown_queue_policy_error(name: &str) -> String {
+    format!(
+        "unknown queue policy '{name}'; valid queue policies: {}",
+        all_names().join(", ")
+    )
+}
+
+/// Build a queue policy by name. Unknown names are rejected with the
+/// name-listing error.
+pub fn build(name: &str) -> Result<Box<dyn QueuePolicy>, String> {
+    Ok(match name {
+        "fcfs" => Box::new(Fcfs),
+        "srpt" => Box::new(Srpt),
+        "ltr" => Box::new(Ltr::new()),
+        _ => return Err(unknown_queue_policy_error(name)),
+    })
+}
+
+/// All queue-policy names (for sweeps and the CLI usage text).
+pub fn all_names() -> &'static [&'static str] {
+    &["fcfs", "srpt", "ltr"]
+}
+
+/// Salt for the decode-length predictor ("QPRED137"). Distinct from the
+/// sim backend's logits hash so the two deterministic streams never
+/// correlate.
+const PREDICT_SALT: u64 = 0x5150_5245_4431_3337;
+
+/// Splitmix-style mix — the same finalizer as `runtime/sim.rs`.
+#[inline]
+fn mix(h: u64, x: u64) -> u64 {
+    let mut z = h ^ x.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Deterministic decode-length prediction: the true output length scaled
+/// by a per-request factor in [0.5, 1.5) drawn from the top 16 bits of
+/// the salted mix. Models a learned predictor that is directionally
+/// right but individually noisy; byte-stable across runs and mirrored
+/// bit-for-bit in `python/tests/test_queue_predictor.py`.
+pub fn predict_decode(req_id: u64, output_len: u32) -> u64 {
+    let z = mix(PREDICT_SALT, req_id);
+    let factor = 0.5 + (z >> 48) as f64 / 65536.0;
+    ((f64::from(output_len.max(1)) * factor) as u64).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(req_id: u64, work: u64, enq: u64) -> QueueEntry {
+        QueueEntry {
+            req_id,
+            predicted_work: work,
+            enqueued_progress: enq,
+            promote_level: 0,
+        }
+    }
+
+    #[test]
+    fn registry_builds_everything_and_rejects_unknown_names() {
+        for name in all_names() {
+            let pol = build(name).unwrap_or_else(|e| panic!("build({name}): {e}"));
+            assert_eq!(pol.name(), *name);
+        }
+        let err = build("no_such_queue").err().unwrap();
+        assert!(err.contains("no_such_queue"), "error names the input: {err}");
+        for name in all_names() {
+            assert!(err.contains(name), "error lists '{name}': {err}");
+        }
+    }
+
+    #[test]
+    fn fcfs_always_selects_the_front() {
+        let mut q = build("fcfs").unwrap();
+        let mut e = vec![entry(1, 500, 0), entry(2, 10, 0), entry(3, 900, 0)];
+        assert_eq!(q.select(&mut e, 0), Some(0));
+        assert_eq!(q.select(&mut [], 0), None);
+        assert_eq!(q.promotions(), 0);
+    }
+
+    #[test]
+    fn srpt_selects_minimum_predicted_work_with_fcfs_ties() {
+        let mut q = build("srpt").unwrap();
+        let mut e = vec![entry(1, 500, 0), entry(2, 10, 0), entry(3, 10, 0)];
+        // 10 beats 500; the earlier of the two 10s wins the tie.
+        assert_eq!(q.select(&mut e, 0), Some(1));
+        assert_eq!(q.select(&mut [], 0), None);
+    }
+
+    #[test]
+    fn ltr_promotes_a_starved_request_past_shorter_work() {
+        let mut q = Ltr::new();
+        // A long request enqueued at progress 0 next to a stream of short
+        // ones: with no waiting it loses...
+        let mut e = vec![entry(1, 1000, 0), entry(2, 100, 0)];
+        assert_eq!(q.select(&mut e, 0), Some(1));
+        assert_eq!(q.promotions(), 0);
+        // ...but after (1000-100)/32 * 256 = 7200 tokens of progress its
+        // promotion discount closes the 900-token work gap.
+        let catch_up = (1000 - 100) / LTR_PRIORITY_QUANTUM * LTR_STARVATION_THRESHOLD;
+        let mut e = vec![entry(1, 1000, 0), entry(2, 100, catch_up)];
+        assert_eq!(q.select(&mut e, catch_up), Some(0));
+        assert!(q.promotions() > 0);
+        // The engine persists the written-back level.
+        assert_eq!(e[0].promote_level, ((1000 - 100) / LTR_PRIORITY_QUANTUM) as u32);
+    }
+
+    #[test]
+    fn ltr_effective_priority_is_strictly_decreasing_in_progress() {
+        // Starvation-freedom core: for a fixed entry, more progress never
+        // raises effective work, and it strictly drops across threshold
+        // crossings (so any entry eventually outranks any fixed rival).
+        let mut q = Ltr::new();
+        let mut last_level = 0;
+        for k in 1..=64u64 {
+            let mut e = vec![entry(1, 1_000_000, 0)];
+            q.select(&mut e, k * LTR_STARVATION_THRESHOLD);
+            assert!(e[0].promote_level >= last_level, "levels only grow");
+            assert_eq!(e[0].promote_level, k as u32, "one level per threshold");
+            last_level = e[0].promote_level;
+        }
+        assert_eq!(q.promotions(), 64);
+    }
+
+    #[test]
+    fn predictor_matches_pinned_vectors() {
+        // Pinned against python/tests/test_queue_predictor.py (the Python
+        // mirror computes these with masked 64-bit arithmetic; the two
+        // lists must stay literally identical).
+        let cases: &[(u64, u32, u64)] = &[
+            (0, 1, 1),
+            (1, 64, 92),
+            (2, 256, 193),
+            (7, 100, 87),
+            (42, 32, 34),
+            (123_456_789, 1000, 1139),
+            (9_223_372_036_854_775_808, 500, 618),
+            (u64::MAX, 77, 67),
+        ];
+        for &(id, out, want) in cases {
+            assert_eq!(predict_decode(id, out), want, "predict_decode({id}, {out})");
+        }
+    }
+
+    #[test]
+    fn predictor_stays_in_band_and_is_deterministic() {
+        for id in 0..512u64 {
+            let p = predict_decode(id, 1000);
+            assert!((500..1500).contains(&p), "factor in [0.5, 1.5): {p}");
+            assert_eq!(p, predict_decode(id, 1000), "deterministic");
+            assert!(predict_decode(id, 0) >= 1, "floor at one token");
+        }
+    }
+}

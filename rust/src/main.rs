@@ -47,7 +47,10 @@ fn exp_from_flags(flags: &HashMap<String, String>) -> ExperimentConfig {
             eprintln!("config: {e}");
             std::process::exit(2);
         });
-        ExperimentConfig::from_doc(&doc)
+        ExperimentConfig::from_doc(&doc).unwrap_or_else(|e| {
+            eprintln!("config: {e}");
+            std::process::exit(2);
+        })
     } else {
         ExperimentConfig::default()
     };
@@ -74,6 +77,15 @@ fn exp_from_flags(flags: &HashMap<String, String>) -> ExperimentConfig {
     }
     if let Some(v) = flags.get("seed") {
         exp.seed = v.parse().expect("--seed");
+    }
+    if let Some(v) = flags.get("queue-policy") {
+        exp.queue_policy = v.clone();
+    }
+    // Validate here so a typo surfaces as the registry's name-listing
+    // error instead of a panic inside Instance::new.
+    if let Err(e) = lmetric::engine::queue::build(&exp.queue_policy) {
+        eprintln!("{e}");
+        std::process::exit(2);
     }
     exp
 }
@@ -458,9 +470,15 @@ fn cmd_serve(flags: &HashMap<String, String>) {
 
     let profile = ModelProfile::moe_30b();
     let mut pol = policy::build(policy_name, 0.7, &profile, 256).expect("policy");
+    let queue_policy = flags.get("queue-policy").map(String::as_str).unwrap_or("fcfs");
+    if let Err(e) = lmetric::engine::queue::build(queue_policy) {
+        eprintln!("{e}");
+        std::process::exit(2);
+    }
     let cfg = LiveClusterConfig {
         n_instances: n,
         time_scale,
+        queue_policy: queue_policy.to_string(),
         ..Default::default()
     };
     println!(
@@ -606,7 +624,7 @@ fn usage() -> ! {
 
 commands:
   replay       --workload W --policy P [--instances N --requests N --rate-scale F --param F --profile M --seed S --config FILE]
-               [--admission A --admission-param F --slo-ttft S --slo-tpot S]
+               [--queue-policy Q --admission A --admission-param F --slo-ttft S --slo-tpot S]
   sessions     --kind chat|api|coding [--policy P --instances N --requests N --rate-scale F --seed S]
   open         --shape constant|ramp|diurnal|flash [--duration S --rate-scale F --instances N
                --requests N --seed S --policy P --admission A --admission-param F --slo-ttft S --slo-tpot S]
@@ -621,8 +639,10 @@ commands:
 
 workloads:  chatbot coder agent toolagent hotspot
 policies:   {:?}
+queues:     {:?} (within-instance ordering, --queue-policy)
 admission:  {:?}",
         policy::all_names(),
+        lmetric::engine::queue::all_names(),
         cluster::all_admission_names()
     );
     std::process::exit(2);

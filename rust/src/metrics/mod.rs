@@ -56,6 +56,25 @@ pub struct OverloadCounters {
     pub orphaned_turns: u64,
 }
 
+/// Per-instance within-instance queue counters (the `engine::queue`
+/// layer): admission wait times and the LTR starvation-promotion count.
+/// Harvested per instance at the end of a DES run; empty for live /
+/// concurrent runs (their engines run wall-clock and don't report).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QueueCounters {
+    /// Starvation promotions granted by the instance's queue policy
+    /// (always 0 for fcfs/srpt — only `ltr` promotes).
+    pub promotions: u64,
+    /// Steps where a busy instance could not plan work (the livelock
+    /// escape hatch; 0 under any legal config — asserted in tests).
+    pub stalled_steps: u64,
+    /// Sum / count / max of per-request admission waits (enqueue →
+    /// running-batch admission), µs.
+    pub wait_us_sum: u64,
+    pub wait_samples: u64,
+    pub wait_us_max: u64,
+}
+
 /// Everything a cluster run produces.
 #[derive(Debug)]
 pub struct RunMetrics {
@@ -110,6 +129,10 @@ pub struct RunMetrics {
     /// [`crate::cluster::RunSpec::with_slo`]; goodput methods take an
     /// explicit spec too so post-hoc evaluation works).
     pub slo: Option<SloSpec>,
+    /// Per-instance within-instance queue counters, one entry per
+    /// instance slot the run ended with (scale-ups grow it past the
+    /// starting fleet). Empty for live/concurrent runs.
+    pub queue: Vec<QueueCounters>,
 }
 
 impl RunMetrics {
@@ -132,7 +155,36 @@ impl RunMetrics {
             routers: 1,
             admission_name: None,
             slo: None,
+            queue: Vec::new(),
         }
+    }
+
+    /// Total starvation promotions across all instances' queue policies
+    /// (0 unless an `ltr` engine queue promoted someone).
+    pub fn total_promotions(&self) -> u64 {
+        self.queue.iter().map(|q| q.promotions).sum()
+    }
+
+    /// Total stalled (unplannable-while-busy) steps across instances —
+    /// 0 under any legal engine config.
+    pub fn total_stalled_steps(&self) -> u64 {
+        self.queue.iter().map(|q| q.stalled_steps).sum()
+    }
+
+    /// Mean admission wait (enqueue → running-batch admission) across
+    /// all instances, in seconds; 0.0 when nothing was sampled.
+    pub fn mean_queue_wait_s(&self) -> f64 {
+        let n: u64 = self.queue.iter().map(|q| q.wait_samples).sum();
+        if n == 0 {
+            return 0.0;
+        }
+        let sum: u64 = self.queue.iter().map(|q| q.wait_us_sum).sum();
+        sum as f64 / n as f64 / 1e6
+    }
+
+    /// Worst single admission wait across the fleet, seconds.
+    pub fn max_queue_wait_s(&self) -> f64 {
+        self.queue.iter().map(|q| q.wait_us_max).max().unwrap_or(0) as f64 / 1e6
     }
 
     /// Distribution of snapshot ages (commits of staleness per decision);
@@ -675,6 +727,31 @@ mod tests {
         assert!((sm.turn0_hit() - 0.5).abs() < 0.05);
         assert!((sm.turn_ttft.mean - 0.05).abs() < 1e-9);
         assert!(sm.session_span_s.n == sm.sessions);
+    }
+
+    #[test]
+    fn queue_counter_aggregates() {
+        let mut m = RunMetrics::new(2);
+        assert_eq!(m.total_promotions(), 0);
+        assert_eq!(m.mean_queue_wait_s(), 0.0);
+        m.queue.push(QueueCounters {
+            promotions: 3,
+            stalled_steps: 0,
+            wait_us_sum: 1_000_000,
+            wait_samples: 2,
+            wait_us_max: 900_000,
+        });
+        m.queue.push(QueueCounters {
+            promotions: 1,
+            stalled_steps: 0,
+            wait_us_sum: 2_000_000,
+            wait_samples: 2,
+            wait_us_max: 1_500_000,
+        });
+        assert_eq!(m.total_promotions(), 4);
+        assert_eq!(m.total_stalled_steps(), 0);
+        assert!((m.mean_queue_wait_s() - 0.75).abs() < 1e-12);
+        assert!((m.max_queue_wait_s() - 1.5).abs() < 1e-12);
     }
 
     #[test]

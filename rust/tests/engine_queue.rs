@@ -1,0 +1,146 @@
+//! Within-instance queue scheduling (`engine::queue`) through the public
+//! API: the fcfs decision-replay pin (byte-identity with the seed
+//! engine's pop-front admission), and starvation-freedom of the
+//! reordering policies under adversarial floods.
+
+use lmetric::cluster::{run, run_des, ClusterConfig, RunSpec};
+use lmetric::engine::EngineConfig;
+use lmetric::metrics::RunMetrics;
+use lmetric::policy;
+use lmetric::trace::{
+    generate, generate_adversarial, AdversarialScenario, AdversarialSpec, Trace, Workload,
+    WorkloadSpec,
+};
+
+fn assert_same_records(a: &RunMetrics, b: &RunMetrics, label: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{label}: completion count");
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(
+            (x.id, x.instance, x.arrival_us, x.first_token_us, x.completion_us, x.cached_tokens),
+            (y.id, y.instance, y.arrival_us, y.first_token_us, y.completion_us, y.cached_tokens),
+            "{label}: records diverged"
+        );
+    }
+    assert_eq!(a.duration_us, b.duration_us, "{label}: duration");
+    assert_eq!(a.total_steps, b.total_steps, "{label}: steps");
+}
+
+/// The tentpole's no-regression pin: `fcfs` (the default queue policy)
+/// must replay byte-identically to the seed engine's pop-front admission
+/// on every workload family under every router policy. The left run uses
+/// the plain legacy entry point, the right one the explicit
+/// `with_queue_policy("fcfs")` override — identical trajectories prove
+/// both that fcfs selection ≡ pop_front and that the override plumbing
+/// adds no events, tiebreaks or arithmetic drift.
+#[test]
+fn fcfs_is_byte_identical_to_the_seed_engine_everywhere() {
+    let cfg = ClusterConfig::new(4, EngineConfig::default());
+    for workload in [
+        Workload::ChatBot,
+        Workload::Coder,
+        Workload::Agent,
+        Workload::ToolAgent,
+        Workload::Hotspot,
+    ] {
+        let trace = generate(&WorkloadSpec::preset(workload, 150, 7));
+        for name in policy::all_names() {
+            if *name == "random" {
+                continue; // load-oblivious coin flips; nothing to pin
+            }
+            let mut p1 = policy::build_default(name, &cfg.engine.profile, 256).unwrap();
+            let mut p2 = policy::build_default(name, &cfg.engine.profile, 256).unwrap();
+            let base = run_des(&cfg, &trace, p1.as_mut());
+            let explicit = run(
+                RunSpec::open_loop(&cfg, &trace).with_queue_policy("fcfs"),
+                p2.as_mut(),
+            );
+            assert_same_records(&base, &explicit, &format!("{name}/{workload:?}"));
+        }
+    }
+}
+
+fn flood_trace(n: usize, seed: u64) -> Trace {
+    generate_adversarial(&AdversarialSpec::preset(
+        AdversarialScenario::SharedPrefixFlood,
+        n,
+        seed,
+    ))
+}
+
+fn small_cluster(max_batch: usize) -> ClusterConfig {
+    let mut engine = EngineConfig::default();
+    engine.max_batch = max_batch;
+    ClusterConfig::new(2, engine)
+}
+
+/// Starvation freedom under adversarial long-prompt floods: with tiny
+/// batches the waiting queues run deep and srpt/ltr reorder hard, yet
+/// every admitted request must still reach its first token and complete
+/// exactly once. Only `ltr` pays for that with promotions — its
+/// starvation quantum visibly fires — while `srpt` (no aging) and the
+/// flood's finite length keep it conservation-safe here.
+#[test]
+fn reordering_policies_conserve_under_shared_prefix_flood() {
+    for seed in [1u64, 2, 3] {
+        let trace = flood_trace(96, seed);
+        let cfg = small_cluster(4);
+        let mut run_queue = |qp: &str| {
+            let mut p = policy::build_default("lmetric", &cfg.engine.profile, 256).unwrap();
+            run(
+                RunSpec::open_loop(&cfg, &trace).with_queue_policy(qp),
+                p.as_mut(),
+            )
+        };
+        let m_srpt = run_queue("srpt");
+        let m_ltr = run_queue("ltr");
+        for (qp, m) in [("srpt", &m_srpt), ("ltr", &m_ltr)] {
+            assert_eq!(
+                m.records.len(),
+                trace.requests.len(),
+                "seed {seed}: {qp} lost requests"
+            );
+            let mut ids: Vec<u64> = m.records.iter().map(|r| r.id).collect();
+            ids.sort();
+            ids.dedup();
+            assert_eq!(ids.len(), trace.requests.len(), "seed {seed}: {qp} duplicates");
+            for r in &m.records {
+                assert!(r.first_token_us > r.arrival_us, "seed {seed}: {qp} no first token");
+            }
+            // Every admission was wait-sampled exactly once.
+            let samples: u64 = m.queue.iter().map(|q| q.wait_samples).sum();
+            assert_eq!(samples, trace.requests.len() as u64, "seed {seed}: {qp} samples");
+            assert_eq!(m.total_stalled_steps(), 0, "seed {seed}: {qp} stalled");
+        }
+        assert_eq!(m_srpt.total_promotions(), 0, "srpt never promotes");
+        assert!(
+            m_ltr.total_promotions() > 0,
+            "seed {seed}: ltr must promote under a deep flood queue"
+        );
+    }
+}
+
+/// On a benign uniform trace with roomy batches nothing ever waits past
+/// its first admission opportunity, so the ltr starvation quantum must
+/// stay silent: zero promotions, identical conservation.
+#[test]
+fn ltr_promotions_stay_zero_on_uniform_traffic() {
+    let trace = generate(&WorkloadSpec::preset(Workload::ChatBot, 200, 11));
+    // max_batch above the whole trace: no batch can ever fill, so no
+    // request is ever passed over at admission — the zero-promotion
+    // claim is structural, not a tuning accident.
+    let mut engine = EngineConfig::default();
+    engine.max_batch = 256;
+    let cfg = ClusterConfig::new(4, engine);
+    let mut p = policy::build_default("lmetric", &cfg.engine.profile, 256).unwrap();
+    let m = run(
+        RunSpec::open_loop(&cfg, &trace).with_queue_policy("ltr"),
+        p.as_mut(),
+    );
+    assert_eq!(m.records.len(), 200);
+    assert_eq!(
+        m.total_promotions(),
+        0,
+        "no batch ever filled, so nothing was passed over and nothing starved"
+    );
+    assert_eq!(m.total_stalled_steps(), 0);
+}

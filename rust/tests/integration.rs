@@ -76,7 +76,7 @@ fn config_file_round_trip_drives_experiment() {
         "[cluster]\ninstances = 3\nprofile = \"dense-7b\"\n[trace]\nworkload = \"agent\"\nrequests = 200\n[policy]\nname = \"vllm\"\n",
     )
     .unwrap();
-    let exp = ExperimentConfig::from_doc(&doc);
+    let exp = ExperimentConfig::from_doc(&doc).unwrap();
     assert_eq!(exp.instances, 3);
     let mut pol = policy::build_default(&exp.policy, &ModelProfile::dense_7b(), 256).unwrap();
     let m = lmetric::cluster::run_experiment(&exp, pol.as_mut());

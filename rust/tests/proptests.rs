@@ -192,6 +192,7 @@ fn prop_engine_conservation() {
             chunk_budget: [64, 256, 512][rng.gen_range(0, 3) as usize],
             max_batch: rng.gen_range(1, 32) as usize,
             kv_capacity_blocks: [0, 256, 4096][rng.gen_range(0, 3) as usize],
+            queue_policy: ["fcfs", "srpt", "ltr"][rng.gen_range(0, 3) as usize].to_string(),
         };
         let chunk_budget = cfg.chunk_budget;
         let max_batch = cfg.max_batch;

@@ -53,6 +53,17 @@ outage window), requeue_rate and scale_ups are report-only: requeue
 conservation (zero lost requests) is asserted inside the bench binary
 itself.
 
+The `engine_queue` section (within-instance scheduling) gates
+ttft_p99_ratio_srpt — the coder-trace TTFT p99 under fcfs divided by
+the p99 under srpt, both replayed under the lmetric router in virtual
+time, so the ratio is deterministic run to run. It drops below baseline
+when the decode-length predictor or the srpt ordering regresses (srpt
+losing its tail win pushes the ratio toward 1). The raw p99s and the
+ltr promotion count are report-only: conservation and exactly-once wait
+sampling are asserted inside the bench binary, and the full-size
+router x engine-queue grid with the mean-TTFT asserts lives in
+fig81_engine_queue.
+
 The `router_scale` section (sharded concurrent data plane) gates the
 single-router decision rate — the read path every run exercises — with
 the same tolerate-then-gate shape: legacy baselines without the section,
@@ -123,6 +134,11 @@ FIELDS = [
     ("fleet", "recovery_ttft_p99", False),
     ("fleet", "requeue_rate", False),
     ("fleet", "scale_ups", False),
+    ("engine_queue", "ttft_p99_fcfs", False),
+    ("engine_queue", "ttft_p99_srpt", False),
+    ("engine_queue", "ttft_p99_ltr", False),
+    ("engine_queue", "ttft_p99_ratio_srpt", True),
+    ("engine_queue", "promotions_ltr", False),
 ]
 
 
