@@ -1,8 +1,8 @@
 """Deterministic fallback for the tiny `hypothesis` subset the tests use.
 
 The property tests in python/tests use `@given` with `st.sampled_from`,
-`st.integers`, `st.floats` and `st.lists`, plus `@settings(max_examples=..,
-deadline=None)`. When the real hypothesis package is installed (CI path)
+`st.integers`, `st.floats`, `st.lists` and `st.tuples`, plus
+`@settings(max_examples=.., deadline=None)`. When the real hypothesis package is installed (CI path)
 this module is never imported. In bare environments (offline container
 with only jax+pytest), conftest installs this shim so the property tests
 still execute: each `@given` test runs `max_examples` seeded-random cases.
@@ -37,6 +37,10 @@ def integers(min_value, max_value):
 
 def floats(min_value, max_value):
     return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def tuples(*elements):
+    return _Strategy(lambda rng: tuple(e.sample(rng) for e in elements))
 
 
 def lists(elements, min_size=0, max_size=10):
@@ -95,6 +99,7 @@ def install():
     st.integers = integers
     st.floats = floats
     st.lists = lists
+    st.tuples = tuples
     hyp.strategies = st
     hyp.__fallback__ = True
     sys.modules["hypothesis"] = hyp

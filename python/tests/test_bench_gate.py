@@ -3,8 +3,8 @@
 scripts/check_bench_regression.py is the CI step that (once the baseline
 is seeded) fails the build on a >20% req/s or steps/s regression. Its
 tolerate-then-gate behaviour for newer JSON sections (guard, sessions,
-overload, router_scale, fleet, engine_queue) must hold across baseline
-generations, so this suite runs the
+overload, router_scale, fleet, engine_queue, hetero) must hold across
+baseline generations, so this suite runs the
 actual script as a subprocess through the four paths that matter:
 
 1. unseeded baseline               -> report-only, exit 0
@@ -48,6 +48,7 @@ def bench_doc(
     with_router_scale=True,
     with_fleet=True,
     with_engine_queue=True,
+    with_hetero=True,
 ):
     doc = {
         "bench": "router_throughput",
@@ -129,6 +130,16 @@ def bench_doc(
             "ttft_p99_ratio_srpt": 1.6,
             "promotions_ltr": 120,
         }
+    if with_hetero:
+        doc["hetero"] = {
+            "slo_ttft_s": 0.6,
+            "slo_tpot_s": 0.06,
+            "goodput_fused": 0.9,
+            "goodput_two_layer": 0.75,
+            "goodput_ratio_fused_over_two_layer": 1.2,
+            "cold_model_loads": 30,
+            "model_evictions": 12,
+        }
     return doc
 
 
@@ -139,8 +150,8 @@ def test_path1_unseeded_baseline_is_report_only(tmp_path):
 
 
 def test_path2_seeded_legacy_baseline_tolerates_missing_sessions(tmp_path):
-    # Baseline predates the sessions, overload, router_scale, fleet AND
-    # engine_queue sections entirely; current carries all five.
+    # Baseline predates the sessions, overload, router_scale, fleet,
+    # engine_queue AND hetero sections entirely; current carries all six.
     legacy = bench_doc(
         seeded=True,
         with_sessions=False,
@@ -148,6 +159,7 @@ def test_path2_seeded_legacy_baseline_tolerates_missing_sessions(tmp_path):
         with_router_scale=False,
         with_fleet=False,
         with_engine_queue=False,
+        with_hetero=False,
     )
     proc = run_gate(tmp_path, bench_doc(req_per_s=990.0), legacy)
     assert proc.returncode == 0, proc.stdout + proc.stderr
@@ -156,6 +168,9 @@ def test_path2_seeded_legacy_baseline_tolerates_missing_sessions(tmp_path):
     assert "router_scale.decisions_per_s_r1: baseline unseeded" in proc.stdout
     assert "fleet.goodput_autoscaler: baseline unseeded" in proc.stdout
     assert "engine_queue.ttft_p99_ratio_srpt: baseline unseeded" in proc.stdout
+    assert (
+        "hetero.goodput_ratio_fused_over_two_layer: baseline unseeded" in proc.stdout
+    )
     assert "OK: within regression budget" in proc.stdout
 
 
@@ -232,6 +247,21 @@ def test_engine_queue_regression_trips_gate(tmp_path):
     assert proc.returncode == 1, proc.stdout + proc.stderr
     assert "engine_queue.ttft_p99_ratio_srpt" in proc.stdout
     assert "ttft_p99_ltr regressed" not in proc.stdout
+
+
+def test_hetero_ratio_collapse_trips_gate(tmp_path):
+    # Throughput fine, but the fused score lost its goodput edge over the
+    # two-layer baseline on the mixed fleet (cost-awareness or swap
+    # pricing regressed, ratio decaying toward 1): the gate must catch
+    # it. The swap counters are report-only and may swing without
+    # tripping anything.
+    current = bench_doc(req_per_s=1000.0)
+    current["hetero"]["goodput_ratio_fused_over_two_layer"] = 0.9
+    current["hetero"]["cold_model_loads"] = 500  # report-only
+    proc = run_gate(tmp_path, current, bench_doc(seeded=True))
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert "hetero.goodput_ratio_fused_over_two_layer" in proc.stdout
+    assert "cold_model_loads regressed" not in proc.stdout
 
 
 def test_quick_mode_mismatch_skips_gate(tmp_path):

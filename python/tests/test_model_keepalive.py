@@ -1,0 +1,204 @@
+"""Out-of-band mirror of the warm-model keepalive/eviction logic
+(rust/src/engine/models.rs::ModelSlots + evict_rank).
+
+This container has no Rust toolchain (same pattern as
+test_queue_predictor.py), so this suite re-implements, line for line,
+the multiplexed-model slot machinery whose exact draw order decides
+which model evicts on every cold load, and pins it three ways:
+
+* fixed rank vectors, byte-identical to the
+  `evict_rank_matches_pinned_vectors` unit test in models.rs — both
+  sides were generated from the same reference program, so a silent
+  edit to either implementation breaks one of the two suites;
+* a scripted eviction trace whose victim order exercises LRU, the
+  keepalive shield, the transient-load path, and the salted tiebreak;
+* fuzzed contracts: rank determinism, salt-domain separation from the
+  queue predictor's stream, and keepalive monotonicity (protecting a
+  model never makes it MORE evictable).
+
+Eviction order is the one piece of the multiplexing layer whose exact
+arithmetic shapes every multi-model replay (a different victim re-warms
+a different model, shifting every later swap), so drift here silently
+re-seeds fig91 and the hetero bench stage.
+"""
+
+from hypothesis import given, settings, strategies as st
+
+MASK = (1 << 64) - 1
+
+# b"MDLKEEP1"-flavored — the eviction tiebreak salt, verbatim from
+# models.rs::MODEL_EVICT_SALT.
+MODEL_EVICT_SALT = 0x4D444C4B45455031
+
+# The queue predictor's salt (test_queue_predictor.py) — the two streams
+# must never coincide.
+PREDICT_SALT = 0x5150524544313337
+
+
+def mix(h, x):
+    """Line-for-line port of engine/queue.rs::mix (the splitmix64
+    finalizer over `h ^ x * golden`, masked to 64 bits)."""
+    z = (h ^ ((x * 0x9E3779B97F4A7C15) & MASK)) & MASK
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return (z ^ (z >> 31)) & MASK
+
+
+def evict_rank(instance, model_id):
+    """Port of models.rs::evict_rank: double-mixed salted rank; lower
+    evicts first among exact last-use ties."""
+    return mix(mix(MODEL_EVICT_SALT, instance), model_id)
+
+
+class ModelSlots:
+    """Port of models.rs::ModelSlots (warm list as (model_id, last_used)
+    pairs in insertion order, swap_remove on eviction — the order the
+    Rust Vec sees, so victim indices line up)."""
+
+    def __init__(self, instance, max_warm, keepalive_us):
+        self.instance = instance
+        self.max_warm = max(max_warm, 1)
+        self.keepalive_us = keepalive_us
+        # Model 0 (the fleet default) ships warm at t=0.
+        self.warm = [(0, 0)]
+        self.cold_loads = 0
+        self.evictions = 0
+
+    def is_warm(self, model_id):
+        return any(m == model_id for m, _ in self.warm)
+
+    def touch(self, model_id, now_us):
+        """Returns the evicted model id, or None (warm hit, free slot,
+        or transient load against a fully protected set)."""
+        for i, (m, t) in enumerate(self.warm):
+            if m == model_id:
+                self.warm[i] = (m, max(t, now_us))
+                return None
+        self.cold_loads += 1
+        if len(self.warm) < self.max_warm:
+            self.warm.append((model_id, now_us))
+            return None
+        victim = self._pick_victim(now_us)
+        if victim is None:
+            return None  # transient: swap paid, protected set untouched
+        evicted, _ = self.warm[victim]
+        # Rust's Vec::swap_remove: move the last element into the hole.
+        self.warm[victim] = self.warm[-1]
+        self.warm.pop()
+        self.evictions += 1
+        self.warm.append((model_id, now_us))
+        return evicted
+
+    def _pick_victim(self, now_us):
+        expired = [
+            i
+            for i, (_, t) in enumerate(self.warm)
+            if max(now_us - t, 0) >= self.keepalive_us
+        ]
+        if not expired:
+            return None
+        return min(
+            expired,
+            key=lambda i: (self.warm[i][1], evict_rank(self.instance, self.warm[i][0])),
+        )
+
+
+# --- pinned rank vectors (== models.rs::evict_rank_matches_pinned_vectors)
+
+VECTORS = [
+    (0, 0, 0x42B014BC5E6A2794),
+    (0, 1, 0xEEB950446152D604),
+    (3, 0, 0x324D70DCABC059E9),
+    (3, 1, 0xDEC2698C7F699205),
+    (3, 2, 0x0814D9F10BECF373),
+    (7, 5, 0x302259ACF85C7604),
+    (63, 4294967295, 0xF197362F808E79DF),
+]
+
+
+def test_pinned_rank_vectors_match_rust():
+    for instance, model_id, expected in VECTORS:
+        got = evict_rank(instance, model_id)
+        assert got == expected, (instance, model_id, hex(got), hex(expected))
+
+
+def test_scripted_eviction_draw_order():
+    # The draw-order pin: a fixed touch script on instance 3 (2 warm
+    # slots, 1s keepalive) must evict in exactly this sequence. Any
+    # change to the rank stream, the LRU key, the keepalive arithmetic
+    # or swap_remove's slot shuffling reorders it.
+    s = ModelSlots(instance=3, max_warm=2, keepalive_us=1_000_000)
+    trace = []
+    trace.append(s.touch(1, 100))  # free slot: {0@0, 1@100}
+    trace.append(s.touch(1, 900_000))  # warm refresh
+    trace.append(s.touch(2, 1_100_000))  # 0 expired, 1 shielded -> evict 0
+    trace.append(s.touch(1, 1_200_000))  # warm refresh
+    trace.append(s.touch(3, 1_500_000))  # both shielded -> transient
+    trace.append(s.touch(3, 2_300_000))  # 2 expired (idle 1.2s) -> evict 2
+    trace.append(s.touch(2, 4_000_000))  # both expired, LRU is 1 -> evict 1
+    assert trace == [None, None, 0, None, None, 2, 1]
+    assert s.cold_loads == 5
+    assert s.evictions == 3
+    assert sorted(m for m, _ in s.warm) == [2, 3]
+
+
+def test_exact_tie_breaks_by_rank_not_insertion_order():
+    # Same last-use instant on instance 3: rank(3,0) < rank(3,1), so 0
+    # evicts even though it was inserted first AND vectors above pin the
+    # comparison the Rust side makes.
+    assert evict_rank(3, 0) < evict_rank(3, 1)
+    s = ModelSlots(instance=3, max_warm=2, keepalive_us=0)
+    s.touch(1, 0)  # {0@0, 1@0}
+    assert s.touch(2, 0) == 0
+    # And the mirrored tie on instance 0 goes the same way (rank(0,0) <
+    # rank(0,1)) — but via different rank values, per the vectors.
+    s0 = ModelSlots(instance=0, max_warm=2, keepalive_us=0)
+    s0.touch(1, 0)
+    assert s0.touch(2, 0) == 0
+
+
+# --- fuzzed contracts ---------------------------------------------------
+
+
+@settings(max_examples=200, deadline=None)
+@given(instance=st.integers(0, MASK), model_id=st.integers(0, (1 << 32) - 1))
+def test_rank_is_deterministic_and_salt_separated(instance, model_id):
+    r = evict_rank(instance, model_id)
+    assert r == evict_rank(instance, model_id)
+    # The eviction stream must not collapse onto the queue predictor's
+    # stream (distinct salts => distinct domains), nor onto the unsalted
+    # finalizer a naive port would produce.
+    assert r != mix(mix(PREDICT_SALT, instance), model_id)
+    assert r != mix(mix(0, instance), model_id)
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    keepalive=st.integers(0, 2_000_000),
+    touches=st.lists(
+        st.tuples(st.integers(0, 5), st.integers(0, 10_000_000)), max_size=30
+    ),
+)
+def test_protected_models_never_evict(keepalive, touches):
+    # Keepalive contract: whatever the interleaving, an evicted model was
+    # idle >= keepalive at eviction time (Ray's no-thrash guarantee).
+    s = ModelSlots(instance=7, max_warm=2, keepalive_us=keepalive)
+    now = 0
+    last_used = {0: 0}
+    for model_id, dt in touches:
+        now += dt
+        last_used.setdefault(model_id, now)
+        if s.is_warm(model_id):
+            last_used[model_id] = max(last_used[model_id], now)
+        evicted = s.touch(model_id, now)
+        if s.is_warm(model_id):
+            last_used[model_id] = max(last_used[model_id], now)
+        if evicted is not None:
+            assert now - last_used[evicted] >= keepalive
+
+
+def test_default_model_ships_warm():
+    s = ModelSlots(instance=0, max_warm=1, keepalive_us=0)
+    assert s.is_warm(0)
+    assert s.touch(0, 50) is None
+    assert s.cold_loads == 0

@@ -1,0 +1,169 @@
+//! Fig 91 — heterogeneous fleets & multi-model routing: does fusing
+//! placement and balance into one multiplicative score beat the
+//! classical two-layer architecture?
+//!
+//! Two panels, both pure virtual-time DES (deterministic run to run):
+//!
+//! A. **Degeneracy.** A uniform reference fleet on single-model traffic:
+//!    `lmetric_fused` and `place_then_balance` must replay plain
+//!    `lmetric` decision-for-decision (every penalty is 0 and P-time
+//!    divides by exactly 1.0). The no-regression panel: heterogeneity
+//!    support must cost the homogeneous paper setup nothing.
+//!
+//! B. **Mixed fleet, multiplexed models.** h100:2 + l40:6 serving a
+//!    4-model chatbot mix. The fused score prices the cold-model swap
+//!    into the same product as queue depth and hardware speed; the
+//!    two-layer baseline places cold models least-loaded, then balances
+//!    strictly inside the warm set. The acceptance claim lives here:
+//!    **fused SLO-goodput ≥ two-layer** — the RouteBalance observation
+//!    that the layer boundary itself costs goodput. `lmetric` (swap-
+//!    blind) and `vllm` (swap- and hardware-blind) calibrate how much
+//!    of the win is cost-awareness vs fusion.
+
+use lmetric::benchlib::{figure_banner, parallel_sweep, scaled};
+use lmetric::cluster::RunSpec;
+use lmetric::config::FleetSpec;
+use lmetric::engine::{InstanceProfile, ModelProfile};
+use lmetric::metrics::{render_table, save_results, ResultRow, RunMetrics, SloSpec};
+use lmetric::policy;
+
+const POLICIES: [&str; 4] = ["lmetric_fused", "place_then_balance", "lmetric", "vllm"];
+
+fn mean_ttft(m: &RunMetrics) -> f64 {
+    let ttfts = m.ttfts();
+    if ttfts.is_empty() {
+        f64::NAN
+    } else {
+        ttfts.iter().sum::<f64>() / ttfts.len() as f64
+    }
+}
+
+fn main() {
+    figure_banner(
+        "fig91",
+        "heterogeneous fleets: fused placement+balance vs two-layer routing",
+    );
+    let profile = ModelProfile::moe_30b();
+    let mut rows: Vec<ResultRow> = Vec::new();
+
+    // ---------------------------------------------------------------
+    // Panel A: degeneracy on the uniform single-model fleet.
+    // ---------------------------------------------------------------
+    println!("\n--- A: uniform fleet, single model (degeneracy) ---");
+    let mut a_exp = lmetric::config::ExperimentConfig::default();
+    a_exp.instances = 8;
+    a_exp.requests = scaled(1200);
+    let a_trace = lmetric::cluster::build_scaled_trace(&a_exp);
+    let a_cfg = lmetric::cluster::cluster_config(&a_exp);
+    let a_pols = ["lmetric", "lmetric_fused", "place_then_balance"];
+    let a_runs = parallel_sweep(&a_pols, |_, name| {
+        let mut p = policy::build_default(name, &profile, 256).unwrap();
+        lmetric::cluster::run(RunSpec::open_loop(&a_cfg, &a_trace), p.as_mut())
+    });
+    for (name, m) in a_pols.iter().zip(&a_runs) {
+        assert_eq!(m.records.len(), a_trace.requests.len(), "{name}: conservation");
+        assert_eq!(m.models.cold_loads, 0, "{name}: single-model must never swap");
+        rows.push(
+            ResultRow::from_metrics(&format!("uniform_{name}"), m)
+                .with("mean_ttft_s", mean_ttft(m)),
+        );
+    }
+    for (name, m) in a_pols.iter().zip(&a_runs).skip(1) {
+        let base = &a_runs[0];
+        assert_eq!(base.records.len(), m.records.len());
+        for (x, y) in base.records.iter().zip(&m.records) {
+            assert_eq!(
+                (x.id, x.instance, x.first_token_us, x.completion_us),
+                (y.id, y.instance, y.first_token_us, y.completion_us),
+                "{name} diverged from lmetric on the uniform fleet"
+            );
+        }
+        println!("{name:<20} replays lmetric decision-for-decision");
+    }
+
+    // ---------------------------------------------------------------
+    // Panel B: mixed fleet, 4 multiplexed models.
+    // ---------------------------------------------------------------
+    println!("\n--- B: h100:2 + l40:6 fleet, 4 models ---");
+    let mut b_exp = lmetric::config::ExperimentConfig::default();
+    b_exp.requests = scaled(1600);
+    b_exp.n_models = 4;
+    // 0.6x of the *reference* capacity: the mixed fleet's true capacity
+    // is ~0.84x reference (2x2.0 + 6x0.45 over 8 slots), so this runs
+    // hot enough that swap stalls and slow-slot queues cost goodput.
+    b_exp.rate_scale = 0.6;
+    b_exp.fleet = Some(
+        FleetSpec::empty()
+            .with_class(InstanceProfile::h100(), 2)
+            .with_class(InstanceProfile::l40(), 6),
+    );
+    b_exp.instances = 8;
+    let b_trace = lmetric::cluster::build_scaled_trace(&b_exp);
+    let b_cfg = lmetric::cluster::cluster_config(&b_exp);
+
+    // SLO the same way fig51/fig71 derive it: 3x the worst request of an
+    // uncongested probe on the same fleet.
+    let mut probe_exp = b_exp.clone();
+    probe_exp.rate_scale = 0.25;
+    probe_exp.requests = scaled(600);
+    let probe_trace = lmetric::cluster::build_scaled_trace(&probe_exp);
+    let mut probe = policy::build_default("lmetric_fused", &profile, 256).unwrap();
+    let m_probe = lmetric::cluster::run(
+        RunSpec::open_loop(&b_cfg, &probe_trace),
+        probe.as_mut(),
+    );
+    let worst_ttft = m_probe.ttfts().iter().copied().fold(0.0, f64::max);
+    let worst_tpot = m_probe.tpots().iter().copied().fold(0.0, f64::max);
+    let slo = SloSpec::new(3.0 * worst_ttft.max(1e-3), 3.0 * worst_tpot.max(1e-3));
+    println!("SLO: ttft <= {:.3}s, tpot <= {:.4}s", slo.ttft_s, slo.tpot_s);
+
+    let b_runs = parallel_sweep(&POLICIES, |_, name| {
+        let mut p = policy::build_default(name, &profile, 256).unwrap();
+        lmetric::cluster::run(
+            RunSpec::open_loop(&b_cfg, &b_trace).with_slo(slo),
+            p.as_mut(),
+        )
+    });
+    for (name, m) in POLICIES.iter().zip(&b_runs) {
+        assert_eq!(m.records.len(), b_trace.requests.len(), "{name}: conservation");
+        assert!(
+            m.models.cold_loads > 0,
+            "{name}: 4 models on 2-warm slots must pay cold loads"
+        );
+        println!(
+            "{name:<20} goodput {:.1}%  mean TTFT {:.4}s  cold loads {}  \
+             evictions {}  swap {:.2}s",
+            m.goodput_ratio(slo) * 100.0,
+            mean_ttft(m),
+            m.models.cold_loads,
+            m.models.evictions,
+            m.models.swap_us as f64 / 1e6
+        );
+        rows.push(
+            ResultRow::from_metrics(&format!("hetero_{name}"), m)
+                .with("mean_ttft_s", mean_ttft(m))
+                .with("goodput_ratio", m.goodput_ratio(slo))
+                .with("cold_model_loads", m.models.cold_loads as f64)
+                .with("model_evictions", m.models.evictions as f64)
+                .with("swap_s", m.models.swap_us as f64 / 1e6),
+        );
+    }
+    let at = |name: &str| POLICIES.iter().position(|p| *p == name).unwrap();
+    let fused = b_runs[at("lmetric_fused")].goodput_ratio(slo);
+    let layered = b_runs[at("place_then_balance")].goodput_ratio(slo);
+    println!(
+        "fused {:.1}% vs two-layer {:.1}% goodput (ratio {:.3})",
+        fused * 100.0,
+        layered * 100.0,
+        fused / layered.max(1e-9)
+    );
+    // The acceptance claim: fusing the layers never loses to them.
+    assert!(
+        fused >= layered,
+        "fused goodput ({fused:.4}) must be >= two-layer ({layered:.4}) on the mixed fleet"
+    );
+
+    println!("{}", render_table("fig91 heterogeneous fleet", &rows));
+    let path = save_results("fig91_hetero_fleet", &rows, &[]).expect("save results");
+    println!("saved {}", path.display());
+}

@@ -11,8 +11,10 @@
 //! overload trace on a static fleet vs the reactive autoscaler), the
 //! engine-queue stage (the coder trace at 0.95x capacity under fcfs /
 //! srpt / ltr within-instance scheduling — the TTFT-tail record the
-//! fcfs/srpt ratio gate holds), and the parallel sweep harness's
-//! speedup over serial execution.
+//! fcfs/srpt ratio gate holds), the heterogeneous-fleet stage (a mixed
+//! h100/l40 fleet multiplexing 4 models, fused placement+balance vs the
+//! two-layer baseline — the fused/two-layer goodput ratio gates), and
+//! the parallel sweep harness's speedup over serial execution.
 //!
 //! The JSON this bench writes is the perf-trajectory record: CI compares
 //! `des_end_to_end.req_per_s` (and, once seeded, the scale-smoke req/s
@@ -486,6 +488,66 @@ fn main() {
         q_runs[2].total_promotions()
     );
 
+    // Heterogeneous fleet: a mixed h100/l40 fleet multiplexing 4 models,
+    // fused placement+balance vs the two-layer baseline. The gated field
+    // is the fused/two-layer goodput ratio — virtual-time, deterministic
+    // run to run, and it collapses if the fused score stops pricing the
+    // swap (or the cost-aware P-time stops pricing the hardware).
+    // fig91_hetero_fleet is the full-size version with the uniform
+    // degeneracy asserts.
+    println!("\n--- heterogeneous fleet (fused vs two-layer) ---");
+    let mut hexp = lmetric::config::ExperimentConfig::default();
+    hexp.requests = scaled(1200);
+    hexp.n_models = 4;
+    hexp.rate_scale = 0.6;
+    hexp.fleet = Some(
+        lmetric::config::FleetSpec::empty()
+            .with_class(lmetric::engine::InstanceProfile::h100(), 1)
+            .with_class(lmetric::engine::InstanceProfile::l40(), 3),
+    );
+    hexp.instances = 4;
+    let htrace = lmetric::cluster::build_scaled_trace(&hexp);
+    let hcfg = lmetric::cluster::cluster_config(&hexp);
+    let mut hprobe_exp = hexp.clone();
+    hprobe_exp.rate_scale = 0.25;
+    hprobe_exp.requests = scaled(600);
+    let hprobe_trace = lmetric::cluster::build_scaled_trace(&hprobe_exp);
+    let mut hprobe_pol = policy::build_default("lmetric_fused", &profile, 256).unwrap();
+    let hm_probe = lmetric::cluster::run(
+        lmetric::cluster::RunSpec::open_loop(&hcfg, &hprobe_trace),
+        hprobe_pol.as_mut(),
+    );
+    let h_worst_ttft = hm_probe.ttfts().iter().copied().fold(0.0, f64::max);
+    let h_worst_tpot = hm_probe.tpots().iter().copied().fold(0.0, f64::max);
+    let hslo = lmetric::metrics::SloSpec::new(
+        3.0 * h_worst_ttft.max(1e-3),
+        3.0 * h_worst_tpot.max(1e-3),
+    );
+    let hnames: [&str; 2] = ["lmetric_fused", "place_then_balance"];
+    let h_runs = parallel_sweep(&hnames, |_, name| {
+        let mut p = policy::build_default(name, &profile, 256).unwrap();
+        lmetric::cluster::run(
+            lmetric::cluster::RunSpec::open_loop(&hcfg, &htrace).with_slo(hslo),
+            p.as_mut(),
+        )
+    });
+    for (name, hm) in hnames.iter().zip(&h_runs) {
+        assert_eq!(hm.records.len(), htrace.requests.len(), "{name}: hetero lost requests");
+        assert!(hm.models.cold_loads > 0, "{name}: multiplexing must pay cold loads");
+    }
+    let h_fused = h_runs[0].goodput_ratio(hslo);
+    let h_layered = h_runs[1].goodput_ratio(hslo);
+    let h_ratio = h_fused / h_layered.max(1e-9);
+    println!(
+        "h100:1+l40:3, 4 models at 0.6x: goodput fused {:.1}% vs two-layer {:.1}% \
+         (ratio {:.3}); cold loads fused {} vs layered {}",
+        h_fused * 100.0,
+        h_layered * 100.0,
+        h_ratio,
+        h_runs[0].models.cold_loads,
+        h_runs[1].models.cold_loads
+    );
+
     // Machine-readable output: CI uploads this as the perf-trajectory
     // record and gates on it (BENCH_router_throughput.json is the
     // committed baseline; override the output path with
@@ -616,6 +678,24 @@ fn main() {
                 (
                     "promotions_ltr",
                     Json::Num(q_runs[2].total_promotions() as f64),
+                ),
+            ]),
+        ),
+        (
+            "hetero",
+            Json::obj(vec![
+                ("slo_ttft_s", Json::Num(hslo.ttft_s)),
+                ("slo_tpot_s", Json::Num(hslo.tpot_s)),
+                ("goodput_fused", Json::Num(h_fused)),
+                ("goodput_two_layer", Json::Num(h_layered)),
+                ("goodput_ratio_fused_over_two_layer", Json::Num(h_ratio)),
+                (
+                    "cold_model_loads",
+                    Json::Num(h_runs[0].models.cold_loads as f64),
+                ),
+                (
+                    "model_evictions",
+                    Json::Num(h_runs[0].models.evictions as f64),
                 ),
             ]),
         ),

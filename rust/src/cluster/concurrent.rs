@@ -35,7 +35,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use super::des::{begin_step, ClusterConfig};
-use crate::engine::{EngineEvent, Instance, StepOutcome};
+use crate::engine::{EngineEvent, Instance, InstanceProfile, StepOutcome};
 use crate::metrics::RunMetrics;
 use crate::router::{GuardCounters, IndicatorFactory, Policy, RouteCtx};
 use crate::trace::{Trace, TraceRequest};
@@ -146,9 +146,16 @@ pub fn run_concurrent(
         .collect();
 
     let mut instances: Vec<Instance> = (0..n)
-        .map(|i| Instance::new(i, cfg.engine.clone()))
+        .map(|i| Instance::new(i, cfg.engine_for(i)))
         .collect();
     let mut factory = IndicatorFactory::new(n, cfg.engine.kv_capacity_blocks);
+    // Same arming rule as the serial core: uniform single-model runs
+    // keep the fleet vectors empty and replay bit-identically.
+    if !cfg.fleet.is_uniform() || reqs.iter().any(|tr| tr.req.model_id != 0) {
+        let profiles: Vec<InstanceProfile> =
+            (0..n).map(|i| cfg.fleet.profile_for(i).clone()).collect();
+        factory.set_fleet(&profiles, &cfg.engine.profile);
+    }
     let mut metrics = RunMetrics::new(n);
     let mut stepping = vec![false; n];
     let mut pending: Vec<Option<StepOutcome>> = (0..n).map(|_| None).collect();
@@ -330,6 +337,9 @@ pub fn run_concurrent(
     for inst in &instances {
         metrics.total_steps += inst.steps;
         metrics.admit_radix_walks += inst.kv().admit_radix_walks;
+        metrics.models.cold_loads += inst.models().cold_loads;
+        metrics.models.evictions += inst.models().evictions;
+        metrics.models.swap_us += inst.models().swap_us;
     }
     // Guard counters: sum each worker replica's delta since creation.
     let mut guard = GuardCounters::default();

@@ -24,8 +24,10 @@ use std::time::Instant;
 
 use super::lifecycle::{Autoscaler, FaultEvent, FaultPlan, FleetObs, PlannedFault, ScaleAction};
 use super::overload::AdmissionPolicy;
-use crate::config::ExperimentConfig;
-use crate::engine::{EngineConfig, EngineEvent, Instance, ModelProfile, StepOutcome};
+use crate::config::{ExperimentConfig, FleetSpec};
+use crate::engine::{
+    EngineConfig, EngineEvent, Instance, InstanceProfile, ModelProfile, StepOutcome,
+};
 use crate::metrics::{QueueCounters, RunMetrics, SloSpec};
 use crate::router::{IndicatorFactory, Policy};
 use crate::trace::{
@@ -38,6 +40,10 @@ use crate::util::stats::Windowed;
 pub struct ClusterConfig {
     pub n_instances: usize,
     pub engine: EngineConfig,
+    /// Hardware composition of the fleet. [`ClusterConfig::new`] keeps
+    /// the historical uniform-reference shape; [`with_fleet`]
+    /// (`ClusterConfig::with_fleet`) opts a run into heterogeneity.
+    pub fleet: FleetSpec,
 }
 
 impl ClusterConfig {
@@ -45,7 +51,33 @@ impl ClusterConfig {
         ClusterConfig {
             n_instances,
             engine,
+            fleet: FleetSpec::uniform(n_instances),
         }
+    }
+
+    /// Replace the fleet composition; `n_instances` follows the spec.
+    pub fn with_fleet(mut self, fleet: FleetSpec) -> Self {
+        self.n_instances = fleet.n_instances();
+        self.fleet = fleet;
+        self
+    }
+
+    /// The engine configuration for instance slot `i`: the base engine
+    /// with the slot's [`InstanceProfile`] applied (and its KV capacity
+    /// override, when the class declares one). Reference slots return
+    /// the base config untouched, so uniform fleets stay bit-identical
+    /// to the pre-fleet code path.
+    pub fn engine_for(&self, i: usize) -> EngineConfig {
+        let profile = self.fleet.profile_for(i);
+        if profile.is_reference() {
+            return self.engine.clone();
+        }
+        let mut e = self.engine.clone();
+        if let Some(kv) = profile.kv_capacity_blocks {
+            e.kv_capacity_blocks = kv;
+        }
+        e.instance = profile.clone();
+        e
     }
 }
 
@@ -436,9 +468,17 @@ fn run_des_core(
     // run's delta.
     let guard_start = policy.guard_counters().unwrap_or_default();
     let mut instances: Vec<Instance> = (0..n)
-        .map(|i| Instance::new(i, cfg.engine.clone()))
+        .map(|i| Instance::new(i, cfg.engine_for(i)))
         .collect();
     let mut factory = IndicatorFactory::new(n, cfg.engine.kv_capacity_blocks);
+    // Arm the router's fleet view only when heterogeneity or model
+    // multiplexing is actually in play: uniform single-model runs keep
+    // the factory's fleet vectors empty and replay bit-identically.
+    if !cfg.fleet.is_uniform() || reqs.iter().any(|tr| tr.req.model_id != 0) {
+        let profiles: Vec<InstanceProfile> =
+            (0..n).map(|i| cfg.fleet.profile_for(i).clone()).collect();
+        factory.set_fleet(&profiles, &cfg.engine.profile);
+    }
     let mut metrics = RunMetrics::new(n);
     let mut stepping = vec![false; n];
     let mut pending: Vec<Option<StepOutcome>> = (0..n).map(|_| None).collect();
@@ -565,7 +605,9 @@ fn run_des_core(
                 }
                 None => {
                     let i = instances.len();
-                    instances.push(Instance::new(i, cfg.engine.clone()));
+                    // Slots past the declared fleet inherit the last
+                    // class (both here and in the factory's mirror).
+                    instances.push(Instance::new(i, cfg.engine_for(i)));
                     factory.resize_instances(i + 1);
                     metrics.prefill_time.push(Windowed::new(10_000_000));
                     metrics.batch_size.push(Windowed::new(1_000_000));
@@ -924,6 +966,9 @@ fn run_des_core(
             wait_samples: inst.queue_wait_samples,
             wait_us_max: inst.queue_wait_us_max,
         });
+        metrics.models.cold_loads += inst.models().cold_loads;
+        metrics.models.evictions += inst.models().evictions;
+        metrics.models.swap_us += inst.models().swap_us;
     }
     metrics.guard = policy.guard_counters().unwrap_or_default().since(guard_start);
     metrics
@@ -1007,7 +1052,8 @@ pub fn run_experiment(exp: &ExperimentConfig, policy: &mut dyn Policy) -> RunMet
 pub fn build_scaled_trace(exp: &ExperimentConfig) -> Trace {
     let workload = Workload::by_name(&exp.workload)
         .unwrap_or_else(|| panic!("unknown workload {}", exp.workload));
-    let mut spec = WorkloadSpec::preset(workload, exp.requests, exp.seed);
+    let mut spec =
+        WorkloadSpec::preset(workload, exp.requests, exp.seed).with_n_models(exp.n_models);
     let probe = generate(&spec);
     let cfg = cluster_config(exp);
     let cap = profile_capacity_rps(&cfg.engine, &probe, 200);
@@ -1101,12 +1147,14 @@ pub fn cluster_config(exp: &ExperimentConfig) -> ClusterConfig {
         exp.instances,
         EngineConfig {
             profile,
+            instance: InstanceProfile::reference(),
             chunk_budget: exp.chunk_budget,
             max_batch: exp.max_batch,
             kv_capacity_blocks: exp.kv_capacity_blocks,
             queue_policy: exp.queue_policy.clone(),
         },
     )
+    .with_fleet(exp.effective_fleet())
 }
 
 #[cfg(test)]
@@ -1525,5 +1573,83 @@ mod tests {
             mean(&warm.cold_hit_samples),
             mean(&cold.cold_hit_samples)
         );
+    }
+
+    // ---- heterogeneous fleets / multi-model ------------------------------
+
+    /// The FleetSpec API contract: declaring the fleet as
+    /// `uniform(instances)` instead of the deprecated scalar must replay
+    /// every router policy's every decision byte-for-byte.
+    #[test]
+    fn uniform_fleetspec_replays_the_scalar_shim_byte_identical() {
+        for name in policy::all_names() {
+            let (mut exp, mut p_scalar) = small_exp(name);
+            exp.requests = 120;
+            let (_, mut p_fleet) = small_exp(name);
+            let trace = build_scaled_trace(&exp);
+            assert!(exp.fleet.is_none(), "scalar baseline must use the shim");
+            let cfg_scalar = cluster_config(&exp);
+            exp.fleet = Some(FleetSpec::uniform(exp.instances));
+            let cfg_fleet = cluster_config(&exp);
+            let a = run_des(&cfg_scalar, &trace, p_scalar.as_mut());
+            let b = run_des(&cfg_fleet, &trace, p_fleet.as_mut());
+            assert_same_records(&a, &b);
+            assert_eq!(b.models, crate::metrics::ModelCounters::default(), "{name}");
+        }
+    }
+
+    /// A mixed-hardware fleet conserves every request, and single-model
+    /// traffic never touches the swap path even with the fleet view armed.
+    #[test]
+    fn hetero_fleet_conserves_and_never_swaps_on_single_model_traffic() {
+        let (exp, mut p) = small_exp("lmetric");
+        let trace = build_scaled_trace(&exp);
+        let fleet = FleetSpec::empty()
+            .with_class(InstanceProfile::h100(), 1)
+            .with_class(InstanceProfile::l40(), 3);
+        let cfg = cluster_config(&exp).with_fleet(fleet);
+        let m = run_des(&cfg, &trace, p.as_mut());
+        assert_conserved(&m, 300);
+        assert_eq!(
+            m.models,
+            crate::metrics::ModelCounters::default(),
+            "model 0 ships warm everywhere"
+        );
+        // Heterogeneity must actually reach the engines and the router:
+        // the same trace on a uniform fleet cannot replay identically
+        // (step durations scale by 2.0 / 0.45 on the mixed one).
+        let (_, mut p_u) = small_exp("lmetric");
+        let uni = run_des(&cluster_config(&exp), &trace, p_u.as_mut());
+        let differs = m.duration_us != uni.duration_us
+            || m.records
+                .iter()
+                .zip(&uni.records)
+                .any(|(a, b)| (a.id, a.instance, a.completion_us) != (b.id, b.instance, b.completion_us));
+        assert!(differs, "mixed fleet replayed identically to uniform");
+    }
+
+    /// Multi-model traffic on a mixed fleet: the fused policy pays cold
+    /// loads (counted, swap time charged) and still conserves requests.
+    #[test]
+    fn multi_model_traffic_pays_counted_cold_loads() {
+        let (exp, _) = small_exp("lmetric");
+        let mut spec = WorkloadSpec::preset(Workload::ChatBot, 300, exp.seed).with_n_models(4);
+        spec.session_rate *= 0.5;
+        let trace = generate(&spec);
+        let fleet = FleetSpec::empty()
+            .with_class(InstanceProfile::h100(), 2)
+            .with_class(InstanceProfile::l40(), 2);
+        let cfg = cluster_config(&exp).with_fleet(fleet);
+        for name in ["lmetric_fused", "place_then_balance"] {
+            let mut p = policy::build(name, 0.0, &cfg.engine.profile, 256).unwrap();
+            let m = run_des(&cfg, &trace, p.as_mut());
+            assert_conserved(&m, 300);
+            assert!(m.models.cold_loads > 0, "{name}: 4 models on 2-warm slots must swap");
+            assert_eq!(
+                m.models.swap_us > 0,
+                m.models.cold_loads > 0,
+                "{name}: every cold load charges swap time"
+            );
+        }
     }
 }

@@ -22,6 +22,7 @@ use crate::metrics::RunMetrics;
 use crate::router::{IndicatorFactory, Policy};
 use crate::runtime::{ModelRuntime, Runtime, Tensor};
 use crate::trace::Trace;
+use crate::util::stats::Windowed;
 
 #[derive(Debug, Clone)]
 pub struct LiveClusterConfig {
@@ -32,11 +33,12 @@ pub struct LiveClusterConfig {
     /// Wall-clock speedup of trace arrival times (2.0 = replay 2× faster).
     pub time_scale: f64,
     /// Scripted lifecycle events, fired at `at_us / time_scale` of wall
-    /// clock. The live harness implements the DES-first subset: Crash
-    /// wipes an engine and requeues its work, Drain stops routing and
-    /// requeues the waiting queue (no deadline enforcement), Recover
-    /// re-opens the slot. ScaleUp is DES-only — the live fleet is fixed
-    /// at `n_instances` threads. Plans must leave at least one routable
+    /// clock. The live harness implements: Crash wipes an engine and
+    /// requeues its work, Drain stops routing and requeues the waiting
+    /// queue (no deadline enforcement), Recover re-opens the slot, and
+    /// ScaleUp spawns a fresh engine thread and widens the router's
+    /// routable mask (always cold — live state transfer doesn't exist;
+    /// `cold_kv` is ignored). Plans must leave at least one routable
     /// instance or displaced requests can never complete.
     pub faults: FaultPlan,
     /// Within-instance queue ordering (`engine::queue` name: fcfs /
@@ -532,11 +534,15 @@ pub fn run_live(
     trace: &Trace,
     policy: &mut dyn Policy,
 ) -> Result<RunMetrics> {
-    let n = cfg.n_instances;
+    let mut n = cfg.n_instances;
     // Guard counters accumulate over the policy's lifetime; report this
     // run's delta.
     let guard_start = policy.guard_counters().unwrap_or_default();
     let epoch = Instant::now();
+    // `ev_tx` stays alive for the whole run: a scheduled ScaleUp needs
+    // it to wire up engine threads spawned mid-run. Instance threads
+    // exit on Cmd::Shutdown, so channel disconnect is not the loop's
+    // termination signal anyway (completion counting is).
     let (ev_tx, ev_rx) = mpsc::channel::<(usize, Ev)>();
     let mut cmd_txs = Vec::new();
     let mut handles = Vec::new();
@@ -547,7 +553,6 @@ pub fn run_live(
         let etx = ev_tx.clone();
         handles.push(std::thread::spawn(move || instance_thread(i, c, epoch, rx, etx)));
     }
-    drop(ev_tx);
 
     // Router-side index stays unbounded (capacity 0): the per-instance
     // block budget reaches policies through the snapshot piggyback
@@ -629,7 +634,27 @@ pub fn run_live(
                         factory.set_routable(instance, true);
                         displaced.append(&mut parked);
                     }
-                    // ScaleUp (and same-state races) are DES-only.
+                    FaultEvent::ScaleUp { .. } => {
+                        // Always cold: live engines can't ship KV planes
+                        // to a machine that is still booting.
+                        metrics.fault.scale_ups += 1;
+                        let i = cmd_txs.len();
+                        let (tx, rx) = mpsc::channel::<Cmd>();
+                        cmd_txs.push(tx);
+                        let c = cfg.clone();
+                        let etx = ev_tx.clone();
+                        handles.push(std::thread::spawn(move || {
+                            instance_thread(i, c, epoch, rx, etx)
+                        }));
+                        n = cmd_txs.len();
+                        factory.resize_instances(n);
+                        metrics.prefill_time.push(Windowed::new(10_000_000));
+                        metrics.batch_size.push(Windowed::new(1_000_000));
+                        // The wider fleet can absorb anything parked
+                        // while zero instances were routable.
+                        displaced.append(&mut parked);
+                    }
+                    // Same-state races (e.g. crashing a dead slot) no-op.
                     _ => {}
                 }
                 next_fault += 1;
@@ -789,6 +814,7 @@ mod tests {
                 arrival_us: 0,
                 class_id: 0,
                 session_id: 0,
+                model_id: 0,
                 tokens: Arc::from(vec![1u32; 32].into_boxed_slice()),
                 output_len: 4,
                 block_hashes: Arc::from(vec![id + 1].into_boxed_slice()),
@@ -819,6 +845,7 @@ mod tests {
             arrival_us: 0,
             class_id: 0,
             session_id: 0,
+            model_id: 0,
             tokens: Arc::from(vec![1u32; 32].into_boxed_slice()),
             output_len: 32,
             block_hashes: Arc::from(vec![7u64].into_boxed_slice()),

@@ -28,6 +28,16 @@ use std::collections::HashSet;
 
 use crate::engine::ModelProfile;
 use crate::router::RouteCtx;
+use crate::util::Registry;
+
+/// The shared name-listing registry ([`crate::util::Registry`]). Note
+/// the historical wording: this builder says "valid policies", not
+/// "valid admission policies", and the migration keeps it byte-exact.
+const REGISTRY: Registry = Registry::new(
+    "admission policy",
+    "policies",
+    &["admit_all", "queue_shed", "ttft_shed", "session_shed"],
+);
 
 /// Decides, per arrival, whether the cluster accepts the request.
 /// Stateful (counters, session memory) and consulted in arrival order.
@@ -202,7 +212,7 @@ impl AdmissionPolicy for SessionAwareShed {
 
 /// Registry names, in display order. Mirrors `policy::all_names`.
 pub fn all_admission_names() -> Vec<&'static str> {
-    vec!["admit_all", "queue_shed", "ttft_shed", "session_shed"]
+    REGISTRY.names()
 }
 
 /// The parameter each named policy gets when the caller has no opinion:
@@ -232,12 +242,7 @@ pub fn build_admission(
             let inner = QueueDepthShed::new(param.max(1.0) as usize);
             Box::new(SessionAwareShed::new(Box::new(inner)))
         }
-        _ => {
-            return Err(format!(
-                "unknown admission policy '{name}'; valid policies: {}",
-                all_admission_names().join(", ")
-            ))
-        }
+        _ => return Err(REGISTRY.unknown(name)),
     })
 }
 
@@ -327,9 +332,18 @@ mod tests {
             assert!(p.is_ok(), "{name} must build");
         }
         let err = build_admission("yolo", 1.0, &profile).err().unwrap();
-        assert!(err.contains("yolo"));
+        assert_eq!(
+            err,
+            "unknown admission policy 'yolo'; valid policies: admit_all, \
+             queue_shed, ttft_shed, session_shed",
+            "pre-migration wording, byte-exact"
+        );
         for name in all_admission_names() {
             assert!(err.contains(name), "error must list {name}");
         }
+        assert_eq!(
+            all_admission_names(),
+            vec!["admit_all", "queue_shed", "ttft_shed", "session_shed"]
+        );
     }
 }

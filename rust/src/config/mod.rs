@@ -5,6 +5,123 @@
 
 use std::collections::BTreeMap;
 
+use crate::engine::InstanceProfile;
+
+/// Typed fleet composition: an ordered list of (hardware class, count)
+/// runs. Instance `i` belongs to the class whose cumulative count first
+/// covers `i`, so `"h100:2,l40:6"` means slots 0–1 are H100-class and
+/// 2–7 are L40-class.
+///
+/// [`FleetSpec::uniform`] is the compatibility point: it produces `n`
+/// reference-class slots, and every consumer (engine build, router
+/// indicator factory, DES/live/concurrent clusters) branches on
+/// [`InstanceProfile::is_reference`] back onto the exact pre-fleet code
+/// path — a uniform spec replays byte-identical to the scalar
+/// `instances` config it replaces (pinned by `cluster::des` tests).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSpec {
+    classes: Vec<(InstanceProfile, usize)>,
+}
+
+impl FleetSpec {
+    /// `n` reference-class slots — what the deprecated scalar `instances`
+    /// field desugars to.
+    pub fn uniform(n: usize) -> FleetSpec {
+        FleetSpec {
+            classes: vec![(InstanceProfile::reference(), n)],
+        }
+    }
+
+    /// Append `count` slots of `profile` (builder-style).
+    pub fn with_class(mut self, profile: InstanceProfile, count: usize) -> FleetSpec {
+        self.classes.push((profile, count));
+        self
+    }
+
+    /// An empty spec to build on with [`Self::with_class`].
+    pub fn empty() -> FleetSpec {
+        FleetSpec { classes: Vec::new() }
+    }
+
+    pub fn n_instances(&self) -> usize {
+        self.classes.iter().map(|(_, c)| c).sum()
+    }
+
+    /// The class of slot `i`. Indices past the declared fleet (scale-ups
+    /// widening the fleet at runtime) inherit the last class, so a
+    /// uniform fleet stays uniform under scale-up.
+    pub fn profile_for(&self, i: usize) -> &InstanceProfile {
+        let mut seen = 0usize;
+        for (p, count) in &self.classes {
+            seen += count;
+            if i < seen {
+                return p;
+            }
+        }
+        &self
+            .classes
+            .last()
+            .expect("FleetSpec must declare at least one class")
+            .0
+    }
+
+    /// True iff every slot is the reference class — the byte-identity
+    /// fast-path predicate.
+    pub fn is_uniform(&self) -> bool {
+        self.classes.iter().all(|(p, _)| p.is_reference())
+    }
+
+    /// Parse the `"class:count,class:count"` form used by the TOML
+    /// `[fleet] spec` key and the `--fleet` CLI flag. Unknown class names
+    /// fail with the class listing.
+    pub fn parse(spec: &str) -> Result<FleetSpec, String> {
+        let mut fleet = FleetSpec::empty();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (class, count) = part
+                .split_once(':')
+                .ok_or_else(|| format!("fleet spec '{part}': expected class:count"))?;
+            let profile = InstanceProfile::by_name(class.trim()).ok_or_else(|| {
+                format!(
+                    "unknown instance class '{}'; valid classes: {}",
+                    class.trim(),
+                    InstanceProfile::all_class_names().join(", ")
+                )
+            })?;
+            let count: usize = count
+                .trim()
+                .parse()
+                .map_err(|_| format!("fleet spec '{part}': count must be an integer"))?;
+            if count == 0 {
+                return Err(format!("fleet spec '{part}': count must be >= 1"));
+            }
+            fleet = fleet.with_class(profile, count);
+        }
+        if fleet.classes.is_empty() {
+            return Err("fleet spec declares no instances".to_string());
+        }
+        Ok(fleet)
+    }
+
+    /// The canonical `"class:count,…"` rendering (round-trips
+    /// [`Self::parse`]).
+    pub fn summary(&self) -> String {
+        self.classes
+            .iter()
+            .map(|(p, c)| format!("{}:{c}", p.class))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// The declared (class, count) runs.
+    pub fn classes(&self) -> &[(InstanceProfile, usize)] {
+        &self.classes
+    }
+}
+
 /// Parsed `[section] key = value` document. Values keep their raw string;
 /// typed accessors parse on demand.
 #[derive(Debug, Default, Clone)]
@@ -72,7 +189,15 @@ impl ConfigDoc {
 /// policy. Every bench and CLI subcommand builds one of these.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
+    /// **Deprecated shim** — the scalar fleet size, kept because every
+    /// pre-fleet bench and config sets it. It desugars to
+    /// [`FleetSpec::uniform`]`(instances)` (pinned byte-identical by
+    /// `cluster::des` tests) whenever [`Self::fleet`] is `None`. New code
+    /// should set `fleet` (TOML `[fleet] spec`, CLI `--fleet`) instead.
     pub instances: usize,
+    /// Heterogeneous fleet composition; `None` = uniform reference fleet
+    /// of `instances` slots (see [`Self::effective_fleet`]).
+    pub fleet: Option<FleetSpec>,
     pub profile: String,
     pub kv_capacity_blocks: usize,
     pub chunk_budget: usize,
@@ -90,12 +215,17 @@ pub struct ExperimentConfig {
     /// Within-instance queue ordering (`engine::queue` name:
     /// fcfs / srpt / ltr).
     pub queue_policy: String,
+    /// Distinct models multiplexed by the trace (1 = single-model; the
+    /// trace assigns `model_id = class_id % n_models`, which draws zero
+    /// RNG values so committed single-model traces replay unchanged).
+    pub n_models: usize,
 }
 
 impl Default for ExperimentConfig {
     fn default() -> Self {
         ExperimentConfig {
             instances: 16,
+            fleet: None,
             profile: "moe-30b".into(),
             kv_capacity_blocks: 8192,
             chunk_budget: 256,
@@ -107,11 +237,20 @@ impl Default for ExperimentConfig {
             policy: "lmetric".into(),
             param: 0.7,
             queue_policy: "fcfs".into(),
+            n_models: 1,
         }
     }
 }
 
 impl ExperimentConfig {
+    /// The fleet this experiment runs on: the typed spec when one was
+    /// given, else the deprecated scalar desugared to a uniform fleet.
+    pub fn effective_fleet(&self) -> FleetSpec {
+        self.fleet
+            .clone()
+            .unwrap_or_else(|| FleetSpec::uniform(self.instances))
+    }
+
     /// Build from a parsed document, validating the invariants the
     /// engine cannot express: `chunk_budget == 0` livelocks a busy
     /// instance (the engine debug-asserts; here it is a proper error),
@@ -148,6 +287,16 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_f64("trace", "rate_scale") {
             c.rate_scale = v;
+        }
+        if let Some(v) = doc.get_usize("trace", "n_models") {
+            c.n_models = v.max(1);
+        }
+        if let Some(v) = doc.get("fleet", "spec") {
+            let fleet = FleetSpec::parse(v)?;
+            // Keep the deprecated scalar coherent with the typed spec so
+            // pre-fleet readers (benches, usage text) see the right size.
+            c.instances = fleet.n_instances();
+            c.fleet = Some(fleet);
         }
         if let Some(v) = doc.get("policy", "name") {
             c.policy = v.to_string();
@@ -249,5 +398,61 @@ param = 0.55
         let doc = ConfigDoc::parse("[s]\na = true\nb = no").unwrap();
         assert_eq!(doc.get_bool("s", "a"), Some(true));
         assert_eq!(doc.get_bool("s", "b"), Some(false));
+    }
+
+    #[test]
+    fn fleet_spec_parses_and_maps_slots_to_classes() {
+        let f = FleetSpec::parse("h100:2, l40:6").unwrap();
+        assert_eq!(f.n_instances(), 8);
+        assert!(!f.is_uniform());
+        assert_eq!(f.profile_for(0).class, "h100");
+        assert_eq!(f.profile_for(1).class, "h100");
+        assert_eq!(f.profile_for(2).class, "l40");
+        assert_eq!(f.profile_for(7).class, "l40");
+        // Scale-ups past the declared fleet inherit the last class.
+        assert_eq!(f.profile_for(20).class, "l40");
+        assert_eq!(f.summary(), "h100:2,l40:6");
+        assert_eq!(FleetSpec::parse(&f.summary()).unwrap(), f);
+    }
+
+    #[test]
+    fn fleet_spec_uniform_matches_the_scalar_shim() {
+        let f = FleetSpec::uniform(16);
+        assert!(f.is_uniform());
+        assert_eq!(f.n_instances(), 16);
+        assert!(f.profile_for(0).is_reference());
+        assert!(f.profile_for(99).is_reference());
+        // The deprecated scalar desugars to exactly this.
+        let exp = ExperimentConfig::default();
+        assert_eq!(exp.effective_fleet(), FleetSpec::uniform(exp.instances));
+        assert_eq!(FleetSpec::parse("default:16").unwrap().n_instances(), 16);
+    }
+
+    #[test]
+    fn fleet_spec_rejects_bad_input_with_class_listing() {
+        let err = FleetSpec::parse("tpu9:4").err().unwrap();
+        assert!(err.contains("tpu9"), "{err}");
+        for name in crate::engine::InstanceProfile::all_class_names() {
+            assert!(err.contains(name), "error lists '{name}': {err}");
+        }
+        assert!(FleetSpec::parse("h100").is_err(), "missing count");
+        assert!(FleetSpec::parse("h100:x").is_err(), "bad count");
+        assert!(FleetSpec::parse("h100:0").is_err(), "zero count");
+        assert!(FleetSpec::parse("").is_err(), "empty spec");
+    }
+
+    #[test]
+    fn experiment_from_doc_reads_fleet_table() {
+        let doc =
+            ConfigDoc::parse("[fleet]\nspec = \"h100:2,l40:2\"\n[trace]\nn_models = 3").unwrap();
+        let c = ExperimentConfig::from_doc(&doc).unwrap();
+        let fleet = c.fleet.clone().unwrap();
+        assert_eq!(fleet.n_instances(), 4);
+        assert_eq!(c.instances, 4, "scalar shim tracks the typed spec");
+        assert_eq!(c.n_models, 3);
+        assert_eq!(c.effective_fleet(), fleet);
+        // Unknown classes surface the listing error at config build.
+        let bad = ConfigDoc::parse("[fleet]\nspec = \"warp:1\"").unwrap();
+        assert!(ExperimentConfig::from_doc(&bad).is_err());
     }
 }

@@ -178,6 +178,12 @@ pub struct Request {
     /// policies ([`crate::policy::StickySession`],
     /// [`crate::policy::SessionBalance`]) key their affinity state on it.
     pub session_id: u64,
+    /// Model the request targets (0 = the fleet's default model, which
+    /// every instance holds warm from the start). Multi-model traces
+    /// multiplex several models over one fleet: serving a request whose
+    /// model is cold on the chosen instance costs a profile-scaled weight
+    /// swap (see [`crate::engine`]'s model slots).
+    pub model_id: u32,
     /// Prompt token ids (shared, immutable after trace build).
     pub tokens: Arc<[u32]>,
     /// Number of output tokens the request will generate (from the trace;

@@ -122,6 +122,151 @@ impl ModelProfile {
     }
 }
 
+/// Hardware class of one fleet slot.
+///
+/// A heterogeneous fleet mixes device classes (H100-class, L40-class, …)
+/// that run the *same* [`ModelProfile`] at different speeds. The profile
+/// captures the model's cost shape; the instance profile captures the
+/// slot's throughput relative to the reference device the profile was
+/// calibrated on. The reference class multiplies nothing — every scale is
+/// exactly `1.0` and each derived cost divides by `1.0`, which is an
+/// IEEE-754 identity, so uniform fleets replay byte-identical to the
+/// pre-fleet code paths (asserted in `cluster::des` tests).
+#[derive(Debug, Clone, PartialEq)]
+pub struct InstanceProfile {
+    /// Registry name of the class ("default", "h100", "l40", "a10").
+    pub class: &'static str,
+    /// Prefill-side speed relative to the reference device (2.0 = twice
+    /// as fast; prefill-bound costs divide by this).
+    pub prefill_scale: f64,
+    /// Decode-side speed relative to the reference device.
+    pub decode_scale: f64,
+    /// KV block budget override (`None` = keep the experiment's budget).
+    pub kv_capacity_blocks: Option<usize>,
+    /// Weight-paging cost of a cold model load on the *reference* device,
+    /// µs. Charged scaled by `prefill_scale` (see [`Self::swap_cost_us`])
+    /// when a request for a cold model is admitted.
+    pub model_swap_us: u64,
+    /// How many models this slot can hold warm at once.
+    pub max_warm_models: usize,
+    /// A warm model is preferred for eviction only after it has been idle
+    /// this long (Ray-Serve-style multiplexing keepalive).
+    pub model_keepalive_us: u64,
+}
+
+impl InstanceProfile {
+    /// The reference class: the device every pre-fleet experiment
+    /// implicitly assumed. All scales are exactly 1.0.
+    pub fn reference() -> InstanceProfile {
+        InstanceProfile {
+            class: "default",
+            prefill_scale: 1.0,
+            decode_scale: 1.0,
+            kv_capacity_blocks: None,
+            model_swap_us: 2_000_000,
+            max_warm_models: 2,
+            model_keepalive_us: 10_000_000,
+        }
+    }
+
+    /// H100-class: roughly 2× the reference on prefill GEMMs, 1.6× on
+    /// memory-bound decode, with a deeper KV budget.
+    pub fn h100() -> InstanceProfile {
+        InstanceProfile {
+            class: "h100",
+            prefill_scale: 2.0,
+            decode_scale: 1.6,
+            kv_capacity_blocks: Some(12_288),
+            ..Self::reference()
+        }
+    }
+
+    /// L40-class: about half the reference, shallower KV budget.
+    pub fn l40() -> InstanceProfile {
+        InstanceProfile {
+            class: "l40",
+            prefill_scale: 0.45,
+            decode_scale: 0.55,
+            kv_capacity_blocks: Some(6_144),
+            ..Self::reference()
+        }
+    }
+
+    /// A10-class: the small spot-market device.
+    pub fn a10() -> InstanceProfile {
+        InstanceProfile {
+            class: "a10",
+            prefill_scale: 0.25,
+            decode_scale: 0.30,
+            kv_capacity_blocks: Some(4_096),
+            max_warm_models: 1,
+            ..Self::reference()
+        }
+    }
+
+    /// Class registry names, in display order.
+    pub fn all_class_names() -> Vec<&'static str> {
+        vec!["default", "h100", "l40", "a10"]
+    }
+
+    pub fn by_name(name: &str) -> Option<InstanceProfile> {
+        match name {
+            "default" => Some(Self::reference()),
+            "h100" => Some(Self::h100()),
+            "l40" => Some(Self::l40()),
+            "a10" => Some(Self::a10()),
+            _ => None,
+        }
+    }
+
+    /// True iff this slot runs at reference speed with the experiment's
+    /// KV budget — the predicate the byte-identity fast paths branch on.
+    pub fn is_reference(&self) -> bool {
+        self.prefill_scale == 1.0
+            && self.decode_scale == 1.0
+            && self.kv_capacity_blocks.is_none()
+    }
+
+    /// Cold-load swap cost on this slot, µs: the reference paging cost
+    /// scaled by the slot's prefill-side bandwidth.
+    pub fn swap_cost_us(&self) -> u64 {
+        (self.model_swap_us as f64 / self.prefill_scale).ceil() as u64
+    }
+
+    /// Duration of one engine step on this slot, µs: the reference
+    /// profile's terms with prefill work divided by `prefill_scale` and
+    /// decode work by `decode_scale` (the fixed overhead is device-local
+    /// scheduling and does not scale). With both scales at 1.0 this
+    /// reproduces [`ModelProfile::step_us`] bit-for-bit, but the engine's
+    /// hot path never relies on that — it branches on
+    /// [`Self::is_reference`] and calls the unscaled method directly.
+    pub fn step_us(
+        &self,
+        p: &ModelProfile,
+        prefill_tokens: usize,
+        prefill_ctx_tok_kctx: f64,
+        decode_seqs: usize,
+        decode_ctx_tokens: usize,
+    ) -> f64 {
+        if prefill_tokens == 0 && decode_seqs == 0 {
+            return 0.0;
+        }
+        let mut t = p.step_fixed_us;
+        if prefill_tokens > 0 {
+            t += (prefill_tokens as f64 * p.prefill_us_per_token
+                + prefill_ctx_tok_kctx * p.prefill_attn_us_per_tok_kctx)
+                / self.prefill_scale;
+        }
+        if decode_seqs > 0 {
+            t += (p.decode_base_us
+                + decode_seqs as f64 * p.decode_us_per_seq
+                + decode_ctx_tokens as f64 * p.decode_us_per_kv_token)
+                / self.decode_scale;
+        }
+        t
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -182,5 +327,45 @@ mod tests {
         assert!(ModelProfile::by_name("dense-7b").is_some());
         assert!(ModelProfile::by_name("moe-30b").is_some());
         assert!(ModelProfile::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn instance_classes_by_name() {
+        for name in InstanceProfile::all_class_names() {
+            let ip = InstanceProfile::by_name(name).expect(name);
+            assert_eq!(ip.class, name);
+            assert!(ip.prefill_scale > 0.0 && ip.decode_scale > 0.0);
+        }
+        assert!(InstanceProfile::by_name("tpu9").is_none());
+        assert!(InstanceProfile::reference().is_reference());
+        assert!(!InstanceProfile::h100().is_reference());
+    }
+
+    #[test]
+    fn reference_scaled_step_is_bit_identical() {
+        let p = ModelProfile::moe_30b();
+        let r = InstanceProfile::reference();
+        for (pt, kctx, ds, dc) in
+            [(0usize, 0.0f64, 0usize, 0usize), (64, 6.4, 0, 0), (0, 0.0, 8, 1600), (256, 100.0, 32, 9000)]
+        {
+            let a = p.step_us(pt, kctx, ds, dc);
+            let b = r.step_us(&p, pt, kctx, ds, dc);
+            assert_eq!(a.to_bits(), b.to_bits(), "pt={pt} ds={ds}");
+        }
+        assert_eq!(r.swap_cost_us(), r.model_swap_us);
+    }
+
+    #[test]
+    fn faster_class_runs_the_step_faster() {
+        let p = ModelProfile::moe_30b();
+        let fast = InstanceProfile::h100();
+        let slow = InstanceProfile::l40();
+        let reference = p.step_us(256, 100.0, 32, 9000);
+        assert!(fast.step_us(&p, 256, 100.0, 32, 9000) < reference);
+        assert!(slow.step_us(&p, 256, 100.0, 32, 9000) > reference);
+        // Swap cost scales with prefill bandwidth.
+        assert!(fast.swap_cost_us() < slow.swap_cost_us());
+        // Idle steps stay free on every class.
+        assert_eq!(fast.step_us(&p, 0, 0.0, 0, 0), 0.0);
     }
 }

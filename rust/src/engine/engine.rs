@@ -14,13 +14,18 @@ use std::sync::Arc;
 use crate::core::{Request, RequestRecord, BLOCK_TOKENS};
 use crate::kvcache::RadixTree;
 
-use super::cost::ModelProfile;
+use super::cost::{InstanceProfile, ModelProfile};
+use super::models::ModelSlots;
 use super::queue::{self, QueueEntry, QueuePolicy};
 use super::InstanceSnapshot;
 
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
     pub profile: ModelProfile,
+    /// Hardware class of this slot (prefill/decode speed relative to the
+    /// reference device, warm-model slots). The reference class keeps
+    /// every cost path bit-identical to the pre-fleet engine.
+    pub instance: InstanceProfile,
     /// Max new prefill tokens co-scheduled per step (chunked prefill).
     /// Must be >= 1: a zero budget livelocks a busy instance (rejected at
     /// config build and debug-asserted at construction).
@@ -38,6 +43,7 @@ impl Default for EngineConfig {
     fn default() -> Self {
         EngineConfig {
             profile: ModelProfile::moe_30b(),
+            instance: InstanceProfile::reference(),
             chunk_budget: 256,
             max_batch: 64,
             kv_capacity_blocks: 8192,
@@ -133,6 +139,12 @@ pub struct Instance {
     /// Reusable entry buffer handed to the queue policy at admission
     /// (no per-admission allocation in steady state).
     entries_scratch: Vec<QueueEntry>,
+    /// Warm-model slots (multi-model multiplexing). Model 0 ships warm,
+    /// so single-model traces never touch the swap path.
+    models: ModelSlots,
+    /// Swap time charged by admissions since the last step, added to
+    /// that step's duration (0 on every step of a single-model trace).
+    pending_swap_us: u64,
     /// Lifetime counters.
     pub steps: u64,
     pub busy_us: u64,
@@ -162,6 +174,7 @@ impl Instance {
         );
         let kv = RadixTree::new(cfg.kv_capacity_blocks);
         let queue = queue::build(&cfg.queue_policy).unwrap_or_else(|e| panic!("{e}"));
+        let models = ModelSlots::new(id, &cfg.instance);
         Instance {
             id,
             cfg,
@@ -173,6 +186,8 @@ impl Instance {
             events_scratch: Vec::new(),
             queue,
             entries_scratch: Vec::new(),
+            models,
+            pending_swap_us: 0,
             steps: 0,
             busy_us: 0,
             total_prefill_tokens: 0,
@@ -200,6 +215,11 @@ impl Instance {
     /// The active within-instance queue policy name.
     pub fn queue_policy_name(&self) -> &'static str {
         self.queue.name()
+    }
+
+    /// The instance's warm-model slots (swap counters, warm-set reads).
+    pub fn models(&self) -> &ModelSlots {
+        &self.models
     }
 
     /// Route a request to this instance (enters the waiting queue).
@@ -320,6 +340,11 @@ impl Instance {
         self.queued_prefill_tokens = 0;
         self.total_context_tokens = 0;
         self.kv = RadixTree::new(self.cfg.kv_capacity_blocks);
+        // A crashed process loses its resident weights along with its
+        // KV$: only the default model survives a restart (counters are
+        // lifetime totals and persist for the end-of-run harvest).
+        self.models.reset_warm();
+        self.pending_swap_us = 0;
         debug_assert_eq!(self.snapshot(), self.recompute_snapshot());
         out
     }
@@ -359,6 +384,11 @@ impl Instance {
             // read off the *selected* seq (not the queue front), so the
             // account stays exact under any admission order.
             let est_remaining = seq.prefill_remaining();
+            // Multi-model multiplexing: admitting a cold model pays a
+            // profile-scaled weight swap, charged to the admitting step.
+            // Model 0 is always warm, so single-model traces never enter
+            // the swap path and replay byte-identical.
+            self.pending_swap_us += self.models.touch(seq.req.model_id, now_us);
             let out = self.kv.admit_chain(&seq.req.block_hashes, now_us);
             seq.pinned_blocks = out.resident;
             seq.cached_tokens = (out.hit_blocks * BLOCK_TOKENS).min(seq.req.input_len());
@@ -426,14 +456,34 @@ impl Instance {
         }
 
         // ---- cost ---------------------------------------------------
+        // The reference class takes the original unscaled arithmetic
+        // path, so uniform fleets replay byte-identical by construction
+        // (not by trusting `x / 1.0` identities — though those hold too).
         let p = &self.cfg.profile;
-        let total_us = p.step_us(prefill_tokens, prefill_attn_tok_kctx, decode_seqs, decode_ctx);
-        let prefill_only_us = if prefill_tokens > 0 {
-            p.step_us(prefill_tokens, prefill_attn_tok_kctx, 0, 0) - p.step_fixed_us
+        let (total_us, prefill_only_us) = if self.cfg.instance.is_reference() {
+            let total =
+                p.step_us(prefill_tokens, prefill_attn_tok_kctx, decode_seqs, decode_ctx);
+            let pre = if prefill_tokens > 0 {
+                p.step_us(prefill_tokens, prefill_attn_tok_kctx, 0, 0) - p.step_fixed_us
+            } else {
+                0.0
+            };
+            (total, pre)
         } else {
-            0.0
+            let ip = &self.cfg.instance;
+            let total =
+                ip.step_us(p, prefill_tokens, prefill_attn_tok_kctx, decode_seqs, decode_ctx);
+            let pre = if prefill_tokens > 0 {
+                ip.step_us(p, prefill_tokens, prefill_attn_tok_kctx, 0, 0) - p.step_fixed_us
+            } else {
+                0.0
+            };
+            (total, pre)
         };
-        let duration_us = total_us.ceil() as u64;
+        // Cold-model swaps charged by this step's admissions extend the
+        // step (always 0 on single-model traces).
+        let swap_us = std::mem::take(&mut self.pending_swap_us);
+        let duration_us = total_us.ceil() as u64 + swap_us;
         let end_us = now_us + duration_us;
 
         // ---- apply --------------------------------------------------
@@ -536,6 +586,7 @@ mod tests {
                 arrival_us: 0,
                 class_id: class,
                 session_id: 0,
+                model_id: 0,
                 tokens: tokens.into(),
                 output_len: output,
                 block_hashes: hashes.into(),
@@ -728,6 +779,7 @@ mod tests {
             let mut rng = crate::util::Rng::new(0x5eed ^ seed);
             let cfg = EngineConfig {
                 profile: ModelProfile::moe_30b(),
+                instance: InstanceProfile::reference(),
                 chunk_budget: [64, 256][seed as usize % 2],
                 max_batch: 1 + (seed as usize % 7),
                 kv_capacity_blocks: [0, 96, 1024][(seed as usize / 3) % 3],
@@ -906,6 +958,59 @@ mod tests {
         inst.enqueue(r, f, 10);
         let (recs, _) = drain(&mut inst, 10);
         assert_eq!(recs.len(), 1);
+    }
+
+    #[test]
+    fn slower_class_stretches_the_run() {
+        let run_end = |instance: InstanceProfile| -> u64 {
+            let cfg = EngineConfig {
+                instance,
+                ..Default::default()
+            };
+            let mut inst = Instance::new(0, cfg);
+            let (r, f) = mk_req(1, 512, 40, 0);
+            inst.enqueue(r, f, 0);
+            drain(&mut inst, 0).1
+        };
+        let reference = run_end(InstanceProfile::reference());
+        assert!(run_end(InstanceProfile::h100()) < reference);
+        assert!(run_end(InstanceProfile::l40()) > reference);
+    }
+
+    #[test]
+    fn cold_model_swap_extends_the_admitting_step() {
+        let mut inst = Instance::new(0, EngineConfig::default());
+        let swap = inst.cfg.instance.swap_cost_us();
+        // Model 0 (warm) first: baseline step length.
+        let (r0, f0) = mk_req(1, 256, 1, 0);
+        inst.enqueue(r0, f0, 0);
+        let base = inst.step(0).unwrap().duration_us;
+        assert_eq!(inst.models().cold_loads, 0);
+        let (recs, end) = drain(&mut inst, base);
+        assert_eq!(recs.len(), 1);
+        // Same-shape request (distinct class: no KV$ hit skews the
+        // compute) against a cold model: the admitting step carries the
+        // full swap on top of its compute.
+        let (mut r1, f1) = mk_req(2, 256, 1, 1);
+        r1.model_id = 5;
+        inst.enqueue(r1, f1, end);
+        let cold = inst.step(end).unwrap().duration_us;
+        assert!(
+            cold >= base + swap,
+            "cold admission ({cold}) must pay the {swap}us swap over base ({base})"
+        );
+        assert_eq!(inst.models().cold_loads, 1);
+        assert_eq!(inst.models().swap_us, swap);
+        assert!(inst.models().is_warm(5));
+        let _ = drain(&mut inst, end + cold);
+        // Warm now: back to compute-only pricing.
+        let (mut r2, f2) = mk_req(3, 256, 1, 2);
+        r2.model_id = 5;
+        let t = 10 * (end + cold);
+        inst.enqueue(r2, f2, t);
+        let warm = inst.step(t).unwrap().duration_us;
+        assert!(warm < base + swap, "warm model must not re-pay the swap");
+        assert_eq!(inst.models().cold_loads, 1);
     }
 
     #[test]

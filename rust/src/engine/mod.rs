@@ -6,10 +6,12 @@
 
 mod cost;
 mod engine;
+pub mod models;
 pub mod queue;
 
-pub use cost::ModelProfile;
+pub use cost::{InstanceProfile, ModelProfile};
 pub use engine::{EngineConfig, EngineEvent, Instance, StepOutcome};
+pub use models::ModelSlots;
 pub use queue::{QueueEntry, QueuePolicy};
 
 /// Per-instance indicators, as exported to the router piggybacked on

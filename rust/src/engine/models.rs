@@ -1,0 +1,259 @@
+//! Warm-model slots: Ray-Serve-style model multiplexing for one fleet
+//! slot.
+//!
+//! A multi-model fleet serves several models over shared instances. Each
+//! instance holds at most `max_warm_models` warm (weights resident);
+//! serving a cold model first pays a profile-scaled weight swap
+//! ([`crate::engine::InstanceProfile::swap_cost_us`]). Eviction follows
+//! the Ray multiplexed-replica scheduler's shape: least-recently-used,
+//! but a model idle less than `model_keepalive_us` is kept over one past
+//! its keepalive, and exact last-use ties are broken by a deterministic
+//! salted rank so eviction order is byte-stable across runs (the rank
+//! stream is mirrored by `python/tests/test_model_keepalive.py`, the
+//! same cross-language contract `engine::queue`'s predictor carries).
+//!
+//! Model 0 — the fleet's default model — starts warm on every instance
+//! and single-model traces never touch another id, so they never swap,
+//! never evict, and replay byte-identical to the pre-multiplexing paths.
+
+use super::cost::InstanceProfile;
+use super::queue::mix;
+
+/// Salt for the eviction tiebreak rank ("MDLKEEP1"-flavored). Distinct
+/// from the queue predictor's and the fault stream's salts so the three
+/// deterministic streams never correlate.
+pub const MODEL_EVICT_SALT: u64 = 0x4D44_4C4B_4545_5031;
+
+/// Deterministic eviction tiebreak: lower rank evicts first among models
+/// with identical last-use times. Mirrored bit-for-bit by
+/// `python/tests/test_model_keepalive.py`.
+pub fn evict_rank(instance: u64, model_id: u32) -> u64 {
+    mix(mix(MODEL_EVICT_SALT, instance), u64::from(model_id))
+}
+
+#[derive(Debug, Clone, Copy)]
+struct WarmModel {
+    model_id: u32,
+    last_used_us: u64,
+}
+
+/// The warm set of one instance, plus the swap accounting the metrics
+/// harvest reads.
+#[derive(Debug, Clone)]
+pub struct ModelSlots {
+    instance: u64,
+    max_warm: usize,
+    keepalive_us: u64,
+    swap_cost_us: u64,
+    warm: Vec<WarmModel>,
+    /// Admissions that found their model cold (each paid one swap).
+    pub cold_loads: u64,
+    /// Warm models displaced to make room for a cold load.
+    pub evictions: u64,
+    /// Total µs of swap time charged to engine steps.
+    pub swap_us: u64,
+}
+
+impl ModelSlots {
+    pub fn new(instance: usize, profile: &InstanceProfile) -> ModelSlots {
+        let mut s = ModelSlots {
+            instance: instance as u64,
+            max_warm: profile.max_warm_models.max(1),
+            keepalive_us: profile.model_keepalive_us,
+            swap_cost_us: profile.swap_cost_us(),
+            warm: Vec::new(),
+            cold_loads: 0,
+            evictions: 0,
+            swap_us: 0,
+        };
+        // The default model ships warm: a fleet that never multiplexes
+        // never swaps.
+        s.warm.push(WarmModel {
+            model_id: 0,
+            last_used_us: 0,
+        });
+        s
+    }
+
+    /// Drop every warm model except the default (crash semantics: a
+    /// restarted process holds only model 0). Lifetime counters persist.
+    pub fn reset_warm(&mut self) {
+        self.warm.clear();
+        self.warm.push(WarmModel {
+            model_id: 0,
+            last_used_us: 0,
+        });
+    }
+
+    pub fn is_warm(&self, model_id: u32) -> bool {
+        self.warm.iter().any(|w| w.model_id == model_id)
+    }
+
+    /// Warm model ids, most-recently-used last.
+    pub fn warm_ids(&self) -> Vec<u32> {
+        let mut ids: Vec<(u64, u64, u32)> = self
+            .warm
+            .iter()
+            .map(|w| (w.last_used_us, evict_rank(self.instance, w.model_id), w.model_id))
+            .collect();
+        ids.sort();
+        ids.into_iter().map(|(_, _, id)| id).collect()
+    }
+
+    /// Serve `model_id` at `now_us`: refresh its slot if warm, else pay a
+    /// cold load. Returns the swap time to charge to the admitting step,
+    /// in µs — 0 when warm.
+    ///
+    /// A cold load fills a free slot if one exists; otherwise it evicts
+    /// the least-recently-used *expired* model (idle ≥ keepalive, exact
+    /// last-use ties broken by the salted rank). When every warm model is
+    /// still inside its keepalive the load is *transient* — the swap is
+    /// paid but the protected warm set is not displaced (Ray's keepalive
+    /// contract: recently-used models never get thrashed out).
+    pub fn touch(&mut self, model_id: u32, now_us: u64) -> u64 {
+        if let Some(w) = self.warm.iter_mut().find(|w| w.model_id == model_id) {
+            w.last_used_us = w.last_used_us.max(now_us);
+            return 0;
+        }
+        self.cold_loads += 1;
+        let slot_free = self.warm.len() < self.max_warm;
+        if slot_free {
+            self.warm.push(WarmModel {
+                model_id,
+                last_used_us: now_us,
+            });
+        } else if let Some(victim) = self.pick_victim(now_us) {
+            self.warm.swap_remove(victim);
+            self.evictions += 1;
+            self.warm.push(WarmModel {
+                model_id,
+                last_used_us: now_us,
+            });
+        }
+        self.swap_us += self.swap_cost_us;
+        self.swap_cost_us
+    }
+
+    /// Eviction candidate: the least-recently-used model past its
+    /// keepalive (idle ≥ `keepalive_us`), exact last-use ties broken by
+    /// the salted rank. `None` when every warm model is protected.
+    fn pick_victim(&self, now_us: u64) -> Option<usize> {
+        (0..self.warm.len())
+            .filter(|&i| {
+                now_us.saturating_sub(self.warm[i].last_used_us) >= self.keepalive_us
+            })
+            .min_by_key(|&i| {
+                let w = &self.warm[i];
+                (w.last_used_us, evict_rank(self.instance, w.model_id))
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slots(max_warm: usize, keepalive_us: u64) -> ModelSlots {
+        let mut p = InstanceProfile::reference();
+        p.max_warm_models = max_warm;
+        p.model_keepalive_us = keepalive_us;
+        ModelSlots::new(3, &p)
+    }
+
+    #[test]
+    fn default_model_ships_warm_and_never_swaps() {
+        let mut s = slots(2, 1_000_000);
+        assert!(s.is_warm(0));
+        for t in 0..100u64 {
+            assert_eq!(s.touch(0, t * 1000), 0);
+        }
+        assert_eq!(s.cold_loads, 0);
+        assert_eq!(s.evictions, 0);
+        assert_eq!(s.swap_us, 0);
+    }
+
+    #[test]
+    fn cold_load_pays_the_profile_swap_and_warms_the_model() {
+        let mut s = slots(2, 1_000_000);
+        let swap = s.touch(7, 500);
+        assert_eq!(swap, InstanceProfile::reference().swap_cost_us());
+        assert!(s.is_warm(7));
+        assert_eq!(s.cold_loads, 1);
+        assert_eq!(s.evictions, 0, "a free slot evicts nothing");
+        // Warm now: free.
+        assert_eq!(s.touch(7, 600), 0);
+        assert_eq!(s.cold_loads, 1);
+    }
+
+    #[test]
+    fn keepalive_shields_recent_models_from_eviction() {
+        let mut s = slots(2, 1_000_000);
+        s.touch(1, 100); // fills the free slot: {0@0, 1@100}
+        s.touch(1, 900_000); // refresh 1 inside keepalive
+        // At t=1.1s model 0 is expired (idle 1.1s ≥ 1s), model 1 is
+        // protected (idle 0.2s): 0 evicts.
+        let _ = s.touch(2, 1_100_000);
+        assert!(!s.is_warm(0));
+        assert!(s.is_warm(1) && s.is_warm(2));
+        assert_eq!(s.evictions, 1);
+    }
+
+    #[test]
+    fn fully_protected_set_makes_the_load_transient() {
+        let mut s = slots(2, u64::MAX);
+        s.touch(1, 100); // {0@0, 1@100}, both protected forever
+        let swap = s.touch(2, 200);
+        assert!(swap > 0, "transient load still pays the swap");
+        assert!(!s.is_warm(2), "protected warm set is not displaced");
+        assert!(s.is_warm(0) && s.is_warm(1));
+        assert_eq!(s.evictions, 0);
+        assert_eq!(s.cold_loads, 2);
+        // Every repeat stays cold and keeps paying.
+        assert!(s.touch(2, 300) > 0);
+        assert_eq!(s.cold_loads, 3);
+    }
+
+    #[test]
+    fn exact_tie_breaks_by_pinned_salted_rank() {
+        // Both warm models last used at the same instant: the salted rank
+        // decides, deterministically.
+        let mut s = slots(2, 0);
+        s.touch(1, 0); // {0@0, 1@0}
+        let r0 = evict_rank(3, 0);
+        let r1 = evict_rank(3, 1);
+        let expect_victim = if r0 < r1 { 0 } else { 1 };
+        let _ = s.touch(2, 0);
+        assert!(!s.is_warm(expect_victim), "rank order r0={r0:#x} r1={r1:#x}");
+    }
+
+    /// Pinned rank vectors, mirrored bit-for-bit by
+    /// python/tests/test_model_keepalive.py. Regenerate both sides
+    /// together if the salt or mix ever changes.
+    #[test]
+    fn evict_rank_matches_pinned_vectors() {
+        let cases: &[(u64, u32, u64)] = &[
+            (0, 0, 0x42b0_14bc_5e6a_2794),
+            (0, 1, 0xeeb9_5044_6152_d604),
+            (3, 0, 0x324d_70dc_abc0_59e9),
+            (3, 1, 0xdec2_698c_7f69_9205),
+            (3, 2, 0x0814_d9f1_0bec_f373),
+            (7, 5, 0x3022_59ac_f85c_7604),
+            (63, 4_294_967_295, 0xf197_362f_808e_79df),
+        ];
+        for &(inst, model, want) in cases {
+            assert_eq!(
+                evict_rank(inst, model),
+                want,
+                "evict_rank({inst}, {model})"
+            );
+        }
+    }
+
+    #[test]
+    fn warm_ids_orders_lru_first() {
+        let mut s = slots(3, 0);
+        s.touch(1, 50);
+        s.touch(2, 20);
+        assert_eq!(s.warm_ids(), vec![0, 2, 1]);
+    }
+}

@@ -153,30 +153,28 @@ impl QueuePolicy for Ltr {
     }
 }
 
-/// The rejection every entry point shares: unknown names fail with an
-/// error that lists every valid name (CLI / config / benches surface it
-/// verbatim, mirroring `policy::build`).
-fn unknown_queue_policy_error(name: &str) -> String {
-    format!(
-        "unknown queue policy '{name}'; valid queue policies: {}",
-        all_names().join(", ")
-    )
-}
+/// The shared registry: names in display order plus the unknown-name
+/// error pieces. The rendered error predates [`crate::util::Registry`]
+/// and is pinned by `registry_builds_everything_and_rejects_unknown_names`
+/// — the migration kept it byte-identical.
+const REGISTRY: crate::util::Registry =
+    crate::util::Registry::new("queue policy", "queue policies", &["fcfs", "srpt", "ltr"]);
 
 /// Build a queue policy by name. Unknown names are rejected with the
-/// name-listing error.
+/// name-listing error (CLI / config / benches surface it verbatim,
+/// mirroring `policy::build`).
 pub fn build(name: &str) -> Result<Box<dyn QueuePolicy>, String> {
     Ok(match name {
         "fcfs" => Box::new(Fcfs),
         "srpt" => Box::new(Srpt),
         "ltr" => Box::new(Ltr::new()),
-        _ => return Err(unknown_queue_policy_error(name)),
+        _ => return Err(REGISTRY.unknown(name)),
     })
 }
 
 /// All queue-policy names (for sweeps and the CLI usage text).
 pub fn all_names() -> &'static [&'static str] {
-    &["fcfs", "srpt", "ltr"]
+    REGISTRY.names_static()
 }
 
 /// Salt for the decode-length predictor ("QPRED137"). Distinct from the
@@ -184,9 +182,10 @@ pub fn all_names() -> &'static [&'static str] {
 /// correlate.
 const PREDICT_SALT: u64 = 0x5150_5245_4431_3337;
 
-/// Splitmix-style mix — the same finalizer as `runtime/sim.rs`.
+/// Splitmix-style mix — the same finalizer as `runtime/sim.rs`. Shared
+/// with the model-keepalive eviction rank in `engine::models`.
 #[inline]
-fn mix(h: u64, x: u64) -> u64 {
+pub(crate) fn mix(h: u64, x: u64) -> u64 {
     let mut z = h ^ x.wrapping_mul(0x9e37_79b9_7f4a_7c15);
     z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
@@ -228,6 +227,12 @@ mod tests {
         for name in all_names() {
             assert!(err.contains(name), "error lists '{name}': {err}");
         }
+        // The exact pre-util::Registry wording, pinned byte-for-byte.
+        assert_eq!(
+            err,
+            "unknown queue policy 'no_such_queue'; valid queue policies: fcfs, srpt, ltr"
+        );
+        assert_eq!(all_names(), &["fcfs", "srpt", "ltr"]);
     }
 
     #[test]

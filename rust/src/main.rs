@@ -17,7 +17,7 @@ use std::path::{Path, PathBuf};
 
 use lmetric::cluster::live::{run_live, LiveClusterConfig};
 use lmetric::cluster::{self, run_des, AdmissionPolicy, RunSpec};
-use lmetric::config::{ConfigDoc, ExperimentConfig};
+use lmetric::config::{ConfigDoc, ExperimentConfig, FleetSpec};
 use lmetric::engine::ModelProfile;
 use lmetric::metrics::{render_table, ResultRow, SloSpec};
 use lmetric::policy;
@@ -77,6 +77,19 @@ fn exp_from_flags(flags: &HashMap<String, String>) -> ExperimentConfig {
     }
     if let Some(v) = flags.get("seed") {
         exp.seed = v.parse().expect("--seed");
+    }
+    // `--fleet h100:2,l40:6` wins over `--instances` (the spec carries
+    // its own size); mirrors the TOML `[fleet] spec` key.
+    if let Some(v) = flags.get("fleet") {
+        let fleet = FleetSpec::parse(v).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        });
+        exp.instances = fleet.n_instances();
+        exp.fleet = Some(fleet);
+    }
+    if let Some(v) = flags.get("n-models") {
+        exp.n_models = v.parse::<usize>().expect("--n-models").max(1);
     }
     if let Some(v) = flags.get("queue-policy") {
         exp.queue_policy = v.clone();
@@ -625,6 +638,7 @@ fn usage() -> ! {
 commands:
   replay       --workload W --policy P [--instances N --requests N --rate-scale F --param F --profile M --seed S --config FILE]
                [--queue-policy Q --admission A --admission-param F --slo-ttft S --slo-tpot S]
+               [--fleet CLASS:N,... --n-models M]  (hardware classes: default h100 l40 a10)
   sessions     --kind chat|api|coding [--policy P --instances N --requests N --rate-scale F --seed S]
   open         --shape constant|ramp|diurnal|flash [--duration S --rate-scale F --instances N
                --requests N --seed S --policy P --admission A --admission-param F --slo-ttft S --slo-tpot S]

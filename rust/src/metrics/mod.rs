@@ -75,6 +75,19 @@ pub struct QueueCounters {
     pub wait_us_max: u64,
 }
 
+/// Model-multiplexing counters summed over the fleet (the
+/// [`crate::engine::ModelSlots`] layer). All-zero for single-model runs:
+/// model 0 ships warm everywhere and never swaps.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ModelCounters {
+    /// Admissions that found their model cold (each paid one swap).
+    pub cold_loads: u64,
+    /// Warm models displaced to make room for a cold load.
+    pub evictions: u64,
+    /// Total µs of weight-swap time charged to engine steps.
+    pub swap_us: u64,
+}
+
 /// Everything a cluster run produces.
 #[derive(Debug)]
 pub struct RunMetrics {
@@ -133,6 +146,9 @@ pub struct RunMetrics {
     /// instance slot the run ended with (scale-ups grow it past the
     /// starting fleet). Empty for live/concurrent runs.
     pub queue: Vec<QueueCounters>,
+    /// Model-multiplexing counters summed over the fleet (all-zero for
+    /// single-model runs).
+    pub models: ModelCounters,
 }
 
 impl RunMetrics {
@@ -156,6 +172,7 @@ impl RunMetrics {
             admission_name: None,
             slo: None,
             queue: Vec::new(),
+            models: ModelCounters::default(),
         }
     }
 

@@ -1,0 +1,244 @@
+//! Heterogeneous-fleet policies: fused multi-model routing vs the
+//! classical two-layer baseline.
+//!
+//! A multi-model fleet has two coupled decisions: *placement* (which
+//! instance should hold this request's model warm) and *balance* (which
+//! instance clears this request soonest). The classical architecture
+//! solves them in layers — a placement controller pins models to
+//! instances, then a load balancer spreads requests over the pinned set.
+//! RouteBalance (PAPERS.md) shows the layering itself costs goodput:
+//! the balancer can't see a cold load coming and the placer can't see
+//! queue depth. [`LMetricFused`] collapses the two into one LMetric-style
+//! product — the cold-load swap is just more predicted prefill time:
+//!
+//! `score_i = (P-time_i + cold_penalty_i) × (BS_i + 1)`
+//!
+//! Both terms are in reference prefill-token units, so the metric stays
+//! hyperparameter-free: any common rescaling of the time axis cancels
+//! under the cross-instance product comparison exactly like LMetric's
+//! weights. On single-model traffic every penalty is 0 and the score
+//! degenerates to plain (cost-aware) LMetric bit-for-bit.
+//!
+//! [`PlaceThenBalance`] is the two-layer baseline `fig91_hetero_fleet`
+//! compares against: a [`ModelPlacement`] strategy picks who loads a
+//! cold model, and LMetric balances strictly within the warm set.
+
+use crate::router::{select_min, Policy, RouteCtx, RouteDecision};
+use crate::util::Registry;
+
+/// Fused placement + balance: one multiplicative score prices the
+/// queue, the hardware speed, AND the cold-model swap together.
+pub struct LMetricFused;
+
+impl LMetricFused {
+    pub fn new() -> Self {
+        LMetricFused
+    }
+
+    /// The fused score for instance `i` (public so fig harnesses and the
+    /// proptests evaluate the exact shipped arithmetic).
+    pub fn score(&self, ctx: &RouteCtx, i: usize) -> f64 {
+        (ctx.p_time(i) + ctx.cold_penalty(i)) * (ctx.inds[i].bs() + 1) as f64
+    }
+}
+
+impl Default for LMetricFused {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Policy for LMetricFused {
+    fn name(&self) -> String {
+        "lmetric_fused".into()
+    }
+
+    fn route(&mut self, ctx: &RouteCtx) -> RouteDecision {
+        RouteDecision::to(select_min(ctx, |i| self.score(ctx, i)))
+    }
+}
+
+/// Layer 1 of the two-layer baseline: given a request whose model is
+/// cold everywhere, choose the instance that should load it.
+pub trait ModelPlacement: Send {
+    fn name(&self) -> &'static str;
+    fn place(&mut self, ctx: &RouteCtx) -> usize;
+}
+
+/// Load the cold model on the least-loaded instance (smallest BS) —
+/// what a Ray-Serve-style multiplexed deployment does by default.
+pub struct LeastLoadedPlacement;
+
+impl ModelPlacement for LeastLoadedPlacement {
+    fn name(&self) -> &'static str {
+        "least_loaded"
+    }
+
+    fn place(&mut self, ctx: &RouteCtx) -> usize {
+        select_min(ctx, |i| ctx.inds[i].bs() as f64)
+    }
+}
+
+/// Load the cold model on the fastest prefill slot — it pays the swap
+/// quickest, at the cost of concentrating models on big hardware.
+pub struct FastestPlacement;
+
+impl ModelPlacement for FastestPlacement {
+    fn name(&self) -> &'static str {
+        "fastest"
+    }
+
+    fn place(&mut self, ctx: &RouteCtx) -> usize {
+        select_min(ctx, |i| -ctx.prefill_scale(i))
+    }
+}
+
+const PLACEMENT_REGISTRY: Registry = Registry::new(
+    "placement policy",
+    "placement policies",
+    &["least_loaded", "fastest"],
+);
+
+/// Placement strategy names, in display order.
+pub fn all_placement_names() -> &'static [&'static str] {
+    PLACEMENT_REGISTRY.names_static()
+}
+
+/// Build a placement strategy by name; unknown names get the standard
+/// name-listing rejection.
+pub fn build_placement(name: &str) -> Result<Box<dyn ModelPlacement>, String> {
+    Ok(match name {
+        "least_loaded" => Box::new(LeastLoadedPlacement),
+        "fastest" => Box::new(FastestPlacement),
+        _ => return Err(PLACEMENT_REGISTRY.unknown(name)),
+    })
+}
+
+/// The two-layer baseline: place (only when the model is cold
+/// everywhere), then balance with LMetric strictly inside the warm set.
+/// The balance layer is blind to swap costs and the placement layer is
+/// blind to queues — the coupling `lmetric_fused` exploits.
+pub struct PlaceThenBalance {
+    placement: Box<dyn ModelPlacement>,
+}
+
+impl PlaceThenBalance {
+    pub fn new(placement: Box<dyn ModelPlacement>) -> Self {
+        PlaceThenBalance { placement }
+    }
+
+    /// The default configuration (least-loaded placement).
+    pub fn least_loaded() -> Self {
+        Self::new(Box::new(LeastLoadedPlacement))
+    }
+}
+
+impl Policy for PlaceThenBalance {
+    fn name(&self) -> String {
+        format!("place_then_balance[{}]", self.placement.name())
+    }
+
+    fn route(&mut self, ctx: &RouteCtx) -> RouteDecision {
+        // Single-model traffic (empty penalty vector): pure balance.
+        if ctx.cold_penalty_tokens.is_empty() {
+            return RouteDecision::to(select_min(ctx, |i| {
+                ctx.p_time(i) * (ctx.inds[i].bs() + 1) as f64
+            }));
+        }
+        let any_warm = (0..ctx.n()).any(|i| ctx.inds[i].routable && ctx.cold_penalty(i) == 0.0);
+        if !any_warm {
+            // Cold everywhere: the placement layer decides alone.
+            return RouteDecision::to(self.placement.place(ctx));
+        }
+        // Balance inside the warm set only — the layer boundary.
+        RouteDecision::to(select_min(ctx, |i| {
+            if ctx.cold_penalty(i) == 0.0 {
+                ctx.p_time(i) * (ctx.inds[i].bs() + 1) as f64
+            } else {
+                f64::INFINITY
+            }
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::router::Indicators;
+
+    fn ctx(queued: Vec<usize>, bss: Vec<usize>) -> RouteCtx {
+        let n = queued.len();
+        let inds = queued
+            .iter()
+            .zip(&bss)
+            .map(|(q, b)| Indicators {
+                r_bs: *b,
+                queued_prefill_tokens: *q,
+                ..Default::default()
+            })
+            .collect();
+        RouteCtx::new(0, 0, 0, 1000, vec![0; n], inds)
+    }
+
+    #[test]
+    fn fused_degenerates_to_lmetric_on_single_model_traffic() {
+        let c = ctx(vec![500, 9000], vec![3, 1]);
+        let fused = LMetricFused::new();
+        let lm = crate::policy::LMetric::paper();
+        for i in 0..2 {
+            assert_eq!(fused.score(&c, i).to_bits(), lm.score(&c, i).to_bits());
+        }
+    }
+
+    #[test]
+    fn fused_prices_the_swap_into_the_product() {
+        // Instance 0 is warm but busier; instance 1 idle but cold with a
+        // penalty big enough to lose: fused sees both sides.
+        let mut c = ctx(vec![2000, 0], vec![2, 0]);
+        c.cold_penalty_tokens = vec![0.0, 20_000.0];
+        let mut p = LMetricFused::new();
+        // warm: (2000+1000)*4 = 12_000 < cold: (1000+20_000)*1 = 21_000
+        assert_eq!(p.route(&c).instance, 0);
+        // A small penalty flips it: idle hardware wins despite the swap.
+        c.cold_penalty_tokens = vec![0.0, 5_000.0];
+        assert_eq!(p.route(&c).instance, 1);
+    }
+
+    #[test]
+    fn two_layer_never_routes_cold_while_anything_is_warm() {
+        // The warm instance is drowning; fused defects to the cold idle
+        // one, the layered baseline cannot.
+        let mut c = ctx(vec![50_000, 0], vec![30, 0]);
+        c.cold_penalty_tokens = vec![0.0, 5_000.0];
+        let mut layered = PlaceThenBalance::least_loaded();
+        let mut fused = LMetricFused::new();
+        assert_eq!(layered.route(&c).instance, 0, "stuck inside the warm set");
+        assert_eq!(fused.route(&c).instance, 1, "fused escapes the layer");
+    }
+
+    #[test]
+    fn placement_layer_decides_when_cold_everywhere() {
+        let mut c = ctx(vec![0, 0, 0], vec![5, 2, 9]);
+        c.cold_penalty_tokens = vec![100.0, 100.0, 100.0];
+        let mut p = PlaceThenBalance::least_loaded();
+        assert_eq!(p.route(&c).instance, 1, "least-loaded places on min BS");
+        let mut c2 = ctx(vec![0, 0, 0], vec![5, 2, 9]);
+        c2.cold_penalty_tokens = vec![100.0; 3];
+        c2.fleet_prefill_scale = vec![0.5, 1.0, 2.0];
+        let mut pf = PlaceThenBalance::new(Box::new(FastestPlacement));
+        assert_eq!(pf.route(&c2).instance, 2, "fastest places on max scale");
+    }
+
+    #[test]
+    fn placement_registry_rejects_with_name_listing() {
+        assert!(build_placement("least_loaded").is_ok());
+        assert!(build_placement("fastest").is_ok());
+        let err = build_placement("bogus").err().unwrap();
+        assert_eq!(
+            err,
+            "unknown placement policy 'bogus'; valid placement policies: \
+             least_loaded, fastest"
+        );
+        assert_eq!(all_placement_names(), &["least_loaded", "fastest"]);
+    }
+}

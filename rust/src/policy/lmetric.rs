@@ -20,7 +20,11 @@ use crate::router::{select_min, Policy, RouteCtx, RouteDecision};
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum KvAwareIndicator {
     /// New prefill tokens if routed there, *including* the instance's
-    /// queued prefill tokens (the paper's choice, §5.1).
+    /// queued prefill tokens (the paper's choice, §5.1) — evaluated
+    /// cost-aware through [`RouteCtx::p_time`]: on a heterogeneous
+    /// fleet the token count divides by the slot's prefill speed, and
+    /// on a uniform fleet the divisor is exactly 1.0 so the score is
+    /// bit-identical to the token count itself.
     PToken,
     /// 1 − KV$ hit ratio (Preble/AIGW's choice; misses queue state).
     OneMinusHitRatio,
@@ -57,7 +61,7 @@ impl LMetric {
     /// indicator arithmetic it guards, factor by factor.
     pub fn factors(&self, ctx: &RouteCtx, i: usize) -> (f64, f64) {
         let kv = match self.kv {
-            KvAwareIndicator::PToken => ctx.p_token(i) as f64,
+            KvAwareIndicator::PToken => ctx.p_time(i),
             KvAwareIndicator::OneMinusHitRatio => 1.0 - ctx.hit_ratio(i),
         };
         let load = match self.load {
@@ -165,6 +169,21 @@ mod tests {
         let p = LMetric::paper();
         let (a, b) = (p.score(&c, 0), p.score(&c, 1));
         assert_eq!(a < b, (2.5 * a) < (2.5 * b));
+    }
+
+    #[test]
+    fn cost_aware_p_time_prefers_the_faster_slot() {
+        // Identical tokens and batch everywhere; only the hardware
+        // differs. The cost-aware P factor routes to the 2× slot.
+        let mut c = ctx(1000, vec![0, 0], vec![4, 4], vec![500, 500]);
+        c.fleet_prefill_scale = vec![0.5, 2.0];
+        let mut p = LMetric::paper();
+        assert_eq!(p.route(&c).instance, 1);
+        // And enough queued work on the fast slot flips it back: the
+        // scales re-weight, they don't override, the token signal.
+        let mut c2 = ctx(1000, vec![0, 0], vec![4, 4], vec![500, 20_000]);
+        c2.fleet_prefill_scale = vec![0.5, 2.0];
+        assert_eq!(p.route(&c2).instance, 0);
     }
 
     #[test]

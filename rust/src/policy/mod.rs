@@ -18,6 +18,8 @@
 //! | `lmetric`      | §5    | **P-token × BS** | none |
 //! | `lmetric_guarded` | §5.2 | lmetric + two-phase hotspot detector | none |
 //! | `lmetric_safe` | §5    | lmetric + failure-condition guard | none |
+//! | `lmetric_fused` | — (RouteBalance, PAPERS.md) | (P-time + cold-swap) × BS | none |
+//! | `place_then_balance` | — | model placement layer → lmetric in warm set | placement |
 //!
 //! Ablation variants for Figs 18/19: `lmetric_hit_ratio` uses
 //! (1−hit-ratio)×BS; `lmetric_tokens` uses P-token×#Tokens.
@@ -26,6 +28,7 @@ mod baselines;
 mod dynamo;
 mod filter_kv;
 mod guard;
+mod hetero;
 mod linear;
 mod lmetric;
 mod polyserve;
@@ -41,6 +44,10 @@ pub use guard::{
     window_slack, FailureAnalyzer, GuardDecision, GuardVerdict, GuardedLMetric,
     INVERSION_MARGIN, W_HI, W_LO,
 };
+pub use hetero::{
+    all_placement_names, build_placement, FastestPlacement, LMetricFused,
+    LeastLoadedPlacement, ModelPlacement, PlaceThenBalance,
+};
 pub use linear::Linear;
 pub use lmetric::{KvAwareIndicator, LMetric, LoadIndicator};
 pub use polyserve::PolyServe;
@@ -53,17 +60,34 @@ use crate::engine::ModelProfile;
 use crate::hotspot::HotspotGuarded;
 use crate::router::Policy;
 use crate::simulator::LatencySimulator;
+use crate::util::Registry;
 
-/// The rejection every registry entry point shares: unknown names fail
-/// with an error that lists every valid name (the CLI and the benches
-/// surface it verbatim).
-fn unknown_policy_error(name: &str) -> String {
-    format!(
-        "unknown policy '{name}'; valid policies: {} (plus ablations: \
-         lmetric_hit_ratio, lmetric_tokens)",
-        all_names().join(", ")
-    )
-}
+/// The shared name-listing registry (see [`crate::util::Registry`]); the
+/// unknown-name rejection every entry point surfaces verbatim at the CLI
+/// keeps its pre-migration wording byte-for-byte.
+const REGISTRY: Registry = Registry::new(
+    "policy",
+    "policies",
+    &[
+        "round_robin",
+        "random",
+        "vllm",
+        "linear",
+        "dynamo",
+        "filter_kv",
+        "sim_llmd",
+        "preble",
+        "polyserve",
+        "sticky",
+        "smetric",
+        "lmetric",
+        "lmetric_guarded",
+        "lmetric_safe",
+        "lmetric_fused",
+        "place_then_balance",
+    ],
+)
+.with_suffix(" (plus ablations: lmetric_hit_ratio, lmetric_tokens)");
 
 /// Build a policy by name. `param` is the policy's single hyperparameter
 /// knob (λ / α / Range / T / τ-ms; ignored where hyperparameter-free).
@@ -109,7 +133,9 @@ pub fn build_with_simulator(
         )),
         "lmetric_guarded" => Box::new(HotspotGuarded::new()),
         "lmetric_safe" => Box::new(GuardedLMetric::new()),
-        _ => return Err(unknown_policy_error(name)),
+        "lmetric_fused" => Box::new(LMetricFused::new()),
+        "place_then_balance" => Box::new(PlaceThenBalance::least_loaded()),
+        _ => return Err(REGISTRY.unknown(name)),
     })
 }
 
@@ -139,22 +165,7 @@ pub fn build_default(
 
 /// All policy names (for `lmetric replay --policy all` sweeps).
 pub fn all_names() -> &'static [&'static str] {
-    &[
-        "round_robin",
-        "random",
-        "vllm",
-        "linear",
-        "dynamo",
-        "filter_kv",
-        "sim_llmd",
-        "preble",
-        "polyserve",
-        "sticky",
-        "smetric",
-        "lmetric",
-        "lmetric_guarded",
-        "lmetric_safe",
-    ]
+    REGISTRY.names_static()
 }
 
 #[cfg(test)]
@@ -205,6 +216,20 @@ mod tests {
         for name in ["lmetric_hit_ratio", "lmetric_tokens"] {
             assert!(build_default(name, &p, 256).is_ok(), "{name}");
         }
+    }
+
+    #[test]
+    fn unknown_policy_error_is_pinned_byte_for_byte() {
+        let p = ModelProfile::moe_30b();
+        let err = build("nope", 0.0, &p, 256).err().unwrap();
+        assert_eq!(
+            err,
+            "unknown policy 'nope'; valid policies: round_robin, random, vllm, \
+             linear, dynamo, filter_kv, sim_llmd, preble, polyserve, sticky, \
+             smetric, lmetric, lmetric_guarded, lmetric_safe, lmetric_fused, \
+             place_then_balance (plus ablations: lmetric_hit_ratio, \
+             lmetric_tokens)"
+        );
     }
 
     #[test]

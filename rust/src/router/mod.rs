@@ -22,7 +22,7 @@
 //! scratch state of the same request).
 
 use crate::core::{InstanceMask, Request};
-use crate::engine::InstanceSnapshot;
+use crate::engine::{InstanceProfile, InstanceSnapshot, ModelProfile, ModelSlots};
 use crate::kvcache::RouterKvView;
 
 /// Effective per-instance indicator values at decision time:
@@ -84,6 +84,18 @@ pub struct RouteCtx {
     /// Invariant: bit `i` set ⟺ `hit_tokens[i] > 0`.
     pub matched_mask: InstanceMask,
     pub inds: Vec<Indicators>,
+    /// Model the request wants served (0 = the fleet-default model,
+    /// which every instance holds warm from boot).
+    pub model_id: u32,
+    /// Per-instance prefill speed relative to the reference device.
+    /// EMPTY on uniform fleets — [`Self::prefill_scale`] then reads 1.0
+    /// and [`Self::p_time`] divides by exactly 1.0, an IEEE-754
+    /// identity, so pre-fleet decisions replay byte-identical.
+    pub fleet_prefill_scale: Vec<f64>,
+    /// Cold-model penalty per instance, in reference prefill-token
+    /// units (0.0 where the request's model is warm). EMPTY on
+    /// single-model traffic, however heterogeneous the hardware.
+    pub cold_penalty_tokens: Vec<f64>,
 }
 
 impl RouteCtx {
@@ -108,6 +120,9 @@ impl RouteCtx {
             hit_tokens,
             matched_mask,
             inds,
+            model_id: 0,
+            fleet_prefill_scale: Vec::new(),
+            cold_penalty_tokens: Vec::new(),
         }
     }
 
@@ -146,6 +161,29 @@ impl RouteCtx {
     /// plus this request's new tokens if routed there (§5.1).
     pub fn p_token(&self, i: usize) -> usize {
         self.inds[i].queued_prefill_tokens + self.new_tokens(i)
+    }
+
+    /// Prefill speed of instance `i` relative to the reference device
+    /// (1.0 on uniform fleets, where the scale vector is empty).
+    pub fn prefill_scale(&self, i: usize) -> f64 {
+        self.fleet_prefill_scale.get(i).copied().unwrap_or(1.0)
+    }
+
+    /// The cost-aware P indicator: predicted prefill *time* on `i`, in
+    /// reference-token units — `p_token / prefill_scale`. On a uniform
+    /// fleet the divisor is exactly 1.0, so this is bit-identical to
+    /// `p_token as f64`; and because LMetric compares *products*, the
+    /// metric's weight cancellation survives any per-instance positive
+    /// monotone rescaling (proptest in `tests/proptests.rs`).
+    pub fn p_time(&self, i: usize) -> f64 {
+        self.p_token(i) as f64 / self.prefill_scale(i)
+    }
+
+    /// Cold-model load penalty if routed to `i`, in the same
+    /// reference-token units as [`Self::p_time`] (0.0 when the
+    /// request's model is warm there, and on single-model traffic).
+    pub fn cold_penalty(&self, i: usize) -> f64 {
+        self.cold_penalty_tokens.get(i).copied().unwrap_or(0.0)
     }
 }
 
@@ -359,6 +397,26 @@ pub struct IndicatorFactory {
     /// snapshot absorb, completion). Concurrent readers pin this to
     /// measure how many commits their view is stale by.
     epoch: u64,
+    // --- heterogeneous-fleet state (all EMPTY on uniform single-model
+    // fleets — the byte-identity fast path never consults it) ----------
+    /// Per-slot hardware profile, as installed by [`Self::set_fleet`].
+    fleet_profiles: Vec<InstanceProfile>,
+    /// `prefill_scale` of each slot, copied into every context.
+    fleet_scales: Vec<f64>,
+    /// Cold-load penalty of each slot in reference prefill-token units:
+    /// `swap_cost_us / prefill_us_per_token` of the serving model.
+    fleet_cold_tokens: Vec<f64>,
+    /// The serving model's per-token prefill cost, kept so scale-up can
+    /// derive a new slot's penalty in the same units `set_fleet` used.
+    fleet_model_tok_us: f64,
+    /// The router's optimistic mirror of each instance's warm-model
+    /// set, advanced at commit time with the same keepalive/eviction
+    /// draw as the engine's authoritative [`ModelSlots`].
+    model_dirs: Vec<ModelSlots>,
+    /// Set once any committed request asked for a model other than 0.
+    /// Until then `cold_penalty_tokens` stays empty, so single-model
+    /// traffic prices decisions identically to pre-multiplexing code.
+    multi_seen: bool,
 }
 
 impl IndicatorFactory {
@@ -379,10 +437,53 @@ impl IndicatorFactory {
                 hit_tokens: Vec::with_capacity(n_instances),
                 matched_mask: InstanceMask::with_capacity(n_instances),
                 inds: Vec::with_capacity(n_instances),
+                model_id: 0,
+                fleet_prefill_scale: Vec::new(),
+                cold_penalty_tokens: Vec::new(),
             },
             walk_live: Vec::new(),
             epoch: 0,
+            fleet_profiles: Vec::new(),
+            fleet_scales: Vec::new(),
+            fleet_cold_tokens: Vec::new(),
+            fleet_model_tok_us: 0.0,
+            model_dirs: Vec::new(),
+            multi_seen: false,
         }
+    }
+
+    /// Install per-instance hardware profiles and arm the warm-model
+    /// directory — the heterogeneous / multi-model mode switch. Uniform
+    /// single-model harnesses never call this, and the factory then
+    /// never fills a scale or penalty vector (byte-identity). `model`
+    /// is the served [`ModelProfile`]; it converts each slot's swap
+    /// cost into the reference-token units [`RouteCtx::p_time`] uses.
+    pub fn set_fleet(&mut self, profiles: &[InstanceProfile], model: &ModelProfile) {
+        assert_eq!(
+            profiles.len(),
+            self.snapshots.len(),
+            "one profile per instance"
+        );
+        self.fleet_profiles = profiles.to_vec();
+        self.fleet_scales = profiles.iter().map(|p| p.prefill_scale).collect();
+        self.fleet_model_tok_us = model.prefill_us_per_token;
+        self.fleet_cold_tokens = profiles
+            .iter()
+            .map(|p| p.swap_cost_us() as f64 / model.prefill_us_per_token)
+            .collect();
+        self.model_dirs = profiles
+            .iter()
+            .enumerate()
+            .map(|(i, p)| ModelSlots::new(i, p))
+            .collect();
+        self.multi_seen = false;
+        self.epoch += 1;
+    }
+
+    /// The router's optimistic view of instance `i`'s warm-model set
+    /// (`None` until [`Self::set_fleet`] arms the directory).
+    pub fn model_dir(&self, i: usize) -> Option<&ModelSlots> {
+        self.model_dirs.get(i)
     }
 
     pub fn n_instances(&self) -> usize {
@@ -439,6 +540,23 @@ impl IndicatorFactory {
         ctx.class_id = req.class_id;
         ctx.session_id = req.session_id;
         ctx.input_len = input_len;
+        ctx.model_id = req.model_id;
+        ctx.fleet_prefill_scale.clear();
+        ctx.fleet_prefill_scale.extend_from_slice(&self.fleet_scales);
+        ctx.cold_penalty_tokens.clear();
+        // Penalties materialize only once multiplexing is real: the
+        // directory is armed AND some request has asked for a non-default
+        // model (this one counts). Until then the vector stays empty and
+        // every policy prices exactly the pre-multiplexing decision.
+        if !self.model_dirs.is_empty() && (self.multi_seen || req.model_id != 0) {
+            for (i, dir) in self.model_dirs.iter().enumerate() {
+                ctx.cold_penalty_tokens.push(if dir.is_warm(req.model_id) {
+                    0.0
+                } else {
+                    self.fleet_cold_tokens[i]
+                });
+            }
+        }
         hit
     }
 
@@ -480,6 +598,16 @@ impl IndicatorFactory {
         self.opt_prefill_tokens[inst] += new_tokens;
         self.opt_ctx_tokens[inst] += req.input_len();
         self.kv.on_route(inst, &req.block_hashes, now_us);
+        if !self.model_dirs.is_empty() {
+            if req.model_id != 0 {
+                self.multi_seen = true;
+            }
+            // Advance the optimistic warm-set mirror with the same
+            // touch the engine will make at admission (the mirror may
+            // run slightly ahead — route time vs admission time — the
+            // same optimism the indicator deltas already carry).
+            self.model_dirs[inst].touch(req.model_id, now_us);
+        }
         self.epoch += 1;
     }
 
@@ -526,6 +654,10 @@ impl IndicatorFactory {
         self.opt_q_bs[inst] = 0;
         self.opt_prefill_tokens[inst] = 0;
         self.opt_ctx_tokens[inst] = 0;
+        if let Some(dir) = self.model_dirs.get_mut(inst) {
+            // A restarted process holds only the default model warm.
+            dir.reset_warm();
+        }
         self.epoch += 1;
     }
 
@@ -541,6 +673,24 @@ impl IndicatorFactory {
         self.opt_prefill_tokens.resize(new_n, 0);
         self.opt_ctx_tokens.resize(new_n, 0);
         self.routable.resize(new_n, true);
+        if !self.fleet_profiles.is_empty() {
+            // Scaled-up slots inherit the LAST declared class — the
+            // same rule `config::FleetSpec::profile_for` applies.
+            let tail = self.fleet_profiles.last().cloned().expect("non-empty");
+            let model_tok = self.fleet_model_tok_us;
+            while self.fleet_profiles.len() < new_n {
+                let i = self.fleet_profiles.len();
+                self.fleet_scales.push(tail.prefill_scale);
+                self.fleet_cold_tokens
+                    .push(tail.swap_cost_us() as f64 / model_tok);
+                self.model_dirs.push(ModelSlots::new(i, &tail));
+                self.fleet_profiles.push(tail.clone());
+            }
+            self.fleet_profiles.truncate(new_n);
+            self.fleet_scales.truncate(new_n);
+            self.fleet_cold_tokens.truncate(new_n);
+            self.model_dirs.truncate(new_n);
+        }
         self.epoch += 1;
     }
 }
@@ -558,6 +708,7 @@ mod tests {
             arrival_us: 0,
             class_id: 9,
             session_id: 0,
+            model_id: 0,
             tokens: tokens.into(),
             output_len: 10,
             block_hashes: block_hashes.into(),
@@ -837,6 +988,87 @@ mod tests {
         assert_eq!(ctx.inds[0].bs(), 0, "snapshot and deltas gone");
         assert_eq!(ctx.inds[0].queued_prefill_tokens, 0);
         assert!(ctx.inds[0].routable, "purge does not govern routability");
+    }
+
+    #[test]
+    fn p_time_is_p_token_on_uniform_fleets_and_scales_on_hetero() {
+        let mut f = IndicatorFactory::new(2, 0);
+        let req = mk_req(20, 320);
+        let ctx = f.route_ctx(&req, 0).clone();
+        // No fleet installed: empty scale vector, divisor exactly 1.0.
+        assert!(ctx.fleet_prefill_scale.is_empty());
+        for i in 0..2 {
+            assert_eq!(ctx.p_time(i).to_bits(), (ctx.p_token(i) as f64).to_bits());
+        }
+        // Hetero fleet: the faster slot's predicted prefill time shrinks.
+        f.set_fleet(
+            &[InstanceProfile::h100(), InstanceProfile::l40()],
+            &ModelProfile::dense_7b(),
+        );
+        let ctx2 = f.route_ctx(&req, 1).clone();
+        assert_eq!(ctx2.fleet_prefill_scale, vec![2.0, 0.45]);
+        assert_eq!(ctx2.p_time(0), ctx2.p_token(0) as f64 / 2.0);
+        assert_eq!(ctx2.p_time(1), ctx2.p_token(1) as f64 / 0.45);
+        assert!(ctx2.p_time(0) < ctx2.p_time(1));
+    }
+
+    #[test]
+    fn cold_penalties_arm_only_when_multiplexing_is_real() {
+        let mut f = IndicatorFactory::new(2, 0);
+        f.set_fleet(
+            &[InstanceProfile::reference(), InstanceProfile::reference()],
+            &ModelProfile::dense_7b(),
+        );
+        // Default-model traffic on an armed directory: no penalties.
+        let req0 = mk_req(30, 160);
+        let ctx = f.route_ctx(&req0, 0).clone();
+        assert!(ctx.cold_penalty_tokens.is_empty());
+        assert_eq!(ctx.cold_penalty(0), 0.0);
+        f.on_route(0, &req0, 0);
+        // A request for model 7 sees every instance cold; the penalty is
+        // the swap cost in token units (2s / 300µs-per-token).
+        let mut req7 = mk_req(31, 160);
+        req7.model_id = 7;
+        let ctx7 = f.route_ctx(&req7, 1).clone();
+        let expect = InstanceProfile::reference().swap_cost_us() as f64
+            / ModelProfile::dense_7b().prefill_us_per_token;
+        assert_eq!(ctx7.cold_penalty_tokens, vec![expect, expect]);
+        f.on_route(1, &req7, 1);
+        assert!(f.model_dir(1).unwrap().is_warm(7));
+        // The warm instance now prices model 7 at zero; the cold one
+        // still pays. And default-model traffic keeps penalty vectors
+        // because model 0 could itself go cold once multiplexing began.
+        let mut req7b = mk_req(32, 160);
+        req7b.model_id = 7;
+        let ctx7b = f.route_ctx(&req7b, 2).clone();
+        assert_eq!(ctx7b.cold_penalty(1), 0.0);
+        assert_eq!(ctx7b.cold_penalty(0), expect);
+        let ctx0 = f.route_ctx(&req0, 3).clone();
+        assert_eq!(ctx0.cold_penalty_tokens.len(), 2);
+        assert_eq!(ctx0.cold_penalty(0), 0.0, "model 0 still warm");
+    }
+
+    #[test]
+    fn purge_resets_the_warm_mirror_and_resize_inherits_last_class() {
+        let mut f = IndicatorFactory::new(2, 0);
+        f.set_fleet(
+            &[InstanceProfile::h100(), InstanceProfile::l40()],
+            &ModelProfile::dense_7b(),
+        );
+        let mut req = mk_req(40, 160);
+        req.model_id = 3;
+        f.route_ctx(&req, 0);
+        f.on_route(1, &req, 0);
+        assert!(f.model_dir(1).unwrap().is_warm(3));
+        f.purge_instance(1);
+        assert!(!f.model_dir(1).unwrap().is_warm(3));
+        assert!(f.model_dir(1).unwrap().is_warm(0));
+        // Scale-up: the new slot inherits the LAST declared class (l40).
+        f.resize_instances(3);
+        let ctx = f.route_ctx(&req, 1).clone();
+        assert_eq!(ctx.fleet_prefill_scale, vec![2.0, 0.45, 0.45]);
+        assert_eq!(ctx.cold_penalty_tokens.len(), 3);
+        assert_eq!(ctx.cold_penalty(2), ctx.cold_penalty(1));
     }
 
     #[test]

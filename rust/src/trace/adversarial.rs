@@ -239,6 +239,7 @@ fn push_request(
             arrival_us,
             class_id: class,
             session_id: 0,
+            model_id: 0,
             tokens: prompt.into(),
             output_len,
             block_hashes: hashes.into(),

@@ -81,6 +81,8 @@ pub fn load_jsonl(name: &str, path: &Path) -> Result<Trace, String> {
                 class_id: v.get("class").and_then(|x| x.as_u64()).unwrap_or(0) as u32,
                 // Absent in pre-session trace files: default sessionless.
                 session_id: v.get("session").and_then(|x| x.as_u64()).unwrap_or(0),
+                // Absent in pre-multiplexing trace files: default model.
+                model_id: v.get("model").and_then(|x| x.as_u64()).unwrap_or(0) as u32,
                 output_len: v.get("output_len").and_then(|x| x.as_u64()).unwrap_or(1) as u32,
                 tokens: tokens.into(),
                 block_hashes: hashes.into(),

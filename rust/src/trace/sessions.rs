@@ -333,6 +333,7 @@ pub(crate) fn build_turn_chain(
                 arrival_us: if turn == 0 { start_us } else { 0 },
                 class_id: class,
                 session_id: sid,
+                model_id: 0,
                 tokens,
                 output_len,
                 block_hashes: hashes.into(),

@@ -88,6 +88,13 @@ pub struct WorkloadSpec {
     pub burst_factor: f64,
     /// Max prompt length (long-context guard).
     pub max_input: usize,
+    /// Models multiplexed over the fleet. Each class is pinned to model
+    /// `class_id % n_models` — an app talks to one model, and popular
+    /// models serve many apps (the Zipf class skew induces a matching
+    /// model skew for free). Derived with ZERO extra RNG draws, so
+    /// `n_models = 1` (every request on the default model 0) leaves the
+    /// whole sampled trace bit-identical to the pre-multiplexing one.
+    pub n_models: usize,
 }
 
 impl WorkloadSpec {
@@ -111,6 +118,7 @@ impl WorkloadSpec {
             burst_len_s: 60.0,
             burst_factor: 1.4,
             max_input: 16_384,
+            n_models: 1,
         };
         match workload {
             Workload::ChatBot | Workload::Hotspot => base,
@@ -153,6 +161,13 @@ impl WorkloadSpec {
                 ..base
             },
         }
+    }
+
+    /// Multiplex the workload over `n` models (builder-style; clamped to
+    /// at least 1). See the `n_models` field for the class→model rule.
+    pub fn with_n_models(mut self, n: usize) -> WorkloadSpec {
+        self.n_models = n.max(1);
+        self
     }
 }
 
@@ -281,6 +296,9 @@ pub fn generate(spec: &WorkloadSpec) -> Trace {
                     arrival_us: (t_s * 1e6) as u64,
                     class_id: class,
                     session_id: session,
+                    // Pinned per class, no RNG draw: n_models = 1 keeps
+                    // the trace bit-identical to pre-multiplexing.
+                    model_id: class % spec.n_models.max(1) as u32,
                     tokens,
                     output_len,
                     block_hashes: hashes.into(),
@@ -404,5 +422,25 @@ mod tests {
     fn outputs_at_least_one_token() {
         let t = generate(&WorkloadSpec::preset(Workload::Agent, 300, 2));
         assert!(t.requests.iter().all(|r| r.req.output_len >= 1));
+    }
+
+    #[test]
+    fn model_ids_derive_from_class_without_shifting_the_rng() {
+        let single = generate(&WorkloadSpec::preset(Workload::ChatBot, 400, 13));
+        let multi =
+            generate(&WorkloadSpec::preset(Workload::ChatBot, 400, 13).with_n_models(4));
+        // Everything but the model id is bit-identical: the model mapping
+        // consumed zero RNG draws.
+        assert_eq!(single.requests.len(), multi.requests.len());
+        for (a, b) in single.requests.iter().zip(&multi.requests) {
+            assert_eq!(a.req.tokens, b.req.tokens);
+            assert_eq!(a.req.arrival_us, b.req.arrival_us);
+            assert_eq!(a.req.model_id, 0);
+            assert_eq!(b.req.model_id, b.req.class_id % 4);
+        }
+        // A Zipf-skewed class mix reaches several models.
+        let used: std::collections::HashSet<u32> =
+            multi.requests.iter().map(|r| r.req.model_id).collect();
+        assert!(used.len() >= 3, "models used: {used:?}");
     }
 }

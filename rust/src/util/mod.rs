@@ -4,9 +4,11 @@
 //! environment (see DESIGN.md §1 substitution ledger).
 
 pub mod json;
+pub mod registry;
 pub mod rng;
 pub mod stats;
 
+pub use registry::Registry;
 pub use rng::Rng;
 
 use std::hash::{BuildHasherDefault, Hasher};

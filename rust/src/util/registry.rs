@@ -1,0 +1,104 @@
+//! Shared name-listing registry helper.
+//!
+//! Four builders used to hand-roll the same contract independently:
+//! `policy::build*`, `engine::queue::build`,
+//! `cluster::overload::build_admission`, and the model-placement builder
+//! each map a registry name to a boxed implementation and, on an unknown
+//! name, return an error that *lists every valid name* so a typo at the
+//! CLI is self-correcting. [`Registry`] is the single home of that
+//! contract. The exact error wording of each call site predates this
+//! helper and is pinned by tests, so the kind label, the list label and
+//! an optional suffix are all caller-supplied — migrating a builder here
+//! must not change its error string by a single byte.
+
+/// A named-entry registry: the list of valid names plus the pieces of the
+/// unknown-name error message.
+#[derive(Debug, Clone, Copy)]
+pub struct Registry {
+    /// What one entry is called in the error ("policy", "queue policy").
+    kind: &'static str,
+    /// What the list is called ("policies", "valid queue policies"…).
+    list_label: &'static str,
+    /// Trailing text appended verbatim after the name list (e.g. the
+    /// router registry's "(plus ablations: …)" note). Usually empty.
+    suffix: &'static str,
+    names: &'static [&'static str],
+}
+
+impl Registry {
+    pub const fn new(
+        kind: &'static str,
+        list_label: &'static str,
+        names: &'static [&'static str],
+    ) -> Registry {
+        Registry {
+            kind,
+            list_label,
+            suffix: "",
+            names,
+        }
+    }
+
+    pub const fn with_suffix(mut self, suffix: &'static str) -> Registry {
+        self.suffix = suffix;
+        self
+    }
+
+    /// Registry names, in display order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.names.to_vec()
+    }
+
+    /// The names as the static slice they were declared as (for callers
+    /// whose pre-migration `all_*_names` signature returns a slice).
+    pub const fn names_static(&self) -> &'static [&'static str] {
+        self.names
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.names.iter().any(|&n| n == name)
+    }
+
+    /// The unknown-name error:
+    /// `unknown <kind> '<name>'; valid <list_label>: <a, b, c><suffix>`.
+    pub fn unknown(&self, name: &str) -> String {
+        format!(
+            "unknown {} '{name}'; valid {}: {}{}",
+            self.kind,
+            self.list_label,
+            self.names.join(", "),
+            self.suffix
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const R: Registry = Registry::new("widget", "widgets", &["alpha", "beta"]);
+
+    #[test]
+    fn lists_names_in_order() {
+        assert_eq!(R.names(), vec!["alpha", "beta"]);
+        assert!(R.contains("alpha") && !R.contains("gamma"));
+    }
+
+    #[test]
+    fn unknown_error_lists_everything() {
+        assert_eq!(
+            R.unknown("gamma"),
+            "unknown widget 'gamma'; valid widgets: alpha, beta"
+        );
+    }
+
+    #[test]
+    fn suffix_appends_verbatim() {
+        const S: Registry =
+            Registry::new("widget", "widgets", &["alpha"]).with_suffix(" (plus: beta)");
+        assert_eq!(
+            S.unknown("x"),
+            "unknown widget 'x'; valid widgets: alpha (plus: beta)"
+        );
+    }
+}

@@ -173,6 +173,7 @@ fn random_request(rng: &mut Rng, id: u64) -> (Request, std::sync::Arc<[u64]>) {
             arrival_us: 0,
             class_id: class,
             session_id: 0,
+            model_id: 0,
             tokens: tokens.into(),
             output_len: output,
             block_hashes: hashes.into(),
@@ -346,6 +347,55 @@ fn prop_lmetric_scale_invariance() {
             (a * ctx.p_token(i) as f64) * (b * (ctx.inds[i].bs() + 1) as f64)
         });
         assert_eq!(plain, scaled);
+    });
+}
+
+/// Multiplication's cancellation survives heterogeneity: plant an
+/// instance that strictly dominates both factors — P-*time* under
+/// arbitrary positive per-instance prefill rates, and batch size — and
+/// it stays the argmin of the product under any positive global
+/// reweighting of either factor. The λ's cancel on mixed hardware
+/// exactly as they did on uniform fleets (the cost-aware extension of
+/// Fig 17a's claim).
+#[test]
+fn prop_cost_aware_p_time_keeps_a_planted_dominator_argmin() {
+    prop("cost-aware planted dominance", 60, |rng| {
+        let n = rng.gen_range(2, 12) as usize;
+        let mut ctx = random_ctx(rng, n);
+        // Arbitrary positive per-instance monotone rate scalings.
+        ctx.fleet_prefill_scale = (0..n).map(|_| rng.gen_f64(0.05, 8.0)).collect();
+        let d = rng.gen_range(0, n as u64) as usize;
+        // Plant d strictly smallest on the load axis...
+        ctx.inds[d].q_bs = 0;
+        ctx.inds[d].r_bs = rng.gen_range(0, 8) as usize;
+        let dbs = ctx.inds[d].bs();
+        for i in 0..n {
+            if i != d && ctx.inds[i].bs() <= dbs {
+                ctx.inds[i].r_bs = dbs + 1 + rng.gen_range(0, 5) as usize;
+            }
+        }
+        // ...and strictly smallest on the P-time axis, whatever the
+        // rates: pile queued prefill onto anyone at or below it.
+        ctx.inds[d].queued_prefill_tokens = 0;
+        let pd = ctx.p_time(d);
+        for i in 0..n {
+            if i != d {
+                while ctx.p_time(i) <= pd {
+                    ctx.inds[i].queued_prefill_tokens += 1000;
+                }
+            }
+        }
+        let p = LMetric::paper();
+        assert_eq!(select_min(&ctx, |i| p.score(&ctx, i)), d, "dominator lost");
+        let a = rng.gen_f64(0.01, 100.0);
+        let b = rng.gen_f64(0.01, 100.0);
+        let reweighted = select_min(&ctx, |i| {
+            (a * ctx.p_time(i)) * (b * (ctx.inds[i].bs() + 1) as f64)
+        });
+        assert_eq!(reweighted, d, "reweighting moved the argmin");
+        // The fused policy scores identically while no penalty is armed.
+        let fused = lmetric::policy::LMetricFused::new();
+        assert_eq!(select_min(&ctx, |i| fused.score(&ctx, i)), d);
     });
 }
 

@@ -185,3 +185,37 @@ fn live_cluster_end_to_end_smoke() {
         assert!(r.first_token_us >= r.arrival_us);
     }
 }
+
+#[test]
+fn live_cluster_scale_up_spawns_a_thread_and_completes_everything() {
+    // The live harness used to silently swallow ScaleUp events; now a
+    // scheduled ScaleUp must spawn a real engine thread, widen the
+    // router's routable mask, and the run still completes every request.
+    if cfg!(feature = "pjrt") && !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    use lmetric::cluster::live::{run_live, LiveClusterConfig};
+    use lmetric::cluster::FaultPlan;
+    use lmetric::trace::{generate, Workload, WorkloadSpec};
+    let mut spec = WorkloadSpec::preset(Workload::ChatBot, 10, 5);
+    spec.vocab = 1023;
+    spec.sys_prompt_median = 64.0;
+    spec.user_span_median = 16.0;
+    spec.output_median = 4.0;
+    spec.output_sigma = 0.2;
+    spec.max_input = 300;
+    spec.mean_turns = 2.0;
+    let trace = generate(&spec);
+    let cfg = LiveClusterConfig {
+        n_instances: 1,
+        time_scale: 1000.0,
+        faults: FaultPlan::new().scale_up_at(1_000, true),
+        ..Default::default()
+    };
+    let mut pol = lmetric::policy::LMetric::paper();
+    let m = run_live(&cfg, &trace, &mut pol).expect("live run");
+    assert_eq!(m.records.len(), trace.requests.len(), "no request lost");
+    assert_eq!(m.fault.scale_ups, 1, "the ScaleUp fired on the live path");
+    assert_eq!(m.batch_size.len(), 2, "metrics widened with the fleet");
+}

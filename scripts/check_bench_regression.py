@@ -64,6 +64,15 @@ sampling are asserted inside the bench binary, and the full-size
 router x engine-queue grid with the mean-TTFT asserts lives in
 fig81_engine_queue.
 
+The `hetero` section (heterogeneous fleet + multi-model multiplexing)
+gates goodput_ratio_fused_over_two_layer — the mixed h100/l40 fleet's
+fused-vs-layered SLO-goodput ratio, a virtual-time quantity
+deterministic run to run. It drops when the fused score stops pricing
+cold swaps or hardware speed into the product (the ratio decays toward
+1 or below). cold_model_loads and model_evictions are report-only:
+cold_loads > 0 on the 4-model mix and the uniform-fleet byte-identity
+degeneracy are asserted inside the bench binary itself.
+
 The `router_scale` section (sharded concurrent data plane) gates the
 single-router decision rate — the read path every run exercises — with
 the same tolerate-then-gate shape: legacy baselines without the section,
@@ -139,6 +148,9 @@ FIELDS = [
     ("engine_queue", "ttft_p99_ltr", False),
     ("engine_queue", "ttft_p99_ratio_srpt", True),
     ("engine_queue", "promotions_ltr", False),
+    ("hetero", "goodput_ratio_fused_over_two_layer", True),
+    ("hetero", "cold_model_loads", False),
+    ("hetero", "model_evictions", False),
 ]
 
 
